@@ -1,0 +1,26 @@
+use std::time::Instant;
+fn main() {
+    let exec = relay::runtime::load_executor("artifacts", "speech", relay::runtime::Backend::Pjrt).unwrap();
+    let p = exec.variant().num_params;
+    let rows: Vec<Vec<f32>> = (0..13).map(|i| vec![i as f32 * 0.01; p]).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let w = vec![0.077f32; 13];
+    // warm
+    exec.agg_combine(&refs, &w).unwrap();
+    let t = Instant::now();
+    for _ in 0..20 { exec.agg_combine(&refs, &w).unwrap(); }
+    println!("agg_combine(13 rows): {:.1} ms", t.elapsed().as_secs_f64()*1000.0/20.0);
+    let fresh = vec![0.5f32; p];
+    exec.agg_dev(&fresh, &refs[..3]).unwrap();
+    let t = Instant::now();
+    for _ in 0..20 { exec.agg_dev(&fresh, &refs[..3]).unwrap(); }
+    println!("agg_dev(3 rows): {:.1} ms", t.elapsed().as_secs_f64()*1000.0/20.0);
+    // literal creation cost alone
+    let stacked = vec![0f32; 64*p];
+    let t = Instant::now();
+    for _ in 0..20 {
+        let l = xla::Literal::vec1(&stacked).reshape(&[64, p as i64]).unwrap();
+        std::hint::black_box(l);
+    }
+    println!("literal 64xP create+reshape: {:.1} ms", t.elapsed().as_secs_f64()*1000.0/20.0);
+}

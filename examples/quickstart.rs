@@ -1,0 +1,41 @@
+//! Quickstart: run RELAY (IPS + SAA + APT) on the speech benchmark stand-in
+//! for a handful of rounds and print the accuracy trajectory.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use relay::config::{preset, AvailMode, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::runtime::load_executor_or_native;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut cfg = preset("speech")?.relay().with_label("relay-quickstart");
+    cfg.total_learners = 100;
+    cfg.rounds = 60;
+    cfg.target_participants = 10;
+    cfg.mode = RoundMode::Deadline { deadline: 100.0 };
+    cfg.avail = AvailMode::DynAvail;
+    cfg.eval_every = 5;
+
+    let exec = load_executor_or_native("artifacts", &cfg.variant);
+    println!("backend loaded; running {} rounds x {} learners", cfg.rounds, cfg.total_learners);
+    let result = run_experiment(cfg, Arc::clone(&exec))?;
+
+    println!("\n round | sim time | resources | accuracy");
+    for r in &result.rounds {
+        if let Some(acc) = r.test_accuracy {
+            println!(
+                "{:>6} | {:>7.0}s | {:>8.2}h | {:>6.1}%",
+                r.round,
+                r.sim_time,
+                r.cum_resource_secs / 3600.0,
+                100.0 * acc
+            );
+        }
+    }
+    println!("\n{}", result.summary());
+    println!("wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Selector shoot-out: all four strategies (Random, Oort, Priority/IPS,
+//! SAFA) plus full RELAY on the same non-IID workload, printing the
+//! resource-efficiency comparison the paper's §3 motivates.
+//!
+//!     cargo run --release --example selector_shootout [-- --backend native]
+
+use std::sync::Arc;
+
+use relay::config::{preset, AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::data::partition::{LabelSkew, PartitionScheme};
+use relay::runtime::{self, Backend};
+use relay::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let backend = Backend::parse(&args.str_or("backend", "pjrt")).expect("backend");
+    let exec = match backend {
+        Backend::Pjrt => runtime::load_executor("artifacts", "speech", Backend::Pjrt)?,
+        Backend::Native => Arc::new(runtime::NativeExecutor::new(
+            runtime::builtin_variant("speech"),
+        )),
+    };
+
+    let base = || -> ExpConfig {
+        let mut c = preset("speech").unwrap();
+        c.total_learners = args.usize_or("learners", 300);
+        c.rounds = args.usize_or("rounds", 150);
+        c.mode = RoundMode::Deadline { deadline: 100.0 };
+        c.avail = AvailMode::DynAvail;
+        c.partition = PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Uniform };
+        c
+    };
+
+    let mut configs = Vec::new();
+    for sel in ["random", "oort", "priority", "safa"] {
+        let mut c = base().with_label(sel);
+        c.selector = sel.into();
+        if sel == "safa" {
+            c.use_saa = true;
+            c.staleness_threshold = Some(5);
+            c.scaling = relay::aggregation::scaling::ScalingRule::Equal;
+        }
+        configs.push(c);
+    }
+    configs.push(base().relay().with_label("relay (ips+saa+apt)"));
+
+    let mut results = Vec::new();
+    for cfg in configs {
+        let r = run_experiment(cfg, Arc::clone(&exec))?;
+        println!("{}", r.summary());
+        results.push(r);
+    }
+    println!("\naccuracy vs resources:");
+    relay::figures::runner::print_series(&results, 6);
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT: lower every (variant x computation) to HLO *text* + manifest.json.
+
+HLO text -- NOT ``lowered.compiler_ir('hlo')`` protos or ``.serialize()`` --
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``). The HLO text
+parser on the rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+The Makefile `artifacts` target drives this; rust never imports python.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def computations(v: M.Variant):
+    """(name, fn, example_args) for every export of one variant."""
+    P, B, D, U = v.num_params, v.batch, v.input_dim, v.max_updates
+    return [
+        ("train", M.train_step(v), (f32(P), f32(B, D), i32(B), f32(B), f32())),
+        ("eval", M.eval_batch(v), (f32(P), f32(B, D), i32(B), f32(B))),
+        ("init", M.init_params(v), (i32(),)),
+        ("agg", M.agg_combine(v), (f32(U, P), f32(U))),
+        ("dev", M.agg_dev(v), (f32(P), f32(U, P))),
+    ]
+
+
+def lower_variant(v: M.Variant, out_dir: str, entries: list):
+    for name, fn, args in computations(v):
+        path = os.path.join(out_dir, f"{v.name}_{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "variant": v.name,
+                "computation": name,
+                "file": os.path.basename(path),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "arg_shapes": [list(a.shape) for a in args],
+                "arg_dtypes": [str(a.dtype) for a in args],
+            }
+        )
+        print(f"  {path}  ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="all", help="comma list or 'all'")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = (
+        list(M.VARIANTS) if args.variants == "all" else args.variants.split(",")
+    )
+    entries = []
+    for n in names:
+        v = M.VARIANTS[n]
+        print(f"variant {n}: P={v.num_params} B={v.batch} D={v.input_dim} "
+              f"C={v.num_classes} U={v.max_updates}")
+        lower_variant(v, args.out_dir, entries)
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "variants": {
+            n: {
+                "num_params": M.VARIANTS[n].num_params,
+                "input_dim": M.VARIANTS[n].input_dim,
+                "num_classes": M.VARIANTS[n].num_classes,
+                "hidden": list(M.VARIANTS[n].hidden),
+                "batch": M.VARIANTS[n].batch,
+                "max_updates": M.VARIANTS[n].max_updates,
+                "perplexity": M.VARIANTS[n].perplexity,
+            }
+            for n in names
+        },
+        "computations": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled matmul (the FLOP hot-spot of local training).
+
+TPU-idiomatic tiling: blocks are multiples of the (8, 128) f32 VREG tile and
+sized so the A-, B- and accumulator-blocks fit the ~16 MiB VMEM budget while
+feeding the 128x128 MXU. On this CPU testbed the kernel is lowered with
+``interpret=True`` so it becomes plain HLO (runnable by the rust PJRT CPU
+client); the BlockSpec structure is what carries to real TPU.
+
+Autodiff: ``pallas_call`` is not differentiable, so ``matmul`` carries a
+``custom_vjp`` whose backward pass reuses the same kernel
+(dx = g @ W^T, dW = x^T @ g) -- the production pattern.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: (128, 128, 128) covers the MXU and keeps
+# 3 * 128*128*4 B = 192 KiB in VMEM -- far under budget, leaving room for
+# double-buffering by the pipeline emitter.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _matmul_kernel_single(x_ref, y_ref, o_ref):
+    """K fits in one block: no accumulator needed."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_kernel_acc(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid dim 2 walks K; o_ref block is revisited and accumulated."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+def matmul_pallas(x, y, *, block=DEFAULT_BLOCK, interpret=True):
+    """``x @ y`` via the tiled Pallas kernel. Pads to block multiples."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 8)), min(
+        bn, _ceil_to(n, 8)
+    )
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+
+    nk = kp // bk
+    if nk == 1:
+        out = pl.pallas_call(
+            _matmul_kernel_single,
+            grid=(mp // bm, np_ // bn),
+            in_specs=[
+                pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+                pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(xp, yp)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel_acc, nk=nk),
+            grid=(mp // bm, np_ // bn, nk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable Pallas matmul used by every dense layer in L2."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = matmul_pallas(g, y.T)
+    dy = matmul_pallas(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(block=DEFAULT_BLOCK, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (A+B+O blocks)."""
+    bm, bk, bn = block
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(block=DEFAULT_BLOCK) -> float:
+    """Fraction of the 128x128 MXU fed by one block-matmul step."""
+    bm, _, bn = block
+    return min(bm, 128) * min(bn, 128) / (128.0 * 128.0)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the correctness anchor)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul in f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def weighted_agg_ref(updates, weights):
+    """sum_i weights[i] * updates[i] -> (P,)."""
+    return jnp.einsum("u,up->p", weights, updates)
+
+
+def deviation_ref(fresh_avg, stale):
+    """(S+1,): ||f - u_s||^2 per stale row, then ||f||^2."""
+    d = fresh_avg[None, :] - stale
+    dist = jnp.sum(d * d, axis=1)
+    fnorm = jnp.sum(fresh_avg * fresh_avg)
+    return jnp.concatenate([dist, fnorm[None]])
+
+
+def lambda_ref(fresh_avg, stale, n_fresh):
+    """Paper 4.2.4: Lambda_s = ||f - (u_s + nF f)/(nF+1)||^2 / ||f||^2.
+
+    Algebraically ||f - u_s||^2 / ((nF+1)^2 ||f||^2).
+    """
+    dev = deviation_ref(fresh_avg, stale)
+    dist, fnorm = dev[:-1], dev[-1]
+    return dist / ((n_fresh + 1.0) ** 2 * jnp.maximum(fnorm, 1e-12))
+
+
+def relay_weights_ref(taus, lambdas, beta):
+    """Eq. 2: w_s = (1-beta)/(tau_s+1) + beta*(1 - exp(-Lambda_s/Lambda_max))."""
+    lam_max = jnp.maximum(jnp.max(lambdas), 1e-12)
+    return (1.0 - beta) / (taus + 1.0) + beta * (1.0 - jnp.exp(-lambdas / lam_max))

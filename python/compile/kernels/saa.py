@@ -1,0 +1,115 @@
+"""L1 Pallas kernels for Staleness-Aware Aggregation (paper Eq. 2, 4.2.4).
+
+Two kernels, both gridded over the parameter dimension so update matrices
+stream HBM->VMEM in row blocks (the TPU analogue of the server's streaming
+aggregation loop):
+
+* ``weighted_agg`` -- given up to ``U`` stacked update vectors and one weight
+  per update, produce the weighted sum ``sum_i w_i * u_i``. The rust
+  coordinator pre-normalizes weights (fresh w=1, stale w from Eq. 2) and
+  zero-pads unused rows, so shapes stay static for AOT.
+
+* ``deviation`` -- given the fresh-update average ``f`` and stacked stale
+  updates, produce per-stale squared L2 distances ``||f - u_s||^2`` plus
+  ``||f||^2`` (last output slot), from which the coordinator computes
+  Lambda_s = ||f - u_s||^2 / ((n_F + 1)^2 ||f||^2)   (paper 4.2.4).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter-dimension block: one row-block of the update matrix.
+#
+# TPU tiling would use 4096 (VMEM-sized blocks, streamed HBM->VMEM by the
+# grid). For the CPU-PJRT artifacts we use a block large enough to cover
+# the whole parameter vector of every variant in ONE grid step: XLA-CPU
+# executes interpret-mode grid loops via while+dynamic-slice, which costs
+# ~4 ms/step on 10 MB operands (measured; EXPERIMENTS.md Perf), so grid=1
+# turns the server merge from ~40 ms into a single fused dot. The tiled
+# path (small bp) stays covered by the pytest block sweeps.
+DEFAULT_BP = 65536
+TPU_BP = 4096
+
+
+def _ceil_to(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+def _weighted_agg_kernel(w_ref, u_ref, o_ref):
+    # (1, U) @ (U, bp) -> (1, bp): the weight row times one column block.
+    o_ref[...] = jnp.dot(
+        w_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def weighted_agg(updates, weights, *, bp=DEFAULT_BP, interpret=True):
+    """``sum_i weights[i] * updates[i]`` -> shape (P,).
+
+    updates: (U, P) f32, weights: (U,) f32.
+    """
+    u, p = updates.shape
+    bp = min(bp, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    up = jnp.pad(updates, ((0, 0), (0, pp - p))) if pp != p else updates
+    w2 = weights.reshape(1, u)
+    out = pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((1, u), lambda i: (0, 0)),
+            pl.BlockSpec((u, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        interpret=interpret,
+    )(w2, up)
+    return out[0, :p]
+
+
+def _deviation_kernel(f_ref, s_ref, o_ref, *, np_blocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    f = f_ref[...]  # (1, bp)
+    s = s_ref[...]  # (S, bp)
+    d = f - s  # broadcast over rows
+    # per-stale squared distance contribution of this column block
+    dist = jnp.sum(d * d, axis=1)  # (S,)
+    fnorm = jnp.sum(f * f)  # scalar
+    o_ref[...] += jnp.concatenate([dist, fnorm[None]]).reshape(1, -1)
+
+
+def deviation(fresh_avg, stale, *, bp=DEFAULT_BP, interpret=True):
+    """Squared distances ``||f - u_s||^2`` for each stale row, and ``||f||^2``.
+
+    fresh_avg: (P,) f32, stale: (S, P) f32.
+    Returns (S+1,): first S entries are distances, last is ||f||^2.
+    """
+    s, p = stale.shape
+    bp = min(bp, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    fp = jnp.pad(fresh_avg, (0, pp - p)).reshape(1, pp) if pp != p else fresh_avg.reshape(1, p)
+    sp = jnp.pad(stale, ((0, 0), (0, pp - p))) if pp != p else stale
+    out = pl.pallas_call(
+        functools.partial(_deviation_kernel, np_blocks=pp // bp),
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((s, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, s + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, s + 1), jnp.float32),
+        interpret=interpret,
+    )(fp, sp)
+    return out[0]
+
+
+def vmem_bytes(u: int, bp: int = DEFAULT_BP, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one weighted_agg grid step."""
+    return dtype_bytes * (u + u * bp + bp)

@@ -1,0 +1,150 @@
+"""L2: the federated model, as pure JAX over a FLAT parameter vector.
+
+The rust coordinator (L3) only ever sees ``f32[P]`` parameter/update vectors
+plus fixed-shape batches, which keeps the AOT interface static and makes the
+aggregation path (L1 ``saa`` kernels) shape-trivial. All dense layers go
+through the L1 Pallas ``matmul`` kernel so the training FLOP hot-spot lowers
+into the same HLO module.
+
+Exported computations (per benchmark variant, see ``VARIANTS``):
+
+* ``train_step(params, x, y, mask, lr)`` -> (params', loss, correct)
+    one masked-SGD step (forward, softmax-CE, backward, update).
+* ``eval_batch(params, x, y, mask)``     -> (sum_loss, correct)
+* ``init_params(seed)``                  -> params (layer-scaled normal init)
+* ``agg_combine(updates[U,P], w[U])``    -> weighted sum      (L1 kernel)
+* ``agg_dev(fresh[P], stale[U,P])``      -> distances + norm  (L1 kernel)
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+from compile.kernels import saa
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One benchmark model configuration (mirrors paper Table 1 scales)."""
+
+    name: str
+    input_dim: int
+    num_classes: int
+    hidden: Tuple[int, ...]
+    batch: int
+    # Max update rows the aggregation kernels accept (padded; static shape).
+    max_updates: int = 32
+    # Perplexity-style task (NLP benchmarks report test perplexity).
+    perplexity: bool = False
+
+    @property
+    def layer_shapes(self) -> List[Tuple[int, int]]:
+        dims = (self.input_dim, *self.hidden, self.num_classes)
+        return [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+
+    @property
+    def num_params(self) -> int:
+        return sum(i * o + o for i, o in self.layer_shapes)
+
+
+# Stand-ins for the paper's five benchmarks (Table 1), scaled for a CPU
+# testbed. DESIGN.md 2 records the substitution.
+VARIANTS = {
+    "tiny": Variant("tiny", 16, 4, (8,), 4, max_updates=8),
+    "speech": Variant("speech", 256, 35, (128, 64), 20),
+    "cifar": Variant("cifar", 256, 10, (128, 64), 10),
+    "openimage": Variant("openimage", 256, 60, (128, 64), 30),
+    "nlp": Variant("nlp", 128, 64, (128,), 40, perplexity=True),
+}
+
+
+def unpack(v: Variant, flat):
+    """Split flat f32[P] into [(W, b), ...]."""
+    layers, off = [], 0
+    for i, o in v.layer_shapes:
+        w = flat[off : off + i * o].reshape(i, o)
+        off += i * o
+        b = flat[off : off + o]
+        off += o
+        layers.append((w, b))
+    return layers
+
+
+def pack(layers):
+    return jnp.concatenate([jnp.concatenate([w.reshape(-1), b]) for w, b in layers])
+
+
+def forward(v: Variant, flat, x):
+    """MLP forward: relu hidden layers, linear head. Uses the L1 matmul."""
+    layers = unpack(v, flat)
+    h = x
+    for li, (w, b) in enumerate(layers):
+        h = matmul(h, w) + b
+        if li + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h  # logits (B, C)
+
+
+def masked_ce(logits, y, mask):
+    """Mean masked softmax cross-entropy, and #correct (masked)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y) * mask)
+    return loss, correct
+
+
+def train_step(v: Variant):
+    def step(flat, x, y, mask, lr):
+        def loss_fn(p):
+            logits = forward(v, p, x)
+            loss, correct = masked_ce(logits, y, mask)
+            return loss, correct
+
+        (loss, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        return flat - lr * g, loss, correct
+
+    return step
+
+
+def eval_batch(v: Variant):
+    def ev(flat, x, y, mask):
+        logits = forward(v, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        sum_loss = jnp.sum(nll * mask)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y) * mask)
+        return sum_loss, correct
+
+    return ev
+
+
+def init_params(v: Variant):
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for i, o in v.layer_shapes:
+            key, k1 = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / i)  # He init for relu stacks
+            parts.append((jax.random.normal(k1, (i, o)) * scale, jnp.zeros(o)))
+        return pack(parts)
+
+    return init
+
+
+def agg_combine(v: Variant):
+    def combine(updates, weights):
+        return saa.weighted_agg(updates, weights)
+
+    return combine
+
+
+def agg_dev(v: Variant):
+    def dev(fresh_avg, stale):
+        return saa.deviation(fresh_avg, stale)
+
+    return dev

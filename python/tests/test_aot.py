@@ -1,0 +1,78 @@
+"""AOT pipeline tests: lowering emits valid HLO text + a coherent manifest."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts():
+    d = tempfile.mkdtemp(prefix="relay_aot_test_")
+    entries = []
+    aot.lower_variant(M.VARIANTS["tiny"], d, entries)
+    return d, entries
+
+
+def test_all_computations_emitted(tiny_artifacts):
+    d, entries = tiny_artifacts
+    names = {e["computation"] for e in entries}
+    assert names == {"train", "eval", "init", "agg", "dev"}
+    for e in entries:
+        assert os.path.exists(os.path.join(d, e["file"]))
+
+
+def test_hlo_text_is_parsable_module(tiny_artifacts):
+    d, entries = tiny_artifacts
+    for e in entries:
+        text = open(os.path.join(d, e["file"])).read()
+        assert text.startswith("HloModule"), e["file"]
+        assert "ENTRY" in text
+        # the interchange contract: text, never a serialized proto
+        assert "\x00" not in text
+
+
+def test_train_arg_shapes_match_variant(tiny_artifacts):
+    _, entries = tiny_artifacts
+    v = M.VARIANTS["tiny"]
+    train = next(e for e in entries if e["computation"] == "train")
+    assert train["arg_shapes"] == [
+        [v.num_params],
+        [v.batch, v.input_dim],
+        [v.batch],
+        [v.batch],
+        [],
+    ]
+    assert train["arg_dtypes"][2] == "int32"
+
+
+def test_agg_shapes_are_padded_static(tiny_artifacts):
+    _, entries = tiny_artifacts
+    v = M.VARIANTS["tiny"]
+    agg = next(e for e in entries if e["computation"] == "agg")
+    assert agg["arg_shapes"] == [[v.max_updates, v.num_params], [v.max_updates]]
+
+
+def test_sha256_stable_across_lowerings():
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    e1, e2 = [], []
+    aot.lower_variant(M.VARIANTS["tiny"], d1, e1)
+    aot.lower_variant(M.VARIANTS["tiny"], d2, e2)
+    assert [e["sha256"] for e in e1] == [e["sha256"] for e in e2]
+
+
+def test_repo_manifest_consistent_if_built():
+    """If `make artifacts` ran, the manifest must match the model registry."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    for name, info in man["variants"].items():
+        v = M.VARIANTS[name]
+        assert info["num_params"] == v.num_params
+        assert info["batch"] == v.batch
+        assert info["max_updates"] == v.max_updates

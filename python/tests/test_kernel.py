@@ -1,0 +1,146 @@
+"""Kernel-vs-ref correctness: the CORE numerics signal of the repo.
+
+Hypothesis sweeps shapes/dtypes of the Pallas kernels against the pure-jnp
+oracles in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, saa
+from compile.kernels.matmul import matmul, matmul_pallas, vmem_bytes, mxu_utilization
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_shapes(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    got = matmul_pallas(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bf16_inputs(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.bfloat16)
+    y = rand(seed + 1, (k, n), jnp.bfloat16)
+    got = matmul_pallas(x.astype(jnp.float32), y.astype(jnp.float32))
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_blocks_tile_and_accumulate(block):
+    # shapes forcing multi-step K accumulation and padding
+    x = rand(7, (33, 70))
+    y = rand(8, (70, 17))
+    got = matmul_pallas(x, y, block=block)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_grad_matches_jnp_grad():
+    x = rand(1, (6, 10))
+    y = rand(2, (10, 3))
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.sin(matmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.sin(ref.matmul_ref(x, y)))
+
+    gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gy_p, gy_r, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_vmem_estimate_under_budget():
+    # Default block must fit VMEM (16 MiB) with double buffering headroom.
+    assert vmem_bytes() * 2 < 16 * 1024 * 1024
+    assert 0.0 < mxu_utilization() <= 1.0
+    assert mxu_utilization((128, 128, 128)) == 1.0
+    assert mxu_utilization((64, 128, 128)) == 0.5
+
+
+# ---------------------------------------------------------------- saa
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=st.integers(1, 16), p=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_weighted_agg_matches_ref(u, p, seed):
+    upd = rand(seed, (u, p))
+    w = rand(seed + 1, (u,))
+    got = saa.weighted_agg(upd, w)
+    want = ref.weighted_agg_ref(upd, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(1, 16), p=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_deviation_matches_ref(s, p, seed):
+    f = rand(seed, (p,))
+    stale = rand(seed + 1, (s, p))
+    got = saa.deviation(f, stale)
+    want = ref.deviation_ref(f, stale)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bp", [8, 64, 4096])
+def test_deviation_block_sweep(bp):
+    f = rand(3, (1000,))
+    stale = rand(4, (5, 1000))
+    got = saa.deviation(f, stale, bp=bp)
+    np.testing.assert_allclose(got, ref.deviation_ref(f, stale), rtol=1e-4, atol=1e-4)
+
+
+def test_weighted_agg_zero_weight_rows_are_inert():
+    # Padding rows with w=0 must not change the aggregate (static-shape AOT).
+    upd = rand(5, (8, 100))
+    w = jnp.array([0.5, 0.5, 0, 0, 0, 0, 0, 0], jnp.float32)
+    got = saa.weighted_agg(upd, w)
+    want = 0.5 * upd[0] + 0.5 * upd[1]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lambda_matches_paper_formula():
+    # Lambda_s = ||f - (u_s + nF f)/(nF+1)||^2 / ||f||^2 (paper 4.2.4)
+    f = rand(9, (50,))
+    stale = rand(10, (3, 50))
+    nf = 4.0
+    lam = ref.lambda_ref(f, stale, nf)
+    for s in range(3):
+        direct = jnp.sum((f - (stale[s] + nf * f) / (nf + 1.0)) ** 2) / jnp.sum(f * f)
+        np.testing.assert_allclose(lam[s], direct, rtol=1e-5)
+
+
+def test_relay_weights_eq2_properties():
+    taus = jnp.array([0.0, 1.0, 5.0])
+    lams = jnp.array([0.1, 0.5, 1.0])
+    beta = 0.35
+    w = ref.relay_weights_ref(taus, lams, beta)
+    # fresher -> larger staleness term; max-deviation stale gets full boost
+    assert w[0] > w[2] - beta  # staleness component decays
+    # all weights within (0, 1]
+    assert jnp.all(w > 0) and jnp.all(w <= 1.0 + 1e-6)
+    # beta=0 reduces to DynSGD
+    w0 = ref.relay_weights_ref(taus, lams, 0.0)
+    np.testing.assert_allclose(w0, 1.0 / (taus + 1.0), rtol=1e-6)

@@ -1,0 +1,123 @@
+"""L2 model tests: shapes, gradient correctness, training signal, packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+V = M.VARIANTS["tiny"]
+
+
+def batch(v, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (v.batch, v.input_dim))
+    y = jax.random.randint(k2, (v.batch,), 0, v.num_classes)
+    mask = jnp.ones((v.batch,))
+    return x, y, mask
+
+
+def test_variant_param_counts():
+    # hand-check tiny: 16*8+8 + 8*4+4 = 136 + 36 = 172
+    assert V.num_params == 172
+    for v in M.VARIANTS.values():
+        assert v.num_params == sum(i * o + o for i, o in v.layer_shapes)
+
+
+def test_pack_unpack_roundtrip():
+    flat = M.init_params(V)(0)
+    assert flat.shape == (V.num_params,)
+    repacked = M.pack(M.unpack(V, flat))
+    np.testing.assert_array_equal(flat, repacked)
+
+
+def test_forward_shape_and_finite():
+    flat = M.init_params(V)(1)
+    x, _, _ = batch(V)
+    logits = M.forward(V, flat, x)
+    assert logits.shape == (V.batch, V.num_classes)
+    assert jnp.all(jnp.isfinite(logits))
+
+
+def test_train_step_gradient_matches_numerical():
+    """Finite-difference check of the full fwd/bwd through the Pallas matmul."""
+    flat = M.init_params(V)(2)
+    x, y, mask = batch(V, 3)
+
+    def loss_of(p):
+        logits = M.forward(V, p, x)
+        loss, _ = M.masked_ce(logits, y, mask)
+        return loss
+
+    g = jax.grad(loss_of)(flat)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for idx in rng.choice(V.num_params, size=8, replace=False):
+        e = jnp.zeros_like(flat).at[idx].set(eps)
+        num = (loss_of(flat + e) - loss_of(flat - e)) / (2 * eps)
+        np.testing.assert_allclose(g[idx], num, rtol=5e-2, atol=5e-3)
+
+
+def test_train_step_descends():
+    step = M.train_step(V)
+    flat = M.init_params(V)(4)
+    x, y, mask = batch(V, 5)
+    losses = []
+    for _ in range(30):
+        flat, loss, _ = step(flat, x, y, mask, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_train_step_mask_excludes_padding():
+    step = M.train_step(V)
+    flat = M.init_params(V)(6)
+    x, y, _ = batch(V, 7)
+    full = jnp.ones((V.batch,))
+    # Corrupt the masked-out row wildly; results must be identical.
+    part = full.at[-1].set(0.0)
+    x2 = x.at[-1].set(1e3)
+    p1, l1, c1 = step(flat, x, y, part, jnp.float32(0.05))
+    p2, l2, c2 = step(flat, x2, y, part, jnp.float32(0.05))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+
+
+def test_eval_batch_counts():
+    ev = M.eval_batch(V)
+    flat = M.init_params(V)(8)
+    x, y, mask = batch(V, 9)
+    sum_loss, correct = ev(flat, x, y, mask)
+    assert 0 <= float(correct) <= V.batch
+    assert float(sum_loss) > 0
+
+
+def test_eval_perfect_model_gets_all_correct():
+    # train to (near) memorization on one batch, then eval it
+    step = M.train_step(V)
+    ev = M.eval_batch(V)
+    flat = M.init_params(V)(10)
+    x, y, mask = batch(V, 11)
+    for _ in range(300):
+        flat, loss, _ = step(flat, x, y, mask, jnp.float32(0.2))
+    _, correct = ev(flat, x, y, mask)
+    assert float(correct) >= V.batch - 1
+
+
+def test_init_deterministic_per_seed():
+    i = M.init_params(V)
+    np.testing.assert_array_equal(i(42), i(42))
+    assert not np.array_equal(np.asarray(i(1)), np.asarray(i(2)))
+
+
+@pytest.mark.parametrize("name", list(M.VARIANTS))
+def test_every_variant_one_step(name):
+    v = M.VARIANTS[name]
+    step = M.train_step(v)
+    flat = M.init_params(v)(0)
+    x, y, mask = batch(v, 1)
+    flat2, loss, correct = step(flat, x, y, mask, jnp.float32(0.01))
+    assert flat2.shape == (v.num_params,)
+    assert jnp.isfinite(loss)
+    assert float(correct) <= v.batch

@@ -1,0 +1,219 @@
+//! `cargo bench` — the performance harness (hand-rolled; criterion is
+//! unavailable offline). Covers the paper's hot paths end-to-end:
+//!
+//! * runtime: PJRT vs native train-step / eval / aggregation kernels
+//! * SAA merge at realistic update counts (the per-round server hot path)
+//! * selectors at 1k/10k/100k checked-in learners
+//! * availability trace queries + forecaster probes (per check-in cost)
+//! * one full coordinator round (the paper's end-to-end unit)
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use relay::aggregation::saa::{merge, UpdateEntry};
+use relay::aggregation::scaling::ScalingRule;
+use relay::config::{preset, AvailMode, ExpConfig};
+use relay::coordinator::Coordinator;
+use relay::forecast::SeasonalForecaster;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::selection::{Candidate, SelectionCtx};
+use relay::trace::{TraceConfig, TraceSet};
+use relay::util::bench;
+use relay::util::rng::Rng;
+
+fn pjrt_speech() -> Option<Arc<dyn Executor>> {
+    relay::runtime::load_executor("artifacts", "speech", relay::runtime::Backend::Pjrt).ok()
+}
+
+fn native_speech() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("speech")))
+}
+
+fn batch(exec: &dyn Executor, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>) {
+    let v = exec.variant();
+    let mut rng = Rng::new(seed);
+    let params = exec.init_params(seed as i32).unwrap();
+    let x: Vec<f32> = (0..v.batch * v.input_dim).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..v.batch).map(|_| rng.below(v.num_classes) as i32).collect();
+    (params, x, y, vec![1.0; v.batch])
+}
+
+fn bench_runtime() {
+    println!("\n== runtime: model math (speech variant, P={}) ==", builtin_variant("speech").num_params);
+    let native = native_speech();
+    let (p, x, y, m) = batch(native.as_ref(), 1);
+    bench::run("train_step/native", || {
+        native.train_step(&p, &x, &y, &m, 0.05).unwrap();
+    });
+    bench::run("eval_batch/native", || {
+        native.eval_batch(&p, &x, &y, &m).unwrap();
+    });
+    if let Some(pjrt) = pjrt_speech() {
+        bench::run("train_step/pjrt", || {
+            pjrt.train_step(&p, &x, &y, &m, 0.05).unwrap();
+        });
+        bench::run("eval_batch/pjrt", || {
+            pjrt.eval_batch(&p, &x, &y, &m).unwrap();
+        });
+    } else {
+        println!("(pjrt skipped: run `make artifacts`)");
+    }
+}
+
+fn bench_saa() {
+    println!("\n== SAA merge (server per-round hot path) ==");
+    let execs: Vec<(&str, Arc<dyn Executor>)> = {
+        let mut v: Vec<(&str, Arc<dyn Executor>)> = vec![("native", native_speech())];
+        if let Some(p) = pjrt_speech() {
+            v.push(("pjrt", p));
+        }
+        v
+    };
+    let pdim = builtin_variant("speech").num_params;
+    let mut rng = Rng::new(2);
+    for (name, exec) in execs {
+        for (nf, ns) in [(10usize, 3usize), (26, 13)] {
+            let fresh: Vec<UpdateEntry> = (0..nf)
+                .map(|i| UpdateEntry {
+                    learner: i,
+                    delta: (0..pdim).map(|_| rng.normal() as f32 * 0.01).collect(),
+                    origin_round: 10,
+                })
+                .collect();
+            let stale: Vec<UpdateEntry> = (0..ns)
+                .map(|i| UpdateEntry {
+                    learner: 100 + i,
+                    delta: (0..pdim).map(|_| rng.normal() as f32 * 0.01).collect(),
+                    origin_round: 8,
+                })
+                .collect();
+            bench::run(&format!("saa_merge/{name}/fresh={nf},stale={ns}"), || {
+                merge(exec.as_ref(), &fresh, &stale, ScalingRule::Relay { beta: 0.35 }, 10)
+                    .unwrap();
+            });
+        }
+    }
+}
+
+fn bench_selectors() {
+    println!("\n== participant selection at scale ==");
+    for n in [1_000usize, 10_000, 100_000] {
+        let candidates: Vec<Candidate> = (0..n)
+            .map(|i| Candidate {
+                id: i,
+                avail_prob: (i % 97) as f64 / 97.0,
+                expected_duration: 10.0 + (i % 31) as f64,
+            })
+            .collect();
+        for name in ["random", "priority", "oort"] {
+            let mut sel = relay::selection::by_name(name).unwrap();
+            let mut rng = Rng::new(3);
+            bench::run(&format!("select/{name}/n={n}"), || {
+                let mut ctx = SelectionCtx {
+                    round: 1,
+                    now: 0.0,
+                    target: 100,
+                    candidates: &candidates,
+                    rng: &mut rng,
+                };
+                let picked = sel.select(&mut ctx);
+                std::hint::black_box(picked);
+            });
+        }
+    }
+}
+
+fn bench_trace_forecast() {
+    println!("\n== availability substrate (per check-in costs) ==");
+    let trace = TraceSet::generate(1000, 4, TraceConfig::default());
+    let mut t = 0.0f64;
+    bench::run("trace/available_query", || {
+        t += 13.7;
+        std::hint::black_box(trace.available(((t as usize) * 7) % 1000, t));
+    });
+    let mut f = SeasonalForecaster::default();
+    let series = trace.sample_series(0, 1800.0);
+    for (i, &v) in series.iter().enumerate() {
+        f.observe(i as f64 * 1800.0, v > 0.5);
+    }
+    let mut q = 0.0f64;
+    bench::run("forecast/prob_slot", || {
+        q += 211.3;
+        std::hint::black_box(f.prob_slot(q, q + 200.0));
+    });
+    bench::run("trace/generate_1000_learners", || {
+        std::hint::black_box(TraceSet::generate(1000, 5, TraceConfig::default()));
+    });
+}
+
+fn bench_round() {
+    println!("\n== end-to-end coordinator round (tiny variant, native) ==");
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 100,
+        rounds: 1,
+        target_participants: 10,
+        avail: AvailMode::AllAvail,
+        mean_samples: 20,
+        test_per_class: 4,
+        eval_every: 1000,
+        ..Default::default()
+    };
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+    bench::run("coordinator/full_round/tiny/native", || {
+        let mut c = Coordinator::new(cfg.clone(), Arc::clone(&exec)).unwrap();
+        std::hint::black_box(c.run().unwrap());
+    });
+    if let Ok(pjrt) =
+        relay::runtime::load_executor("artifacts", "speech", relay::runtime::Backend::Pjrt)
+    {
+        let mut cfg = preset("speech").unwrap();
+        cfg.total_learners = 100;
+        cfg.rounds = 1;
+        cfg.avail = AvailMode::AllAvail;
+        cfg.eval_every = 1000;
+        bench::run("coordinator/full_round/speech/pjrt", || {
+            let mut c = Coordinator::new(cfg.clone(), Arc::clone(&pjrt)).unwrap();
+            std::hint::black_box(c.run().unwrap());
+        });
+    }
+}
+
+fn bench_substrates() {
+    println!("\n== substrates ==");
+    let json_src = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+        r#"{"format":"hlo-text-v1","variants":{},"computations":[]}"#.to_string()
+    });
+    bench::run("json/parse_manifest", || {
+        std::hint::black_box(relay::util::json::Json::parse(&json_src).unwrap());
+    });
+    let mut rng = Rng::new(6);
+    bench::run("rng/normal_x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(rng.normal());
+        }
+    });
+    let part = relay::data::partition::Partitioner::new(
+        relay::data::partition::PartitionScheme::FedScale,
+        35,
+        100,
+    );
+    bench::run("partition/fedscale_1000_learners", || {
+        std::hint::black_box(part.assign(1000, 7));
+    });
+}
+
+fn main() {
+    println!("relay benchmark suite (hand-rolled harness; budget ~1.5s per bench)");
+    let t0 = std::time::Instant::now();
+    bench_substrates();
+    bench_trace_forecast();
+    bench_selectors();
+    bench_runtime();
+    bench_saa();
+    bench_round();
+    println!("\ntotal bench wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = Duration::from_secs(0);
+}

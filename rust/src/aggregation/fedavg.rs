@@ -1,0 +1,61 @@
+//! FedAvg server update (McMahan et al.): x_{t+1} = x_t + eta * delta, with
+//! eta = 1 by default (the delta is already an lr-scaled local step average,
+//! Algorithm 2's "Server Update: x_{t+1} = x_t + gamma * Delta_{t-tau}").
+
+use anyhow::{anyhow, Result};
+
+use super::ServerOptimizer;
+
+pub struct FedAvg {
+    pub server_lr: f32,
+}
+
+impl Default for FedAvg {
+    fn default() -> Self {
+        FedAvg { server_lr: 1.0 }
+    }
+}
+
+impl ServerOptimizer for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn apply(&mut self, global: &mut [f32], delta: &[f32]) -> Result<()> {
+        if global.len() != delta.len() {
+            return Err(anyhow!("delta len {} != params {}", delta.len(), global.len()));
+        }
+        for (g, d) in global.iter_mut().zip(delta) {
+            *g += self.server_lr * d;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_delta() {
+        let mut opt = FedAvg::default();
+        let mut x = vec![1.0, 2.0];
+        opt.apply(&mut x, &[0.5, -1.0]).unwrap();
+        assert_eq!(x, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn server_lr_scales() {
+        let mut opt = FedAvg { server_lr: 0.5 };
+        let mut x = vec![0.0];
+        opt.apply(&mut x, &[2.0]).unwrap();
+        assert_eq!(x, vec![1.0]);
+    }
+
+    #[test]
+    fn rejects_len_mismatch() {
+        let mut opt = FedAvg::default();
+        let mut x = vec![0.0];
+        assert!(opt.apply(&mut x, &[1.0, 2.0]).is_err());
+    }
+}

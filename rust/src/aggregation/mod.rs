@@ -1,0 +1,59 @@
+//! Aggregation layer (paper §4.2): server optimizers (FedAvg, YoGi), the
+//! stale-update weight-scaling rules (Equal / DynSGD / AdaSGD / RELAY's
+//! Eq. 2), the staleness-aware merge that drives the L1 `saa` kernels, and
+//! the Stale Synchronous FedAvg recursion used by the convergence-theory
+//! tests (Algorithm 2).
+
+pub mod fedavg;
+pub mod saa;
+pub mod scaling;
+pub mod theory;
+pub mod yogi;
+
+use anyhow::Result;
+
+/// Applies the round's aggregated update direction to the global model.
+/// `delta` is the (weighted-mean) parameter delta reported by participants.
+pub trait ServerOptimizer: Send {
+    fn name(&self) -> &'static str;
+    fn apply(&mut self, global: &mut [f32], delta: &[f32]) -> Result<()>;
+}
+
+/// Construct by name ("fedavg" | "yogi").
+pub fn by_name(name: &str) -> Option<Box<dyn ServerOptimizer>> {
+    match name {
+        "fedavg" => Some(Box::new(fedavg::FedAvg::default())),
+        "yogi" => Some(Box::new(yogi::Yogi::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_constructs() {
+        assert_eq!(by_name("fedavg").unwrap().name(), "fedavg");
+        assert_eq!(by_name("yogi").unwrap().name(), "yogi");
+        assert!(by_name("adam").is_none());
+    }
+
+    /// Both optimizers must make progress on a quadratic when fed exact
+    /// gradient-descent deltas.
+    #[test]
+    fn optimizers_descend_quadratic() {
+        for name in ["fedavg", "yogi"] {
+            let mut opt = by_name(name).unwrap();
+            // f(x) = 0.5 ||x||^2, local delta = -lr * x
+            let mut x = vec![1.0f32; 8];
+            let norm0: f32 = x.iter().map(|v| v * v).sum();
+            for _ in 0..200 {
+                let delta: Vec<f32> = x.iter().map(|v| -0.1 * v).collect();
+                opt.apply(&mut x, &delta).unwrap();
+            }
+            let norm: f32 = x.iter().map(|v| v * v).sum();
+            assert!(norm < norm0 * 0.05, "{name} did not descend: {norm0} -> {norm}");
+        }
+    }
+}

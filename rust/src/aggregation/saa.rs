@@ -1,0 +1,255 @@
+//! Staleness-Aware Aggregation (paper §4.2, Appendix A "reporting phase"):
+//! collects fresh and stale updates, computes deviation-based weights via
+//! the L1 `dev` kernel, and merges everything with the L1 `agg` kernel.
+//!
+//! The merge follows the paper exactly: fresh updates get w_f = 1, stale
+//! update s gets w_s from the configured scaling rule, and the final
+//! coefficients are the normalized weights w_i / sum(w).
+
+use anyhow::{anyhow, Result};
+
+use super::scaling::{lambda_from_distance, ScalingRule};
+use crate::runtime::Executor;
+
+/// One model update awaiting aggregation.
+#[derive(Clone, Debug)]
+pub struct UpdateEntry {
+    pub learner: usize,
+    /// Parameter delta w.r.t. the global model of `origin_round`.
+    pub delta: Vec<f32>,
+    pub origin_round: usize,
+}
+
+/// Result of one staleness-aware merge.
+#[derive(Clone, Debug)]
+pub struct MergeOutcome {
+    /// The weighted-average delta to hand to the server optimizer.
+    pub delta: Vec<f32>,
+    /// (learner, final normalized coefficient) — for logging/tests.
+    pub coefficients: Vec<(usize, f64)>,
+    /// Deviations Lambda_s per stale entry (empty unless rule needs them).
+    pub lambdas: Vec<f64>,
+}
+
+/// Merge `fresh` (produced this round) and `stale` (delivered late) updates.
+///
+/// `round` is the current round index; staleness tau_s = round - origin.
+/// The executor's `agg`/`dev` computations are chunked to its static
+/// `max_updates` row capacity.
+pub fn merge(
+    exec: &dyn Executor,
+    fresh: &[UpdateEntry],
+    stale: &[UpdateEntry],
+    rule: ScalingRule,
+    round: usize,
+) -> Result<MergeOutcome> {
+    if fresh.is_empty() && stale.is_empty() {
+        return Err(anyhow!("nothing to aggregate"));
+    }
+
+    // Fresh average u_F — only needed for the deviation terms, so rules
+    // that don't use Lambda skip this kernel call entirely (perf:
+    // EXPERIMENTS.md §Perf iteration 1).
+    let fresh_refs: Vec<&[f32]> = fresh.iter().map(|u| u.delta.as_slice()).collect();
+    let fresh_avg: Option<Vec<f32>> =
+        if fresh.is_empty() || !(rule.needs_deviation() && !stale.is_empty()) {
+            None
+        } else {
+            let w = vec![1.0f32 / fresh.len() as f32; fresh.len()];
+            Some(chunked_combine(exec, &fresh_refs, &w)?)
+        };
+
+    // Deviations Lambda_s (only if the rule uses them and fresh exist).
+    let mut lambdas = vec![0.0f64; stale.len()];
+    if rule.needs_deviation() && !stale.is_empty() {
+        if let Some(avg) = &fresh_avg {
+            let stale_refs: Vec<&[f32]> = stale.iter().map(|u| u.delta.as_slice()).collect();
+            let dev = chunked_dev(exec, avg, &stale_refs)?;
+            let fresh_norm = dev.1;
+            for (i, d) in dev.0.iter().enumerate() {
+                lambdas[i] = lambda_from_distance(*d as f64, fresh_norm as f64, fresh.len());
+            }
+        }
+        // With zero fresh updates the deviation is undefined; leave Lambda=0
+        // (the staleness term alone drives the weight).
+    }
+    let lambda_max = lambdas.iter().cloned().fold(0.0f64, f64::max);
+
+    // Weights: fresh 1.0, stale per rule; normalize.
+    let mut ids = Vec::with_capacity(fresh.len() + stale.len());
+    let mut weights = Vec::with_capacity(fresh.len() + stale.len());
+    for u in fresh {
+        ids.push(u.learner);
+        weights.push(1.0f64);
+    }
+    for (i, u) in stale.iter().enumerate() {
+        let tau = round.saturating_sub(u.origin_round) as f64;
+        ids.push(u.learner);
+        weights.push(rule.weight(tau, lambdas[i], lambda_max));
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return Err(anyhow!("all aggregation weights are zero"));
+    }
+    let coeffs: Vec<f64> = weights.iter().map(|w| w / total).collect();
+
+    // Final weighted merge through the L1 kernel.
+    let all_refs: Vec<&[f32]> = fresh
+        .iter()
+        .chain(stale.iter())
+        .map(|u| u.delta.as_slice())
+        .collect();
+    let w32: Vec<f32> = coeffs.iter().map(|&c| c as f32).collect();
+    let delta = chunked_combine(exec, &all_refs, &w32)?;
+
+    Ok(MergeOutcome {
+        delta,
+        coefficients: ids.into_iter().zip(coeffs).collect(),
+        lambdas,
+    })
+}
+
+/// agg_combine in row-chunks of the executor's static max_updates capacity.
+fn chunked_combine(exec: &dyn Executor, rows: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+    let cap = exec.variant().max_updates;
+    if rows.len() <= cap {
+        return exec.agg_combine(rows, weights);
+    }
+    let p = exec.variant().num_params;
+    let mut acc = vec![0f32; p];
+    for (rchunk, wchunk) in rows.chunks(cap).zip(weights.chunks(cap)) {
+        let part = exec.agg_combine(rchunk, wchunk)?;
+        for i in 0..p {
+            acc[i] += part[i];
+        }
+    }
+    Ok(acc)
+}
+
+/// agg_dev in row-chunks; returns (distances per stale row, fresh norm).
+fn chunked_dev(exec: &dyn Executor, fresh: &[f32], rows: &[&[f32]]) -> Result<(Vec<f32>, f32)> {
+    let cap = exec.variant().max_updates;
+    let mut dists = Vec::with_capacity(rows.len());
+    let mut fresh_norm = 0f32;
+    for chunk in rows.chunks(cap) {
+        let out = exec.agg_dev(fresh, chunk)?;
+        let (d, n) = out.split_at(out.len() - 1);
+        dists.extend_from_slice(d);
+        fresh_norm = n[0];
+    }
+    Ok((dists, fresh_norm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{builtin_variant, NativeExecutor};
+
+    fn exec() -> NativeExecutor {
+        NativeExecutor::new(builtin_variant("tiny"))
+    }
+
+    fn entry(learner: usize, val: f32, origin: usize) -> UpdateEntry {
+        UpdateEntry { learner, delta: vec![val; 172], origin_round: origin }
+    }
+
+    #[test]
+    fn fresh_only_is_plain_mean() {
+        let e = exec();
+        let out = merge(
+            &e,
+            &[entry(0, 1.0, 5), entry(1, 3.0, 5)],
+            &[],
+            ScalingRule::Relay { beta: 0.35 },
+            5,
+        )
+        .unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 2.0).abs() < 1e-5));
+        assert_eq!(out.coefficients.len(), 2);
+        for (_, c) in &out.coefficients {
+            assert!((c - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn equal_rule_matches_global_mean() {
+        let e = exec();
+        let out = merge(
+            &e,
+            &[entry(0, 0.0, 9)],
+            &[entry(1, 3.0, 7)],
+            ScalingRule::Equal,
+            9,
+        )
+        .unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 1.5).abs() < 1e-5));
+    }
+
+    #[test]
+    fn dynsgd_downweights_stale() {
+        let e = exec();
+        // stale from 2 rounds ago: w_s = 1/3; fresh w=1 -> coeffs 0.75/0.25
+        let out = merge(
+            &e,
+            &[entry(0, 0.0, 10)],
+            &[entry(1, 4.0, 8)],
+            ScalingRule::DynSgd,
+            10,
+        )
+        .unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 1.0).abs() < 1e-5), "{}", out.delta[0]);
+    }
+
+    #[test]
+    fn relay_rule_boosts_most_deviant_stale() {
+        let e = exec();
+        let fresh = vec![entry(0, 1.0, 10), entry(1, 1.0, 10)];
+        // stale 2 is conformist (same as fresh), stale 3 deviates strongly
+        let mut conform = entry(2, 1.0, 9);
+        conform.delta[0] = 1.01;
+        let deviant = entry(3, -5.0, 9);
+        let out = merge(&e, &fresh, &[conform, deviant], ScalingRule::Relay { beta: 0.35 }, 10)
+            .unwrap();
+        let c_conform = out.coefficients[2].1;
+        let c_deviant = out.coefficients[3].1;
+        assert!(c_deviant > c_conform, "deviant {c_deviant} <= conformist {c_conform}");
+        assert_eq!(out.lambdas.len(), 2);
+        assert!(out.lambdas[1] > out.lambdas[0]);
+    }
+
+    #[test]
+    fn coefficients_sum_to_one() {
+        let e = exec();
+        let out = merge(
+            &e,
+            &[entry(0, 0.5, 4)],
+            &[entry(1, 1.0, 3), entry(2, 2.0, 1)],
+            ScalingRule::Relay { beta: 0.35 },
+            4,
+        )
+        .unwrap();
+        let total: f64 = out.coefficients.iter().map(|(_, c)| c).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_only_rounds_work() {
+        let e = exec();
+        let out = merge(&e, &[], &[entry(1, 2.0, 3)], ScalingRule::DynSgd, 5).unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 2.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn empty_merge_errors() {
+        let e = exec();
+        assert!(merge(&e, &[], &[], ScalingRule::Equal, 0).is_err());
+    }
+
+    #[test]
+    fn chunking_exceeding_max_updates() {
+        let e = exec(); // tiny: max_updates = 8
+        let fresh: Vec<UpdateEntry> = (0..20).map(|i| entry(i, 1.0, 2)).collect();
+        let out = merge(&e, &fresh, &[], ScalingRule::Equal, 2).unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 1.0).abs() < 1e-5));
+    }
+}

@@ -1,0 +1,139 @@
+//! Stale-update weight-scaling rules (paper §4.2.4):
+//!
+//! * **Equal** — w_s = 1 (stale treated like fresh);
+//! * **DynSGD** (Jiang et al.) — w_s = 1 / (tau_s + 1);
+//! * **AdaSGD** (Damaskinos et al., FLeet) — w_s = e^{-(tau_s + 1)};
+//! * **Relay** — Eq. 2: the privacy-preserving deviation-boosted damping
+//!   w_s = (1-beta)/(tau_s+1) + beta * (1 - e^{-Lambda_s / Lambda_max}),
+//!   where Lambda_s = ||u_F - (u_s + n_F u_F)/(n_F + 1)||^2 / ||u_F||^2
+//!   measures how much the stale update deviates from the fresh average —
+//!   computed from updates only, never from learner data.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalingRule {
+    Equal,
+    DynSgd,
+    AdaSgd,
+    Relay { beta: f64 },
+}
+
+impl ScalingRule {
+    pub fn parse(s: &str) -> Option<ScalingRule> {
+        match s {
+            "equal" => Some(ScalingRule::Equal),
+            "dynsgd" => Some(ScalingRule::DynSgd),
+            "adasgd" => Some(ScalingRule::AdaSgd),
+            "relay" => Some(ScalingRule::Relay { beta: 0.35 }), // paper default
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScalingRule::Equal => "equal",
+            ScalingRule::DynSgd => "dynsgd",
+            ScalingRule::AdaSgd => "adasgd",
+            ScalingRule::Relay { .. } => "relay",
+        }
+    }
+
+    /// Whether this rule needs the deviation terms Lambda (only RELAY does —
+    /// the others can skip the `dev` kernel call entirely).
+    pub fn needs_deviation(&self) -> bool {
+        matches!(self, ScalingRule::Relay { .. })
+    }
+
+    /// Weight of one stale update. `tau` = staleness in rounds,
+    /// `lambda`/`lambda_max` = deviation terms (ignored except by Relay).
+    pub fn weight(&self, tau: f64, lambda: f64, lambda_max: f64) -> f64 {
+        match *self {
+            ScalingRule::Equal => 1.0,
+            ScalingRule::DynSgd => 1.0 / (tau + 1.0),
+            ScalingRule::AdaSgd => (-(tau + 1.0)).exp(),
+            ScalingRule::Relay { beta } => {
+                let lam_max = lambda_max.max(1e-12);
+                (1.0 - beta) / (tau + 1.0) + beta * (1.0 - (-lambda / lam_max).exp())
+            }
+        }
+    }
+}
+
+/// Lambda_s from the raw squared distance ||u_F - u_s||^2, the fresh-average
+/// norm ||u_F||^2 and n_F (paper 4.2.4, simplified algebraically — see
+/// `python/compile/kernels/ref.py::lambda_ref`).
+pub fn lambda_from_distance(dist_sq: f64, fresh_norm_sq: f64, n_fresh: usize) -> f64 {
+    let nf = n_fresh as f64;
+    dist_sq / ((nf + 1.0).powi(2) * fresh_norm_sq.max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["equal", "dynsgd", "adasgd", "relay"] {
+            assert_eq!(ScalingRule::parse(s).unwrap().label(), s);
+        }
+        assert!(ScalingRule::parse("x").is_none());
+    }
+
+    #[test]
+    fn equal_is_one() {
+        assert_eq!(ScalingRule::Equal.weight(5.0, 0.3, 1.0), 1.0);
+    }
+
+    #[test]
+    fn dynsgd_inverse_linear() {
+        assert_eq!(ScalingRule::DynSgd.weight(0.0, 0.0, 1.0), 1.0);
+        assert_eq!(ScalingRule::DynSgd.weight(4.0, 0.0, 1.0), 0.2);
+    }
+
+    #[test]
+    fn adasgd_exponential() {
+        let w1 = ScalingRule::AdaSgd.weight(0.0, 0.0, 1.0);
+        let w2 = ScalingRule::AdaSgd.weight(1.0, 0.0, 1.0);
+        assert!((w1 - (-1.0f64).exp()).abs() < 1e-12);
+        assert!((w2 / w1 - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relay_eq2_components() {
+        let r = ScalingRule::Relay { beta: 0.35 };
+        // max-deviation stale: boost term = 1 - e^{-1}
+        let w = r.weight(1.0, 1.0, 1.0);
+        let expect = 0.65 / 2.0 + 0.35 * (1.0 - (-1.0f64).exp());
+        assert!((w - expect).abs() < 1e-12);
+        // beta=0 reduces to DynSGD
+        let r0 = ScalingRule::Relay { beta: 0.0 };
+        assert!((r0.weight(3.0, 0.5, 1.0) - 0.25).abs() < 1e-12);
+        // beta=1 is pure deviation boosting
+        let r1 = ScalingRule::Relay { beta: 1.0 };
+        assert!((r1.weight(9.0, 1.0, 1.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relay_boosts_deviant_updates() {
+        let r = ScalingRule::Relay { beta: 0.35 };
+        let conformist = r.weight(2.0, 0.01, 1.0);
+        let deviant = r.weight(2.0, 1.0, 1.0);
+        assert!(deviant > conformist);
+    }
+
+    #[test]
+    fn only_relay_needs_deviation() {
+        assert!(ScalingRule::Relay { beta: 0.35 }.needs_deviation());
+        assert!(!ScalingRule::Equal.needs_deviation());
+        assert!(!ScalingRule::DynSgd.needs_deviation());
+        assert!(!ScalingRule::AdaSgd.needs_deviation());
+    }
+
+    #[test]
+    fn lambda_matches_paper_algebra() {
+        // Lambda = ||f - u||^2 / ((nF+1)^2 ||f||^2)
+        let lam = lambda_from_distance(8.0, 2.0, 3);
+        assert!((lam - 8.0 / (16.0 * 2.0)).abs() < 1e-12);
+        // degenerate fresh norm guarded
+        assert!(lambda_from_distance(1.0, 0.0, 1).is_finite());
+    }
+}

@@ -1,0 +1,104 @@
+//! YoGi adaptive server optimizer (Zaheer et al.; used for FL by Reddi et
+//! al. "Adaptive Federated Optimization" and by the paper for every
+//! benchmark except CIFAR10, following Oort/FedScale practice).
+//!
+//! m_t = beta1 m_{t-1} + (1 - beta1) d_t
+//! v_t = v_{t-1} - (1 - beta2) d_t^2 sign(v_{t-1} - d_t^2)
+//! x_t = x_{t-1} + eta * m_t / (sqrt(v_t) + tau)
+
+use anyhow::{anyhow, Result};
+
+use super::ServerOptimizer;
+
+pub struct Yogi {
+    pub eta: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub tau: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Default for Yogi {
+    fn default() -> Self {
+        // eta tuned for deltas that are already lr-scaled local steps
+        // (FedScale's yogi defaults: beta1=0.9, beta2=0.99, tau=1e-3).
+        Yogi { eta: 5e-3, beta1: 0.9, beta2: 0.99, tau: 1e-3, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl ServerOptimizer for Yogi {
+    fn name(&self) -> &'static str {
+        "yogi"
+    }
+
+    fn apply(&mut self, global: &mut [f32], delta: &[f32]) -> Result<()> {
+        if global.len() != delta.len() {
+            return Err(anyhow!("delta len {} != params {}", delta.len(), global.len()));
+        }
+        if self.m.is_empty() {
+            self.m = vec![0.0; global.len()];
+            self.v = vec![1e-6; global.len()];
+        }
+        if self.m.len() != global.len() {
+            return Err(anyhow!("yogi state len {} != params {}", self.m.len(), global.len()));
+        }
+        for i in 0..global.len() {
+            let d = delta[i];
+            let d2 = d * d;
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * d;
+            let sign = if self.v[i] > d2 { 1.0 } else { -1.0 };
+            self.v[i] -= (1.0 - self.beta2) * d2 * sign;
+            if self.v[i] < 0.0 {
+                self.v[i] = 0.0;
+            }
+            global[i] += self.eta * self.m[i] / (self.v[i].sqrt() + self.tau);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_lazily_initialized() {
+        let mut y = Yogi::default();
+        let mut x = vec![0.0f32; 4];
+        y.apply(&mut x, &[0.1, 0.1, 0.1, 0.1]).unwrap();
+        assert_eq!(y.m.len(), 4);
+        assert!(x.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn v_controls_step_size() {
+        // larger historical variance -> smaller steps for same delta
+        let mut quiet = Yogi::default();
+        let mut noisy = Yogi::default();
+        let mut xq = vec![0.0f32];
+        let mut xn = vec![0.0f32];
+        for i in 0..50 {
+            quiet.apply(&mut xq, &[0.01]).unwrap();
+            let d = if i % 2 == 0 { 0.5 } else { -0.5 };
+            noisy.apply(&mut xn, &[d]).unwrap();
+        }
+        // step magnitude per unit delta
+        let mut xq2 = xq.clone();
+        quiet.apply(&mut xq2, &[0.01]).unwrap();
+        let quiet_step = (xq2[0] - xq[0]).abs() / 0.01;
+        let mut xn2 = xn.clone();
+        noisy.apply(&mut xn2, &[0.01]).unwrap();
+        let noisy_step = (xn2[0] - xn[0]).abs() / 0.01;
+        assert!(quiet_step > 2.0 * noisy_step, "{quiet_step} vs {noisy_step}");
+    }
+
+    #[test]
+    fn rejects_len_mismatch_after_init() {
+        let mut y = Yogi::default();
+        let mut x = vec![0.0f32; 2];
+        y.apply(&mut x, &[0.1, 0.1]).unwrap();
+        let mut x3 = vec![0.0f32; 3];
+        assert!(y.apply(&mut x3, &[0.1, 0.1, 0.1]).is_err());
+    }
+}

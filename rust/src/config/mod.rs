@@ -1,0 +1,393 @@
+//! Experiment configuration: every knob of the coordinator, with benchmark
+//! presets mirroring paper Table 1, JSON load/save, and validation.
+
+use anyhow::{anyhow, Result};
+
+use crate::aggregation::scaling::ScalingRule;
+use crate::data::partition::PartitionScheme;
+use crate::learners::HardwareScenario;
+use crate::util::json::{num, obj, Json};
+
+/// Round-termination regime (paper §5.1 "Experimental Scenarios").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoundMode {
+    /// OC: over-commit the target by `factor` (1.3 in the paper) and end
+    /// the round once `target` updates arrive.
+    OverCommit { factor: f64 },
+    /// DL: select `target` and aggregate whatever arrives by `deadline`.
+    Deadline { deadline: f64 },
+}
+
+impl RoundMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoundMode::OverCommit { .. } => "OC",
+            RoundMode::Deadline { .. } => "DL",
+        }
+    }
+}
+
+/// Availability regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AvailMode {
+    AllAvail,
+    DynAvail,
+}
+
+/// One experiment, fully specified.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub label: String,
+    /// Model/benchmark variant name ("speech", "cifar", ...).
+    pub variant: String,
+    pub total_learners: usize,
+    pub rounds: usize,
+    /// Developer-set target participants per round (N_0).
+    pub target_participants: usize,
+    pub mode: RoundMode,
+    pub avail: AvailMode,
+    /// Selector: "random" | "oort" | "priority" | "safa".
+    pub selector: String,
+    /// Staleness-aware aggregation enabled (RELAY's SAA / SAFA's cache).
+    pub use_saa: bool,
+    pub scaling: ScalingRule,
+    /// Max staleness in rounds; None = unbounded (RELAY default).
+    pub staleness_threshold: Option<usize>,
+    /// RELAY's Adaptive Participant Target.
+    pub apt: bool,
+    /// EMA alpha for the round-duration estimate (paper: 0.25).
+    pub apt_alpha: f64,
+    /// Server optimizer: "fedavg" | "yogi".
+    pub server_opt: String,
+    /// Local SGD learning rate + epochs (Table 1).
+    pub lr: f32,
+    pub local_epochs: usize,
+    pub partition: PartitionScheme,
+    /// Mean samples per learner shard.
+    pub mean_samples: usize,
+    pub hardware: HardwareScenario,
+    /// SAFA's target fraction of participants that ends a round.
+    pub safa_target_ratio: f64,
+    /// SAFA+O oracle: perfect knowledge of which stale updates will be
+    /// aggregated; never spends resources on doomed updates.
+    pub oracle: bool,
+    /// Floor on round duration (seconds): the selection window +
+    /// configuration/model-distribution phases of Fig. 1. Real deployments
+    /// report multi-minute rounds even when all updates arrive quickly
+    /// (Bonawitz et al.); this keeps scaled-down OC rounds from collapsing
+    /// to a frozen availability snapshot.
+    pub min_round_duration: f64,
+    /// Rounds a participant holds from re-checking in after submitting.
+    pub cooldown_rounds: usize,
+    /// Evaluate on the test set every this many rounds.
+    pub eval_every: usize,
+    /// Test-set size: samples per class.
+    pub test_per_class: usize,
+    pub seed: u64,
+    /// Worker threads for the per-participant training loop.
+    pub workers: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            label: String::new(),
+            variant: "speech".into(),
+            total_learners: 200,
+            rounds: 200,
+            target_participants: 10,
+            mode: RoundMode::OverCommit { factor: 1.3 },
+            avail: AvailMode::DynAvail,
+            selector: "random".into(),
+            use_saa: false,
+            scaling: ScalingRule::Relay { beta: 0.35 },
+            staleness_threshold: None,
+            apt: false,
+            apt_alpha: 0.25,
+            server_opt: "fedavg".into(),
+            lr: 0.05,
+            local_epochs: 1,
+            partition: PartitionScheme::UniformIid,
+            mean_samples: 100,
+            hardware: HardwareScenario::Hs1,
+            safa_target_ratio: 0.1,
+            oracle: false,
+            min_round_duration: 30.0,
+            cooldown_rounds: 5,
+            eval_every: 5,
+            test_per_class: 20,
+            seed: 1,
+            workers: 0, // 0 = auto
+        }
+    }
+}
+
+impl ExpConfig {
+    /// RELAY's full configuration (IPS + SAA + APT) on top of `self`.
+    pub fn relay(mut self) -> Self {
+        self.selector = "priority".into();
+        self.use_saa = true;
+        self.scaling = ScalingRule::Relay { beta: 0.35 };
+        self.apt = true;
+        self
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.total_learners == 0 || self.rounds == 0 {
+            return Err(anyhow!("learners/rounds must be positive"));
+        }
+        if self.target_participants == 0 {
+            return Err(anyhow!("target_participants must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.safa_target_ratio) {
+            return Err(anyhow!("safa_target_ratio must be in [0,1]"));
+        }
+        if let RoundMode::OverCommit { factor } = self.mode {
+            if factor < 1.0 {
+                return Err(anyhow!("overcommit factor must be >= 1"));
+            }
+        }
+        if let RoundMode::Deadline { deadline } = self.mode {
+            if deadline <= 0.0 {
+                return Err(anyhow!("deadline must be positive"));
+            }
+        }
+        if crate::selection::by_name(&self.selector).is_none() {
+            return Err(anyhow!("unknown selector '{}'", self.selector));
+        }
+        if crate::aggregation::by_name(&self.server_opt).is_none() {
+            return Err(anyhow!("unknown server optimizer '{}'", self.server_opt));
+        }
+        Ok(())
+    }
+
+    // ---- JSON -----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let (mode, mode_param) = match self.mode {
+            RoundMode::OverCommit { factor } => ("oc", factor),
+            RoundMode::Deadline { deadline } => ("dl", deadline),
+        };
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("variant", Json::Str(self.variant.clone())),
+            ("total_learners", num(self.total_learners as f64)),
+            ("rounds", num(self.rounds as f64)),
+            ("target_participants", num(self.target_participants as f64)),
+            ("mode", Json::Str(mode.into())),
+            ("mode_param", num(mode_param)),
+            (
+                "avail",
+                Json::Str(match self.avail {
+                    AvailMode::AllAvail => "all".into(),
+                    AvailMode::DynAvail => "dyn".into(),
+                }),
+            ),
+            ("selector", Json::Str(self.selector.clone())),
+            ("use_saa", Json::Bool(self.use_saa)),
+            ("scaling", Json::Str(self.scaling.label().into())),
+            (
+                "staleness_threshold",
+                self.staleness_threshold.map(|t| num(t as f64)).unwrap_or(Json::Null),
+            ),
+            ("apt", Json::Bool(self.apt)),
+            ("apt_alpha", num(self.apt_alpha)),
+            ("server_opt", Json::Str(self.server_opt.clone())),
+            ("lr", num(self.lr as f64)),
+            ("local_epochs", num(self.local_epochs as f64)),
+            ("partition", Json::Str(self.partition.label())),
+            ("mean_samples", num(self.mean_samples as f64)),
+            (
+                "hardware",
+                Json::Str(
+                    match self.hardware {
+                        HardwareScenario::Hs1 => "hs1",
+                        HardwareScenario::Hs2 => "hs2",
+                        HardwareScenario::Hs3 => "hs3",
+                        HardwareScenario::Hs4 => "hs4",
+                    }
+                    .into(),
+                ),
+            ),
+            ("safa_target_ratio", num(self.safa_target_ratio)),
+            ("oracle", Json::Bool(self.oracle)),
+            ("min_round_duration", num(self.min_round_duration)),
+            ("cooldown_rounds", num(self.cooldown_rounds as f64)),
+            ("eval_every", num(self.eval_every as f64)),
+            ("test_per_class", num(self.test_per_class as f64)),
+            ("seed", num(self.seed as f64)),
+            ("workers", num(self.workers as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExpConfig> {
+        let d = ExpConfig::default();
+        let gs = |k: &str, dflt: &str| -> String {
+            j.get(k).and_then(|v| v.as_str()).unwrap_or(dflt).to_string()
+        };
+        let gu = |k: &str, dflt: usize| j.get(k).and_then(|v| v.as_usize()).unwrap_or(dflt);
+        let gf = |k: &str, dflt: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(dflt);
+        let gb = |k: &str, dflt: bool| j.get(k).and_then(|v| v.as_bool()).unwrap_or(dflt);
+
+        let mode = match gs("mode", "oc").as_str() {
+            "oc" => RoundMode::OverCommit { factor: gf("mode_param", 1.3) },
+            "dl" => RoundMode::Deadline { deadline: gf("mode_param", 100.0) },
+            m => return Err(anyhow!("unknown mode '{m}'")),
+        };
+        let avail = match gs("avail", "dyn").as_str() {
+            "all" => AvailMode::AllAvail,
+            "dyn" => AvailMode::DynAvail,
+            a => return Err(anyhow!("unknown avail '{a}'")),
+        };
+        let partition = PartitionScheme::parse(&gs("partition", "iid"))
+            .ok_or_else(|| anyhow!("unknown partition"))?;
+        let scaling = ScalingRule::parse(&gs("scaling", "relay"))
+            .ok_or_else(|| anyhow!("unknown scaling"))?;
+        let hardware = HardwareScenario::parse(&gs("hardware", "hs1"))
+            .ok_or_else(|| anyhow!("unknown hardware scenario"))?;
+        let cfg = ExpConfig {
+            label: gs("label", ""),
+            variant: gs("variant", &d.variant),
+            total_learners: gu("total_learners", d.total_learners),
+            rounds: gu("rounds", d.rounds),
+            target_participants: gu("target_participants", d.target_participants),
+            mode,
+            avail,
+            selector: gs("selector", &d.selector),
+            use_saa: gb("use_saa", d.use_saa),
+            scaling,
+            staleness_threshold: j
+                .get("staleness_threshold")
+                .and_then(|v| v.as_usize()),
+            apt: gb("apt", d.apt),
+            apt_alpha: gf("apt_alpha", d.apt_alpha),
+            server_opt: gs("server_opt", &d.server_opt),
+            lr: gf("lr", d.lr as f64) as f32,
+            local_epochs: gu("local_epochs", d.local_epochs),
+            partition,
+            mean_samples: gu("mean_samples", d.mean_samples),
+            hardware,
+            safa_target_ratio: gf("safa_target_ratio", d.safa_target_ratio),
+            oracle: gb("oracle", d.oracle),
+            min_round_duration: gf("min_round_duration", d.min_round_duration),
+            cooldown_rounds: gu("cooldown_rounds", d.cooldown_rounds),
+            eval_every: gu("eval_every", d.eval_every),
+            test_per_class: gu("test_per_class", d.test_per_class),
+            seed: gf("seed", d.seed as f64) as u64,
+            workers: gu("workers", d.workers),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<ExpConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Benchmark presets mirroring paper Table 1 (scaled: DESIGN.md §2).
+pub fn preset(benchmark: &str) -> Result<ExpConfig> {
+    let mut c = ExpConfig::default();
+    match benchmark {
+        "speech" => {
+            c.variant = "speech".into();
+            c.lr = 0.05;
+            c.local_epochs = 1;
+            c.server_opt = "yogi".into();
+        }
+        "cifar" => {
+            c.variant = "cifar".into();
+            c.lr = 0.05;
+            c.local_epochs = 1;
+            c.server_opt = "fedavg".into(); // paper: FedAvg for CIFAR10
+        }
+        "openimage" => {
+            c.variant = "openimage".into();
+            c.lr = 0.05;
+            c.local_epochs = 2;
+            c.server_opt = "yogi".into();
+        }
+        "nlp" => {
+            c.variant = "nlp".into();
+            c.lr = 0.02;
+            c.local_epochs = 2;
+            c.server_opt = "yogi".into();
+        }
+        "tiny" => {
+            c.variant = "tiny".into();
+            c.lr = 0.1;
+            c.mean_samples = 20;
+            c.test_per_class = 10;
+        }
+        other => return Err(anyhow!("unknown benchmark preset '{other}'")),
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::LabelSkew;
+
+    #[test]
+    fn default_validates() {
+        ExpConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn relay_builder_sets_modules() {
+        let c = ExpConfig::default().relay();
+        assert_eq!(c.selector, "priority");
+        assert!(c.use_saa);
+        assert!(c.apt);
+        assert_eq!(c.scaling.label(), "relay");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut c = ExpConfig::default().relay().with_label("x");
+        c.mode = RoundMode::Deadline { deadline: 100.0 };
+        c.avail = AvailMode::AllAvail;
+        c.staleness_threshold = Some(5);
+        c.partition = PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Zipf };
+        c.hardware = HardwareScenario::Hs3;
+        c.oracle = true;
+        let j = c.to_json();
+        let c2 = ExpConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.label, "x");
+        assert_eq!(c2.mode, RoundMode::Deadline { deadline: 100.0 });
+        assert_eq!(c2.avail, AvailMode::AllAvail);
+        assert_eq!(c2.staleness_threshold, Some(5));
+        assert_eq!(c2.partition.label(), "label-zipf");
+        assert_eq!(c2.hardware, HardwareScenario::Hs3);
+        assert!(c2.oracle);
+        assert_eq!(c2.selector, "priority");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = ExpConfig::default();
+        c.target_participants = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExpConfig::default();
+        c.selector = "nope".into();
+        assert!(c.validate().is_err());
+        let mut c = ExpConfig::default();
+        c.mode = RoundMode::OverCommit { factor: 0.5 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn presets_follow_table1() {
+        assert_eq!(preset("cifar").unwrap().server_opt, "fedavg");
+        assert_eq!(preset("speech").unwrap().server_opt, "yogi");
+        assert!(preset("imagenet").is_err());
+    }
+}

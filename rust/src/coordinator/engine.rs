@@ -1,0 +1,835 @@
+//! The round engine — the paper's Fig. 1 life-cycle made executable:
+//!
+//! selection window (check-in + availability probe) → participant selection
+//! (Random / Oort / IPS / SAFA, optionally APT-adjusted, OC or DL regime) →
+//! real local SGD through the AOT executor → reporting (fresh before the
+//! round ends, stragglers become stale deliveries) → staleness-aware
+//! aggregation (Eq. 2 weights via the L1 kernels) → server optimizer →
+//! evaluation; with full resource/waste accounting along the way.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::aggregation::saa::{merge, UpdateEntry};
+use crate::aggregation::ServerOptimizer;
+use crate::config::{AvailMode, ExpConfig, RoundMode};
+use crate::data::partition::{LearnerShard, Partitioner};
+use crate::data::synth::{Dataset, TestSet};
+use crate::forecast::SeasonalForecaster;
+use crate::learners::ProfilePool;
+use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
+use crate::runtime::Executor;
+use crate::selection::apt::AdaptiveTarget;
+use crate::selection::{Candidate, RoundFeedback, SelectionCtx, Selector};
+use crate::sim::{Availability, Clock, DeliveryQueue};
+use crate::trace::{TraceConfig, TraceSet};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// A straggler's update in flight to the server.
+struct PendingUpdate {
+    learner: usize,
+    delta: Option<Vec<f32>>, // None when training was skipped as doomed
+    origin_round: usize,
+    /// Device-seconds this update cost (for waste accounting on discard).
+    spent: f64,
+    stat_util: f64,
+    duration: f64,
+}
+
+/// Outcome of one participant's local training task.
+struct LocalOutcome {
+    delta: Vec<f32>,
+    mean_loss: f64,
+    stat_util: f64,
+}
+
+pub struct Coordinator {
+    pub cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    dataset: Dataset,
+    shards: Vec<LearnerShard>,
+    profiles: ProfilePool,
+    avail: Availability,
+    forecasters: Vec<SeasonalForecaster>,
+    selector: Box<dyn Selector>,
+    server_opt: Box<dyn ServerOptimizer>,
+    apt: AdaptiveTarget,
+    pub global: Vec<f32>,
+    clock: Clock,
+    pending: DeliveryQueue<PendingUpdate>,
+    /// Round index until which each learner holds from checking in.
+    cooldown_until: Vec<usize>,
+    /// Absolute time until which each learner is busy with a task.
+    busy_until: Vec<f64>,
+    accounting: Accounting,
+    rng: Rng,
+    test: TestSet,
+    model_bytes: usize,
+    /// SAFA+O: the set of (learner, origin_round) straggler updates that a
+    /// first (plain) pass aggregated; the oracle pass only trains these.
+    oracle_plan: Option<std::collections::HashSet<(usize, usize)>>,
+    /// Recorded by every run: which straggler updates got aggregated.
+    aggregated_stale: std::collections::HashSet<(usize, usize)>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Coordinator> {
+        cfg.validate()?;
+        let info = exec.variant().clone();
+        if info.name != cfg.variant {
+            return Err(anyhow!(
+                "executor variant '{}' != config variant '{}'",
+                info.name,
+                cfg.variant
+            ));
+        }
+        let rng = Rng::new(cfg.seed);
+        let dataset = Dataset::new(&info, cfg.seed ^ 0xD5);
+        let partitioner =
+            Partitioner::new(cfg.partition, info.num_classes, cfg.mean_samples);
+        let shards = partitioner.assign(cfg.total_learners, cfg.seed ^ 0x9A);
+        let profiles = ProfilePool::generate(cfg.total_learners, cfg.seed ^ 0x0F, cfg.hardware);
+        let avail = match cfg.avail {
+            AvailMode::AllAvail => Availability::All,
+            AvailMode::DynAvail => Availability::Dynamic(TraceSet::generate(
+                cfg.total_learners,
+                cfg.seed ^ 0x7A,
+                TraceConfig::default(),
+            )),
+        };
+        // Learner-side availability models: each learner trains its personal
+        // forecaster on (two replayed weeks of) its own trace — the paper's
+        // "learners maintain trace of their charging events" (Appendix A).
+        let forecasters = match &avail {
+            Availability::All => Vec::new(),
+            Availability::Dynamic(trace) => {
+                let step = 1800.0;
+                (0..cfg.total_learners)
+                    .map(|l| {
+                        let mut f = SeasonalForecaster::default();
+                        let series = trace.sample_series(l, step);
+                        for rep in 0..2 {
+                            for (i, &v) in series.iter().enumerate() {
+                                let t = rep as f64 * crate::trace::WEEK + i as f64 * step;
+                                f.observe(t, v > 0.5);
+                            }
+                        }
+                        f
+                    })
+                    .collect()
+            }
+        };
+        let selector = crate::selection::by_name(&cfg.selector)
+            .ok_or_else(|| anyhow!("unknown selector"))?;
+        let server_opt = crate::aggregation::by_name(&cfg.server_opt)
+            .ok_or_else(|| anyhow!("unknown server optimizer"))?;
+        let initial_mu = match cfg.mode {
+            RoundMode::Deadline { deadline } => deadline,
+            RoundMode::OverCommit { .. } => 100.0,
+        };
+        let apt = AdaptiveTarget::new(cfg.target_participants, cfg.apt_alpha, initial_mu);
+        let global = exec.init_params(cfg.seed as i32)?;
+        let test = dataset.test_set(cfg.test_per_class);
+        let model_bytes = info.num_params * 4;
+        Ok(Coordinator {
+            cooldown_until: vec![0; cfg.total_learners],
+            busy_until: vec![0.0; cfg.total_learners],
+            accounting: Accounting::default(),
+            rng: rng.stream(0xC0),
+            forecasters,
+            selector,
+            server_opt,
+            apt,
+            global,
+            clock: Clock::default(),
+            pending: DeliveryQueue::default(),
+            dataset,
+            shards,
+            profiles,
+            avail,
+            test,
+            model_bytes,
+            exec,
+            cfg,
+            oracle_plan: None,
+            aggregated_stale: std::collections::HashSet::new(),
+        })
+    }
+
+    /// Run the configured number of rounds; returns the full result log.
+    pub fn run(&mut self) -> Result<ExperimentResult> {
+        let mut result = ExperimentResult {
+            label: self.cfg.label.clone(),
+            perplexity_metric: self.exec.variant().perplexity,
+            ..Default::default()
+        };
+        for round in 0..self.cfg.rounds {
+            let rec = self.run_round(round)?;
+            result.rounds.push(rec);
+        }
+        // whatever is still in flight at the end never got aggregated
+        let leftover: f64 = self.pending.iter().map(|p| p.item.spent).sum();
+        self.accounting.waste(leftover);
+        if let Some(last) = result.rounds.last_mut() {
+            last.cum_waste_secs = self.accounting.cum_waste_secs;
+        }
+        Ok(result)
+    }
+
+    /// The paper's Fig. 1 sequence for one round.
+    fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
+        let now = self.clock.now;
+        let mu = self.apt.mu();
+        let mut rec = RoundRecord { round, ..Default::default() };
+
+        // ---- selection window: check-in + availability probe ------------
+        let candidates = self.checked_in(round, now, mu);
+
+        // ---- target adjustment (APT) + overcommit ------------------------
+        let mut target = self.cfg.target_participants;
+        if self.cfg.apt {
+            let remaining: Vec<f64> = self
+                .pending
+                .iter()
+                .map(|p| (p.deliver_at - now).max(0.0))
+                .collect();
+            target = self.apt.target(&remaining);
+        }
+        let n_select = match self.cfg.mode {
+            RoundMode::OverCommit { factor } => {
+                ((target as f64) * factor).ceil() as usize
+            }
+            RoundMode::Deadline { .. } => target,
+        };
+
+        let selected = if candidates.is_empty() {
+            Vec::new()
+        } else {
+            let mut ctx = SelectionCtx {
+                round,
+                now,
+                target: n_select,
+                candidates: &candidates,
+                rng: &mut self.rng,
+            };
+            self.selector.select(&mut ctx)
+        };
+        rec.selected = selected.len();
+
+        if selected.is_empty() {
+            // Nothing checked in: burn a round slot (paper: round aborted).
+            let dur = mu.max(1.0);
+            self.clock.advance(dur);
+            self.apt.observe_round(dur);
+            rec.failed = true;
+            rec.round_duration = dur;
+            rec.sim_time = self.clock.now;
+            rec.cum_resource_secs = self.accounting.cum_resource_secs;
+            rec.cum_waste_secs = self.accounting.cum_waste_secs;
+            rec.unique_participants = self.accounting.unique_participants();
+            return Ok(rec);
+        }
+
+        // ---- per-participant task timing ---------------------------------
+        // (id, completion_secs, dropped_after) — dropped_after = Some(t) if
+        // the learner leaves availability before finishing.
+        let mut tasks: Vec<(usize, f64, Option<f64>)> = Vec::with_capacity(selected.len());
+        for &id in &selected {
+            let n_samples = self.shards[id].len();
+            let t = self
+                .profiles
+                .get(id)
+                .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
+            let dropped = if self.avail.available_through(id, now, t) {
+                None
+            } else {
+                // drops out at (approximately) the end of its current session
+                let mut lo = 0.0f64;
+                let mut hi = t;
+                for _ in 0..20 {
+                    let mid = 0.5 * (lo + hi);
+                    if self.avail.available_through(id, now, mid) {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                Some(lo)
+            };
+            tasks.push((id, t, dropped));
+        }
+
+        // ---- round end ----------------------------------------------------
+        let mut completions: Vec<f64> = tasks
+            .iter()
+            .filter(|(_, _, d)| d.is_none())
+            .map(|(_, t, _)| *t)
+            .collect();
+        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let round_duration = match self.cfg.mode {
+            RoundMode::OverCommit { .. } => {
+                // round ends when `target` updates have arrived
+                if completions.is_empty() {
+                    mu.max(1.0)
+                } else if self.cfg.selector == "safa" {
+                    let k = ((selected.len() as f64 * self.cfg.safa_target_ratio).ceil()
+                        as usize)
+                        .clamp(1, completions.len());
+                    completions[k - 1]
+                } else {
+                    let k = target.min(completions.len());
+                    completions[k - 1]
+                }
+            }
+            RoundMode::Deadline { deadline } => {
+                if self.cfg.selector == "safa" {
+                    // SAFA: round ends when the target fraction reported,
+                    // capped by the deadline.
+                    let k = ((selected.len() as f64 * self.cfg.safa_target_ratio).ceil()
+                        as usize)
+                        .max(1);
+                    if completions.len() >= k {
+                        completions[k - 1].min(deadline)
+                    } else {
+                        deadline
+                    }
+                } else {
+                    deadline
+                }
+            }
+        };
+        // selection-window/configuration floor (Fig. 1 phases); never
+        // extends past a configured reporting deadline
+        let floor = match self.cfg.mode {
+            RoundMode::Deadline { deadline } => self.cfg.min_round_duration.min(deadline),
+            RoundMode::OverCommit { .. } => self.cfg.min_round_duration,
+        };
+        let round_duration = round_duration.max(floor);
+        let round_end = now + round_duration;
+
+        // ---- classify tasks: fresh / straggler / dropout ------------------
+        let mut fresh_ids = Vec::new();
+        let mut straggler_ids = Vec::new(); // complete, but after round end
+        for &(id, t, dropped) in &tasks {
+            match dropped {
+                Some(dt) => {
+                    // partial work, all wasted
+                    self.accounting.spend(id, dt);
+                    self.accounting.waste(dt);
+                    rec.dropouts += 1;
+                    self.busy_until[id] = now + dt;
+                }
+                None if t <= round_duration => {
+                    fresh_ids.push((id, t));
+                }
+                None => {
+                    straggler_ids.push((id, t));
+                }
+            }
+        }
+
+        // ---- oracle / doomed-straggler analysis ---------------------------
+        // Estimated staleness if the update lands during round
+        // `round + ceil((t - dur) / expected_future_round_duration)`.
+        let est_round_dur = match self.cfg.mode {
+            RoundMode::Deadline { deadline } => deadline,
+            RoundMode::OverCommit { .. } => mu.max(1.0),
+        };
+        // Staleness-doom analysis for the non-oracle training-skip
+        // optimization: skip the SGD only when the update CERTAINLY exceeds
+        // the staleness threshold (2x slack on the round-duration estimate);
+        // borderline cases still train and are re-checked (and
+        // waste-accounted) at delivery time, so the model trajectory is
+        // unaffected either way.
+        let doomed = |t: f64| -> bool {
+            if !self.cfg.use_saa {
+                return true; // never aggregated without SAA
+            }
+            match self.cfg.staleness_threshold {
+                None => false,
+                Some(th) => {
+                    let extra = (t - round_duration).max(0.0);
+                    let tau_est = (extra / est_round_dur).ceil() as usize;
+                    tau_est > 2 * th + 1
+                }
+            }
+        };
+
+        // ---- run real local training --------------------------------------
+        // Fresh participants always train. Stragglers train unless the
+        // oracle knows (or conservative analysis proves) the update dies.
+        let mut train_ids: Vec<(usize, f64, bool)> = Vec::new(); // (id, task_time, is_fresh)
+        for &(id, t) in &fresh_ids {
+            train_ids.push((id, t, true));
+        }
+        for &(id, t) in &straggler_ids {
+            let oracle_doomed = match &self.oracle_plan {
+                // SAFA+O (Fig. 2): the perfect oracle knows exactly which
+                // stale updates get aggregated (the plan recorded by the
+                // first pass); everything else is never even started.
+                Some(plan) => !plan.contains(&(id, round)),
+                None => false,
+            };
+            if oracle_doomed {
+                // SAFA+O: the oracle prevents the learner from training at
+                // all — no resources spent, nothing delivered. The learner
+                // stays reserved for the same window so the system timeline
+                // (selection dynamics) is identical to plain SAFA.
+                self.busy_until[id] = now + t;
+                continue;
+            }
+            self.accounting.spend(id, t);
+            self.busy_until[id] = now + t;
+            if doomed(t) {
+                // Will certainly be discarded (no SAA, or staleness bound
+                // certainly exceeded): account the waste now and skip the
+                // actual SGD — the model never sees this update.
+                self.accounting.waste(t);
+                rec.discarded += 1;
+                continue;
+            }
+            train_ids.push((id, t, false));
+        }
+        for &(id, t) in &fresh_ids {
+            self.accounting.spend(id, t);
+            self.busy_until[id] = now + t;
+        }
+
+        let outcomes = self.train_participants(
+            &train_ids.iter().map(|&(id, _, _)| id).collect::<Vec<_>>(),
+        )?;
+
+        // ---- route updates: fresh vs pending (stale) ----------------------
+        let mut fresh_updates: Vec<UpdateEntry> = Vec::new();
+        let mut feedback_completed: Vec<(usize, f64, f64)> = Vec::new();
+        let mut losses = Vec::new();
+        for ((id, task_time, is_fresh), outcome) in train_ids.iter().zip(outcomes) {
+            let outcome = outcome?;
+            losses.push(outcome.mean_loss);
+            if *is_fresh {
+                feedback_completed.push((*id, outcome.stat_util, *task_time));
+                fresh_updates.push(UpdateEntry {
+                    learner: *id,
+                    delta: outcome.delta,
+                    origin_round: round,
+                });
+            } else {
+                self.pending.push(
+                    now + task_time,
+                    PendingUpdate {
+                        learner: *id,
+                        delta: Some(outcome.delta),
+                        origin_round: round,
+                        spent: *task_time,
+                        stat_util: outcome.stat_util,
+                        duration: *task_time,
+                    },
+                );
+            }
+        }
+
+        // ---- collect stale deliveries that landed during this round -------
+        let mut stale_updates: Vec<UpdateEntry> = Vec::new();
+        for p in self.pending.due(round_end) {
+            let tau = round - p.item.origin_round;
+            let within = self
+                .cfg
+                .staleness_threshold
+                .map(|th| tau <= th)
+                .unwrap_or(true);
+            if self.cfg.use_saa && within {
+                if let Some(delta) = p.item.delta {
+                    feedback_completed.push((
+                        p.item.learner,
+                        p.item.stat_util,
+                        p.item.duration,
+                    ));
+                    self.aggregated_stale
+                        .insert((p.item.learner, p.item.origin_round));
+                    stale_updates.push(UpdateEntry {
+                        learner: p.item.learner,
+                        delta,
+                        origin_round: p.item.origin_round,
+                    });
+                }
+            } else {
+                self.accounting.waste(p.item.spent);
+                rec.discarded += 1;
+            }
+        }
+
+        rec.fresh_updates = fresh_updates.len();
+        rec.stale_updates = stale_updates.len();
+        rec.train_loss = if losses.is_empty() {
+            f64::NAN
+        } else {
+            losses.iter().sum::<f64>() / losses.len() as f64
+        };
+
+        // ---- aggregate + server update ------------------------------------
+        if fresh_updates.is_empty() && stale_updates.is_empty() {
+            rec.failed = true;
+        } else {
+            let outcome = merge(
+                self.exec.as_ref(),
+                &fresh_updates,
+                &stale_updates,
+                self.cfg.scaling,
+                round,
+            )?;
+            self.server_opt.apply(&mut self.global, &outcome.delta)?;
+        }
+
+        // ---- cooldowns, feedback, clock ------------------------------------
+        for (id, _, _) in &feedback_completed {
+            self.cooldown_until[*id] = round + 1 + self.cfg.cooldown_rounds;
+        }
+        let missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
+        self.selector.feedback(&RoundFeedback {
+            round,
+            completed: &feedback_completed,
+            missed: &missed,
+            round_duration,
+        });
+        self.apt.observe_round(round_duration);
+        self.clock.advance(round_duration);
+
+        // ---- evaluation ------------------------------------------------------
+        if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds {
+            let (loss, acc) = self.evaluate()?;
+            rec.test_loss = Some(loss);
+            rec.test_accuracy = Some(acc);
+        }
+
+        rec.round_duration = round_duration;
+        rec.sim_time = self.clock.now;
+        rec.cum_resource_secs = self.accounting.cum_resource_secs;
+        rec.cum_waste_secs = self.accounting.cum_waste_secs;
+        rec.unique_participants = self.accounting.unique_participants();
+        Ok(rec)
+    }
+
+    /// Checked-in learners with their probe answers (Algorithm 1 steps 1-3).
+    fn checked_in(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for id in 0..self.cfg.total_learners {
+            if self.cooldown_until[id] > round || self.busy_until[id] > now {
+                continue;
+            }
+            if !self.avail.available(id, now) {
+                continue;
+            }
+            let avail_prob = match self.cfg.avail {
+                AvailMode::AllAvail => 1.0,
+                AvailMode::DynAvail => {
+                    // learner-side forecast for the slot (mu, 2mu)
+                    self.forecasters[id].prob_slot(now + mu, now + 2.0 * mu)
+                }
+            };
+            let expected_duration = self.profiles.get(id).completion_time(
+                self.shards[id].len(),
+                self.cfg.local_epochs,
+                self.model_bytes,
+            );
+            out.push(Candidate { id, avail_prob, expected_duration });
+        }
+        out
+    }
+
+    /// Execute real local SGD for each participant (parallel over learners).
+    fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
+        let workers = if self.cfg.workers == 0 {
+            threadpool::default_workers().min(8)
+        } else {
+            self.cfg.workers
+        };
+        let global = &self.global;
+        let exec = &self.exec;
+        let dataset = &self.dataset;
+        let cfg = &self.cfg;
+        let shards = &self.shards;
+        let jobs: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                move || -> Result<LocalOutcome> {
+                    local_train(
+                        exec.as_ref(),
+                        dataset,
+                        &shards[id],
+                        id,
+                        global,
+                        cfg.lr,
+                        cfg.local_epochs,
+                        cfg.seed,
+                    )
+                }
+            })
+            .collect();
+        Ok(threadpool::run_parallel(workers, jobs))
+    }
+
+    /// Test-set evaluation: (mean loss, top-1 accuracy).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        evaluate_params(self.exec.as_ref(), &self.test, &self.global)
+    }
+}
+
+/// One participant's local training task (pure function of its inputs so it
+/// can run on the worker pool).
+#[allow(clippy::too_many_arguments)]
+fn local_train(
+    exec: &dyn Executor,
+    dataset: &Dataset,
+    shard: &LearnerShard,
+    learner: usize,
+    global: &[f32],
+    lr: f32,
+    epochs: usize,
+    seed: u64,
+) -> Result<LocalOutcome> {
+    let v = exec.variant();
+    let (b, d) = (v.batch, v.input_dim);
+    let mut params = global.to_vec();
+    let mut rng = Rng::new(seed ^ 0x10CA1).stream(learner as u64);
+    let mut losses = Vec::new();
+    let n = shard.len();
+    if n == 0 {
+        return Err(anyhow!("learner {learner} has an empty shard"));
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    for _ in 0..epochs.max(1) {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(b) {
+            let mut x = vec![0f32; b * d];
+            let mut y = vec![0i32; b];
+            let mut mask = vec![0f32; b];
+            for (row, &sample_idx) in chunk.iter().enumerate() {
+                let label = shard.labels[sample_idx] as usize;
+                let f = dataset.features(learner as u64, sample_idx as u64, label);
+                x[row * d..(row + 1) * d].copy_from_slice(&f);
+                y[row] = label as i32;
+                mask[row] = 1.0;
+            }
+            let out = exec.train_step(&params, &x, &y, &mask, lr)?;
+            params = out.params;
+            losses.push(out.loss as f64);
+        }
+    }
+    let delta: Vec<f32> = params.iter().zip(global).map(|(p, g)| p - g).collect();
+    let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
+    // Oort's statistical utility: |B_i| * sqrt(mean of squared losses).
+    let sq_mean = losses.iter().map(|l| l * l).sum::<f64>() / losses.len() as f64;
+    let stat_util = n as f64 * sq_mean.sqrt();
+    Ok(LocalOutcome { delta, mean_loss, stat_util })
+}
+
+/// Evaluate arbitrary parameters on a test set.
+pub fn evaluate_params(
+    exec: &dyn Executor,
+    test: &TestSet,
+    params: &[f32],
+) -> Result<(f64, f64)> {
+    let v = exec.variant();
+    let mut sum_loss = 0f64;
+    let mut correct = 0f64;
+    let mut total = 0f64;
+    for (x, y, mask) in test.batches(v.batch) {
+        let (l, c) = exec.eval_batch(params, &x, &y, &mask)?;
+        sum_loss += l as f64;
+        correct += c as f64;
+        total += mask.iter().sum::<f32>() as f64;
+    }
+    if total == 0.0 {
+        return Err(anyhow!("empty test set"));
+    }
+    Ok((sum_loss / total, correct / total))
+}
+
+/// Convenience: build a coordinator (native or artifact backend chosen by
+/// the caller) and run to completion.
+///
+/// `cfg.oracle` (SAFA+O, Fig. 2) runs TWO passes: a plain pass to learn
+/// exactly which straggler updates end up aggregated, then the accounted
+/// pass in which the perfect oracle prevents all other stragglers from ever
+/// training. The model trajectory is identical across both by construction.
+pub fn run_experiment(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<ExperimentResult> {
+    if cfg.oracle {
+        let mut probe_cfg = cfg.clone();
+        probe_cfg.oracle = false;
+        let mut probe = Coordinator::new(probe_cfg, Arc::clone(&exec))?;
+        probe.run()?;
+        let plan = probe.aggregated_stale;
+        let mut coord = Coordinator::new(cfg, exec)?;
+        coord.oracle_plan = Some(plan);
+        return coord.run();
+    }
+    Coordinator::new(cfg, exec)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{builtin_variant, NativeExecutor};
+
+    fn exec() -> Arc<dyn Executor> {
+        Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+    }
+
+    fn base_cfg() -> ExpConfig {
+        ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 24,
+            rounds: 12,
+            target_participants: 4,
+            mean_samples: 16,
+            test_per_class: 8,
+            eval_every: 3,
+            lr: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn random_allavail_learns() {
+        let mut cfg = base_cfg();
+        cfg.avail = AvailMode::AllAvail;
+        cfg.rounds = 40;
+        let r = run_experiment(cfg, exec()).unwrap();
+        let acc = r.final_accuracy().unwrap();
+        assert!(acc > 0.5, "tiny 4-class task should exceed 50%, got {acc}");
+        assert!(r.final_resource_hours() > 0.0);
+    }
+
+    #[test]
+    fn variant_mismatch_rejected() {
+        let mut cfg = base_cfg();
+        cfg.variant = "speech".into();
+        assert!(Coordinator::new(cfg, exec()).is_err());
+    }
+
+    #[test]
+    fn relay_full_stack_runs() {
+        let mut cfg = base_cfg().relay();
+        cfg.mode = RoundMode::Deadline { deadline: 60.0 };
+        let r = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(r.rounds.len(), 12);
+        // some rounds should have stale updates under a 60s deadline
+        let stale: usize = r.rounds.iter().map(|x| x.stale_updates).sum();
+        let fresh: usize = r.rounds.iter().map(|x| x.fresh_updates).sum();
+        assert!(fresh > 0);
+        let _ = stale; // stale may be 0 on fast profiles; asserted in bigger tests
+    }
+
+    #[test]
+    fn safa_trains_all_available() {
+        let mut cfg = base_cfg();
+        cfg.selector = "safa".into();
+        cfg.use_saa = true;
+        cfg.staleness_threshold = Some(5);
+        cfg.mode = RoundMode::Deadline { deadline: 60.0 };
+        cfg.avail = AvailMode::AllAvail;
+        cfg.rounds = 4;
+        let r = run_experiment(cfg, exec()).unwrap();
+        // all 24 learners (minus cooldowns) should be selected in round 0
+        assert!(r.rounds[0].selected >= 20, "selected={}", r.rounds[0].selected);
+    }
+
+    #[test]
+    fn no_saa_wastes_stragglers() {
+        let mut cfg = base_cfg();
+        cfg.use_saa = false;
+        cfg.mode = RoundMode::Deadline { deadline: 2.0 }; // tight: many stragglers
+        cfg.avail = AvailMode::AllAvail;
+        let r = run_experiment(cfg, exec()).unwrap();
+        assert!(
+            r.waste_fraction() > 0.0,
+            "tight deadline without SAA must waste work: {}",
+            r.waste_fraction()
+        );
+    }
+
+    #[test]
+    fn saa_reduces_waste_vs_no_saa() {
+        let mk = |use_saa: bool| {
+            let mut cfg = base_cfg();
+            cfg.use_saa = use_saa;
+            cfg.scaling = crate::aggregation::scaling::ScalingRule::Relay { beta: 0.35 };
+            cfg.mode = RoundMode::Deadline { deadline: 2.0 };
+            cfg.avail = AvailMode::AllAvail;
+            cfg.rounds = 16;
+            run_experiment(cfg, exec()).unwrap()
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(
+            with.waste_fraction() < without.waste_fraction(),
+            "SAA should reduce waste: {} vs {}",
+            with.waste_fraction(),
+            without.waste_fraction()
+        );
+    }
+
+    #[test]
+    fn oracle_uses_fewer_resources() {
+        let mk = |oracle: bool| {
+            let mut cfg = base_cfg();
+            cfg.selector = "safa".into();
+            cfg.use_saa = true;
+            cfg.staleness_threshold = Some(1);
+            cfg.oracle = oracle;
+            cfg.mode = RoundMode::Deadline { deadline: 12.0 };
+            cfg.avail = AvailMode::AllAvail;
+            cfg.rounds = 10;
+            run_experiment(cfg, exec()).unwrap()
+        };
+        let plain = mk(false);
+        let oracle = mk(true);
+        assert!(
+            oracle.final_resource_hours() <= plain.final_resource_hours(),
+            "oracle {} vs plain {}",
+            oracle.final_resource_hours(),
+            plain.final_resource_hours()
+        );
+    }
+
+    #[test]
+    fn dynavail_has_dropouts_or_failures() {
+        let mut cfg = base_cfg();
+        cfg.avail = AvailMode::DynAvail;
+        cfg.rounds = 20;
+        let r = run_experiment(cfg, exec()).unwrap();
+        let eventful: usize = r
+            .rounds
+            .iter()
+            .map(|x| x.dropouts + usize::from(x.failed))
+            .sum();
+        assert!(eventful > 0, "dyn availability should cause churn");
+    }
+
+    #[test]
+    fn cooldown_enforced() {
+        let mut cfg = base_cfg();
+        cfg.avail = AvailMode::AllAvail;
+        cfg.total_learners = 5;
+        cfg.target_participants = 5;
+        cfg.cooldown_rounds = 3;
+        cfg.rounds = 2;
+        let r = run_experiment(cfg, exec()).unwrap();
+        // round 0 uses all 5; round 1 everyone cools down -> failed round
+        assert!(r.rounds[0].selected >= 4);
+        assert!(r.rounds[1].failed || r.rounds[1].selected == 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = run_experiment(base_cfg(), exec()).unwrap();
+        let r2 = run_experiment(base_cfg(), exec()).unwrap();
+        assert_eq!(r1.final_accuracy(), r2.final_accuracy());
+        assert_eq!(
+            r1.rounds.last().unwrap().cum_resource_secs,
+            r2.rounds.last().unwrap().cum_resource_secs
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! The FL server (L3): round engine, local-training execution through the
+//! runtime, SAFA protocol variant, SAFA+O oracle, and the semi-centralized
+//! baseline of Table 2.
+
+pub mod centralized;
+pub mod engine;
+
+pub use engine::{Coordinator, run_experiment};

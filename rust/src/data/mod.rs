@@ -1,0 +1,9 @@
+//! Data substrate: synthetic benchmark corpora + the paper's data-to-learner
+//! mappings (D1 uniform IID, D2 FedScale-like, D3 label-limited with
+//! balanced / uniform / Zipf per-label skew), plus label analytics (Fig. 21).
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{LearnerShard, PartitionScheme, Partitioner};
+pub use synth::{Dataset, TestSet};

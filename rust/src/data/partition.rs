@@ -1,0 +1,311 @@
+//! Data-to-learner mappings (paper §5.1 "Data Partitioning"):
+//!
+//! * **D1 UniformIid** — every learner draws labels uniformly from all
+//!   classes, equal-ish sample counts.
+//! * **D2 FedScale** — long-tail sample counts (lognormal) with label
+//!   locality weak enough that most labels appear on ≳40% of learners
+//!   (the paper's §E.1 observation that FedScale maps are near-IID).
+//! * **D3 LabelLimited** — each learner holds a random subset of
+//!   `labels_per_learner` labels; samples-per-label follow L1 balanced /
+//!   L2 uniform / L3 Zipf(α=1.95).
+
+use crate::util::rng::{Rng, ZipfSampler};
+
+/// Per-label skew inside a label-limited learner (paper L1/L2/L3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelSkew {
+    Balanced,
+    Uniform,
+    Zipf,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionScheme {
+    /// D1: uniform random (IID).
+    UniformIid,
+    /// D2: FedScale-like real-data mapping (near-IID, long-tail counts).
+    FedScale,
+    /// D3: label-limited; each learner sees only `labels` classes.
+    LabelLimited { labels: usize, skew: LabelSkew },
+}
+
+impl PartitionScheme {
+    pub fn parse(s: &str) -> Option<PartitionScheme> {
+        match s {
+            "iid" => Some(PartitionScheme::UniformIid),
+            "fedscale" => Some(PartitionScheme::FedScale),
+            "label-balanced" => Some(PartitionScheme::LabelLimited {
+                labels: 0, // 0 = default per variant, resolved by partitioner
+                skew: LabelSkew::Balanced,
+            }),
+            "label-uniform" => Some(PartitionScheme::LabelLimited {
+                labels: 0,
+                skew: LabelSkew::Uniform,
+            }),
+            "label-zipf" => Some(PartitionScheme::LabelLimited {
+                labels: 0,
+                skew: LabelSkew::Zipf,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PartitionScheme::UniformIid => "iid".into(),
+            PartitionScheme::FedScale => "fedscale".into(),
+            PartitionScheme::LabelLimited { skew, .. } => match skew {
+                LabelSkew::Balanced => "label-balanced".into(),
+                LabelSkew::Uniform => "label-uniform".into(),
+                LabelSkew::Zipf => "label-zipf".into(),
+            },
+        }
+    }
+}
+
+/// The label sequence held by one learner (features are generated lazily by
+/// `synth::Dataset::features`).
+#[derive(Clone, Debug, Default)]
+pub struct LearnerShard {
+    pub labels: Vec<u16>,
+}
+
+impl LearnerShard {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+pub struct Partitioner {
+    pub scheme: PartitionScheme,
+    pub num_classes: usize,
+    /// Mean samples per learner (long-tail around this for FedScale).
+    pub mean_samples: usize,
+}
+
+impl Partitioner {
+    pub fn new(scheme: PartitionScheme, num_classes: usize, mean_samples: usize) -> Self {
+        Partitioner { scheme, num_classes, mean_samples }
+    }
+
+    /// Default label-limited subset size: ~10% of labels (paper §3.3), at
+    /// least 2. Matches Table 1's 4-of-35 for the speech benchmark.
+    fn default_labels(&self) -> usize {
+        (self.num_classes / 10).max(2)
+    }
+
+    /// Assign shards to `n` learners, deterministic per seed.
+    pub fn assign(&self, n: usize, seed: u64) -> Vec<LearnerShard> {
+        let mut rng = Rng::new(seed ^ 0x9A27_17A0);
+        let mut out = Vec::with_capacity(n);
+        match self.scheme {
+            PartitionScheme::UniformIid => {
+                for _ in 0..n {
+                    let count = self.jitter_count(&mut rng, 0.2);
+                    let labels = (0..count)
+                        .map(|_| rng.below(self.num_classes) as u16)
+                        .collect();
+                    out.push(LearnerShard { labels });
+                }
+            }
+            PartitionScheme::FedScale => {
+                for _ in 0..n {
+                    // long-tail sample counts: lognormal, mean ~ mean_samples
+                    let count = (rng.lognormal(
+                        (self.mean_samples as f64).ln() - 0.5,
+                        1.0,
+                    ) as usize)
+                        .clamp(4, self.mean_samples * 20);
+                    // weak label locality: a learner-specific preferred
+                    // subset gets 50% of the mass, the rest is uniform —
+                    // yields "every label on >=40% of learners" (§E.1).
+                    let pref: Vec<usize> = rng
+                        .choose_k(self.num_classes, (self.num_classes / 2).max(1));
+                    let labels = (0..count)
+                        .map(|_| {
+                            if rng.bool(0.5) {
+                                pref[rng.below(pref.len())] as u16
+                            } else {
+                                rng.below(self.num_classes) as u16
+                            }
+                        })
+                        .collect();
+                    out.push(LearnerShard { labels });
+                }
+            }
+            PartitionScheme::LabelLimited { labels, skew } => {
+                let l = if labels == 0 { self.default_labels() } else { labels };
+                let l = l.min(self.num_classes);
+                let zipf = ZipfSampler::new(l, 1.95);
+                for _ in 0..n {
+                    let subset = rng.choose_k(self.num_classes, l);
+                    let count = self.jitter_count(&mut rng, 0.2);
+                    let shard_labels: Vec<u16> = match skew {
+                        LabelSkew::Balanced => (0..count)
+                            .map(|i| subset[i % l] as u16)
+                            .collect(),
+                        LabelSkew::Uniform => (0..count)
+                            .map(|_| subset[rng.below(l)] as u16)
+                            .collect(),
+                        LabelSkew::Zipf => (0..count)
+                            .map(|_| subset[zipf.sample(&mut rng)] as u16)
+                            .collect(),
+                    };
+                    out.push(LearnerShard { labels: shard_labels });
+                }
+            }
+        }
+        out
+    }
+
+    fn jitter_count(&self, rng: &mut Rng, rel: f64) -> usize {
+        let m = self.mean_samples as f64;
+        ((m * (1.0 + rel * (rng.f64() * 2.0 - 1.0))) as usize).max(2)
+    }
+}
+
+/// Fig. 21 analytics: for each label, on what fraction of learners does it
+/// appear (any count)?
+pub fn label_coverage(shards: &[LearnerShard], num_classes: usize) -> Vec<f64> {
+    let mut counts = vec![0usize; num_classes];
+    for s in shards {
+        let mut seen = vec![false; num_classes];
+        for &l in &s.labels {
+            seen[l as usize] = true;
+        }
+        for (c, s) in seen.iter().enumerate() {
+            if *s {
+                counts[c] += 1;
+            }
+        }
+    }
+    counts
+        .into_iter()
+        .map(|c| c as f64 / shards.len().max(1) as f64)
+        .collect()
+}
+
+/// Mean number of distinct labels per learner.
+pub fn mean_distinct_labels(shards: &[LearnerShard], num_classes: usize) -> f64 {
+    let total: usize = shards
+        .iter()
+        .map(|s| {
+            let mut seen = vec![false; num_classes];
+            for &l in &s.labels {
+                seen[l as usize] = true;
+            }
+            seen.iter().filter(|&&x| x).count()
+        })
+        .sum();
+    total as f64 / shards.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(scheme: PartitionScheme) -> Vec<LearnerShard> {
+        Partitioner::new(scheme, 35, 100).assign(200, 7)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = Partitioner::new(PartitionScheme::UniformIid, 10, 50);
+        let a = p.assign(20, 1);
+        let b = p.assign(20, 1);
+        assert_eq!(
+            a.iter().map(|s| &s.labels).collect::<Vec<_>>(),
+            b.iter().map(|s| &s.labels).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn iid_covers_all_labels_per_learner() {
+        let shards = part(PartitionScheme::UniformIid);
+        let mean = mean_distinct_labels(&shards, 35);
+        assert!(mean > 30.0, "IID should see nearly all labels, got {mean}");
+    }
+
+    #[test]
+    fn label_limited_restricts_labels() {
+        let shards = part(PartitionScheme::LabelLimited {
+            labels: 4,
+            skew: LabelSkew::Uniform,
+        });
+        for s in &shards {
+            let mut distinct: Vec<u16> = s.labels.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(distinct.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn balanced_skew_is_balanced() {
+        let shards = part(PartitionScheme::LabelLimited {
+            labels: 4,
+            skew: LabelSkew::Balanced,
+        });
+        for s in shards.iter().take(10) {
+            let mut counts = std::collections::HashMap::new();
+            for &l in &s.labels {
+                *counts.entry(l).or_insert(0usize) += 1;
+            }
+            let max = counts.values().max().unwrap();
+            let min = counts.values().min().unwrap();
+            assert!(max - min <= 1, "balanced should differ by <=1");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_is_skewed() {
+        let shards = part(PartitionScheme::LabelLimited {
+            labels: 4,
+            skew: LabelSkew::Zipf,
+        });
+        // aggregate over learners: rank-0 label within each learner's subset
+        // should dominate
+        let mut top_frac = 0.0;
+        for s in &shards {
+            let mut counts = std::collections::HashMap::new();
+            for &l in &s.labels {
+                *counts.entry(l).or_insert(0usize) += 1;
+            }
+            let max = *counts.values().max().unwrap();
+            top_frac += max as f64 / s.labels.len() as f64;
+        }
+        top_frac /= shards.len() as f64;
+        assert!(top_frac > 0.55, "zipf(1.95) top label share {top_frac}");
+    }
+
+    #[test]
+    fn fedscale_near_iid_coverage() {
+        let shards = part(PartitionScheme::FedScale);
+        let cov = label_coverage(&shards, 35);
+        // paper §E.1: most labels appear on >= 40% of learners
+        let frac_covered = cov.iter().filter(|&&c| c >= 0.4).count() as f64 / 35.0;
+        assert!(frac_covered > 0.8, "coverage {frac_covered}");
+    }
+
+    #[test]
+    fn fedscale_long_tail_counts() {
+        let shards = part(PartitionScheme::FedScale);
+        let counts: Vec<f64> = shards.iter().map(|s| s.len() as f64).collect();
+        let p90 = crate::util::stats::percentile(&counts, 90.0);
+        let p50 = crate::util::stats::percentile(&counts, 50.0);
+        assert!(p90 > 2.0 * p50, "long tail expected: p90={p90} p50={p50}");
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in ["iid", "fedscale", "label-balanced", "label-uniform", "label-zipf"] {
+            let scheme = PartitionScheme::parse(s).unwrap();
+            assert_eq!(scheme.label(), s);
+        }
+        assert!(PartitionScheme::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,113 @@
+//! Ablations over RELAY's design choices (DESIGN.md §5): the knobs the
+//! paper fixes by fiat get swept here so their sensitivity is documented.
+//!
+//! * `beta`      — Eq. 2's staleness-vs-deviation mix (paper: 0.35)
+//! * `threshold` — staleness bound (paper: none for RELAY, 5 for SAFA)
+//! * `cooldown`  — post-participation hold-out rounds (paper: 5)
+//! * `overcommit`— OC factor (paper: 1.3)
+//! * `alpha`     — APT's round-duration EMA (paper: 0.25)
+
+use anyhow::{anyhow, Result};
+
+use super::configs::speech;
+use super::runner::{print_resource_table, run_set, FigureOpts};
+use crate::aggregation::scaling::ScalingRule;
+use crate::config::{AvailMode, ExpConfig, RoundMode};
+use crate::data::partition::{LabelSkew, PartitionScheme};
+
+fn base(opts: &FigureOpts) -> ExpConfig {
+    let mut c = speech(opts).relay();
+    c.avail = AvailMode::DynAvail;
+    c.partition = PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Uniform };
+    c.mode = RoundMode::Deadline { deadline: 100.0 };
+    c
+}
+
+pub fn run(name: &str, opts: &FigureOpts) -> Result<()> {
+    let configs: Vec<ExpConfig> = match name {
+        "beta" => [0.0, 0.35, 0.7, 1.0]
+            .iter()
+            .map(|&beta| {
+                let mut c = base(opts);
+                c.scaling = ScalingRule::Relay { beta };
+                c.with_label(format!("beta={beta}"))
+            })
+            .collect(),
+        "threshold" => [Some(1), Some(5), Some(20), None]
+            .iter()
+            .map(|&th| {
+                let mut c = base(opts);
+                c.staleness_threshold = th;
+                c.with_label(match th {
+                    Some(t) => format!("threshold={t}"),
+                    None => "threshold=none".into(),
+                })
+            })
+            .collect(),
+        "cooldown" => [0usize, 2, 5, 10]
+            .iter()
+            .map(|&cd| {
+                let mut c = base(opts);
+                c.cooldown_rounds = cd;
+                c.with_label(format!("cooldown={cd}"))
+            })
+            .collect(),
+        "overcommit" => [1.0, 1.3, 1.6, 2.0]
+            .iter()
+            .map(|&f| {
+                let mut c = base(opts);
+                c.mode = RoundMode::OverCommit { factor: f };
+                c.with_label(format!("overcommit={f}"))
+            })
+            .collect(),
+        "alpha" => [0.1, 0.25, 0.5, 0.9]
+            .iter()
+            .map(|&a| {
+                let mut c = base(opts);
+                c.apt_alpha = a;
+                c.with_label(format!("apt-alpha={a}"))
+            })
+            .collect(),
+        other => {
+            return Err(anyhow!(
+                "unknown ablation '{other}' (beta|threshold|cooldown|overcommit|alpha|all)"
+            ))
+        }
+    };
+    let results = run_set(
+        &format!("ablation_{name}"),
+        &format!("Ablation: {name} (RELAY, DL+DynAvail, label-uniform)"),
+        configs,
+        opts,
+    )?;
+    print_resource_table(&results);
+    Ok(())
+}
+
+pub fn run_all(opts: &FigureOpts) -> Result<()> {
+    for name in ["beta", "threshold", "cooldown", "overcommit", "alpha"] {
+        run(name, opts)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_ablation_errors() {
+        let opts = FigureOpts::default();
+        assert!(run("bogus", &opts).is_err());
+    }
+
+    #[test]
+    fn beta_sweep_builds_valid_configs() {
+        // construct-only check (running uses the figure harness)
+        let opts = FigureOpts::default();
+        let c = base(&opts);
+        c.validate().unwrap();
+        assert_eq!(c.selector, "priority");
+        assert!(c.use_saa);
+    }
+}

@@ -1,0 +1,66 @@
+//! The per-figure experiment harness: one entry point per table/figure of
+//! the paper's evaluation (DESIGN.md §5 maps each to its configs).
+//!
+//! Every harness prints the same rows/series the paper reports (labels,
+//! accuracy-vs-resources trajectories, waste fractions, unique-participant
+//! rates) and writes the raw series to `results/<id>.json`. Populations and
+//! round counts are scaled down by default for a CPU testbed; pass
+//! `--scale 1.0` for paper-scale runs.
+
+pub mod ablations;
+pub mod configs;
+pub mod runner;
+pub mod static_figs;
+
+use anyhow::{anyhow, Result};
+
+use runner::FigureOpts;
+
+/// Run one figure/table by id ("2", "3", ..., "20", "21", "t1", "t2",
+/// "forecast"). "all" runs everything.
+pub fn run(id: &str, opts: &FigureOpts) -> Result<()> {
+    match id {
+        "2" => configs::fig2(opts),
+        "3" => configs::fig3(opts),
+        "4" => configs::fig4(opts),
+        "5" => static_figs::fig5(opts),
+        "6" => configs::fig6(opts),
+        "7" => configs::fig7(opts),
+        "8" => configs::fig8(opts),
+        "9" => configs::fig9(opts),
+        "10" => configs::fig10(opts),
+        "11" => configs::fig11(opts),
+        "12" => configs::fig12(opts),
+        "13" => static_figs::fig13(opts),
+        "14" => static_figs::fig14(opts),
+        "15" => configs::fig15_18(opts, "nlp", true),
+        "16" => configs::fig15_18(opts, "cifar", true),
+        "17" => configs::fig15_18(opts, "nlp", false),
+        "18" => configs::fig15_18(opts, "openimage", false),
+        "19" => configs::fig19(opts),
+        "20" => configs::fig20(opts),
+        "21" => static_figs::fig21(opts),
+        "t1" | "table1" => static_figs::table1(opts),
+        "t2" | "table2" => configs::table2(opts),
+        "forecast" => static_figs::forecast_eval(opts),
+        "all" => {
+            for id in [
+                "13", "14", "21", "t1", "forecast", "5", "2", "3", "4", "6", "7", "8",
+                "9", "10", "11", "12", "16", "19", "20", "t2",
+            ] {
+                println!("\n================ figure {id} ================");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        "ablations" => ablations::run_all(opts),
+        other => {
+            if let Some(name) = other.strip_prefix("ablation-") {
+                return ablations::run(name, opts);
+            }
+            Err(anyhow!(
+                "unknown figure id '{other}' (try 2..21, t1, t2, forecast, ablations, ablation-<knob>, all)"
+            ))
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Shared figure-harness machinery: run a set of configs (optionally over
+//! several seeds), print the paper-style comparison rows, persist series.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExpConfig;
+use crate::coordinator::run_experiment;
+use crate::metrics::ExperimentResult;
+use crate::runtime::{self, Backend, Executor};
+use crate::util::json::{arr, obj, Json};
+
+#[derive(Clone, Debug)]
+pub struct FigureOpts {
+    pub artifacts_dir: String,
+    pub backend: Backend,
+    /// Population/round scale factor (1.0 = paper scale). Defaults < 1 keep
+    /// the whole suite tractable on a CPU testbed.
+    pub scale: f64,
+    pub out_dir: String,
+    pub seeds: usize,
+    pub verbose: bool,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            artifacts_dir: "artifacts".into(),
+            backend: Backend::Pjrt,
+            scale: 0.3,
+            out_dir: "results".into(),
+            seeds: 1,
+            verbose: false,
+        }
+    }
+}
+
+impl FigureOpts {
+    /// Scale a paper-sized count down (never below `min`).
+    pub fn scaled(&self, paper: usize, min: usize) -> usize {
+        ((paper as f64 * self.scale).round() as usize).max(min)
+    }
+
+    pub fn executor(&self, variant: &str) -> Result<Arc<dyn Executor>> {
+        match self.backend {
+            Backend::Pjrt => runtime::load_executor(&self.artifacts_dir, variant, Backend::Pjrt)
+                .with_context(|| {
+                    format!("loading {variant} artifacts (run `make artifacts`, or --backend native)")
+                }),
+            Backend::Native => Ok(Arc::new(runtime::NativeExecutor::new(
+                runtime::builtin_variant(variant),
+            ))),
+        }
+    }
+}
+
+/// Run each config (averaging over `opts.seeds` seeds), print summaries,
+/// save the full series to `<out_dir>/<name>.json`, and return results.
+pub fn run_set(
+    name: &str,
+    title: &str,
+    configs: Vec<ExpConfig>,
+    opts: &FigureOpts,
+) -> Result<Vec<ExperimentResult>> {
+    println!("--- {title} ---");
+    let mut all = Vec::with_capacity(configs.len());
+    // One executor (one PJRT client) per variant for the whole set: each
+    // TfrtCpuClient owns arenas/thread pools that are expensive to multiply
+    // (a fresh client per config OOMed the full campaign on a 35 GB box).
+    let mut executors: std::collections::BTreeMap<String, Arc<dyn Executor>> =
+        std::collections::BTreeMap::new();
+    for cfg in configs {
+        let exec = match executors.get(&cfg.variant) {
+            Some(e) => Arc::clone(e),
+            None => {
+                let e = self_executor(opts, &cfg)?;
+                executors.insert(cfg.variant.clone(), Arc::clone(&e));
+                e
+            }
+        };
+        let mut seed_results = Vec::with_capacity(opts.seeds);
+        for s in 0..opts.seeds {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed + s as u64 * 1000;
+            let t0 = std::time::Instant::now();
+            let r = run_experiment(c, Arc::clone(&exec))?;
+            if opts.verbose {
+                eprintln!(
+                    "    [seed {s}] {} ({:.1}s wallclock)",
+                    r.summary(),
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            seed_results.push(r);
+        }
+        let merged = average_results(seed_results);
+        println!("  {}", merged.summary());
+        all.push(merged);
+    }
+    save(name, &all, opts)?;
+    Ok(all)
+}
+
+fn self_executor(opts: &FigureOpts, cfg: &ExpConfig) -> Result<Arc<dyn Executor>> {
+    opts.executor(&cfg.variant)
+}
+
+/// Average per-round metrics across seeds (the paper reports 3-seed means).
+pub fn average_results(mut results: Vec<ExperimentResult>) -> ExperimentResult {
+    if results.len() == 1 {
+        return results.pop().unwrap();
+    }
+    let mut base = results[0].clone();
+    for rec in base.rounds.iter_mut() {
+        let idx = rec.round;
+        let mut res_sum = 0.0;
+        let mut res_n = 0.0;
+        let mut acc_sum = 0.0;
+        let mut acc_n = 0.0;
+        for r in &results {
+            if let Some(other) = r.rounds.iter().find(|x| x.round == idx) {
+                res_sum += other.cum_resource_secs;
+                res_n += 1.0;
+                if let Some(a) = other.test_accuracy {
+                    acc_sum += a;
+                    acc_n += 1.0;
+                }
+            }
+        }
+        if res_n > 0.0 {
+            rec.cum_resource_secs = res_sum / res_n;
+        }
+        if acc_n > 0.0 {
+            rec.test_accuracy = Some(acc_sum / acc_n);
+        }
+    }
+    base
+}
+
+pub fn save(name: &str, results: &[ExperimentResult], opts: &FigureOpts) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = PathBuf::from(&opts.out_dir).join(format!("{name}.json"));
+    let j = obj(vec![
+        ("figure", Json::Str(name.into())),
+        ("scale", crate::util::json::num(opts.scale)),
+        ("series", arr(results.iter().map(|r| r.to_json()))),
+    ]);
+    std::fs::write(&path, j.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("  -> series saved to {}", path.display());
+    Ok(())
+}
+
+/// Print the paper-style "accuracy vs resources" checkpoints for a set.
+pub fn print_resource_table(results: &[ExperimentResult]) {
+    println!(
+        "  {:<28} {:>10} {:>10} {:>10} {:>8}",
+        "config", "res(h)", "time(s)", "waste%", "final acc"
+    );
+    for r in results {
+        println!(
+            "  {:<28} {:>10.2} {:>10.0} {:>9.1}% {:>7.1}%",
+            r.label,
+            r.final_resource_hours(),
+            r.final_sim_time(),
+            100.0 * r.waste_fraction(),
+            100.0 * r.final_accuracy().unwrap_or(f64::NAN)
+        );
+    }
+}
+
+/// Print accuracy trajectories at shared resource checkpoints.
+pub fn print_series(results: &[ExperimentResult], points: usize) {
+    for r in results {
+        let series = r.accuracy_vs_resources();
+        if series.is_empty() {
+            continue;
+        }
+        let step = (series.len() / points.max(1)).max(1);
+        let line: Vec<String> = series
+            .iter()
+            .step_by(step)
+            .map(|(res, acc)| format!("{:.2}h:{:.0}%", res, acc * 100.0))
+            .collect();
+        println!("  {:<28} {}", r.label, line.join("  "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    #[test]
+    fn scaled_respects_min() {
+        let opts = FigureOpts { scale: 0.1, ..Default::default() };
+        assert_eq!(opts.scaled(1000, 50), 100);
+        assert_eq!(opts.scaled(100, 50), 50);
+    }
+
+    #[test]
+    fn average_merges_accuracy() {
+        let mk = |acc: f64| ExperimentResult {
+            label: "x".into(),
+            rounds: vec![RoundRecord {
+                round: 0,
+                test_accuracy: Some(acc),
+                cum_resource_secs: 100.0,
+                ..Default::default()
+            }],
+            perplexity_metric: false,
+        };
+        let merged = average_results(vec![mk(0.4), mk(0.6)]);
+        assert!((merged.rounds[0].test_accuracy.unwrap() - 0.5).abs() < 1e-12);
+        assert!((merged.rounds[0].cum_resource_secs - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_result_passthrough() {
+        let r = ExperimentResult { label: "solo".into(), ..Default::default() };
+        assert_eq!(average_results(vec![r]).label, "solo");
+    }
+}

@@ -1,0 +1,201 @@
+//! Figures that analyze substrates rather than training runs: device
+//! heterogeneity (Fig. 13), availability traces (Fig. 14), label coverage
+//! (Fig. 21), the Table 1 preset summary, the Fig. 5 illustrative round
+//! trace, and the §5.2 forecast-quality experiment.
+
+use anyhow::Result;
+
+use super::runner::FigureOpts;
+use crate::config::preset;
+use crate::data::partition::{label_coverage, PartitionScheme, Partitioner};
+use crate::forecast::evaluate_series;
+use crate::learners::{HardwareScenario, ProfilePool};
+use crate::runtime::builtin_variant;
+use crate::trace::generator::session_cdf_checkpoints;
+use crate::trace::{TraceConfig, TraceSet, DAY};
+use crate::util::stats;
+
+/// Fig. 5: illustrative 4-round trace — how Oort vs RELAY pick 9 learners.
+pub fn fig5(_opts: &FigureOpts) -> Result<()> {
+    println!("--- Fig. 5: illustrative selection trace (9 learners, 4 rounds) ---");
+    // learner -> availability windows (seconds), speeds (task secs)
+    let windows: [(usize, (f64, f64)); 9] = [
+        (0, (0.0, 400.0)),
+        (1, (0.0, 400.0)),
+        (2, (0.0, 120.0)),   // limited availability
+        (3, (50.0, 200.0)),  // limited availability
+        (4, (0.0, 400.0)),
+        (5, (0.0, 400.0)),
+        (6, (150.0, 400.0)),
+        (7, (0.0, 400.0)),
+        (8, (0.0, 400.0)),
+    ];
+    let speeds = [30.0, 35.0, 90.0, 80.0, 40.0, 95.0, 45.0, 50.0, 110.0];
+    let round_len = 100.0;
+    println!("  availability (#=available):");
+    for (id, (a, b)) in windows {
+        let mut bar = String::new();
+        for slot in 0..40 {
+            let t = slot as f64 * 10.0;
+            bar.push(if t >= a && t < b { '#' } else { '.' });
+        }
+        println!("   L{id} |{bar}| task={}s", speeds[id]);
+    }
+    for (name, least_avail_first) in [("Oort (fast-first)", false), ("RELAY (least-available-first)", true)] {
+        println!("  {name}:");
+        for round in 0..4 {
+            let t0 = round as f64 * round_len;
+            let mut cands: Vec<usize> = windows
+                .iter()
+                .filter(|(id, (a, b))| t0 >= *a && t0 < *b && speeds[*id] > 0.0)
+                .map(|(id, _)| *id)
+                .collect();
+            if least_avail_first {
+                // remaining availability ascending
+                cands.sort_by(|&x, &y| {
+                    let rx = windows[x].1 .1 - t0;
+                    let ry = windows[y].1 .1 - t0;
+                    rx.partial_cmp(&ry).unwrap()
+                });
+            } else {
+                cands.sort_by(|&x, &y| speeds[x].partial_cmp(&speeds[y]).unwrap());
+            }
+            let picked: Vec<String> = cands.iter().take(3).map(|i| format!("L{i}")).collect();
+            let stale: Vec<String> = cands
+                .iter()
+                .take(3)
+                .filter(|&&i| speeds[i] > round_len)
+                .map(|i| format!("L{i}(stale)"))
+                .collect();
+            println!(
+                "   round {round}: picks {}  {}",
+                picked.join(","),
+                if least_avail_first && !stale.is_empty() {
+                    format!("accepts {}", stale.join(","))
+                } else if !least_avail_first && !stale.is_empty() {
+                    format!("discards {}", stale.join(","))
+                } else {
+                    String::new()
+                }
+            );
+        }
+    }
+    println!("  [paper: Oort misses limited-availability learners (L2, L3); RELAY reaches them and keeps straggler updates]");
+    Ok(())
+}
+
+/// Fig. 13: device heterogeneity CDF + 6-cluster decomposition.
+pub fn fig13(opts: &FigureOpts) -> Result<()> {
+    println!("--- Fig. 13: learner computational heterogeneity ---");
+    let n = opts.scaled(4000, 500);
+    let pool = ProfilePool::generate(n, 13, HardwareScenario::Hs1);
+    let points = [0.03, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.0];
+    let cdf = pool.speed_cdf(&points);
+    println!("  (a) CDF of per-sample train time:");
+    for (p, c) in points.iter().zip(&cdf) {
+        println!("      <= {:>5.2}s : {:>5.1}%", p, 100.0 * c);
+    }
+    let (centroids, pops) = pool.speed_clusters(7);
+    println!("  (b) 6 device clusters (centroid sec/sample : population):");
+    for (i, (c, p)) in centroids.iter().zip(&pops).enumerate() {
+        println!("      cluster {} : {:>5.2}s : {:>5} devices ({:.0}%)",
+            i, c, p, 100.0 * *p as f64 / n as f64);
+    }
+    println!("  [paper: long-tail speeds, ~20x spread, 6 distinguishable clusters]");
+    Ok(())
+}
+
+/// Fig. 14: availability diurnal pattern + session-length CDF.
+pub fn fig14(opts: &FigureOpts) -> Result<()> {
+    println!("--- Fig. 14: learner availability dynamics ---");
+    let n = opts.scaled(2000, 300);
+    let trace = TraceSet::generate(n, 14, TraceConfig::default());
+    let timeline = trace.availability_timeline(3600.0);
+    println!("  (a) available learners per hour (first 2 days):");
+    for day in 0..2 {
+        let row: Vec<String> = (0..24)
+            .map(|h| format!("{:>4}", timeline[day * 24 + h]))
+            .collect();
+        println!("      day {}: {}", day, row.join(""));
+    }
+    let lens = trace.session_lengths();
+    println!("  (b) session-length CDF:");
+    for (secs, frac) in session_cdf_checkpoints(&trace) {
+        println!("      <= {:>6.0}s ({:>4.0} min): {:>5.1}%", secs, secs / 60.0, 100.0 * frac);
+    }
+    let p50 = stats::percentile(&lens, 50.0);
+    println!("      median session: {:.0}s ({:.1} min)", p50, p50 / 60.0);
+    println!("  [paper: diurnal cycle; ~70% of sessions < 10 min; long tail]");
+    Ok(())
+}
+
+/// Fig. 21: label-frequency coverage under the FedScale mapping.
+pub fn fig21(opts: &FigureOpts) -> Result<()> {
+    println!("--- Fig. 21: label repetitions across learners (FedScale mapping) ---");
+    let v = builtin_variant("speech");
+    let n = opts.scaled(3000, 300);
+    let shards = Partitioner::new(PartitionScheme::FedScale, v.num_classes, 100).assign(n, 21);
+    let cov = label_coverage(&shards, v.num_classes);
+    let min = cov.iter().cloned().fold(1.0, f64::min);
+    let mean = stats::mean(&cov);
+    println!("  labels: {}   learners: {}", v.num_classes, n);
+    println!("  per-label learner coverage: min {:.0}%, mean {:.0}%", 100.0 * min, 100.0 * mean);
+    let over40 = cov.iter().filter(|&&c| c >= 0.4).count();
+    println!("  labels appearing on >=40% of learners: {}/{}", over40, v.num_classes);
+    println!("  [paper E.1: all labels on >=40% of learners -> FedScale map is near-IID]");
+    Ok(())
+}
+
+/// Table 1: benchmark presets (our scaled stand-ins).
+pub fn table1(_opts: &FigureOpts) -> Result<()> {
+    println!("--- Table 1: benchmark summary (scaled stand-ins, DESIGN.md 2) ---");
+    println!(
+        "  {:<11} {:>8} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8}",
+        "benchmark", "params", "dim", "classes", "batch", "lr", "epochs", "server"
+    );
+    for b in ["speech", "cifar", "openimage", "nlp"] {
+        let c = preset(b)?;
+        let v = builtin_variant(&c.variant);
+        println!(
+            "  {:<11} {:>8} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8}",
+            b, v.num_params, v.input_dim, v.num_classes, v.batch, c.lr, c.local_epochs, c.server_opt
+        );
+    }
+    Ok(())
+}
+
+/// §5.2 forecast-quality experiment: Prophet-substitute on per-device
+/// charging series (train first 50%, predict the rest).
+pub fn forecast_eval(opts: &FigureOpts) -> Result<()> {
+    println!("--- 5.2: learner availability prediction model ---");
+    let devices = opts.scaled(137, 60).min(137); // paper: 137 Stunner devices
+    // The paper filters the Stunner trace to devices with >= 1000 samples —
+    // i.e. the heavily-observed, regular chargers; generate that population.
+    let trace = TraceSet::generate(devices, 52, TraceConfig::regular());
+    let step = 900.0; // 15-minute sampling
+    let mut r2s = Vec::new();
+    let mut mses = Vec::new();
+    let mut maes = Vec::new();
+    for d in 0..devices {
+        // 4 replayed weeks (the trace wraps) = "at least 1000 samples"
+        let week = trace.sample_series(d, step);
+        let mut series = Vec::with_capacity(week.len() * 4);
+        for _ in 0..4 {
+            series.extend_from_slice(&week);
+        }
+        let times: Vec<f64> = (0..series.len()).map(|i| i as f64 * step).collect();
+        let (r2, mse, mae) = evaluate_series(&times, &series);
+        r2s.push(r2);
+        mses.push(mse);
+        maes.push(mae);
+    }
+    println!("  devices evaluated: {devices} (series of {} samples @ 15 min)", 4 * (7.0 * DAY / step) as usize);
+    println!(
+        "  mean R^2 = {:.3}   mean MSE = {:.4}   mean MAE = {:.4}",
+        stats::mean(&r2s),
+        stats::mean(&mses),
+        stats::mean(&maes)
+    );
+    println!("  [paper: R^2 0.93, MSE 0.01, MAE 0.028 — periodic charging is highly predictable]");
+    Ok(())
+}

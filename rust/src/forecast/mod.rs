@@ -1,0 +1,289 @@
+//! Availability forecasting substrate (paper §4.1 + §5.2 "Learner
+//! Availability Prediction Model").
+//!
+//! In RELAY each *learner* keeps a tiny local model of its own charging
+//! pattern and, on check-in, reports P(available during the server's next
+//! time slot [mu, 2mu]). The paper uses Prophet on the Stunner trace; we
+//! build two from-scratch equivalents (DESIGN.md §2):
+//!
+//! * [`SeasonalForecaster`] — recency-weighted hour-of-week empirical
+//!   frequency. This is what learners run inside the simulator: O(1)
+//!   predict, incremental update.
+//! * [`FourierRidge`] — "Prophet-lite": ridge regression on daily + weekly
+//!   Fourier features with a linear trend, used by the §5.2 forecast-quality
+//!   experiment (train on first 50% of a device's series, predict the rest,
+//!   report R^2 / MSE / MAE).
+
+use crate::trace::{DAY, WEEK};
+use crate::util::stats;
+
+/// Recency-weighted hour-of-week availability frequency.
+#[derive(Clone, Debug)]
+pub struct SeasonalForecaster {
+    /// 168 hour-of-week bins: (weighted avail, weight).
+    bins: Vec<(f64, f64)>,
+    /// Per-observation decay applied to old evidence (per week).
+    decay: f64,
+}
+
+impl Default for SeasonalForecaster {
+    fn default() -> Self {
+        Self::new(0.8)
+    }
+}
+
+impl SeasonalForecaster {
+    pub fn new(weekly_decay: f64) -> Self {
+        SeasonalForecaster { bins: vec![(0.0, 0.0); 168], decay: weekly_decay }
+    }
+
+    fn bin_of(t: f64) -> usize {
+        ((t.rem_euclid(WEEK)) / 3600.0) as usize % 168
+    }
+
+    /// Record one observation: was the device available at time `t`?
+    pub fn observe(&mut self, t: f64, available: bool) {
+        let b = Self::bin_of(t);
+        let (num, den) = &mut self.bins[b];
+        *num = *num * self.decay + if available { 1.0 } else { 0.0 };
+        *den = *den * self.decay + 1.0;
+    }
+
+    /// P(available at time t). 0.5 prior when a bin has no evidence.
+    pub fn prob_at(&self, t: f64) -> f64 {
+        let (num, den) = self.bins[Self::bin_of(t)];
+        if den < 1e-9 {
+            0.5
+        } else {
+            num / den
+        }
+    }
+
+    /// P(available throughout the slot [a, b]) — mean of bin probabilities
+    /// across the slot (the learner-side answer to the server's probe).
+    pub fn prob_slot(&self, a: f64, b: f64) -> f64 {
+        if b <= a {
+            return self.prob_at(a);
+        }
+        let steps = ((b - a) / 1800.0).ceil().max(1.0) as usize;
+        let mut acc = 0.0;
+        for i in 0..steps {
+            let t = a + (b - a) * (i as f64 + 0.5) / steps as f64;
+            acc += self.prob_at(t);
+        }
+        acc / steps as f64
+    }
+}
+
+/// Ridge regression on [trend, daily Fourier, weekly Fourier] features.
+pub struct FourierRidge {
+    k_daily: usize,
+    k_weekly: usize,
+    lambda: f64,
+    weights: Vec<f64>,
+}
+
+impl FourierRidge {
+    pub fn new(k_daily: usize, k_weekly: usize, lambda: f64) -> Self {
+        FourierRidge { k_daily, k_weekly, lambda, weights: Vec::new() }
+    }
+
+    fn features(&self, t: f64) -> Vec<f64> {
+        let mut f = Vec::with_capacity(2 + 2 * (self.k_daily + self.k_weekly));
+        f.push(1.0);
+        f.push(t / WEEK); // linear trend
+        for k in 1..=self.k_daily {
+            let w = 2.0 * std::f64::consts::PI * k as f64 * t / DAY;
+            f.push(w.sin());
+            f.push(w.cos());
+        }
+        for k in 1..=self.k_weekly {
+            let w = 2.0 * std::f64::consts::PI * k as f64 * t / WEEK;
+            f.push(w.sin());
+            f.push(w.cos());
+        }
+        f
+    }
+
+    /// Fit on (times, values) via the normal equations.
+    pub fn fit(&mut self, times: &[f64], values: &[f64]) {
+        assert_eq!(times.len(), values.len());
+        let d = self.features(0.0).len();
+        let mut xtx = vec![0.0; d * d];
+        let mut xty = vec![0.0; d];
+        for (t, y) in times.iter().zip(values) {
+            let f = self.features(*t);
+            for i in 0..d {
+                xty[i] += f[i] * y;
+                for j in 0..d {
+                    xtx[i * d + j] += f[i] * f[j];
+                }
+            }
+        }
+        for i in 0..d {
+            xtx[i * d + i] += self.lambda;
+        }
+        self.weights = solve(&mut xtx, &mut xty, d);
+    }
+
+    pub fn predict(&self, t: f64) -> f64 {
+        self.features(t)
+            .iter()
+            .zip(&self.weights)
+            .map(|(f, w)| f * w)
+            .sum()
+    }
+
+    /// Predict clamped to [0, 1] (charging state is binary).
+    pub fn predict_prob(&self, t: f64) -> f64 {
+        self.predict(t).clamp(0.0, 1.0)
+    }
+}
+
+/// Gaussian elimination with partial pivoting on A x = b (A is d x d).
+fn solve(a: &mut [f64], b: &mut [f64], d: usize) -> Vec<f64> {
+    for col in 0..d {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..d {
+            if a[r * d + col].abs() > a[piv * d + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for j in 0..d {
+                a.swap(col * d + j, piv * d + j);
+            }
+            b.swap(col, piv);
+        }
+        let diag = a[col * d + col];
+        if diag.abs() < 1e-12 {
+            continue;
+        }
+        for r in col + 1..d {
+            let factor = a[r * d + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for j in col..d {
+                a[r * d + j] -= factor * a[col * d + j];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0.0; d];
+    for col in (0..d).rev() {
+        let mut acc = b[col];
+        for j in col + 1..d {
+            acc -= a[col * d + j] * x[j];
+        }
+        let diag = a[col * d + col];
+        x[col] = if diag.abs() < 1e-12 { 0.0 } else { acc / diag };
+    }
+    x
+}
+
+/// §5.2 protocol: train on the first half of a sampled series, predict the
+/// second half; returns (r2, mse, mae).
+pub fn evaluate_series(times: &[f64], values: &[f64]) -> (f64, f64, f64) {
+    let half = times.len() / 2;
+    let mut model = FourierRidge::new(16, 4, 1e-3);
+    model.fit(&times[..half], &values[..half]);
+    let preds: Vec<f64> = times[half..].iter().map(|&t| model.predict_prob(t)).collect();
+    let truth = &values[half..];
+    (
+        stats::r_squared(truth, &preds),
+        stats::mse(truth, &preds),
+        stats::mae(truth, &preds),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seasonal_learns_pattern() {
+        let mut f = SeasonalForecaster::default();
+        // device charges 22:00-02:00 every day for 3 weeks
+        for day in 0..21 {
+            for hour in 0..24 {
+                let t = day as f64 * DAY + hour as f64 * 3600.0 + 10.0;
+                let avail = !(2..22).contains(&hour);
+                f.observe(t, avail);
+            }
+        }
+        assert!(f.prob_at(23.0 * 3600.0) > 0.9);
+        assert!(f.prob_at(12.0 * 3600.0) < 0.1);
+        // slot spanning mostly-on hours
+        assert!(f.prob_slot(22.0 * 3600.0, 24.0 * 3600.0) > 0.8);
+    }
+
+    #[test]
+    fn seasonal_prior_is_half() {
+        let f = SeasonalForecaster::default();
+        assert_eq!(f.prob_at(0.0), 0.5);
+    }
+
+    #[test]
+    fn seasonal_recency_weighting() {
+        let mut f = SeasonalForecaster::new(0.5);
+        let t = 5.0 * 3600.0;
+        // old evidence says unavailable, new says available
+        for w in 0..6 {
+            f.observe(t + w as f64 * WEEK, false);
+        }
+        for w in 6..10 {
+            f.observe(t + w as f64 * WEEK, true);
+        }
+        assert!(f.prob_at(t) > 0.8, "recent evidence should dominate");
+    }
+
+    #[test]
+    fn solver_exact_small_system() {
+        // [2 1; 1 3] x = [5; 10] => x = [1, 3]... check: 2*1+3=5 ok; 1+9=10 ok
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve(&mut a, &mut b, 2);
+        assert!((x[0] - 1.0).abs() < 1e-10);
+        assert!((x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fourier_fits_sinusoid() {
+        let times: Vec<f64> = (0..500).map(|i| i as f64 * WEEK / 500.0).collect();
+        let vals: Vec<f64> = times
+            .iter()
+            .map(|&t| 0.5 + 0.4 * (2.0 * std::f64::consts::PI * t / DAY).sin())
+            .collect();
+        let mut m = FourierRidge::new(3, 2, 1e-6);
+        m.fit(&times, &vals);
+        for (&t, &v) in times.iter().zip(&vals).step_by(37) {
+            assert!((m.predict(t) - v).abs() < 0.01, "t={t}");
+        }
+    }
+
+    #[test]
+    fn evaluate_series_high_r2_on_periodic_signal() {
+        // strongly periodic charging pattern -> forecaster should hit the
+        // paper's quality band (R^2 ~ 0.9)
+        let step = 900.0;
+        let n = (4.0 * WEEK / step) as usize;
+        let times: Vec<f64> = (0..n).map(|i| i as f64 * step).collect();
+        let vals: Vec<f64> = times
+            .iter()
+            .map(|&t| {
+                let h = (t.rem_euclid(DAY)) / 3600.0;
+                if !(6.0..22.0).contains(&h) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let (r2, mse, mae) = evaluate_series(&times, &vals);
+        assert!(r2 > 0.75, "r2={r2}");
+        assert!(mse < 0.08, "mse={mse}");
+        assert!(mae < 0.2, "mae={mae}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Learner substrate: device-capability profiles (compute + network speeds,
+//! 6-cluster long-tail per paper §C / Fig. 13) and per-learner state used by
+//! the coordinator.
+
+pub mod profiles;
+
+pub use profiles::{DeviceProfile, HardwareScenario, ProfilePool};

@@ -1,0 +1,237 @@
+//! Device-capability profiles, substituting the AI-Benchmark + MobiPerf
+//! measurements the paper samples from (§5.1 "System Performance of
+//! Learners", §C).
+//!
+//! The paper's analysis shows (Fig. 13): a long-tail distribution of
+//! per-sample inference/training time that clusters into **6 device
+//! classes**, and WiFi-grade network speeds. We generate profiles from a
+//! 6-component lognormal mixture whose centers span ~20x (matching the
+//! published CDF's dynamic range) and network speeds from a lognormal
+//! around 20 Mbps.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Compute/communication capability of one learner device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Seconds of on-device compute per (sample, epoch) of local training.
+    pub sec_per_sample: f64,
+    /// Upload bandwidth in bytes/second (model update upload).
+    pub upload_bps: f64,
+    /// Download bandwidth in bytes/second (global model fetch).
+    pub download_bps: f64,
+    /// Which of the 6 clusters this device was drawn from (0 = fastest).
+    pub cluster: usize,
+}
+
+impl DeviceProfile {
+    /// Wall-clock seconds for one full local-training task.
+    pub fn completion_time(&self, samples: usize, epochs: usize, model_bytes: usize) -> f64 {
+        let compute = self.sec_per_sample * samples as f64 * epochs as f64;
+        let comm = model_bytes as f64 / self.download_bps + model_bytes as f64 / self.upload_bps;
+        compute + comm
+    }
+
+    /// Compute-only portion (used for straggler remaining-time probes).
+    pub fn compute_time(&self, samples: usize, epochs: usize) -> f64 {
+        self.sec_per_sample * samples as f64 * epochs as f64
+    }
+}
+
+/// Hardware-advancement scenarios of §5.4: completion times of the top X%
+/// of devices are halved ("completion times doubled" in speed terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HardwareScenario {
+    /// HS1: current device configurations.
+    Hs1,
+    /// HS2: top 25% of devices 2x faster.
+    Hs2,
+    /// HS3: top 75% of devices 2x faster.
+    Hs3,
+    /// HS4: all devices 2x faster.
+    Hs4,
+}
+
+impl HardwareScenario {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hs1" => Some(Self::Hs1),
+            "hs2" => Some(Self::Hs2),
+            "hs3" => Some(Self::Hs3),
+            "hs4" => Some(Self::Hs4),
+            _ => None,
+        }
+    }
+
+    /// Fraction of (fastest-first) devices that get the 2x speedup.
+    fn top_fraction(&self) -> f64 {
+        match self {
+            Self::Hs1 => 0.0,
+            Self::Hs2 => 0.25,
+            Self::Hs3 => 0.75,
+            Self::Hs4 => 1.0,
+        }
+    }
+}
+
+/// Cluster centers: seconds of compute per sample-epoch. Spans ~24x like the
+/// paper's device CDF; cluster populations are tail-heavier toward slow
+/// devices (weights below).
+// Calibrated so the bulk of 100-sample local tasks complete within the
+// paper's 100 s reporting deadline while the slow tail still straggles
+// (matching the paper's setting where deadlines are mostly met).
+const CLUSTER_SEC_PER_SAMPLE: [f64; 6] = [0.02, 0.036, 0.065, 0.12, 0.22, 0.48];
+const CLUSTER_WEIGHTS: [f64; 6] = [0.22, 0.26, 0.20, 0.16, 0.10, 0.06];
+
+/// A population of device profiles.
+pub struct ProfilePool {
+    pub profiles: Vec<DeviceProfile>,
+}
+
+impl ProfilePool {
+    /// Sample `n` device profiles, deterministic per seed.
+    pub fn generate(n: usize, seed: u64, scenario: HardwareScenario) -> ProfilePool {
+        let mut rng = Rng::new(seed ^ 0xDE71CE);
+        let mut profiles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cluster = rng.weighted(&CLUSTER_WEIGHTS);
+            let center = CLUSTER_SEC_PER_SAMPLE[cluster];
+            let sec_per_sample = rng.lognormal(center.ln(), 0.25);
+            // WiFi-grade network: ~20 Mbps median upload, long-tailed.
+            let upload_bps = rng.lognormal((20e6f64 / 8.0).ln(), 0.6).max(100e3);
+            let download_bps = upload_bps * rng.uniform(1.2, 2.5);
+            profiles.push(DeviceProfile { sec_per_sample, upload_bps, download_bps, cluster });
+        }
+        // Apply the hardware-advancement scenario to the top X% fastest.
+        let frac = scenario.top_fraction();
+        if frac > 0.0 {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                profiles[a]
+                    .sec_per_sample
+                    .partial_cmp(&profiles[b].sec_per_sample)
+                    .unwrap()
+            });
+            let k = ((n as f64) * frac).round() as usize;
+            for &i in order.iter().take(k) {
+                profiles[i].sec_per_sample /= 2.0;
+                profiles[i].upload_bps *= 2.0;
+                profiles[i].download_bps *= 2.0;
+            }
+        }
+        ProfilePool { profiles }
+    }
+
+    pub fn get(&self, learner: usize) -> &DeviceProfile {
+        &self.profiles[learner]
+    }
+
+    /// Fig. 13a: CDF of per-sample times at the given evaluation points.
+    pub fn speed_cdf(&self, points: &[f64]) -> Vec<f64> {
+        let xs: Vec<f64> = self.profiles.iter().map(|p| p.sec_per_sample).collect();
+        stats::ecdf(&xs, points)
+    }
+
+    /// Fig. 13b: cluster the speed distribution with k-means (k=6) and
+    /// return (centroids, cluster populations).
+    pub fn speed_clusters(&self, seed: u64) -> (Vec<f64>, Vec<usize>) {
+        let xs: Vec<f64> = self.profiles.iter().map(|p| p.sec_per_sample.ln()).collect();
+        let (centroids, assign) = stats::kmeans_1d(&xs, 6, 30, seed);
+        let mut pops = vec![0usize; 6];
+        for a in assign {
+            pops[a] += 1;
+        }
+        (centroids.into_iter().map(f64::exp).collect(), pops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> ProfilePool {
+        ProfilePool::generate(2000, 3, HardwareScenario::Hs1)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ProfilePool::generate(50, 9, HardwareScenario::Hs1);
+        let b = ProfilePool::generate(50, 9, HardwareScenario::Hs1);
+        assert_eq!(a.profiles, b.profiles);
+    }
+
+    #[test]
+    fn long_tail_speeds() {
+        let p = pool();
+        let xs: Vec<f64> = p.profiles.iter().map(|d| d.sec_per_sample).collect();
+        let p95 = stats::percentile(&xs, 95.0);
+        let p50 = stats::percentile(&xs, 50.0);
+        assert!(p95 / p50 > 3.0, "tail ratio {}", p95 / p50);
+    }
+
+    #[test]
+    fn six_clusters_recoverable() {
+        let p = pool();
+        let (centroids, pops) = p.speed_clusters(1);
+        assert_eq!(centroids.len(), 6);
+        assert!(centroids.windows(2).all(|w| w[0] < w[1]));
+        assert!(pops.iter().all(|&c| c > 0), "{pops:?}");
+        // total span ~20x like the paper's CDF
+        assert!(centroids[5] / centroids[0] > 8.0);
+    }
+
+    #[test]
+    fn completion_time_components() {
+        let d = DeviceProfile {
+            sec_per_sample: 0.1,
+            upload_bps: 1e6,
+            download_bps: 2e6,
+            cluster: 0,
+        };
+        let t = d.completion_time(100, 2, 1_000_000);
+        // compute 0.1*100*2 = 20s; comm 1/2 + 1 = 1.5s
+        assert!((t - 21.5).abs() < 1e-9);
+        assert!((d.compute_time(100, 2) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hs4_speeds_everyone_up_2x() {
+        let base = ProfilePool::generate(300, 5, HardwareScenario::Hs1);
+        let fast = ProfilePool::generate(300, 5, HardwareScenario::Hs4);
+        for (a, b) in base.profiles.iter().zip(&fast.profiles) {
+            assert!((a.sec_per_sample / b.sec_per_sample - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hs2_speeds_up_only_top_quartile() {
+        let base = ProfilePool::generate(400, 5, HardwareScenario::Hs1);
+        let fast = ProfilePool::generate(400, 5, HardwareScenario::Hs2);
+        let changed = base
+            .profiles
+            .iter()
+            .zip(&fast.profiles)
+            .filter(|(a, b)| a.sec_per_sample != b.sec_per_sample)
+            .count();
+        assert_eq!(changed, 100);
+        // and the changed ones are the fastest of the base population
+        let mut base_sorted: Vec<f64> =
+            base.profiles.iter().map(|p| p.sec_per_sample).collect();
+        base_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let threshold = base_sorted[99];
+        for (a, b) in base.profiles.iter().zip(&fast.profiles) {
+            if a.sec_per_sample != b.sec_per_sample {
+                assert!(a.sec_per_sample <= threshold * 1.0000001);
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let p = pool();
+        let cdf = p.speed_cdf(&[0.01, 0.1, 0.5, 1.0, 5.0]);
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert!(*cdf.last().unwrap() > 0.95);
+    }
+}

@@ -1,0 +1,30 @@
+//! # RELAY — Resource-Efficient Federated Learning
+//!
+//! Rust implementation of the RELAY federated-learning system
+//! (Abdelmoniem et al.): intelligent participant selection (IPS) +
+//! staleness-aware aggregation (SAA) over a FedAvg/YoGi stack, plus every
+//! substrate the paper's evaluation depends on (device-heterogeneity
+//! profiles, availability traces, data partitioners, the Oort and SAFA
+//! baselines, an availability forecaster, and an event-driven simulator).
+//!
+//! Model math is AOT-compiled from JAX/Pallas to HLO (`make artifacts`) and
+//! executed through the PJRT CPU client (`runtime`); Python never runs on
+//! the round path.
+//!
+//! See `DESIGN.md` for the full inventory and the per-figure experiment
+//! index, and `examples/` for entry points.
+
+pub mod util;
+pub mod runtime;
+
+pub mod data;
+pub mod learners;
+pub mod trace;
+pub mod forecast;
+pub mod sim;
+pub mod selection;
+pub mod aggregation;
+pub mod metrics;
+pub mod config;
+pub mod coordinator;
+pub mod figures;

@@ -1,0 +1,157 @@
+//! `relay` — the CLI for the RELAY resource-efficient FL reproduction.
+//!
+//! Subcommands:
+//!   run           one experiment from a JSON config (--config) or flags
+//!   figure <id>   regenerate a paper figure/table (2..21, t1, t2, forecast, all)
+//!   trace-stats   availability-trace statistics (Fig. 14 numbers)
+//!   forecast-eval availability-prediction quality (5.2)
+//!   validate      check artifacts + backends and exit
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use relay::config::{preset, AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::data::partition::PartitionScheme;
+use relay::figures::{self, runner::FigureOpts};
+use relay::runtime::{self, Backend};
+use relay::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn backend(args: &Args) -> Result<Backend> {
+    Backend::parse(&args.str_or("backend", "pjrt"))
+        .ok_or_else(|| anyhow!("--backend must be pjrt|native"))
+}
+
+fn figure_opts(args: &Args) -> Result<FigureOpts> {
+    Ok(FigureOpts {
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+        backend: backend(args)?,
+        scale: args.f64_or("scale", 0.3),
+        out_dir: args.str_or("out", "results"),
+        seeds: args.usize_or("seeds", 1),
+        verbose: args.bool("verbose"),
+    })
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("figure") => {
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: relay figure <id> [--scale 0.3] [--seeds 1]"))?;
+            figures::run(id, &figure_opts(&args)?)
+        }
+        Some("trace-stats") => figures::run("14", &figure_opts(&args)?),
+        Some("forecast-eval") => figures::run("forecast", &figure_opts(&args)?),
+        Some("validate") => cmd_validate(&args),
+        Some(other) => Err(anyhow!("unknown command '{other}' (run|figure|trace-stats|forecast-eval|validate)")),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg: ExpConfig = if let Some(path) = args.str_opt("config") {
+        ExpConfig::load(path)?
+    } else {
+        preset(&args.str_or("benchmark", "speech"))?
+    };
+    // flag overrides
+    if let Some(sel) = args.str_opt("selector") {
+        if sel == "relay" {
+            cfg = cfg.relay();
+        } else {
+            cfg.selector = sel.into();
+        }
+    }
+    cfg.total_learners = args.usize_or("learners", cfg.total_learners);
+    cfg.rounds = args.usize_or("rounds", cfg.rounds);
+    cfg.target_participants = args.usize_or("participants", cfg.target_participants);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    if let Some(p) = args.str_opt("partition") {
+        cfg.partition = PartitionScheme::parse(p).ok_or_else(|| anyhow!("bad --partition"))?;
+    }
+    if let Some(a) = args.str_opt("avail") {
+        cfg.avail = match a {
+            "all" => AvailMode::AllAvail,
+            "dyn" => AvailMode::DynAvail,
+            _ => return Err(anyhow!("--avail must be all|dyn")),
+        };
+    }
+    if let Some(d) = args.str_opt("deadline") {
+        cfg.mode = RoundMode::Deadline { deadline: d.parse()? };
+    }
+    if cfg.label.is_empty() {
+        cfg.label = format!("{}-{}", cfg.selector, cfg.partition.label());
+    }
+    cfg.validate()?;
+
+    let exec = match backend(args)? {
+        Backend::Pjrt => runtime::load_executor(
+            &args.str_or("artifacts", "artifacts"),
+            &cfg.variant,
+            Backend::Pjrt,
+        )?,
+        Backend::Native => Arc::new(runtime::NativeExecutor::new(
+            runtime::builtin_variant(&cfg.variant),
+        )),
+    };
+    let result = run_experiment(cfg, exec)?;
+    for r in &result.rounds {
+        if let Some(acc) = r.test_accuracy {
+            println!(
+                "round {:>5}  time {:>8.0}s  res {:>8.2}h  waste {:>5.1}%  acc {:>5.1}%",
+                r.round,
+                r.sim_time,
+                r.cum_resource_secs / 3600.0,
+                100.0 * r.cum_waste_secs / r.cum_resource_secs.max(1e-9),
+                100.0 * acc
+            );
+        }
+    }
+    println!("{}", result.summary());
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, result.to_json().to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = runtime::Manifest::load(&dir)?;
+    manifest.validate()?;
+    println!("manifest OK: {} variants, {} computations", manifest.variants.len(), manifest.computations.len());
+    let exec = runtime::load_executor(&dir, "tiny", Backend::Pjrt)?;
+    let p = exec.init_params(1)?;
+    println!("pjrt OK: tiny init -> {} params", p.len());
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "relay — RELAY: resource-efficient federated learning (paper reproduction)
+
+USAGE:
+  relay run [--benchmark speech|cifar|openimage|nlp] [--selector random|oort|priority|safa|relay]
+            [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
+            [--avail all|dyn] [--deadline SECS] [--backend pjrt|native] [--config cfg.json] [--out r.json]
+  relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--backend pjrt|native] [--verbose]
+  relay trace-stats | forecast-eval | validate
+
+Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to HLO)."
+    );
+}

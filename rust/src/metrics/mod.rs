@@ -1,0 +1,249 @@
+//! Metrics & resource accounting (the paper's evaluation axes):
+//!
+//! * **resource usage** — cumulative compute + communication seconds spent
+//!   by participants, *including* work that is never aggregated (§5.2 fn 3);
+//! * **resource waste** — the subset of that time spent producing updates
+//!   that were NOT incorporated into the model (§3.2);
+//! * **unique participants** — coverage of the learner population (Fig. 3);
+//! * accuracy / loss / perplexity timeline against rounds, simulated time
+//!   and resources.
+
+use std::collections::HashSet;
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Per-round record emitted by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated seconds since experiment start (at round end).
+    pub sim_time: f64,
+    pub round_duration: f64,
+    pub selected: usize,
+    pub fresh_updates: usize,
+    pub stale_updates: usize,
+    pub dropouts: usize,
+    pub discarded: usize,
+    /// Resource-seconds consumed this round (compute + comm of everyone).
+    pub resource_secs: f64,
+    pub cum_resource_secs: f64,
+    pub cum_waste_secs: f64,
+    pub unique_participants: usize,
+    pub failed: bool,
+    /// Mean training loss over participants' local steps.
+    pub train_loss: f64,
+    /// Test metrics, present on eval rounds.
+    pub test_accuracy: Option<f64>,
+    pub test_loss: Option<f64>,
+}
+
+/// Running accounting state.
+#[derive(Default)]
+pub struct Accounting {
+    pub cum_resource_secs: f64,
+    pub cum_waste_secs: f64,
+    unique: HashSet<usize>,
+}
+
+impl Accounting {
+    /// Record that `learner` spent `secs` of device time training/uploading.
+    pub fn spend(&mut self, learner: usize, secs: f64) {
+        self.cum_resource_secs += secs;
+        self.unique.insert(learner);
+    }
+
+    /// Record that `secs` of previously-spent time turned out wasted
+    /// (update dropped, discarded, or never aggregated).
+    pub fn waste(&mut self, secs: f64) {
+        self.cum_waste_secs += secs;
+    }
+
+    pub fn unique_participants(&self) -> usize {
+        self.unique.len()
+    }
+}
+
+/// Full result of one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentResult {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+    /// Variant reports perplexity instead of accuracy.
+    pub perplexity_metric: bool,
+}
+
+impl ExperimentResult {
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.test_accuracy)
+    }
+
+    pub fn final_resource_hours(&self) -> f64 {
+        self.rounds.last().map(|r| r.cum_resource_secs / 3600.0).unwrap_or(0.0)
+    }
+
+    pub fn final_sim_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    pub fn waste_fraction(&self) -> f64 {
+        let r = self.rounds.last().map(|r| r.cum_resource_secs).unwrap_or(0.0);
+        let w = self.rounds.last().map(|r| r.cum_waste_secs).unwrap_or(0.0);
+        if r > 0.0 {
+            w / r
+        } else {
+            0.0
+        }
+    }
+
+    /// First (sim_time, resource_hours) at which test accuracy reached `acc`.
+    pub fn time_to_accuracy(&self, acc: f64) -> Option<(f64, f64)> {
+        self.rounds.iter().find_map(|r| {
+            r.test_accuracy
+                .filter(|&a| a >= acc)
+                .map(|_| (r.sim_time, r.cum_resource_secs / 3600.0))
+        })
+    }
+
+    /// (resource_hours, accuracy) series — the x/y of most paper figures.
+    pub fn accuracy_vs_resources(&self) -> Vec<(f64, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.test_accuracy.map(|a| (r.cum_resource_secs / 3600.0, a)))
+            .collect()
+    }
+
+    /// (round, accuracy) series (Fig. 9/10 style).
+    pub fn accuracy_vs_rounds(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.test_accuracy.map(|a| (r.round, a)))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("perplexity_metric", Json::Bool(self.perplexity_metric)),
+            (
+                "rounds",
+                arr(self.rounds.iter().map(|r| {
+                    obj(vec![
+                        ("round", num(r.round as f64)),
+                        ("sim_time", num(r.sim_time)),
+                        ("round_duration", num(r.round_duration)),
+                        ("selected", num(r.selected as f64)),
+                        ("fresh", num(r.fresh_updates as f64)),
+                        ("stale", num(r.stale_updates as f64)),
+                        ("dropouts", num(r.dropouts as f64)),
+                        ("discarded", num(r.discarded as f64)),
+                        ("resource_secs", num(r.resource_secs)),
+                        ("cum_resource_secs", num(r.cum_resource_secs)),
+                        ("cum_waste_secs", num(r.cum_waste_secs)),
+                        ("unique", num(r.unique_participants as f64)),
+                        ("failed", Json::Bool(r.failed)),
+                        ("train_loss", num(r.train_loss)),
+                        (
+                            "test_accuracy",
+                            r.test_accuracy.map(num).unwrap_or(Json::Null),
+                        ),
+                        ("test_loss", r.test_loss.map(num).unwrap_or(Json::Null)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Compact human-readable summary line (figure harness output).
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<28} rounds={:<5} time={:>9.0}s resources={:>8.2}h waste={:>5.1}% unique={:<5} acc={}",
+            self.label,
+            self.rounds.len(),
+            self.final_sim_time(),
+            self.final_resource_hours(),
+            100.0 * self.waste_fraction(),
+            self.rounds.last().map(|r| r.unique_participants).unwrap_or(0),
+            self.final_accuracy()
+                .map(|a| format!("{:.1}%", 100.0 * a))
+                .unwrap_or_else(|| "n/a".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with(rounds: Vec<RoundRecord>) -> ExperimentResult {
+        ExperimentResult { label: "t".into(), rounds, perplexity_metric: false }
+    }
+
+    fn rr(round: usize, cum_res: f64, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_time: 100.0 * (round + 1) as f64,
+            cum_resource_secs: cum_res,
+            test_accuracy: acc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn accounting_tracks_unique_and_waste() {
+        let mut a = Accounting::default();
+        a.spend(1, 10.0);
+        a.spend(1, 5.0);
+        a.spend(2, 10.0);
+        a.waste(5.0);
+        assert_eq!(a.unique_participants(), 2);
+        assert_eq!(a.cum_resource_secs, 25.0);
+        assert_eq!(a.cum_waste_secs, 5.0);
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let r = result_with(vec![
+            rr(0, 100.0, Some(0.2)),
+            rr(1, 200.0, Some(0.5)),
+            rr(2, 300.0, Some(0.9)),
+        ]);
+        let (t, res) = r.time_to_accuracy(0.5).unwrap();
+        assert_eq!(t, 200.0);
+        assert!((res - 200.0 / 3600.0).abs() < 1e-12);
+        assert!(r.time_to_accuracy(0.95).is_none());
+    }
+
+    #[test]
+    fn final_metrics() {
+        let r = result_with(vec![rr(0, 100.0, None), rr(1, 300.0, Some(0.7))]);
+        assert_eq!(r.final_accuracy(), Some(0.7));
+        assert!((r.final_resource_hours() - 300.0 / 3600.0).abs() < 1e-12);
+        assert_eq!(r.accuracy_vs_resources().len(), 1);
+        assert_eq!(r.accuracy_vs_rounds(), vec![(1, 0.7)]);
+    }
+
+    #[test]
+    fn waste_fraction_guards_zero() {
+        let r = result_with(vec![]);
+        assert_eq!(r.waste_fraction(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = result_with(vec![rr(0, 50.0, Some(0.4))]);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("t"));
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(rounds[0].get("test_accuracy").unwrap().as_f64(), Some(0.4));
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let r = result_with(vec![rr(0, 3600.0, Some(0.5))]);
+        let s = r.summary();
+        assert!(s.contains("1.00h"), "{s}");
+        assert!(s.contains("50.0%"), "{s}");
+    }
+}

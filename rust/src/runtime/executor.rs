@@ -1,0 +1,266 @@
+//! The `Executor` trait — the only surface through which the coordinator
+//! touches model math — and its PJRT implementation, which loads the AOT
+//! HLO-text artifacts and runs them on the XLA CPU client.
+//!
+//! Python is never on this path: artifacts are produced once by
+//! `make artifacts` and the rust binary is self-contained afterwards.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, VariantInfo};
+
+/// Output of one local SGD step.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub params: Vec<f32>,
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Model math surface used by the coordinator (L3). Implementations:
+/// [`PjrtExecutor`] (AOT HLO on the XLA CPU client, the production path) and
+/// [`super::native::NativeExecutor`] (pure-rust mirror, fallback/cross-check).
+pub trait Executor: Send + Sync {
+    fn variant(&self) -> &VariantInfo;
+
+    /// Layer-scaled random init, deterministic per seed.
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
+
+    /// One masked-SGD step on a fixed-size batch.
+    /// x: [B*D] row-major, y: [B] labels, mask: [B] 0/1, lr: step size.
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32], lr: f32)
+        -> Result<TrainOut>;
+
+    /// Returns (sum_loss, correct) over the masked batch.
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32])
+        -> Result<(f32, f32)>;
+
+    /// Weighted sum of update rows. `updates.len()` may be anything up to
+    /// `max_updates`; implementations pad with zero-weight rows.
+    fn agg_combine(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>>;
+
+    /// Squared distances ||fresh - stale_s||^2 for each stale row plus
+    /// ||fresh||^2 as the final element (len = stale.len() + 1).
+    fn agg_dev(&self, fresh: &[f32], stale: &[&[f32]]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-loaded executables for one variant.
+///
+/// SAFETY: `xla::PjRtLoadedExecutable` holds raw pointers and is not marked
+/// Send/Sync by the crate, but the XLA CPU PJRT client supports concurrent
+/// `Execute` calls on the same loaded executable (each call owns its run
+/// state). We serialize compile-time access and allow concurrent execute.
+struct Loaded {
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+    agg: xla::PjRtLoadedExecutable,
+    dev: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Loaded {}
+unsafe impl Sync for Loaded {}
+
+pub struct PjrtExecutor {
+    info: VariantInfo,
+    loaded: Loaded,
+    /// Cumulative host<->device + execute call counters (perf accounting).
+    pub calls: Mutex<HashMap<&'static str, u64>>,
+}
+
+impl PjrtExecutor {
+    /// Compile all five computations of `variant` from `manifest`.
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<PjrtExecutor> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Self::load_with_client(&client, manifest, variant)
+    }
+
+    pub fn load_with_client(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        variant: &str,
+    ) -> Result<PjrtExecutor> {
+        let info = manifest.variant(variant)?.clone();
+        let compile = |comp: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.hlo_path(variant, comp)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&computation)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {variant}/{comp}"))
+        };
+        Ok(PjrtExecutor {
+            info,
+            loaded: Loaded {
+                train: compile("train")?,
+                eval: compile("eval")?,
+                init: compile("init")?,
+                agg: compile("agg")?,
+                dev: compile("dev")?,
+            },
+            calls: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn count(&self, name: &'static str) {
+        *self.calls.lock().unwrap().entry(name).or_insert(0) += 1;
+    }
+
+    fn run(
+        &self,
+        name: &'static str,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.count(name);
+        let bufs = exe.execute::<xla::Literal>(args).map_err(wrap)?;
+        let lit = bufs[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        lit.to_tuple().map_err(wrap)
+    }
+
+    fn pad_updates(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let u = self.info.max_updates;
+        let p = self.info.num_params;
+        if updates.len() > u {
+            return Err(anyhow!("{} updates exceed max_updates={u}", updates.len()));
+        }
+        if updates.len() != weights.len() {
+            return Err(anyhow!("updates/weights length mismatch"));
+        }
+        let mut stacked = vec![0f32; u * p];
+        let mut w = vec![0f32; u];
+        for (i, row) in updates.iter().enumerate() {
+            if row.len() != p {
+                return Err(anyhow!("update row {} has len {} != P={p}", i, row.len()));
+            }
+            stacked[i * p..(i + 1) * p].copy_from_slice(row);
+            w[i] = weights[i];
+        }
+        Ok((stacked, w))
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Build an f32 literal of the given shape in ONE copy (avoids the extra
+/// full-buffer copy of `Literal::vec1(..).reshape(..)` — §Perf iteration 3).
+fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(wrap)
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(wrap)?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar literal"))
+}
+
+impl Executor for PjrtExecutor {
+    fn variant(&self) -> &VariantInfo {
+        &self.info
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let args = [xla::Literal::scalar(seed)];
+        let out = self.run("init", &self.loaded.init, &args)?;
+        out[0].to_vec::<f32>().map_err(wrap)
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<TrainOut> {
+        let v = &self.info;
+        check_batch(v, params, x, y, mask)?;
+        let args = [
+            literal_f32(&[v.num_params], params)?,
+            literal_f32(&[v.batch, v.input_dim], x)?,
+            xla::Literal::vec1(y),
+            literal_f32(&[v.batch], mask)?,
+            xla::Literal::scalar(lr),
+        ];
+        let out = self.run("train", &self.loaded.train, &args)?;
+        Ok(TrainOut {
+            params: out[0].to_vec::<f32>().map_err(wrap)?,
+            loss: scalar_f32(&out[1])?,
+            correct: scalar_f32(&out[2])?,
+        })
+    }
+
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
+        let v = &self.info;
+        check_batch(v, params, x, y, mask)?;
+        let args = [
+            literal_f32(&[v.num_params], params)?,
+            literal_f32(&[v.batch, v.input_dim], x)?,
+            xla::Literal::vec1(y),
+            literal_f32(&[v.batch], mask)?,
+        ];
+        let out = self.run("eval", &self.loaded.eval, &args)?;
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    fn agg_combine(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let (stacked, w) = self.pad_updates(updates, weights)?;
+        let v = &self.info;
+        let args = [
+            literal_f32(&[v.max_updates, v.num_params], &stacked)?,
+            literal_f32(&[v.max_updates], &w)?,
+        ];
+        let out = self.run("agg", &self.loaded.agg, &args)?;
+        out[0].to_vec::<f32>().map_err(wrap)
+    }
+
+    fn agg_dev(&self, fresh: &[f32], stale: &[&[f32]]) -> Result<Vec<f32>> {
+        let v = &self.info;
+        if fresh.len() != v.num_params {
+            return Err(anyhow!("fresh len {} != P={}", fresh.len(), v.num_params));
+        }
+        let weights = vec![0f32; stale.len()];
+        let (stacked, _) = self.pad_updates(stale, &weights)?;
+        let args = [
+            literal_f32(&[v.num_params], fresh)?,
+            literal_f32(&[v.max_updates, v.num_params], &stacked)?,
+        ];
+        let out = self.run("dev", &self.loaded.dev, &args)?;
+        let full = out[0].to_vec::<f32>().map_err(wrap)?;
+        // full = [dist_0..dist_{U-1}, fnorm]; trim padded rows.
+        let mut res: Vec<f32> = full[..stale.len()].to_vec();
+        res.push(*full.last().ok_or_else(|| anyhow!("empty dev output"))?);
+        Ok(res)
+    }
+}
+
+fn check_batch(v: &VariantInfo, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<()> {
+    if params.len() != v.num_params {
+        return Err(anyhow!("params len {} != P={}", params.len(), v.num_params));
+    }
+    if x.len() != v.batch * v.input_dim {
+        return Err(anyhow!("x len {} != B*D={}", x.len(), v.batch * v.input_dim));
+    }
+    if y.len() != v.batch || mask.len() != v.batch {
+        return Err(anyhow!("y/mask len != B={}", v.batch));
+    }
+    if let Some(bad) = y.iter().find(|&&l| l < 0 || l as usize >= v.num_classes) {
+        return Err(anyhow!("label {bad} out of range 0..{}", v.num_classes));
+    }
+    Ok(())
+}

@@ -1,0 +1,215 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static description of one AOT-compiled model variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantInfo {
+    pub name: String,
+    pub num_params: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub hidden: Vec<usize>,
+    pub batch: usize,
+    /// Padded row count of the aggregation kernels (static AOT shape).
+    pub max_updates: usize,
+    /// NLP-style benchmark: report perplexity = exp(loss) instead of accuracy.
+    pub perplexity: bool,
+}
+
+impl VariantInfo {
+    /// (in, out) dims of each dense layer, matching `model.py`.
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.input_dim];
+        dims.extend(&self.hidden);
+        dims.push(self.num_classes);
+        (0..dims.len() - 1).map(|i| (dims[i], dims[i + 1])).collect()
+    }
+}
+
+/// One exported computation (train/eval/init/agg/dev) of a variant.
+#[derive(Clone, Debug)]
+pub struct ComputationInfo {
+    pub variant: String,
+    pub computation: String,
+    pub file: String,
+    pub sha256: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantInfo>,
+    pub computations: Vec<ComputationInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&json, dir)
+    }
+
+    pub fn from_json(json: &Json, dir: PathBuf) -> Result<Manifest> {
+        let fmt = json
+            .get("format")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?;
+        if fmt != "hlo-text-v1" {
+            return Err(anyhow!("unsupported manifest format {fmt}"));
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in json
+            .get("variants")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?
+        {
+            let req = |k: &str| -> Result<usize> {
+                v.get(k)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("variant {name} missing '{k}'"))
+            };
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name: name.clone(),
+                    num_params: req("num_params")?,
+                    input_dim: req("input_dim")?,
+                    num_classes: req("num_classes")?,
+                    hidden: v
+                        .get("hidden")
+                        .and_then(|h| h.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
+                    batch: req("batch")?,
+                    max_updates: req("max_updates")?,
+                    perplexity: v
+                        .get("perplexity")
+                        .and_then(|p| p.as_bool())
+                        .unwrap_or(false),
+                },
+            );
+        }
+        let mut computations = Vec::new();
+        for c in json
+            .get("computations")
+            .and_then(|c| c.as_arr())
+            .unwrap_or(&[])
+        {
+            let get = |k: &str| -> Result<String> {
+                c.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(String::from)
+                    .ok_or_else(|| anyhow!("computation entry missing '{k}'"))
+            };
+            computations.push(ComputationInfo {
+                variant: get("variant")?,
+                computation: get("computation")?,
+                file: get("file")?,
+                sha256: get("sha256")?,
+            });
+        }
+        Ok(Manifest { dir, variants, computations })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant '{name}' (have: {:?})", self.variants.keys()))
+    }
+
+    /// Path of the HLO text file for (variant, computation).
+    pub fn hlo_path(&self, variant: &str, computation: &str) -> Result<PathBuf> {
+        let c = self
+            .computations
+            .iter()
+            .find(|c| c.variant == variant && c.computation == computation)
+            .ok_or_else(|| anyhow!("no computation {variant}/{computation} in manifest"))?;
+        Ok(self.dir.join(&c.file))
+    }
+
+    /// Consistency: each variant has all five computations, files exist.
+    pub fn validate(&self) -> Result<()> {
+        for name in self.variants.keys() {
+            for comp in ["train", "eval", "init", "agg", "dev"] {
+                let p = self.hlo_path(name, comp)?;
+                if !p.exists() {
+                    return Err(anyhow!("artifact file missing: {p:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+          "format": "hlo-text-v1",
+          "variants": {
+            "tiny": {"num_params": 172, "input_dim": 16, "num_classes": 4,
+                     "hidden": [8], "batch": 4, "max_updates": 8,
+                     "perplexity": false}
+          },
+          "computations": [
+            {"variant": "tiny", "computation": "train",
+             "file": "tiny_train.hlo.txt", "sha256": "ab",
+             "arg_shapes": [[172]], "arg_dtypes": ["float32"]}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_variants_and_computations() {
+        let m = Manifest::from_json(&sample_json(), PathBuf::from("/tmp")).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.num_params, 172);
+        assert_eq!(v.layer_shapes(), vec![(16, 8), (8, 4)]);
+        assert_eq!(
+            m.hlo_path("tiny", "train").unwrap(),
+            PathBuf::from("/tmp/tiny_train.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::from_json(&sample_json(), PathBuf::from("/tmp")).unwrap();
+        assert!(m.variant("nope").is_err());
+        assert!(m.hlo_path("tiny", "missing").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = Json::parse(r#"{"format": "v0", "variants": {}}"#).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            m.validate().unwrap();
+            assert!(m.variants.contains_key("tiny"));
+            let v = m.variant("speech").unwrap();
+            // P must equal sum over layers of i*o + o
+            let p: usize = v.layer_shapes().iter().map(|(i, o)| i * o + o).sum();
+            assert_eq!(p, v.num_params);
+        }
+    }
+}

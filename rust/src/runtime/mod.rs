@@ -1,0 +1,113 @@
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`, produced once by `make artifacts`) and executes them on
+//! the PJRT CPU client from the coordinator's round path. Also provides a
+//! pure-rust [`native::NativeExecutor`] mirror used as fallback/cross-check.
+
+pub mod executor;
+pub mod manifest;
+pub mod native;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use executor::{Executor, PjrtExecutor, TrainOut};
+pub use manifest::{Manifest, VariantInfo};
+pub use native::NativeExecutor;
+
+/// Which model-math implementation to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO on the XLA CPU PJRT client (the production path).
+    Pjrt,
+    /// Pure-rust mirror (fallback when artifacts are absent; cross-check).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "pjrt" => Some(Backend::Pjrt),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Load an executor for `variant` from the artifacts directory.
+pub fn load_executor(
+    artifacts_dir: &str,
+    variant: &str,
+    backend: Backend,
+) -> Result<Arc<dyn Executor>> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    match backend {
+        Backend::Pjrt => Ok(Arc::new(PjrtExecutor::load(&manifest, variant)?)),
+        Backend::Native => Ok(Arc::new(NativeExecutor::new(manifest.variant(variant)?.clone()))),
+    }
+}
+
+/// Like [`load_executor`] but falls back to the native mirror (with the
+/// built-in variant table) when artifacts are missing. Used by tests and the
+/// quickstart example so `cargo test` works before `make artifacts`.
+pub fn load_executor_or_native(artifacts_dir: &str, variant: &str) -> Arc<dyn Executor> {
+    if let Ok(m) = Manifest::load(artifacts_dir) {
+        if let Ok(e) = PjrtExecutor::load(&m, variant) {
+            return Arc::new(e);
+        }
+    }
+    Arc::new(NativeExecutor::new(builtin_variant(variant)))
+}
+
+/// Built-in copy of the variant table (mirrors `model.py::VARIANTS`); keeps
+/// the native backend usable without artifacts. `manifest.rs` tests assert
+/// the two stay in sync when artifacts are present.
+pub fn builtin_variant(name: &str) -> VariantInfo {
+    let (input_dim, num_classes, hidden, batch, max_updates, perplexity) = match name {
+        "tiny" => (16, 4, vec![8], 4, 8, false),
+        "speech" => (256, 35, vec![128, 64], 20, 32, false),
+        "cifar" => (256, 10, vec![128, 64], 10, 32, false),
+        "openimage" => (256, 60, vec![128, 64], 30, 32, false),
+        "nlp" => (128, 64, vec![128], 40, 32, true),
+        other => panic!("unknown builtin variant '{other}'"),
+    };
+    let mut dims = vec![input_dim];
+    dims.extend(&hidden);
+    dims.push(num_classes);
+    let num_params = (0..dims.len() - 1).map(|i| dims[i] * dims[i + 1] + dims[i + 1]).sum();
+    VariantInfo {
+        name: name.to_string(),
+        num_params,
+        input_dim,
+        num_classes,
+        hidden,
+        batch,
+        max_updates,
+        perplexity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_variants_param_counts() {
+        assert_eq!(builtin_variant("tiny").num_params, 172);
+        let v = builtin_variant("speech");
+        assert_eq!(v.num_params, 256 * 128 + 128 + 128 * 64 + 64 + 64 * 35 + 35);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown builtin variant")]
+    fn unknown_builtin_panics() {
+        builtin_variant("nope");
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("x"), None);
+    }
+}

@@ -1,0 +1,406 @@
+//! Pure-rust mirror of the L2 model semantics (`python/compile/model.py`).
+//!
+//! Two purposes: (1) cross-check of the AOT path — integration tests compare
+//! it bit-for-bit-ish (f32 tolerance) against `PjrtExecutor`; (2) fallback
+//! backend so the simulator runs in environments where `make artifacts`
+//! hasn't been run (e.g. plain `cargo test`).
+//!
+//! The only intentional divergence is `init_params`: jax's threefry stream is
+//! not reproduced, so native init draws from our xoshiro RNG with the same
+//! He scaling. Given identical inputs, train/eval/agg match the HLO path.
+
+use anyhow::{anyhow, Result};
+
+use super::executor::{Executor, TrainOut};
+use super::manifest::VariantInfo;
+use crate::util::rng::Rng;
+
+pub struct NativeExecutor {
+    info: VariantInfo,
+}
+
+impl NativeExecutor {
+    pub fn new(info: VariantInfo) -> Self {
+        NativeExecutor { info }
+    }
+
+    /// Forward pass; returns per-layer pre-activations z and activations h
+    /// (h[0] = input), for use by backward.
+    fn forward(&self, params: &[f32], x: &[f32]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let v = &self.info;
+        let b = v.batch;
+        let shapes = v.layer_shapes();
+        let mut hs: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for (li, &(di, do_)) in shapes.iter().enumerate() {
+            let w = &params[off..off + di * do_];
+            off += di * do_;
+            let bias = &params[off..off + do_];
+            off += do_;
+            let h = hs.last().unwrap();
+            let mut z = vec![0f32; b * do_];
+            matmul_acc(h, w, &mut z, b, di, do_);
+            for r in 0..b {
+                for c in 0..do_ {
+                    z[r * do_ + c] += bias[c];
+                }
+            }
+            let last = li + 1 == shapes.len();
+            let hnext = if last {
+                z.clone()
+            } else {
+                z.iter().map(|&v| v.max(0.0)).collect()
+            };
+            zs.push(z);
+            hs.push(hnext);
+        }
+        (zs, hs)
+    }
+
+    /// Per-row log-softmax probabilities + nll + argmax for the logits.
+    fn softmax_stats(&self, logits: &[f32], y: &[i32]) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+        let v = &self.info;
+        let (b, c) = (v.batch, v.num_classes);
+        let mut probs = vec![0f32; b * c];
+        let mut nll = vec![0f32; b];
+        let mut argmax = vec![0usize; b];
+        for r in 0..b {
+            let row = &logits[r * c..(r + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f64;
+            for &l in row {
+                denom += ((l - m) as f64).exp();
+            }
+            let log_denom = denom.ln() as f32;
+            let mut best = 0usize;
+            for j in 0..c {
+                let logp = row[j] - m - log_denom;
+                probs[r * c + j] = logp.exp();
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            argmax[r] = best;
+            nll[r] = -(row[y[r] as usize] - m - log_denom);
+        }
+        (probs, nll, argmax)
+    }
+}
+
+/// out[b][n] += x[b][k] * w[k][n] — row-major, f32 accumulate (matches the
+/// Pallas kernel's preferred_element_type=f32).
+fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    // i-k-j loop order: streams w rows, vectorizes the inner j loop.
+    for r in 0..b {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// out[k][n] += x^T[k][b] * g[b][n] for dW.
+fn matmul_at_b(x: &[f32], g: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    for r in 0..b {
+        let xrow = &x[r * k..(r + 1) * k];
+        let grow = &g[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = xrow[kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * grow[j];
+            }
+        }
+    }
+}
+
+/// out[b][k] += g[b][n] * w^T[n][k] for dh.
+fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    for r in 0..b {
+        let grow = &g[r * n..(r + 1) * n];
+        let orow = &mut out[r * k..(r + 1) * k];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += grow[j] * wrow[j];
+            }
+            orow[kk] += acc;
+        }
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn variant(&self) -> &VariantInfo {
+        &self.info
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut rng = Rng::new(seed as u64 ^ 0x52454C41595F4E41); // "RELAY_NA"
+        let mut out = Vec::with_capacity(self.info.num_params);
+        for (di, do_) in self.info.layer_shapes() {
+            let scale = (2.0 / di as f64).sqrt();
+            for _ in 0..di * do_ {
+                out.push((rng.normal() * scale) as f32);
+            }
+            out.extend(std::iter::repeat(0f32).take(do_)); // biases zero
+        }
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<TrainOut> {
+        let v = &self.info;
+        if params.len() != v.num_params {
+            return Err(anyhow!("params len {} != P={}", params.len(), v.num_params));
+        }
+        let b = v.batch;
+        let shapes = v.layer_shapes();
+        let (zs, hs) = self.forward(params, x);
+        let logits = hs.last().unwrap();
+        let (probs, nll, argmax) = self.softmax_stats(logits, y);
+
+        let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+        let loss: f32 = nll.iter().zip(mask).map(|(l, m)| l * m).sum::<f32>() / denom;
+        let correct: f32 = argmax
+            .iter()
+            .zip(y)
+            .zip(mask)
+            .map(|((a, yy), m)| if *a == *yy as usize { *m } else { 0.0 })
+            .sum();
+
+        // Backward. dz for the head: mask*(p - onehot)/denom.
+        let c = v.num_classes;
+        let mut dz = vec![0f32; b * c];
+        for r in 0..b {
+            for j in 0..c {
+                let one = if j == y[r] as usize { 1.0 } else { 0.0 };
+                dz[r * c + j] = mask[r] * (probs[r * c + j] - one) / denom;
+            }
+        }
+
+        let mut new_params = params.to_vec();
+        // Walk layers backwards; track param offsets.
+        let mut offsets = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for &(di, do_) in &shapes {
+            offsets.push(off);
+            off += di * do_ + do_;
+        }
+        for li in (0..shapes.len()).rev() {
+            let (di, do_) = shapes[li];
+            let off = offsets[li];
+            let h_prev = &hs[li];
+            // dW = h_prev^T dz ; db = colsum dz
+            let mut dw = vec![0f32; di * do_];
+            matmul_at_b(h_prev, &dz, &mut dw, b, di, do_);
+            for (i, g) in dw.iter().enumerate() {
+                new_params[off + i] -= lr * g;
+            }
+            for j in 0..do_ {
+                let mut db = 0f32;
+                for r in 0..b {
+                    db += dz[r * do_ + j];
+                }
+                new_params[off + di * do_ + j] -= lr * db;
+            }
+            if li > 0 {
+                // dh_prev = dz W^T, gated by relu'(z_{l-1})
+                let w = &params[off..off + di * do_];
+                let mut dh = vec![0f32; b * di];
+                matmul_b_wt(&dz, w, &mut dh, b, di, do_);
+                let zprev = &zs[li - 1];
+                for i in 0..b * di {
+                    if zprev[i] <= 0.0 {
+                        dh[i] = 0.0;
+                    }
+                }
+                dz = dh;
+            }
+        }
+        Ok(TrainOut { params: new_params, loss, correct })
+    }
+
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
+        let (_, hs) = self.forward(params, x);
+        let logits = hs.last().unwrap();
+        let (_, nll, argmax) = self.softmax_stats(logits, y);
+        let sum_loss: f32 = nll.iter().zip(mask).map(|(l, m)| l * m).sum();
+        let correct: f32 = argmax
+            .iter()
+            .zip(y)
+            .zip(mask)
+            .map(|((a, yy), m)| if *a == *yy as usize { *m } else { 0.0 })
+            .sum();
+        Ok((sum_loss, correct))
+    }
+
+    fn agg_combine(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let p = self.info.num_params;
+        if updates.len() != weights.len() {
+            return Err(anyhow!("updates/weights length mismatch"));
+        }
+        let mut out = vec![0f32; p];
+        for (row, &w) in updates.iter().zip(weights) {
+            if row.len() != p {
+                return Err(anyhow!("update row len {} != P={p}", row.len()));
+            }
+            for i in 0..p {
+                out[i] += w * row[i];
+            }
+        }
+        Ok(out)
+    }
+
+    fn agg_dev(&self, fresh: &[f32], stale: &[&[f32]]) -> Result<Vec<f32>> {
+        let p = self.info.num_params;
+        if fresh.len() != p {
+            return Err(anyhow!("fresh len {} != P={p}", fresh.len()));
+        }
+        let mut out = Vec::with_capacity(stale.len() + 1);
+        for row in stale {
+            let mut d = 0f64;
+            for i in 0..p {
+                let diff = (fresh[i] - row[i]) as f64;
+                d += diff * diff;
+            }
+            out.push(d as f32);
+        }
+        let fnorm: f64 = fresh.iter().map(|&f| (f as f64) * (f as f64)).sum();
+        out.push(fnorm as f32);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> VariantInfo {
+        VariantInfo {
+            name: "tiny".into(),
+            num_params: 172,
+            input_dim: 16,
+            num_classes: 4,
+            hidden: vec![8],
+            batch: 4,
+            max_updates: 8,
+            perplexity: false,
+        }
+    }
+
+    fn batch(v: &VariantInfo, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..v.batch * v.input_dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..v.batch).map(|_| rng.below(v.num_classes) as i32).collect();
+        (x, y, vec![1.0; v.batch])
+    }
+
+    #[test]
+    fn init_len_and_determinism() {
+        let e = NativeExecutor::new(tiny());
+        let p = e.init_params(3).unwrap();
+        assert_eq!(p.len(), 172);
+        assert_eq!(p, e.init_params(3).unwrap());
+        assert_ne!(p, e.init_params(4).unwrap());
+    }
+
+    #[test]
+    fn training_descends() {
+        let v = tiny();
+        let e = NativeExecutor::new(v.clone());
+        let mut p = e.init_params(0).unwrap();
+        let (x, y, m) = batch(&v, 1);
+        let first = e.train_step(&p, &x, &y, &m, 0.1).unwrap().loss;
+        let mut last = first;
+        for _ in 0..50 {
+            let out = e.train_step(&p, &x, &y, &m, 0.1).unwrap();
+            p = out.params;
+            last = out.loss;
+        }
+        assert!(last < first * 0.5, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let v = tiny();
+        let e = NativeExecutor::new(v.clone());
+        let p = e.init_params(7).unwrap();
+        let (x, y, m) = batch(&v, 8);
+        let lr = 1.0f32; // update = -grad exactly
+        let out = e.train_step(&p, &x, &y, &m, lr).unwrap();
+        let grad: Vec<f32> = p.iter().zip(&out.params).map(|(a, b)| a - b).collect();
+        let loss_of = |pp: &[f32]| -> f32 {
+            let (s, _) = e.eval_batch(pp, &x, &y, &m).unwrap();
+            s / m.iter().sum::<f32>()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, 40, 100, 171] {
+            let mut pp = p.clone();
+            pp[idx] += eps;
+            let up = loss_of(&pp);
+            pp[idx] -= 2.0 * eps;
+            let dn = loss_of(&pp);
+            let num = (up - dn) / (2.0 * eps);
+            assert!(
+                (num - grad[idx]).abs() < 2e-2 + 0.1 * num.abs(),
+                "idx {idx}: analytic {} vs numeric {num}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn mask_zeroes_row_influence() {
+        let v = tiny();
+        let e = NativeExecutor::new(v.clone());
+        let p = e.init_params(9).unwrap();
+        let (mut x, y, _) = batch(&v, 10);
+        let mut mask = vec![1.0f32; v.batch];
+        mask[v.batch - 1] = 0.0;
+        let o1 = e.train_step(&p, &x, &y, &mask, 0.05).unwrap();
+        for i in 0..v.input_dim {
+            x[(v.batch - 1) * v.input_dim + i] = 1e3;
+        }
+        let o2 = e.train_step(&p, &x, &y, &mask, 0.05).unwrap();
+        assert_eq!(o1.loss, o2.loss);
+        assert_eq!(o1.params, o2.params);
+    }
+
+    #[test]
+    fn agg_combine_weighted_sum() {
+        let e = NativeExecutor::new(tiny());
+        let a = vec![1.0f32; 172];
+        let b = vec![2.0f32; 172];
+        let out = e.agg_combine(&[&a, &b], &[0.25, 0.5]).unwrap();
+        assert!(out.iter().all(|&v| (v - 1.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn agg_dev_distances() {
+        let e = NativeExecutor::new(tiny());
+        let f = vec![1.0f32; 172];
+        let s = vec![0.0f32; 172];
+        let out = e.agg_dev(&f, &[&s]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0] - 172.0).abs() < 1e-3); // ||1-0||^2 per dim
+        assert!((out[1] - 172.0).abs() < 1e-3); // ||f||^2
+    }
+}

@@ -1,0 +1,91 @@
+//! RELAY's Adaptive Participant Target (paper §4.1 "APT").
+//!
+//! The server keeps a moving-average estimate of round duration
+//! `mu_t = (1 - alpha) * D_{t-1} + alpha * mu_{t-1}` (alpha = 0.25 in the
+//! paper), probes each in-flight straggler for its expected remaining
+//! upload time RT_s, counts how many will land within the coming round
+//! (B_t = |{s : RT_s <= mu_t}|), and shrinks the selection target to
+//! N_t = max(1, N_0 - B_t) — incoming stale updates substitute for fresh
+//! participants, saving their resources.
+
+use crate::util::stats::Ema;
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveTarget {
+    /// Developer-set baseline target N_0.
+    pub n0: usize,
+    mu: Ema,
+    initialized: bool,
+}
+
+impl AdaptiveTarget {
+    pub fn new(n0: usize, alpha: f64, initial_mu: f64) -> Self {
+        let mut mu = Ema::new(alpha);
+        mu.update(initial_mu);
+        AdaptiveTarget { n0, mu, initialized: true }
+    }
+
+    /// Record the duration of the just-finished round.
+    pub fn observe_round(&mut self, duration: f64) {
+        self.mu.update(duration);
+    }
+
+    /// Current round-duration estimate mu_t.
+    pub fn mu(&self) -> f64 {
+        self.mu.value
+    }
+
+    /// The slot (mu_t, 2 mu_t) sent to learners at check-in (Algorithm 1).
+    pub fn slot(&self) -> (f64, f64) {
+        (self.mu(), 2.0 * self.mu())
+    }
+
+    /// N_t given the remaining times of current stragglers.
+    pub fn target(&self, straggler_remaining: &[f64]) -> usize {
+        let b_t = straggler_remaining
+            .iter()
+            .filter(|&&rt| rt <= self.mu())
+            .count();
+        self.n0.saturating_sub(b_t).max(1)
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_follows_paper_rule() {
+        let mut apt = AdaptiveTarget::new(10, 0.25, 100.0);
+        assert_eq!(apt.mu(), 100.0);
+        apt.observe_round(200.0);
+        // mu = 0.75*200 + 0.25*100 = 175
+        assert!((apt.mu() - 175.0).abs() < 1e-12);
+        assert_eq!(apt.slot(), (175.0, 350.0));
+    }
+
+    #[test]
+    fn target_shrinks_by_imminent_stragglers() {
+        let apt = AdaptiveTarget::new(10, 0.25, 100.0);
+        // 3 stragglers land within mu, 2 don't
+        let rts = [50.0, 99.0, 100.0, 150.0, 400.0];
+        assert_eq!(apt.target(&rts), 7);
+    }
+
+    #[test]
+    fn target_floors_at_one() {
+        let apt = AdaptiveTarget::new(2, 0.25, 100.0);
+        let rts = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(apt.target(&rts), 1);
+    }
+
+    #[test]
+    fn no_stragglers_keeps_n0() {
+        let apt = AdaptiveTarget::new(10, 0.25, 100.0);
+        assert_eq!(apt.target(&[]), 10);
+    }
+}

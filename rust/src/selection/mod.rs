@@ -1,0 +1,153 @@
+//! Participant-selection strategies (paper §2.2, §4.1):
+//!
+//! * [`random::RandomSelector`] — uniform sampling (FedAvg default),
+//! * [`oort::OortSelector`] — utility-guided selection with pacer
+//!   (Lai et al., OSDI'21), the paper's main baseline,
+//! * [`priority::PrioritySelector`] — RELAY's IPS (Algorithm 1):
+//!   least-available-first with tie shuffling,
+//! * [`safa::SafaSelector`] — SAFA's post-training selection (select all),
+//! * [`apt`] — RELAY's Adaptive Participant Target (N_t adjustment).
+
+pub mod apt;
+pub mod oort;
+pub mod priority;
+pub mod random;
+pub mod safa;
+
+use crate::util::rng::Rng;
+
+/// A checked-in learner visible to the selector this round.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub id: usize,
+    /// Learner-reported P(available during the next round's slot [mu, 2mu]).
+    /// 1.0 under AllAvail — which makes IPS degenerate to Random, exactly as
+    /// the paper notes (§5.2 "Stale Aggregation").
+    pub avail_prob: f64,
+    /// Expected task duration for this learner (profile-based estimate);
+    /// Oort's system-utility term uses this.
+    pub expected_duration: f64,
+}
+
+/// Everything a selector sees when picking participants.
+pub struct SelectionCtx<'a> {
+    pub round: usize,
+    pub now: f64,
+    /// Number of participants to pick (already APT/overcommit adjusted).
+    pub target: usize,
+    pub candidates: &'a [Candidate],
+    pub rng: &'a mut Rng,
+}
+
+/// Post-round feedback a selector may learn from (Oort does).
+pub struct RoundFeedback<'a> {
+    pub round: usize,
+    /// (learner, statistical utility, task duration) for participants whose
+    /// updates were received this round.
+    pub completed: &'a [(usize, f64, f64)],
+    /// Learners that were selected but produced nothing in time.
+    pub missed: &'a [usize],
+    pub round_duration: f64,
+}
+
+pub trait Selector: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick up to `ctx.target` participants from `ctx.candidates`.
+    fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize>;
+
+    /// Observe the round outcome (default: stateless).
+    fn feedback(&mut self, _fb: &RoundFeedback) {}
+}
+
+/// Construct a selector by name ("random" | "oort" | "priority" | "safa").
+pub fn by_name(name: &str) -> Option<Box<dyn Selector>> {
+    match name {
+        "random" => Some(Box::new(random::RandomSelector)),
+        "oort" => Some(Box::new(oort::OortSelector::default())),
+        "priority" => Some(Box::new(priority::PrioritySelector)),
+        "safa" => Some(Box::new(safa::SafaSelector)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn mk_candidates(n: usize) -> Vec<Candidate> {
+    (0..n)
+        .map(|i| Candidate {
+            id: i,
+            avail_prob: (i as f64) / (n as f64),
+            expected_duration: 10.0 + i as f64,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_constructs_all() {
+        for n in ["random", "oort", "priority", "safa"] {
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn all_selectors_respect_target_and_candidates() {
+        let candidates = mk_candidates(20);
+        for n in ["random", "oort", "priority"] {
+            let mut s = by_name(n).unwrap();
+            let mut rng = Rng::new(1);
+            let mut ctx = SelectionCtx {
+                round: 0,
+                now: 0.0,
+                target: 5,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            let picked = s.select(&mut ctx);
+            assert_eq!(picked.len(), 5, "{n}");
+            let mut d = picked.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 5, "{n}: duplicates");
+            assert!(picked.iter().all(|&p| p < 20), "{n}: unknown id");
+        }
+    }
+
+    #[test]
+    fn selectors_handle_fewer_candidates_than_target() {
+        let candidates = mk_candidates(3);
+        for n in ["random", "oort", "priority", "safa"] {
+            let mut s = by_name(n).unwrap();
+            let mut rng = Rng::new(2);
+            let mut ctx = SelectionCtx {
+                round: 1,
+                now: 0.0,
+                target: 10,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            let picked = s.select(&mut ctx);
+            assert_eq!(picked.len(), 3, "{n} should take all 3");
+        }
+    }
+
+    #[test]
+    fn selectors_handle_zero_candidates() {
+        for n in ["random", "oort", "priority", "safa"] {
+            let mut s = by_name(n).unwrap();
+            let mut rng = Rng::new(3);
+            let mut ctx = SelectionCtx {
+                round: 1,
+                now: 0.0,
+                target: 10,
+                candidates: &[],
+                rng: &mut rng,
+            };
+            assert!(s.select(&mut ctx).is_empty(), "{n}");
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Oort participant selection (Lai et al., OSDI'21) — the paper's main
+//! baseline (§2.2). Reimplemented from the Oort paper's description:
+//!
+//! * **statistical utility** of learner i: |B_i| * sqrt(mean of squared
+//!   per-step training losses) from its latest participation;
+//! * **system utility**: (T / t_i)^alpha penalty when the learner's task
+//!   duration t_i exceeds the developer-preferred round duration T;
+//! * **exploration/exploitation**: epsilon-greedy over never-explored
+//!   learners, with epsilon decaying per round;
+//! * **pacer**: when accumulated exploited utility stops improving, relax T
+//!   by a step (trading longer rounds for unexplored/slow learners).
+
+use std::collections::HashMap;
+
+use super::{RoundFeedback, SelectionCtx, Selector};
+
+#[derive(Clone, Copy, Debug)]
+pub struct OortConfig {
+    pub epsilon0: f64,
+    pub epsilon_decay: f64,
+    pub epsilon_min: f64,
+    /// System-utility exponent (Oort's alpha).
+    pub alpha: f64,
+    /// Initial preferred round duration T (seconds).
+    pub preferred_duration: f64,
+    /// Pacer window W (rounds) and step (seconds).
+    pub pacer_window: usize,
+    pub pacer_step: f64,
+}
+
+impl Default for OortConfig {
+    fn default() -> Self {
+        OortConfig {
+            epsilon0: 0.9,
+            epsilon_decay: 0.98,
+            epsilon_min: 0.2,
+            alpha: 2.0,
+            preferred_duration: 60.0,
+            pacer_window: 20,
+            pacer_step: 10.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct LearnerStats {
+    stat_util: f64,
+    duration: f64,
+    last_round: usize,
+}
+
+pub struct OortSelector {
+    cfg: OortConfig,
+    epsilon: f64,
+    explored: HashMap<usize, LearnerStats>,
+    /// Exploited utility accumulated in the current/previous pacer windows.
+    window_util: f64,
+    prev_window_util: f64,
+    rounds_in_window: usize,
+    preferred_duration: f64,
+}
+
+impl Default for OortSelector {
+    fn default() -> Self {
+        Self::new(OortConfig::default())
+    }
+}
+
+impl OortSelector {
+    pub fn new(cfg: OortConfig) -> Self {
+        OortSelector {
+            epsilon: cfg.epsilon0,
+            preferred_duration: cfg.preferred_duration,
+            cfg,
+            explored: HashMap::new(),
+            window_util: 0.0,
+            prev_window_util: 0.0,
+            rounds_in_window: 0,
+        }
+    }
+
+    /// Combined utility of an explored learner.
+    fn utility(&self, id: usize, expected_duration: f64) -> f64 {
+        let s = &self.explored[&id];
+        let stat = s.stat_util;
+        let dur = if s.duration > 0.0 { s.duration } else { expected_duration };
+        let sys = if dur > self.preferred_duration {
+            (self.preferred_duration / dur).powf(self.cfg.alpha)
+        } else {
+            1.0
+        };
+        stat * sys
+    }
+
+    pub fn current_preferred_duration(&self) -> f64 {
+        self.preferred_duration
+    }
+}
+
+impl Selector for OortSelector {
+    fn name(&self) -> &'static str {
+        "oort"
+    }
+
+    fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
+        let k = ctx.target.min(ctx.candidates.len());
+        let mut picked = Vec::with_capacity(k);
+
+        let (explored, unexplored): (Vec<&super::Candidate>, Vec<&super::Candidate>) = ctx
+            .candidates
+            .iter()
+            .partition(|c| self.explored.contains_key(&c.id));
+
+        // exploration: epsilon share from never-explored learners (random)
+        let n_explore = ((k as f64) * self.epsilon).round() as usize;
+        let n_explore = n_explore.min(unexplored.len());
+        for i in ctx.rng.choose_k(unexplored.len(), n_explore) {
+            picked.push(unexplored[i].id);
+        }
+
+        // exploitation: top utility among explored
+        let n_exploit = k - picked.len();
+        let mut ranked: Vec<(f64, usize)> = explored
+            .iter()
+            .map(|c| (self.utility(c.id, c.expected_duration), c.id))
+            .collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (u, id) in ranked.into_iter().take(n_exploit) {
+            self.window_util += u;
+            picked.push(id);
+        }
+
+        // backfill from unexplored if explored pool was too small
+        if picked.len() < k {
+            let already: std::collections::HashSet<usize> = picked.iter().copied().collect();
+            for c in unexplored {
+                if picked.len() >= k {
+                    break;
+                }
+                if !already.contains(&c.id) {
+                    picked.push(c.id);
+                }
+            }
+        }
+
+        self.epsilon = (self.epsilon * self.cfg.epsilon_decay).max(self.cfg.epsilon_min);
+        picked
+    }
+
+    fn feedback(&mut self, fb: &RoundFeedback) {
+        for &(id, stat_util, duration) in fb.completed {
+            let e = self.explored.entry(id).or_default();
+            e.stat_util = stat_util;
+            e.duration = duration;
+            e.last_round = fb.round;
+        }
+        // learners that missed the deadline get their utility dampened
+        for id in fb.missed {
+            if let Some(e) = self.explored.get_mut(id) {
+                e.stat_util *= 0.5;
+            }
+        }
+        // pacer: if exploited utility in this window dropped vs the
+        // previous one, allow longer rounds to reach new learners.
+        self.rounds_in_window += 1;
+        if self.rounds_in_window >= self.cfg.pacer_window {
+            if self.window_util < 0.95 * self.prev_window_util {
+                self.preferred_duration += self.cfg.pacer_step;
+            }
+            self.prev_window_util = self.window_util;
+            self.window_util = 0.0;
+            self.rounds_in_window = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::Candidate;
+    use crate::util::rng::Rng;
+
+    fn candidates(n: usize) -> Vec<Candidate> {
+        (0..n)
+            .map(|i| Candidate {
+                id: i,
+                avail_prob: 1.0,
+                // learner i is slower with larger i
+                expected_duration: 10.0 + 5.0 * i as f64,
+            })
+            .collect()
+    }
+
+    fn run_round(s: &mut OortSelector, cands: &[Candidate], round: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::new(seed);
+        let mut ctx = SelectionCtx {
+            round,
+            now: 0.0,
+            target: 5,
+            candidates: cands,
+            rng: &mut rng,
+        };
+        s.select(&mut ctx)
+    }
+
+    #[test]
+    fn explores_initially_exploits_later() {
+        let cands = candidates(40);
+        // low exploration so the exploitation behaviour is visible quickly
+        let mut s = OortSelector::new(OortConfig { epsilon0: 0.2, ..OortConfig::default() });
+        // round 0: nothing explored -> all picks are exploration/backfill
+        let picked0 = run_round(&mut s, &cands, 0, 1);
+        assert_eq!(picked0.len(), 5);
+
+        // feed back high utility for fast learners 0..5, low for others
+        for r in 0..50 {
+            let completed: Vec<(usize, f64, f64)> = (0..10)
+                .map(|id| {
+                    let util = if id < 5 { 100.0 } else { 1.0 };
+                    (id, util, 10.0 + 5.0 * id as f64)
+                })
+                .collect();
+            s.feedback(&RoundFeedback {
+                round: r,
+                completed: &completed,
+                missed: &[],
+                round_duration: 60.0,
+            });
+        }
+        // epsilon has decayed; exploitation should prefer ids 0..5
+        let mut hits = 0;
+        for r in 100..120 {
+            for id in run_round(&mut s, &cands, r, r as u64) {
+                if id < 5 {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits > 50, "oort should exploit high-utility fast learners, hits={hits}");
+    }
+
+    #[test]
+    fn system_utility_penalizes_slow_learners() {
+        let mut s = OortSelector::default();
+        s.explored.insert(1, LearnerStats { stat_util: 10.0, duration: 30.0, last_round: 0 });
+        s.explored.insert(2, LearnerStats { stat_util: 10.0, duration: 240.0, last_round: 0 });
+        let fast = s.utility(1, 30.0);
+        let slow = s.utility(2, 240.0);
+        assert!(fast > 3.0 * slow, "fast {fast} vs slow {slow}");
+    }
+
+    #[test]
+    fn pacer_relaxes_preferred_duration_on_utility_drop() {
+        let mut s = OortSelector::new(OortConfig {
+            pacer_window: 2,
+            ..OortConfig::default()
+        });
+        let t0 = s.current_preferred_duration();
+        // window 1: high exploited utility
+        s.window_util = 100.0;
+        for r in 0..2 {
+            s.feedback(&RoundFeedback {
+                round: r,
+                completed: &[],
+                missed: &[],
+                round_duration: 60.0,
+            });
+        }
+        // window 2: low utility -> pacer must step T up
+        s.window_util = 10.0;
+        for r in 2..4 {
+            s.feedback(&RoundFeedback {
+                round: r,
+                completed: &[],
+                missed: &[],
+                round_duration: 60.0,
+            });
+        }
+        assert!(s.current_preferred_duration() > t0);
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let cands = candidates(10);
+        let mut s = OortSelector::default();
+        for r in 0..500 {
+            run_round(&mut s, &cands, r, r as u64);
+        }
+        assert!((s.epsilon - s.cfg.epsilon_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missed_deadline_dampens_utility() {
+        let mut s = OortSelector::default();
+        s.explored.insert(7, LearnerStats { stat_util: 8.0, duration: 10.0, last_round: 0 });
+        s.feedback(&RoundFeedback {
+            round: 1,
+            completed: &[],
+            missed: &[7],
+            round_duration: 60.0,
+        });
+        assert!((s.explored[&7].stat_util - 4.0).abs() < 1e-12);
+    }
+}

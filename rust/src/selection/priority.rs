@@ -1,0 +1,108 @@
+//! RELAY's Intelligent Participant Selection — paper Algorithm 1.
+//!
+//! On check-in the server sends the learner the slot (mu_t, 2mu_t); the
+//! learner answers with its forecast availability probability for that slot
+//! (already materialized in `Candidate::avail_prob`). At the end of the
+//! selection window the server sorts ascending, randomly shuffles ties, and
+//! takes the top N_t — i.e. the *least available* learners are prioritized,
+//! maximizing coverage of limited-availability learners' data.
+
+use super::{SelectionCtx, Selector};
+
+pub struct PrioritySelector;
+
+impl Selector for PrioritySelector {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
+        let k = ctx.target.min(ctx.candidates.len());
+        // Shuffle first, then stable-sort by probability: equal-probability
+        // learners keep the shuffled order = Algorithm 1's random tie-break.
+        let mut order: Vec<usize> = (0..ctx.candidates.len()).collect();
+        ctx.rng.shuffle(&mut order);
+        order.sort_by(|&a, &b| {
+            ctx.candidates[a]
+                .avail_prob
+                .partial_cmp(&ctx.candidates[b].avail_prob)
+                .unwrap()
+        });
+        order.truncate(k);
+        order.into_iter().map(|i| ctx.candidates[i].id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::{mk_candidates, Candidate};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn picks_least_available() {
+        let candidates = mk_candidates(20); // avail_prob = i/20
+        let mut s = PrioritySelector;
+        let mut rng = Rng::new(1);
+        let mut ctx = SelectionCtx {
+            round: 0,
+            now: 0.0,
+            target: 4,
+            candidates: &candidates,
+            rng: &mut rng,
+        };
+        let mut picked = s.select(&mut ctx);
+        picked.sort_unstable();
+        assert_eq!(picked, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_are_shuffled_not_positional() {
+        // all-equal probabilities (the AllAvail case): selection must vary
+        // across rounds -> degenerates to random, as the paper notes.
+        let candidates: Vec<Candidate> = (0..30)
+            .map(|i| Candidate { id: i, avail_prob: 1.0, expected_duration: 1.0 })
+            .collect();
+        let mut s = PrioritySelector;
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for round in 0..40 {
+            let mut ctx = SelectionCtx {
+                round,
+                now: 0.0,
+                target: 5,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            seen.extend(s.select(&mut ctx));
+        }
+        assert!(seen.len() >= 25, "tie shuffle should spread selection, saw {}", seen.len());
+    }
+
+    #[test]
+    fn mixed_ties_resolved_within_level() {
+        // two low-prob learners + many ties at 0.9: the low two always
+        // selected, remainder drawn from the tie set
+        let mut candidates = vec![
+            Candidate { id: 100, avail_prob: 0.1, expected_duration: 1.0 },
+            Candidate { id: 101, avail_prob: 0.2, expected_duration: 1.0 },
+        ];
+        for i in 0..20 {
+            candidates.push(Candidate { id: i, avail_prob: 0.9, expected_duration: 1.0 });
+        }
+        let mut s = PrioritySelector;
+        let mut rng = Rng::new(3);
+        for round in 0..10 {
+            let mut ctx = SelectionCtx {
+                round,
+                now: 0.0,
+                target: 5,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            let picked = s.select(&mut ctx);
+            assert!(picked.contains(&100));
+            assert!(picked.contains(&101));
+        }
+    }
+}

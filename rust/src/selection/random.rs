@@ -1,0 +1,74 @@
+//! Uniform random participant selection — the FedAvg / Google-scale default
+//! (Bonawitz et al.) and the paper's "Random" baseline.
+
+use super::{SelectionCtx, Selector};
+
+pub struct RandomSelector;
+
+impl Selector for RandomSelector {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
+        let k = ctx.target.min(ctx.candidates.len());
+        ctx.rng
+            .choose_k(ctx.candidates.len(), k)
+            .into_iter()
+            .map(|i| ctx.candidates[i].id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::mk_candidates;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn covers_population_over_rounds() {
+        let candidates = mk_candidates(30);
+        let mut s = RandomSelector;
+        let mut rng = Rng::new(5);
+        let mut seen = std::collections::HashSet::new();
+        for round in 0..60 {
+            let mut ctx = SelectionCtx {
+                round,
+                now: 0.0,
+                target: 5,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            seen.extend(s.select(&mut ctx));
+        }
+        assert!(seen.len() >= 28, "random should cover population, saw {}", seen.len());
+    }
+
+    #[test]
+    fn unbiased_wrt_avail_prob() {
+        // random must NOT correlate with availability (that's priority's job)
+        let candidates = mk_candidates(100);
+        let mut s = RandomSelector;
+        let mut rng = Rng::new(6);
+        let mut low = 0usize;
+        let mut total = 0usize;
+        for round in 0..200 {
+            let mut ctx = SelectionCtx {
+                round,
+                now: 0.0,
+                target: 10,
+                candidates: &candidates,
+                rng: &mut rng,
+            };
+            for id in s.select(&mut ctx) {
+                total += 1;
+                if candidates[id].avail_prob < 0.5 {
+                    low += 1;
+                }
+            }
+        }
+        let frac = low as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.06, "low-avail fraction {frac}");
+    }
+}

@@ -1,0 +1,41 @@
+//! SAFA's "selection" (Wu et al., IEEE ToC'21): there is none before
+//! training — every available learner trains every round, and the round
+//! ends once a pre-set fraction report (post-training selection). The
+//! coordinator's SAFA protocol handles the fraction; this selector simply
+//! returns all checked-in learners.
+
+use super::{SelectionCtx, Selector};
+
+pub struct SafaSelector;
+
+impl Selector for SafaSelector {
+    fn name(&self) -> &'static str {
+        "safa"
+    }
+
+    fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
+        ctx.candidates.iter().map(|c| c.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::mk_candidates;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_everyone_regardless_of_target() {
+        let candidates = mk_candidates(50);
+        let mut s = SafaSelector;
+        let mut rng = Rng::new(1);
+        let mut ctx = SelectionCtx {
+            round: 0,
+            now: 0.0,
+            target: 5,
+            candidates: &candidates,
+            rng: &mut rng,
+        };
+        assert_eq!(s.select(&mut ctx).len(), 50);
+    }
+}

@@ -1,0 +1,197 @@
+//! Event-driven simulation core: the virtual clock, the availability view
+//! (AllAvail vs DynAvail over a trace), and a pending-delivery queue used
+//! for post-deadline (stale) update arrivals.
+//!
+//! The paper's testbed time-multiplexes simulated learners on GPUs; here
+//! *training math is real* (AOT HLO through PJRT) while *time* is simulated:
+//! completion times come from device profiles, availability from traces.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::trace::TraceSet;
+
+/// Virtual wall-clock (seconds since experiment start).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Clock {
+    pub now: f64,
+}
+
+impl Clock {
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "time cannot go backwards");
+        self.now += dt;
+    }
+}
+
+/// Availability dynamics (paper §3.3: AllAvail vs DynAvail).
+pub enum Availability {
+    /// Every learner is always available.
+    All,
+    /// Availability follows a charging trace.
+    Dynamic(TraceSet),
+}
+
+impl Availability {
+    pub fn parse(s: &str, trace: impl FnOnce() -> TraceSet) -> Option<Availability> {
+        match s {
+            "all" => Some(Availability::All),
+            "dyn" => Some(Availability::Dynamic(trace())),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Availability::All => "AllAvail",
+            Availability::Dynamic(_) => "DynAvail",
+        }
+    }
+
+    pub fn available(&self, learner: usize, t: f64) -> bool {
+        match self {
+            Availability::All => true,
+            Availability::Dynamic(tr) => tr.available(learner, t),
+        }
+    }
+
+    /// Available for the whole interval [t, t+dur]?
+    pub fn available_through(&self, learner: usize, t: f64, dur: f64) -> bool {
+        match self {
+            Availability::All => true,
+            Availability::Dynamic(tr) => tr.available_through(learner, t, dur),
+        }
+    }
+
+    pub fn trace(&self) -> Option<&TraceSet> {
+        match self {
+            Availability::All => None,
+            Availability::Dynamic(tr) => Some(tr),
+        }
+    }
+}
+
+/// A scheduled future delivery (straggler upload finishing after its round).
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub deliver_at: f64,
+    pub item: T,
+}
+
+impl<T> PartialEq for Pending<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.deliver_at == other.deliver_at
+    }
+}
+impl<T> Eq for Pending<T> {}
+impl<T> PartialOrd for Pending<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Pending<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on deliver_at
+        other
+            .deliver_at
+            .partial_cmp(&self.deliver_at)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap of future deliveries.
+pub struct DeliveryQueue<T> {
+    heap: BinaryHeap<Pending<T>>,
+}
+
+impl<T> Default for DeliveryQueue<T> {
+    fn default() -> Self {
+        DeliveryQueue { heap: BinaryHeap::new() }
+    }
+}
+
+impl<T> DeliveryQueue<T> {
+    pub fn push(&mut self, deliver_at: f64, item: T) {
+        self.heap.push(Pending { deliver_at, item });
+    }
+
+    /// Pop every item due at or before `t`, in delivery order.
+    pub fn due(&mut self, t: f64) -> Vec<Pending<T>> {
+        let mut out = Vec::new();
+        while let Some(top) = self.heap.peek() {
+            if top.deliver_at <= t {
+                out.push(self.heap.pop().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Iterate items still pending (e.g. APT's straggler probe).
+    pub fn iter(&self) -> impl Iterator<Item = &Pending<T>> {
+        self.heap.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = Clock::default();
+        c.advance(5.0);
+        c.advance(2.5);
+        assert_eq!(c.now, 7.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "time cannot go backwards")]
+    #[cfg(debug_assertions)]
+    fn clock_rejects_negative() {
+        Clock::default().advance(-1.0);
+    }
+
+    #[test]
+    fn all_avail_always_true() {
+        let a = Availability::All;
+        assert!(a.available(0, 0.0));
+        assert!(a.available_through(99, 1e6, 1e6));
+        assert_eq!(a.label(), "AllAvail");
+    }
+
+    #[test]
+    fn dynamic_follows_trace() {
+        let tr = TraceSet::generate(5, 1, TraceConfig::default());
+        let (s, e) = tr.sessions[0][0];
+        let a = Availability::Dynamic(tr);
+        assert!(a.available(0, (s + e) / 2.0));
+        assert_eq!(a.label(), "DynAvail");
+    }
+
+    #[test]
+    fn delivery_queue_orders_by_time() {
+        let mut q = DeliveryQueue::default();
+        q.push(10.0, "c");
+        q.push(1.0, "a");
+        q.push(5.0, "b");
+        assert_eq!(q.len(), 3);
+        let due = q.due(6.0);
+        let items: Vec<&str> = due.iter().map(|p| p.item).collect();
+        assert_eq!(items, vec!["a", "b"]);
+        assert_eq!(q.len(), 1);
+        assert!(q.due(9.0).is_empty());
+        assert_eq!(q.due(10.0)[0].item, "c");
+        assert!(q.is_empty());
+    }
+}

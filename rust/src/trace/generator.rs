@@ -1,0 +1,399 @@
+//! Synthetic diurnal availability traces + replay queries + trace file IO.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{DAY, WEEK};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Generation knobs. Defaults reproduce the Yang et al. marginals the paper
+/// reports (70% of sessions < 10 min, median ~5 min, night-time peak).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Median charging-session length (seconds).
+    pub median_session: f64,
+    /// Lognormal sigma of session length.
+    pub session_sigma: f64,
+    /// Fraction of sessions that are long "overnight" charges.
+    pub overnight_frac: f64,
+    /// Mean gap between sessions at the *diurnal peak* (seconds).
+    pub peak_gap: f64,
+    /// Ratio of off-peak to peak session rate (>= 1; larger = stronger cycle).
+    pub diurnal_strength: f64,
+    /// Stddev (seconds) of each device's personal night-peak phase around
+    /// the common ~2am peak. Small = strong aggregate diurnality (Fig. 14a).
+    pub phase_jitter: f64,
+    /// If set, each device also charges in a near-deterministic nightly
+    /// block: (mean duration secs, start jitter secs). Models the "plugged
+    /// in overnight" users that dominate the Stunner forecast experiment.
+    pub nightly_block: Option<(f64, f64)>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            median_session: 300.0,  // 5 minutes
+            session_sigma: 1.1,     // P(< 600s) ~ 0.74
+            overnight_frac: 0.12,
+            peak_gap: 3_600.0,      // ~1 charge/h at night
+            diurnal_strength: 5.0,  // daytime gaps ~5x longer
+            phase_jitter: 3.0 * 3600.0,
+            nightly_block: None,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// "Regular charger" population: the kind of heavily-observed,
+    /// strongly-periodic devices the paper's 5.2 forecast experiment
+    /// selects from the Stunner trace (>= 1000 samples, nightly charging).
+    pub fn regular() -> Self {
+        TraceConfig {
+            median_session: 900.0,
+            session_sigma: 0.8,
+            overnight_frac: 0.0,
+            peak_gap: 16.0 * 3600.0, // only occasional daytime top-ups
+            diurnal_strength: 2.0,
+            phase_jitter: 1800.0,
+            nightly_block: Some((5.0 * 3600.0, 300.0)),
+        }
+    }
+}
+
+/// Per-learner week-long charging sessions, wrap-around replay.
+pub struct TraceSet {
+    /// sessions[l] = sorted, non-overlapping (start, end) within [0, WEEK).
+    pub sessions: Vec<Vec<(f64, f64)>>,
+    pub config: TraceConfig,
+}
+
+impl TraceSet {
+    /// Generate traces for `n` learners, deterministic per seed.
+    pub fn generate(n: usize, seed: u64, config: TraceConfig) -> TraceSet {
+        let root = Rng::new(seed ^ 0x7EAC_E5E7);
+        let mut sessions = Vec::with_capacity(n);
+        for l in 0..n {
+            let mut rng = root.stream(l as u64);
+            // Device-local night peak: common ~2am peak with per-device
+            // jitter (timezones, habits) -> pronounced aggregate diurnal
+            // cycle like the paper's Fig. 14a.
+            let phase = (2.0 * 3600.0 + rng.normal() * config.phase_jitter).rem_euclid(DAY);
+            let mut s = Vec::new();
+            // near-deterministic nightly charging block (regular devices)
+            if let Some((dur_mean, jitter)) = config.nightly_block {
+                let start_of_day = (phase - dur_mean / 2.0).rem_euclid(DAY);
+                for day in 0..7 {
+                    let start =
+                        (day as f64 * DAY + start_of_day + rng.normal() * jitter).max(0.0);
+                    let dur = (dur_mean + rng.normal() * jitter).max(1800.0);
+                    let end = (start + dur).min(WEEK);
+                    if start < WEEK {
+                        s.push((start, end));
+                    }
+                }
+            }
+            let mut t = rng.uniform(0.0, config.peak_gap);
+            while t < WEEK {
+                // diurnal gap modulation: cosine bump, peak at `phase`
+                let day_pos = (t - phase).rem_euclid(DAY) / DAY; // 0 at peak
+                let cycle = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * day_pos).cos());
+                let gap_scale = 1.0 + (config.diurnal_strength - 1.0) * cycle;
+                let dur = if rng.bool(config.overnight_frac) {
+                    // overnight charge: hours-long
+                    rng.lognormal((4.0 * 3600.0f64).ln(), 0.5)
+                } else {
+                    rng.lognormal(config.median_session.ln(), config.session_sigma)
+                };
+                let dur = dur.clamp(20.0, 12.0 * 3600.0);
+                let end = (t + dur).min(WEEK);
+                s.push((t, end));
+                let gap = rng.exponential(1.0 / (config.peak_gap * gap_scale));
+                t = end + gap.max(30.0);
+            }
+            // sort + merge overlaps (nightly block vs random sessions)
+            s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(s.len());
+            for (a, b) in s {
+                match merged.last_mut() {
+                    Some(last) if a <= last.1 => last.1 = last.1.max(b),
+                    _ => merged.push((a, b)),
+                }
+            }
+            sessions.push(merged);
+        }
+        TraceSet { sessions, config }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Wrap absolute time into the one-week trace window.
+    #[inline]
+    fn wrap(t: f64) -> f64 {
+        t.rem_euclid(WEEK)
+    }
+
+    /// Session containing wrapped time `tw`, if any.
+    fn session_at(&self, learner: usize, tw: f64) -> Option<(f64, f64)> {
+        let s = &self.sessions[learner];
+        let idx = s.partition_point(|&(start, _)| start <= tw);
+        if idx == 0 {
+            return None;
+        }
+        let (start, end) = s[idx - 1];
+        (tw < end).then_some((start, end))
+    }
+
+    /// Is the learner available (charging) at absolute time `t`?
+    pub fn available(&self, learner: usize, t: f64) -> bool {
+        self.session_at(learner, Self::wrap(t)).is_some()
+    }
+
+    /// Is the learner available for the whole interval [t, t+dur]?
+    /// (Used to decide whether a participant completes training or drops.)
+    pub fn available_through(&self, learner: usize, t: f64, dur: f64) -> bool {
+        // Conservative: the session containing t must extend past t+dur
+        // (crossing the week boundary is handled by re-querying).
+        let tw = Self::wrap(t);
+        match self.session_at(learner, tw) {
+            None => false,
+            Some((_, end)) => {
+                if tw + dur <= end {
+                    true
+                } else if end >= WEEK - 1e-9 {
+                    // session clipped at week end: continue into next cycle
+                    self.available_through(learner, 0.0, dur - (end - tw))
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Empirical probability the learner is available throughout
+    /// [t+a, t+b] given ground truth (used by the ORACLE availability
+    /// baseline and tests; learners themselves use `forecast`).
+    pub fn true_slot_availability(&self, learner: usize, a: f64, b: f64) -> f64 {
+        let steps = 16;
+        let mut avail = 0usize;
+        for i in 0..steps {
+            let t = a + (b - a) * (i as f64 + 0.5) / steps as f64;
+            if self.available(learner, t) {
+                avail += 1;
+            }
+        }
+        avail as f64 / steps as f64
+    }
+
+    /// All session lengths (seconds), for Fig. 14b.
+    pub fn session_lengths(&self) -> Vec<f64> {
+        self.sessions
+            .iter()
+            .flat_map(|s| s.iter().map(|&(a, b)| b - a))
+            .collect()
+    }
+
+    /// Number of available learners at each bin over one week (Fig. 14a).
+    pub fn availability_timeline(&self, bin: f64) -> Vec<usize> {
+        let bins = (WEEK / bin).ceil() as usize;
+        let mut counts = vec![0usize; bins];
+        for l in 0..self.len() {
+            for &(a, b) in &self.sessions[l] {
+                let first = (a / bin) as usize;
+                let last = ((b / bin) as usize).min(bins - 1);
+                for c in counts.iter_mut().take(last + 1).skip(first) {
+                    *c += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Sampled 0/1 availability series for one learner (forecaster input).
+    pub fn sample_series(&self, learner: usize, step: f64) -> Vec<f64> {
+        let n = (WEEK / step) as usize;
+        (0..n)
+            .map(|i| {
+                if self.available(learner, i as f64 * step) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    // ---- file IO (replayable trace artifacts) ---------------------------
+
+    pub fn to_json(&self) -> Json {
+        arr(self.sessions.iter().map(|s| {
+            arr(s.iter().flat_map(|&(a, b)| [num(a), num(b)]).collect::<Vec<_>>())
+        }))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let j = obj(vec![("format", Json::Str("relay-trace-v1".into())), ("sessions", self.to_json())]);
+        std::fs::write(path.as_ref(), j.to_string())
+            .with_context(|| format!("writing trace {:?}", path.as_ref()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TraceSet> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading trace {:?}", path.as_ref()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("relay-trace-v1") {
+            return Err(anyhow!("not a relay trace file"));
+        }
+        let mut sessions = Vec::new();
+        for learner in j.get("sessions").and_then(|s| s.as_arr()).unwrap_or(&[]) {
+            let flat = learner.as_arr().ok_or_else(|| anyhow!("bad sessions row"))?;
+            let mut s = Vec::with_capacity(flat.len() / 2);
+            for pair in flat.chunks(2) {
+                let a = pair[0].as_f64().ok_or_else(|| anyhow!("bad number"))?;
+                let b = pair
+                    .get(1)
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| anyhow!("odd session list"))?;
+                s.push((a, b));
+            }
+            sessions.push(s);
+        }
+        Ok(TraceSet { sessions, config: TraceConfig::default() })
+    }
+}
+
+/// Fig. 14b summary: fraction of sessions below each duration checkpoint.
+pub fn session_cdf_checkpoints(trace: &TraceSet) -> Vec<(f64, f64)> {
+    let lens = trace.session_lengths();
+    [60.0, 300.0, 600.0, 1800.0, 3600.0, 6.0 * 3600.0]
+        .iter()
+        .map(|&p| (p, stats::ecdf(&lens, &[p])[0]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TraceSet {
+        TraceSet::generate(300, 11, TraceConfig::default())
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TraceSet::generate(10, 4, TraceConfig::default());
+        let b = TraceSet::generate(10, 4, TraceConfig::default());
+        assert_eq!(a.sessions, b.sessions);
+    }
+
+    #[test]
+    fn sessions_sorted_non_overlapping() {
+        let t = small();
+        for s in &t.sessions {
+            for w in s.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlap: {:?}", w);
+            }
+            for &(a, b) in s {
+                assert!(a < b && b <= WEEK + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn session_length_marginals_match_paper() {
+        let t = small();
+        let lens = t.session_lengths();
+        assert!(lens.len() > 1000, "need enough sessions, got {}", lens.len());
+        let under_10min = stats::ecdf(&lens, &[600.0])[0];
+        let under_5min = stats::ecdf(&lens, &[300.0])[0];
+        // paper: ~70% < 10 min; ~50% >= 5 min
+        assert!((0.55..=0.85).contains(&under_10min), "P(<10min)={under_10min}");
+        assert!((0.30..=0.60).contains(&under_5min), "P(<5min)={under_5min}");
+    }
+
+    #[test]
+    fn diurnal_cycle_visible() {
+        let t = small();
+        let timeline = t.availability_timeline(1800.0);
+        // aggregate over 7 days into 48 half-hour-of-day bins
+        let per_day: Vec<f64> = (0..48)
+            .map(|b| {
+                (0..7).map(|d| timeline[d * 48 + b] as f64).sum::<f64>() / 7.0
+            })
+            .collect();
+        let max = per_day.iter().cloned().fold(0.0, f64::max);
+        let min = per_day.iter().cloned().fold(f64::INFINITY, f64::min);
+        // per-device phases are uniform, so the aggregate cycle is muted but
+        // availability must vary over the day
+        assert!(max > 0.0);
+        assert!(min < max, "no variation: {per_day:?}");
+    }
+
+    #[test]
+    fn available_matches_sessions() {
+        let t = small();
+        let (a, b) = t.sessions[0][0];
+        assert!(t.available(0, (a + b) / 2.0));
+        assert!(!t.available(0, b + 1.0) || t.session_at(0, b + 1.0).is_some());
+    }
+
+    #[test]
+    fn wraps_cyclically() {
+        let t = small();
+        let (a, b) = t.sessions[5][0];
+        let mid = (a + b) / 2.0;
+        assert!(t.available(5, mid + WEEK));
+        assert!(t.available(5, mid + 3.0 * WEEK));
+    }
+
+    #[test]
+    fn available_through_checks_whole_interval() {
+        let t = small();
+        let (a, b) = t.sessions[2][0];
+        assert!(t.available_through(2, a + 1.0, (b - a) / 2.0));
+        assert!(!t.available_through(2, a + 1.0, (b - a) + 10_000.0));
+        assert!(!t.available_through(2, b + 1e-6, 10.0) || t.available(2, b + 1e-6));
+    }
+
+    #[test]
+    fn true_slot_availability_bounds() {
+        let t = small();
+        for l in 0..5 {
+            let p = t.true_slot_availability(l, 100.0, 400.0);
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = TraceSet::generate(5, 8, TraceConfig::default());
+        let path = std::env::temp_dir().join("relay_trace_test.json");
+        t.save(&path).unwrap();
+        let l = TraceSet::load(&path).unwrap();
+        assert_eq!(t.sessions.len(), l.sessions.len());
+        for (a, b) in t.sessions.iter().zip(&l.sessions) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x.0 - y.0).abs() < 1e-9 && (x.1 - y.1).abs() < 1e-9);
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn sample_series_binary() {
+        let t = small();
+        let s = t.sample_series(0, 600.0);
+        assert_eq!(s.len(), (WEEK / 600.0) as usize);
+        assert!(s.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(s.iter().sum::<f64>() > 0.0);
+    }
+}

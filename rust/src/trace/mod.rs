@@ -1,0 +1,21 @@
+//! Availability-trace substrate, substituting the 136k-user week-long
+//! behaviour trace of Yang et al. that the paper replays (§5.1, §C).
+//!
+//! A learner is *available* while "connected to a charger" (the paper's
+//! definition). The generator reproduces the trace's published marginals:
+//!
+//! * **diurnal cycle** (Fig. 14a): charging sessions concentrate at night in
+//!   each device's local timezone;
+//! * **long-tail session lengths** (Fig. 14b): ~70% of sessions are shorter
+//!   than 10 minutes, median ≈ 5 minutes (lognormal body + heavy tail for
+//!   overnight charging).
+//!
+//! Traces span one week and wrap cyclically for longer experiments; they can
+//! be saved/loaded as JSON for replay.
+
+pub mod generator;
+
+pub use generator::{TraceConfig, TraceSet};
+
+pub const DAY: f64 = 86_400.0;
+pub const WEEK: f64 = 7.0 * DAY;

@@ -1,0 +1,100 @@
+//! Micro/macro-benchmark substrate (criterion is unavailable offline):
+//! warm-up, automatic iteration calibration to a time budget, and
+//! median/p95 reporting. Used by `cargo bench` (`rust/benches/`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the per-sample iteration count so the
+/// whole run fits in roughly `budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warm-up + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let total_ns = budget.as_nanos() as f64;
+    let samples = 16usize;
+    let per_sample = ((total_ns / once / samples as f64).floor() as usize).clamp(1, 1_000_000);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: per_sample * samples,
+        mean_ns: mean,
+        median_ns: times[times.len() / 2],
+        p95_ns: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min_ns: times[0],
+    }
+}
+
+/// Run + print a bench with the default 1.5 s budget.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(1500), f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("sleep1ms", Duration::from_millis(100), || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(r.median_ns > 0.8e6, "median {}", r.median_ns);
+        assert!(r.iters >= 16);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

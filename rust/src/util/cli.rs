@@ -1,0 +1,114 @@
+//! CLI argument substrate (clap is unavailable offline): positional
+//! subcommand + `--flag value` / `--flag` options with typed accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse, treating the first non-flag token as the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--k=v`, `--k v`, or bare `--k`
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.str_opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.str_opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.str_opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.str_opt(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("figure 6 extra");
+        assert_eq!(a.command.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["6", "extra"]);
+    }
+
+    #[test]
+    fn flag_forms() {
+        let a = parse("run --rounds 50 --mode=dl --verbose --seed 7");
+        assert_eq!(a.usize_or("rounds", 0), 50);
+        assert_eq!(a.str_or("mode", ""), "dl");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn flag_before_command() {
+        let a = parse("--config x.json run");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.str_opt("config"), Some("x.json"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        parse("run --rounds abc").usize_or("rounds", 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational substrates built from scratch for the offline environment:
+//! RNG, JSON, statistics, property testing, CLI parsing, thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

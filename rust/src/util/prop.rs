@@ -1,0 +1,93 @@
+//! Property-testing substrate (proptest is unavailable offline): a small
+//! runner that draws cases from `Rng`, checks an invariant, and on failure
+//! reports the seed + case index so the exact case replays deterministically.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(200, 0xFEED, |rng| {
+//!     let n = rng.range(1, 100);
+//!     let v = some_op(n);
+//!     prop_assert(v >= n, format!("v={v} n={n}"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `f`; panic with the replay seed on failure.
+pub fn prop_check<F>(cases: usize, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.stream(case as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed at case {case} (replay: seed={seed:#x}, stream={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case (use the stream index from the panic).
+pub fn prop_replay<F>(seed: u64, case: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed).stream(case as u64);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed failure (seed={seed:#x}, stream={case}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(50, 1, |rng| {
+            count += 1;
+            let a = rng.f64();
+            prop_assert((0.0..1.0).contains(&a), "f64 out of range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        prop_check(50, 2, |rng| {
+            let n = rng.range(0, 10);
+            prop_assert(n < 9, format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first: Option<f64> = None;
+        prop_replay(3, 7, |rng| {
+            let v = rng.f64();
+            match first {
+                None => first = Some(v),
+                Some(f) => assert_eq!(f, v),
+            }
+            Ok(())
+        });
+        prop_replay(3, 7, |rng| {
+            assert_eq!(first.unwrap(), rng.f64());
+            Ok(())
+        });
+    }
+}

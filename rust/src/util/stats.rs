@@ -1,0 +1,260 @@
+//! Statistics substrate: running means, percentiles, CDFs, EMA, linear
+//! regression + R^2 (used by the availability forecaster evaluation and the
+//! figure harness), and k-means (device-profile clustering, Fig. 13b).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance; 0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Empirical CDF evaluated at `points`: fraction of xs <= point.
+pub fn ecdf(xs: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|p| {
+            let idx = v.partition_point(|x| x <= p);
+            idx as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Exponential moving average with smoothing `alpha` in (0, 1]:
+/// new = (1 - alpha) * sample + alpha * old  (paper 4.1 APT convention:
+/// mu_t = (1-alpha) D_{t-1} + alpha mu_{t-1}).
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: f64,
+    primed: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: 0.0, primed: false }
+    }
+
+    pub fn update(&mut self, sample: f64) -> f64 {
+        self.value = if self.primed {
+            (1.0 - self.alpha) * sample + self.alpha * self.value
+        } else {
+            self.primed = true;
+            sample
+        };
+        self.value
+    }
+}
+
+/// Ordinary least squares y = a + b x. Returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for i in 0..x.len() {
+        sxy += (x[i] - mx) * (y[i] - my);
+        sxx += (x[i] - mx) * (x[i] - mx);
+    }
+    let b = if sxx.abs() < 1e-12 { 0.0 } else { sxy / sxx };
+    let _ = n;
+    (my - b * mx, b)
+}
+
+/// Coefficient of determination of predictions vs ground truth.
+pub fn r_squared(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let m = mean(truth);
+    let ss_tot: f64 = truth.iter().map(|t| (t - m).powi(2)).sum();
+    let ss_res: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p).powi(2))
+        .sum();
+    if ss_tot.abs() < 1e-12 {
+        if ss_res.abs() < 1e-12 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+pub fn mse(truth: &[f64], pred: &[f64]) -> f64 {
+    mean(&truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p).powi(2))
+        .collect::<Vec<_>>())
+}
+
+pub fn mae(truth: &[f64], pred: &[f64]) -> f64 {
+    mean(&truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p).abs())
+        .collect::<Vec<_>>())
+}
+
+/// 1-D k-means (Lloyd's) used to cluster device speeds (paper Fig. 13b).
+/// Returns (centroids sorted ascending, assignment per point).
+pub fn kmeans_1d(xs: &[f64], k: usize, iters: usize, seed: u64) -> (Vec<f64>, Vec<usize>) {
+    assert!(k >= 1);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut centroids: Vec<f64> = (0..k).map(|_| xs[rng.below(xs.len())]).collect();
+    let mut assign = vec![0usize; xs.len()];
+    for _ in 0..iters {
+        for (i, x) in xs.iter().enumerate() {
+            assign[i] = centroids
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (x - *a).abs().partial_cmp(&(x - *b).abs()).unwrap()
+                })
+                .map(|(j, _)| j)
+                .unwrap();
+        }
+        for j in 0..k {
+            let members: Vec<f64> = xs
+                .iter()
+                .zip(&assign)
+                .filter(|(_, a)| **a == j)
+                .map(|(x, _)| *x)
+                .collect();
+            if !members.is_empty() {
+                centroids[j] = mean(&members);
+            }
+        }
+    }
+    // sort centroids and remap assignments
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    let mut rank = vec![0usize; k];
+    for (r, &j) in order.iter().enumerate() {
+        rank[j] = r;
+    }
+    let sorted: Vec<f64> = order.iter().map(|&j| centroids[j]).collect();
+    for a in &mut assign {
+        *a = rank[*a];
+    }
+    (sorted, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(variance(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let xs = [1.0, 2.0, 2.0, 5.0];
+        let c = ecdf(&xs, &[0.0, 1.0, 2.0, 5.0, 9.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.75, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn ema_matches_paper_rule() {
+        // mu_t = (1-alpha) D_{t-1} + alpha mu_{t-1}, alpha = 0.25
+        let mut e = Ema::new(0.25);
+        assert_eq!(e.update(100.0), 100.0); // primes
+        let v = e.update(200.0);
+        assert!((v - (0.75 * 200.0 + 0.25 * 100.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let (a, b) = linreg(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let t = [1.0, 2.0, 3.0];
+        assert!((r_squared(&t, &t) - 1.0).abs() < 1e-12);
+        let m = [2.0, 2.0, 2.0];
+        assert!(r_squared(&t, &m).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_mae() {
+        let t = [1.0, 2.0];
+        let p = [2.0, 0.0];
+        assert!((mse(&t, &p) - 2.5).abs() < 1e-12);
+        assert!((mae(&t, &p) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kmeans_separates_clusters() {
+        let mut xs = vec![];
+        for i in 0..50 {
+            xs.push(1.0 + (i % 5) as f64 * 0.01);
+            xs.push(10.0 + (i % 5) as f64 * 0.01);
+        }
+        let (c, assign) = kmeans_1d(&xs, 2, 20, 3);
+        assert!((c[0] - 1.02).abs() < 0.1, "{c:?}");
+        assert!((c[1] - 10.02).abs() < 0.1, "{c:?}");
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(assign[i], if *x < 5.0 { 0 } else { 1 });
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Scoped worker-pool substrate (tokio is unavailable offline; the
+//! coordinator is round-synchronous so a work-stealing-free pool suffices).
+//! Used to execute the per-participant local-training closures of one round
+//! in parallel, mirroring the paper's time-multiplexed simulated learners.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` closures on up to `workers` threads; return results in the
+/// original job order.
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<_>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, f)) => {
+                        let r = f();
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("worker died")).collect()
+    })
+}
+
+/// Number of worker threads to use by default.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..64)
+            .map(|i| move || i * 2)
+            .collect();
+        let out = run_parallel(8, jobs);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        assert_eq!(run_parallel(1, jobs), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(run_parallel(4, jobs).is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..16)
+            .map(|_| {
+                let peak = &peak;
+                let live = &live;
+                move || {
+                    let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(l, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        run_parallel(4, jobs);
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+}

@@ -1,0 +1,227 @@
+//! Property-style integration tests over the coordinator: randomized
+//! configurations must preserve the accounting and protocol invariants
+//! regardless of selector/mode/availability combination. Uses the in-house
+//! property runner (`relay::util::prop`) since proptest is unavailable
+//! offline (DESIGN.md §2).
+
+use std::sync::Arc;
+
+use relay::aggregation::scaling::ScalingRule;
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::data::partition::{LabelSkew, PartitionScheme};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::util::prop::{prop_assert, prop_check, PropResult};
+use relay::util::rng::Rng;
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// Draw a random-but-valid experiment configuration.
+fn random_cfg(rng: &mut Rng) -> ExpConfig {
+    let selectors = ["random", "oort", "priority", "safa"];
+    let partitions = [
+        PartitionScheme::UniformIid,
+        PartitionScheme::FedScale,
+        PartitionScheme::LabelLimited { labels: 2, skew: LabelSkew::Uniform },
+        PartitionScheme::LabelLimited { labels: 2, skew: LabelSkew::Zipf },
+        PartitionScheme::LabelLimited { labels: 2, skew: LabelSkew::Balanced },
+    ];
+    let mut c = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: rng.range(5, 40),
+        rounds: rng.range(3, 10),
+        target_participants: rng.range(1, 8),
+        mean_samples: rng.range(6, 30),
+        test_per_class: 4,
+        eval_every: rng.range(1, 5),
+        lr: 0.05,
+        selector: selectors[rng.below(selectors.len())].into(),
+        partition: partitions[rng.below(partitions.len())],
+        use_saa: rng.bool(0.5),
+        staleness_threshold: if rng.bool(0.5) { Some(rng.range(0, 6)) } else { None },
+        apt: rng.bool(0.3),
+        oracle: rng.bool(0.2),
+        scaling: [
+            ScalingRule::Equal,
+            ScalingRule::DynSgd,
+            ScalingRule::AdaSgd,
+            ScalingRule::Relay { beta: 0.35 },
+        ][rng.below(4)],
+        avail: if rng.bool(0.5) { AvailMode::AllAvail } else { AvailMode::DynAvail },
+        mode: if rng.bool(0.5) {
+            RoundMode::OverCommit { factor: 1.0 + rng.f64() * 0.5 }
+        } else {
+            RoundMode::Deadline { deadline: 10.0 + rng.f64() * 200.0 }
+        },
+        seed: rng.next_u64() % 10_000,
+        ..Default::default()
+    };
+    // oracle only meaningful with SAA + threshold
+    if c.oracle {
+        c.use_saa = true;
+        c.staleness_threshold = Some(c.staleness_threshold.unwrap_or(3));
+    }
+    c
+}
+
+fn check_invariants(cfg: &ExpConfig) -> PropResult {
+    let r = run_experiment(cfg.clone(), exec()).map_err(|e| format!("run failed: {e:#}"))?;
+    prop_assert(r.rounds.len() == cfg.rounds, "missing round records")?;
+
+    let mut prev_time = 0.0;
+    let mut prev_res = 0.0;
+    let mut prev_waste = 0.0;
+    for rec in &r.rounds {
+        prop_assert(
+            rec.sim_time >= prev_time,
+            format!("time went backwards at round {}", rec.round),
+        )?;
+        prop_assert(
+            rec.cum_resource_secs >= prev_res - 1e-9,
+            format!("resources decreased at round {}", rec.round),
+        )?;
+        prop_assert(
+            rec.cum_waste_secs >= prev_waste - 1e-9,
+            format!("waste decreased at round {}", rec.round),
+        )?;
+        prop_assert(
+            rec.cum_waste_secs <= rec.cum_resource_secs + 1e-6,
+            format!(
+                "waste {} exceeds resources {} at round {}",
+                rec.cum_waste_secs, rec.cum_resource_secs, rec.round
+            ),
+        )?;
+        prop_assert(
+            rec.round_duration >= 0.0,
+            format!("negative duration at round {}", rec.round),
+        )?;
+        if let RoundMode::Deadline { deadline } = cfg.mode {
+            prop_assert(
+                rec.round_duration <= deadline + 1e-6,
+                format!("round {} exceeded deadline", rec.round),
+            )?;
+        }
+        prop_assert(
+            rec.unique_participants <= cfg.total_learners,
+            "unique participants exceed population",
+        )?;
+        prop_assert(
+            rec.fresh_updates + rec.selected >= rec.fresh_updates,
+            "fresh exceeds selected",
+        )?;
+        if let Some(acc) = rec.test_accuracy {
+            prop_assert((0.0..=1.0).contains(&acc), format!("accuracy {acc} out of range"))?;
+        }
+        prev_time = rec.sim_time;
+        prev_res = rec.cum_resource_secs;
+        prev_waste = rec.cum_waste_secs;
+    }
+    Ok(())
+}
+
+#[test]
+fn accounting_invariants_hold_for_random_configs() {
+    prop_check(40, 0xEEF1, |rng| {
+        let cfg = random_cfg(rng);
+        check_invariants(&cfg)
+    });
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    prop_check(8, 0xDE7E, |rng| {
+        let cfg = random_cfg(rng);
+        let a = run_experiment(cfg.clone(), exec()).map_err(|e| e.to_string())?;
+        let b = run_experiment(cfg.clone(), exec()).map_err(|e| e.to_string())?;
+        prop_assert(
+            a.final_accuracy() == b.final_accuracy()
+                && a.rounds.last().map(|r| r.cum_resource_secs)
+                    == b.rounds.last().map(|r| r.cum_resource_secs),
+            "same seed produced different results",
+        )
+    });
+}
+
+#[test]
+fn oracle_never_uses_more_resources() {
+    prop_check(10, 0x0AC1E, |rng| {
+        let mut cfg = random_cfg(rng);
+        cfg.selector = "safa".into();
+        cfg.use_saa = true;
+        cfg.staleness_threshold = Some(rng.range(0, 4));
+        cfg.mode = RoundMode::Deadline { deadline: 20.0 + rng.f64() * 60.0 };
+        cfg.oracle = false;
+        let plain = run_experiment(cfg.clone(), exec()).map_err(|e| e.to_string())?;
+        cfg.oracle = true;
+        let oracle = run_experiment(cfg, exec()).map_err(|e| e.to_string())?;
+        prop_assert(
+            oracle.final_resource_hours() <= plain.final_resource_hours() + 1e-9,
+            format!(
+                "oracle used more: {} vs {}",
+                oracle.final_resource_hours(),
+                plain.final_resource_hours()
+            ),
+        )
+    });
+}
+
+#[test]
+fn oracle_reaches_same_accuracy() {
+    // the oracle only skips never-aggregated work, so the model trajectory
+    // (and final accuracy) must be identical to plain SAFA
+    let mut rng = Rng::new(77);
+    for _ in 0..5 {
+        let mut cfg = random_cfg(&mut rng);
+        cfg.selector = "safa".into();
+        cfg.use_saa = true;
+        cfg.staleness_threshold = Some(2);
+        cfg.mode = RoundMode::Deadline { deadline: 50.0 };
+        cfg.oracle = false;
+        let plain = run_experiment(cfg.clone(), exec()).unwrap();
+        cfg.oracle = true;
+        let oracle = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(
+            plain.final_accuracy(),
+            oracle.final_accuracy(),
+            "oracle must not change the model trajectory"
+        );
+    }
+}
+
+#[test]
+fn cooldown_caps_participation_rate() {
+    // with cooldown 5 and 12 learners, a learner can participate at most
+    // every 6th round; total fresh updates over R rounds <= R * pop / 6 + slack
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 12,
+        rounds: 18,
+        target_participants: 12,
+        cooldown_rounds: 5,
+        avail: AvailMode::AllAvail,
+        mean_samples: 8,
+        test_per_class: 2,
+        eval_every: 100,
+        ..Default::default()
+    };
+    let r = run_experiment(cfg, exec()).unwrap();
+    let total_fresh: usize = r.rounds.iter().map(|x| x.fresh_updates).sum();
+    assert!(total_fresh <= 12 * 3 + 12, "cooldown not enforced: {total_fresh}");
+}
+
+#[test]
+fn unbounded_staleness_never_discards() {
+    let mut rng = Rng::new(5);
+    for _ in 0..5 {
+        let mut cfg = random_cfg(&mut rng);
+        cfg.use_saa = true;
+        cfg.staleness_threshold = None;
+        cfg.oracle = false;
+        cfg.avail = AvailMode::AllAvail; // no dropouts
+        let r = run_experiment(cfg, exec()).unwrap();
+        let discarded: usize = r.rounds.iter().map(|x| x.discarded).sum();
+        assert_eq!(discarded, 0, "unbounded staleness must never discard");
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: the AOT bridge end-to-end. Loads `artifacts/*.hlo.txt` on
+//! the PJRT CPU client and cross-checks every computation against the
+//! pure-rust native mirror. Skips (with a note) if `make artifacts` hasn't
+//! been run.
+
+use relay::runtime::{Backend, Executor, Manifest, NativeExecutor, PjrtExecutor};
+use relay::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_tiny() -> Option<PjrtExecutor> {
+    let m = Manifest::load(artifacts_dir()).ok()?;
+    Some(PjrtExecutor::load(&m, "tiny").expect("artifacts exist but failed to load"))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match load_tiny() {
+            Some(e) => e,
+            None => {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn batch(v: &relay::runtime::VariantInfo, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..v.batch * v.input_dim).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..v.batch).map(|_| rng.below(v.num_classes) as i32).collect();
+    (x, y, vec![1.0; v.batch])
+}
+
+#[test]
+fn init_params_deterministic_and_sized() {
+    let e = require_artifacts!();
+    let p = e.init_params(42).unwrap();
+    assert_eq!(p.len(), e.variant().num_params);
+    assert_eq!(p, e.init_params(42).unwrap());
+    assert_ne!(p, e.init_params(43).unwrap());
+    assert!(p.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_matches_native_mirror() {
+    let e = require_artifacts!();
+    let native = NativeExecutor::new(e.variant().clone());
+    let params = e.init_params(7).unwrap();
+    let (x, y, mask) = batch(e.variant(), 1);
+
+    let a = e.train_step(&params, &x, &y, &mask, 0.05).unwrap();
+    let b = native.train_step(&params, &x, &y, &mask, 0.05).unwrap();
+    assert!((a.loss - b.loss).abs() < 1e-4, "loss {} vs {}", a.loss, b.loss);
+    assert_eq!(a.correct, b.correct);
+    let max_diff = a
+        .params
+        .iter()
+        .zip(&b.params)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-4, "param divergence {max_diff}");
+}
+
+#[test]
+fn eval_matches_native_mirror() {
+    let e = require_artifacts!();
+    let native = NativeExecutor::new(e.variant().clone());
+    let params = e.init_params(3).unwrap();
+    let (x, y, mask) = batch(e.variant(), 2);
+    let (la, ca) = e.eval_batch(&params, &x, &y, &mask).unwrap();
+    let (lb, cb) = native.eval_batch(&params, &x, &y, &mask).unwrap();
+    assert!((la - lb).abs() < 1e-4, "{la} vs {lb}");
+    assert_eq!(ca, cb);
+}
+
+#[test]
+fn training_descends_through_pjrt() {
+    let e = require_artifacts!();
+    let mut params = e.init_params(0).unwrap();
+    let (x, y, mask) = batch(e.variant(), 5);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..60 {
+        let out = e.train_step(&params, &x, &y, &mask, 0.1).unwrap();
+        params = out.params;
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.5, "no descent through HLO: {first} -> {last}");
+}
+
+#[test]
+fn agg_kernels_match_native() {
+    let e = require_artifacts!();
+    let native = NativeExecutor::new(e.variant().clone());
+    let p = e.variant().num_params;
+    let mut rng = Rng::new(11);
+    let rows: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let w = [0.5f32, 0.25, 0.1];
+
+    let a = e.agg_combine(&refs, &w).unwrap();
+    let b = native.agg_combine(&refs, &w).unwrap();
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 1e-4, "agg divergence {max_diff}");
+
+    let fresh: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+    let da = e.agg_dev(&fresh, &refs[..2]).unwrap();
+    let db = native.agg_dev(&fresh, &refs[..2]).unwrap();
+    assert_eq!(da.len(), 3);
+    for (x, y) in da.iter().zip(&db) {
+        let rel = (x - y).abs() / y.abs().max(1.0);
+        assert!(rel < 1e-4, "dev divergence {x} vs {y}");
+    }
+}
+
+#[test]
+fn masked_padding_rows_are_inert_through_pjrt() {
+    let e = require_artifacts!();
+    let v = e.variant().clone();
+    let params = e.init_params(1).unwrap();
+    let (mut x, y, _) = batch(&v, 9);
+    let mut mask = vec![1.0f32; v.batch];
+    mask[v.batch - 1] = 0.0;
+    let o1 = e.train_step(&params, &x, &y, &mask, 0.05).unwrap();
+    for i in 0..v.input_dim {
+        x[(v.batch - 1) * v.input_dim + i] = 1e3;
+    }
+    let o2 = e.train_step(&params, &x, &y, &mask, 0.05).unwrap();
+    assert!((o1.loss - o2.loss).abs() < 1e-5);
+}
+
+#[test]
+fn load_executor_backend_selection() {
+    if Manifest::load(artifacts_dir()).is_err() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let e = relay::runtime::load_executor(&artifacts_dir(), "tiny", Backend::Native).unwrap();
+    assert_eq!(e.variant().name, "tiny");
+    let e = relay::runtime::load_executor(&artifacts_dir(), "tiny", Backend::Pjrt).unwrap();
+    assert_eq!(e.variant().num_params, 172);
+}

@@ -6,6 +6,7 @@
 //! * selectors at 1k/10k/100k checked-in learners
 //! * availability trace queries + forecaster probes (per check-in cost)
 //! * one full coordinator round (the paper's end-to-end unit)
+//! * lazy 100k-learner construction + the sweep engine at 1 vs N workers
 //!
 //! Results feed EXPERIMENTS.md §Perf.
 
@@ -14,14 +15,17 @@ use std::time::Duration;
 
 use relay::aggregation::saa::{merge, UpdateEntry};
 use relay::aggregation::scaling::ScalingRule;
-use relay::config::{preset, AvailMode, ExpConfig};
+use relay::config::{preset, AvailMode, ExpConfig, RoundMode};
 use relay::coordinator::Coordinator;
+use relay::data::partition::PartitionScheme;
 use relay::forecast::SeasonalForecaster;
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
 use relay::selection::{Candidate, SelectionCtx};
-use relay::trace::{TraceConfig, TraceSet};
+use relay::sweep::{run_grid, GridSpec, SweepOpts};
+use relay::trace::{LazyTraceSet, TraceConfig, TraceSet};
 use relay::util::bench;
 use relay::util::rng::Rng;
+use relay::util::threadpool;
 
 fn pjrt_speech() -> Option<Arc<dyn Executor>> {
     relay::runtime::load_executor("artifacts", "speech", relay::runtime::Backend::Pjrt).ok()
@@ -205,11 +209,66 @@ fn bench_substrates() {
     });
 }
 
+fn bench_scale_path() {
+    println!("\n== scale path: lazy construction + sweep engine ==");
+    // lazy handle vs eager materialization of a large population
+    bench::run("trace/lazy_construct_100k", || {
+        std::hint::black_box(LazyTraceSet::new(100_000, 7, TraceConfig::default()));
+    });
+    bench::run("trace/eager_generate_10k", || {
+        std::hint::black_box(TraceSet::generate(10_000, 7, TraceConfig::default()));
+    });
+    let big = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 100_000,
+        rounds: 1,
+        target_participants: 10,
+        avail: AvailMode::DynAvail,
+        mean_samples: 4,
+        test_per_class: 2,
+        eval_every: 1000,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+    bench::run("coordinator/new_100k_dynavail_lazy", || {
+        std::hint::black_box(Coordinator::new(big.clone(), Arc::clone(&exec)).unwrap());
+    });
+
+    // a small grid end-to-end, experiment-level parallelism off vs on
+    let spec = GridSpec {
+        label: "bench".into(),
+        selectors: vec!["random".into(), "priority".into()],
+        modes: vec![RoundMode::OverCommit { factor: 1.3 }],
+        avails: vec![AvailMode::AllAvail],
+        partitions: vec![PartitionScheme::UniformIid],
+        seeds: vec![1, 1001],
+        base: ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 12,
+            rounds: 3,
+            target_participants: 4,
+            mean_samples: 8,
+            test_per_class: 2,
+            eval_every: 1000,
+            lr: 0.1,
+            ..Default::default()
+        },
+    };
+    for workers in [1usize, threadpool::default_workers().min(8)] {
+        bench::run(&format!("sweep/grid_4runs/workers={workers}"), || {
+            let opts = SweepOpts { workers, progress: false };
+            std::hint::black_box(run_grid(&spec, Arc::clone(&exec), &opts).unwrap());
+        });
+    }
+}
+
 fn main() {
     println!("relay benchmark suite (hand-rolled harness; budget ~1.5s per bench)");
     let t0 = std::time::Instant::now();
     bench_substrates();
     bench_trace_forecast();
+    bench_scale_path();
     bench_selectors();
     bench_runtime();
     bench_saa();

@@ -16,16 +16,20 @@ use crate::aggregation::ServerOptimizer;
 use crate::config::{AvailMode, ExpConfig, RoundMode};
 use crate::data::partition::{LearnerShard, Partitioner};
 use crate::data::synth::{Dataset, TestSet};
-use crate::forecast::SeasonalForecaster;
+use crate::forecast::{ForecasterBank, SeasonalForecaster};
 use crate::learners::ProfilePool;
 use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
 use crate::runtime::Executor;
 use crate::selection::apt::AdaptiveTarget;
 use crate::selection::{Candidate, RoundFeedback, SelectionCtx, Selector};
 use crate::sim::{Availability, Clock, DeliveryQueue};
-use crate::trace::{TraceConfig, TraceSet};
+use crate::trace::{LazyTraceSet, TraceConfig};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
+
+/// Sampling step (seconds) of the one-week series each learner's personal
+/// forecaster is bootstrapped from (Appendix A).
+const FORECAST_STEP: f64 = 1800.0;
 
 /// A straggler's update in flight to the server.
 struct PendingUpdate {
@@ -52,7 +56,7 @@ pub struct Coordinator {
     shards: Vec<LearnerShard>,
     profiles: ProfilePool,
     avail: Availability,
-    forecasters: Vec<SeasonalForecaster>,
+    forecasters: ForecasterBank,
     selector: Box<dyn Selector>,
     server_opt: Box<dyn ServerOptimizer>,
     apt: AdaptiveTarget,
@@ -91,35 +95,22 @@ impl Coordinator {
             Partitioner::new(cfg.partition, info.num_classes, cfg.mean_samples);
         let shards = partitioner.assign(cfg.total_learners, cfg.seed ^ 0x9A);
         let profiles = ProfilePool::generate(cfg.total_learners, cfg.seed ^ 0x0F, cfg.hardware);
+        // Scale path: traces and learner-side forecasters are generated at
+        // first touch (bit-identical to eager generation — the trace comes
+        // from the same per-learner RNG stream, the forecaster from the same
+        // two-week replay), so a 100k-learner DynAvail population constructs
+        // in milliseconds instead of materializing every learner up front.
         let avail = match cfg.avail {
             AvailMode::AllAvail => Availability::All,
-            AvailMode::DynAvail => Availability::Dynamic(TraceSet::generate(
+            AvailMode::DynAvail => Availability::Lazy(LazyTraceSet::new(
                 cfg.total_learners,
                 cfg.seed ^ 0x7A,
                 TraceConfig::default(),
             )),
         };
-        // Learner-side availability models: each learner trains its personal
-        // forecaster on (two replayed weeks of) its own trace — the paper's
-        // "learners maintain trace of their charging events" (Appendix A).
         let forecasters = match &avail {
-            Availability::All => Vec::new(),
-            Availability::Dynamic(trace) => {
-                let step = 1800.0;
-                (0..cfg.total_learners)
-                    .map(|l| {
-                        let mut f = SeasonalForecaster::default();
-                        let series = trace.sample_series(l, step);
-                        for rep in 0..2 {
-                            for (i, &v) in series.iter().enumerate() {
-                                let t = rep as f64 * crate::trace::WEEK + i as f64 * step;
-                                f.observe(t, v > 0.5);
-                            }
-                        }
-                        f
-                    })
-                    .collect()
-            }
+            Availability::All => ForecasterBank::new(0),
+            _ => ForecasterBank::new(cfg.total_learners),
         };
         let selector = crate::selection::by_name(&cfg.selector)
             .ok_or_else(|| anyhow!("unknown selector"))?;
@@ -525,7 +516,7 @@ impl Coordinator {
                 AvailMode::AllAvail => 1.0,
                 AvailMode::DynAvail => {
                     // learner-side forecast for the slot (mu, 2mu)
-                    self.forecasters[id].prob_slot(now + mu, now + 2.0 * mu)
+                    self.forecaster(id).prob_slot(now + mu, now + 2.0 * mu)
                 }
             };
             let expected_duration = self.profiles.get(id).completion_time(
@@ -573,6 +564,46 @@ impl Coordinator {
     /// Test-set evaluation: (mean loss, top-1 accuracy).
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         evaluate_params(self.exec.as_ref(), &self.test, &self.global)
+    }
+
+    /// This learner's personal forecaster, trained at first touch on (two
+    /// replayed weeks of) its own trace — the paper's "learners maintain
+    /// trace of their charging events" (Appendix A). Learners that never
+    /// check in never pay the training cost.
+    fn forecaster(&self, id: usize) -> &SeasonalForecaster {
+        let avail = &self.avail;
+        self.forecasters.get_or_train(id, || {
+            let series = avail
+                .sample_series(id, FORECAST_STEP)
+                .expect("DynAvail always carries a trace");
+            SeasonalForecaster::train_on_week(&series, FORECAST_STEP)
+        })
+    }
+
+    /// Pre-generate every learner's trace and forecaster — the pre-refactor
+    /// eager construction. Tests and benches use this to prove the lazy
+    /// path is result-identical and to measure what laziness saves.
+    pub fn materialize_all(&self) {
+        if matches!(self.avail, Availability::All) {
+            return;
+        }
+        for id in 0..self.cfg.total_learners {
+            self.forecaster(id);
+        }
+    }
+
+    /// Learner traces generated so far (== total_learners on the eager path).
+    pub fn materialized_traces(&self) -> usize {
+        match &self.avail {
+            Availability::All => 0,
+            Availability::Dynamic(tr) => tr.len(),
+            Availability::Lazy(tr) => tr.materialized(),
+        }
+    }
+
+    /// Learner forecasters trained so far.
+    pub fn trained_forecasters(&self) -> usize {
+        self.forecasters.trained()
     }
 }
 
@@ -666,6 +697,21 @@ pub fn run_experiment(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Experim
         return coord.run();
     }
     Coordinator::new(cfg, exec)?.run()
+}
+
+/// [`run_experiment`], but with every trace and forecaster materialized at
+/// construction — the pre-refactor eager behaviour. Exists so tests can
+/// assert the lazy path changes nothing but construction cost.
+pub fn run_experiment_eager(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+) -> Result<ExperimentResult> {
+    if cfg.oracle {
+        return Err(anyhow!("run_experiment_eager: oracle configs unsupported"));
+    }
+    let mut coord = Coordinator::new(cfg, exec)?;
+    coord.materialize_all();
+    coord.run()
 }
 
 #[cfg(test)]

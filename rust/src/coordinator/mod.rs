@@ -5,4 +5,4 @@
 pub mod centralized;
 pub mod engine;
 
-pub use engine::{Coordinator, run_experiment};
+pub use engine::{run_experiment, run_experiment_eager, Coordinator};

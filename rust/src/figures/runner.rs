@@ -7,7 +7,6 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::ExpConfig;
-use crate::coordinator::run_experiment;
 use crate::metrics::ExperimentResult;
 use crate::runtime::{self, Backend, Executor};
 use crate::util::json::{arr, obj, Json};
@@ -22,6 +21,11 @@ pub struct FigureOpts {
     pub out_dir: String,
     pub seeds: usize,
     pub verbose: bool,
+    /// Concurrent experiments on the sweep engine (0 = one per core, capped
+    /// at 8). Results are identical at any setting. Defaults to 1: the full
+    /// figure campaign at 8x working sets has OOMed a 35 GB box before, so
+    /// concurrency here is opt-in (`--workers N`).
+    pub workers: usize,
 }
 
 impl Default for FigureOpts {
@@ -33,6 +37,7 @@ impl Default for FigureOpts {
             out_dir: "results".into(),
             seeds: 1,
             verbose: false,
+            workers: 1,
         }
     }
 }
@@ -58,6 +63,11 @@ impl FigureOpts {
 
 /// Run each config (averaging over `opts.seeds` seeds), print summaries,
 /// save the full series to `<out_dir>/<name>.json`, and return results.
+///
+/// Execution goes through the sweep engine (`sweep::run_many`): all
+/// config×seed runs of the set proceed concurrently, and since results come
+/// back in input order the per-config grouping below — and therefore every
+/// figure — is identical at any worker count.
 pub fn run_set(
     name: &str,
     title: &str,
@@ -65,46 +75,38 @@ pub fn run_set(
     opts: &FigureOpts,
 ) -> Result<Vec<ExperimentResult>> {
     println!("--- {title} ---");
-    let mut all = Vec::with_capacity(configs.len());
     // One executor (one PJRT client) per variant for the whole set: each
     // TfrtCpuClient owns arenas/thread pools that are expensive to multiply
     // (a fresh client per config OOMed the full campaign on a 35 GB box).
     let mut executors: std::collections::BTreeMap<String, Arc<dyn Executor>> =
         std::collections::BTreeMap::new();
-    for cfg in configs {
+    let seeds = opts.seeds.max(1);
+    let mut runs = Vec::with_capacity(configs.len() * seeds);
+    for cfg in &configs {
         let exec = match executors.get(&cfg.variant) {
             Some(e) => Arc::clone(e),
             None => {
-                let e = self_executor(opts, &cfg)?;
+                let e = opts.executor(&cfg.variant)?;
                 executors.insert(cfg.variant.clone(), Arc::clone(&e));
                 e
             }
         };
-        let mut seed_results = Vec::with_capacity(opts.seeds);
-        for s in 0..opts.seeds {
+        for s in 0..seeds {
             let mut c = cfg.clone();
             c.seed = cfg.seed + s as u64 * 1000;
-            let t0 = std::time::Instant::now();
-            let r = run_experiment(c, Arc::clone(&exec))?;
-            if opts.verbose {
-                eprintln!(
-                    "    [seed {s}] {} ({:.1}s wallclock)",
-                    r.summary(),
-                    t0.elapsed().as_secs_f64()
-                );
-            }
-            seed_results.push(r);
+            runs.push((c, Arc::clone(&exec)));
         }
-        let merged = average_results(seed_results);
+    }
+    let results = crate::sweep::run_many(runs, opts.workers, opts.verbose)?;
+    let mut all = Vec::with_capacity(configs.len());
+    for i in 0..configs.len() {
+        let group = results[i * seeds..(i + 1) * seeds].to_vec();
+        let merged = average_results(group);
         println!("  {}", merged.summary());
         all.push(merged);
     }
     save(name, &all, opts)?;
     Ok(all)
-}
-
-fn self_executor(opts: &FigureOpts, cfg: &ExpConfig) -> Result<Arc<dyn Executor>> {
-    opts.executor(&cfg.variant)
 }
 
 /// Average per-round metrics across seeds (the paper reports 3-seed means).

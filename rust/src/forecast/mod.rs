@@ -15,6 +15,7 @@
 //!   report R^2 / MSE / MAE).
 
 use crate::trace::{DAY, WEEK};
+use crate::util::lazy::LazySlots;
 use crate::util::stats;
 
 /// Recency-weighted hour-of-week availability frequency.
@@ -59,6 +60,22 @@ impl SeasonalForecaster {
         }
     }
 
+    /// Bootstrap-train on one sampled week of 0/1 availability (`step`
+    /// seconds per sample), replaying it twice — the paper's "learners
+    /// maintain a trace of their charging events" bootstrap (Appendix A).
+    /// The coordinator's eager and lazy construction paths both come through
+    /// here, so their forecasters are bit-identical.
+    pub fn train_on_week(series: &[f64], step: f64) -> SeasonalForecaster {
+        let mut f = SeasonalForecaster::default();
+        for rep in 0..2 {
+            for (i, &v) in series.iter().enumerate() {
+                let t = rep as f64 * WEEK + i as f64 * step;
+                f.observe(t, v > 0.5);
+            }
+        }
+        f
+    }
+
     /// P(available throughout the slot [a, b]) — mean of bin probabilities
     /// across the slot (the learner-side answer to the server's probe).
     pub fn prob_slot(&self, a: f64, b: f64) -> f64 {
@@ -72,6 +89,42 @@ impl SeasonalForecaster {
             acc += self.prob_at(t);
         }
         acc / steps as f64
+    }
+}
+
+/// A population of per-learner [`SeasonalForecaster`]s trained on demand
+/// (at most once each, thread-safe). The coordinator probes only the
+/// learners that actually check in, so at 100k+ populations the vast
+/// majority of forecasters are never trained — constructing the bank is
+/// O(n) empty slots instead of O(n) trace replays.
+pub struct ForecasterBank {
+    slots: LazySlots<SeasonalForecaster>,
+}
+
+impl ForecasterBank {
+    pub fn new(n: usize) -> ForecasterBank {
+        ForecasterBank { slots: LazySlots::new(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The learner's forecaster, training it via `train` at first touch.
+    pub fn get_or_train<F>(&self, learner: usize, train: F) -> &SeasonalForecaster
+    where
+        F: FnOnce() -> SeasonalForecaster,
+    {
+        self.slots.get_or_init(learner, train)
+    }
+
+    /// How many forecasters have been trained so far.
+    pub fn trained(&self) -> usize {
+        self.slots.initialized()
     }
 }
 
@@ -237,6 +290,43 @@ mod tests {
             f.observe(t + w as f64 * WEEK, true);
         }
         assert!(f.prob_at(t) > 0.8, "recent evidence should dominate");
+    }
+
+    #[test]
+    fn train_on_week_matches_manual_replay() {
+        // alternating on/off hours, one-week series at 30-min steps
+        let step = 1800.0;
+        let n = (WEEK / step) as usize;
+        let series: Vec<f64> =
+            (0..n).map(|i| if (i / 2) % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let trained = SeasonalForecaster::train_on_week(&series, step);
+        let mut manual = SeasonalForecaster::default();
+        for rep in 0..2 {
+            for (i, &v) in series.iter().enumerate() {
+                manual.observe(rep as f64 * WEEK + i as f64 * step, v > 0.5);
+            }
+        }
+        for h in 0..168 {
+            let t = h as f64 * 3600.0 + 1.0;
+            assert_eq!(trained.prob_at(t), manual.prob_at(t), "hour {h}");
+        }
+    }
+
+    #[test]
+    fn bank_trains_each_learner_at_most_once() {
+        let step = 1800.0;
+        let n = (WEEK / step) as usize;
+        let series: Vec<f64> = (0..n).map(|i| (i % 3 == 0) as u8 as f64).collect();
+        let bank = ForecasterBank::new(3);
+        assert_eq!(bank.len(), 3);
+        assert_eq!(bank.trained(), 0);
+        let p1 = bank.get_or_train(1, || SeasonalForecaster::train_on_week(&series, step))
+            as *const SeasonalForecaster;
+        assert_eq!(bank.trained(), 1);
+        let p2 = bank.get_or_train(1, || panic!("must not retrain a cached forecaster"))
+            as *const SeasonalForecaster;
+        assert_eq!(p1, p2, "second touch must return the cached forecaster");
+        assert_eq!(bank.trained(), 1);
     }
 
     #[test]

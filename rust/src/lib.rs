@@ -27,4 +27,5 @@ pub mod aggregation;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod sweep;
 pub mod figures;

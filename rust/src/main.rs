@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run           one experiment from a JSON config (--config) or flags
+//!   sweep         a parallel experiment grid (selectors x modes x avails x
+//!                 partitions x seeds) with one aggregated JSON report
 //!   figure <id>   regenerate a paper figure/table (2..21, t1, t2, forecast, all)
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
@@ -38,6 +40,7 @@ fn figure_opts(args: &Args) -> Result<FigureOpts> {
         out_dir: args.str_or("out", "results"),
         seeds: args.usize_or("seeds", 1),
         verbose: args.bool("verbose"),
+        workers: args.usize_or("workers", 1),
     })
 }
 
@@ -45,6 +48,7 @@ fn real_main() -> Result<()> {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("figure") => {
             let id = args
                 .positional
@@ -55,7 +59,7 @@ fn real_main() -> Result<()> {
         Some("trace-stats") => figures::run("14", &figure_opts(&args)?),
         Some("forecast-eval") => figures::run("forecast", &figure_opts(&args)?),
         Some("validate") => cmd_validate(&args),
-        Some(other) => Err(anyhow!("unknown command '{other}' (run|figure|trace-stats|forecast-eval|validate)")),
+        Some(other) => Err(anyhow!("unknown command '{other}' (run|sweep|figure|trace-stats|forecast-eval|validate)")),
         None => {
             print_help();
             Ok(())
@@ -130,6 +134,73 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `relay sweep`: expand a declarative grid (selectors x modes x avails x
+/// partitions x seeds) and execute it concurrently on the sweep engine.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use relay::sweep::{run_grid, GridSpec, SweepOpts};
+
+    let mut base = preset(&args.str_or("variant", "tiny"))?;
+    base.total_learners = args.usize_or("learners", 60);
+    base.rounds = args.usize_or("rounds", 15);
+    base.target_participants = args.usize_or("participants", 8);
+    base.eval_every = args.usize_or("eval-every", base.eval_every);
+    base.seed = args.u64_or("seed", 1);
+
+    let selectors = args.list_or("selectors", "random,oort,priority,safa");
+    let mut modes = Vec::new();
+    for m in args.list_or("modes", "oc,dl") {
+        modes.push(match m.as_str() {
+            "oc" => RoundMode::OverCommit { factor: args.f64_or("oc-factor", 1.3) },
+            "dl" => RoundMode::Deadline { deadline: args.f64_or("deadline", 100.0) },
+            other => return Err(anyhow!("--modes entries must be oc|dl, got '{other}'")),
+        });
+    }
+    let mut avails = Vec::new();
+    for a in args.list_or("avails", "dyn") {
+        avails.push(match a.as_str() {
+            "all" => AvailMode::AllAvail,
+            "dyn" => AvailMode::DynAvail,
+            other => return Err(anyhow!("--avails entries must be all|dyn, got '{other}'")),
+        });
+    }
+    let mut partitions = Vec::new();
+    for p in args.list_or("partitions", "iid") {
+        partitions
+            .push(PartitionScheme::parse(&p).ok_or_else(|| anyhow!("bad partition '{p}'"))?);
+    }
+    let n_seeds = args.usize_or("seeds", 3).max(1);
+    let seeds: Vec<u64> = (0..n_seeds as u64).map(|s| base.seed + s * 1000).collect();
+
+    let spec = GridSpec {
+        label: args.str_or("label", "sweep"),
+        selectors,
+        modes,
+        avails,
+        partitions,
+        seeds,
+        base,
+    };
+    let exec = figure_opts(args)?.executor(&spec.base.variant)?;
+    let opts = SweepOpts {
+        workers: args.usize_or("workers", 0),
+        progress: !args.bool("quiet"),
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_grid(&spec, exec, &opts)?;
+    println!(
+        "sweep '{}': {} cells, {} runs, {:.1}s wall-clock",
+        report.label,
+        report.cells.len(),
+        report.runs,
+        t0.elapsed().as_secs_f64()
+    );
+    report.print_table();
+    let out = args.str_or("report", "results/sweep.json");
+    report.save(&out)?;
+    println!("  -> report saved to {out}");
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -146,12 +217,16 @@ fn print_help() {
         "relay — RELAY: resource-efficient federated learning (paper reproduction)
 
 USAGE:
-  relay run [--benchmark speech|cifar|openimage|nlp] [--selector random|oort|priority|safa|relay]
-            [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
-            [--avail all|dyn] [--deadline SECS] [--backend pjrt|native] [--config cfg.json] [--out r.json]
-  relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--backend pjrt|native] [--verbose]
+  relay run   [--benchmark speech|cifar|openimage|nlp] [--selector random|oort|priority|safa|relay]
+              [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
+              [--avail all|dyn] [--deadline SECS] [--backend pjrt|native] [--config cfg.json] [--out r.json]
+  relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl]
+              [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
+              [--workers N] [--deadline SECS] [--oc-factor F] [--report results/sweep.json] [--quiet]
+  relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
   relay trace-stats | forecast-eval | validate
 
-Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to HLO)."
+Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to
+HLO), or pass --backend native for the pure-rust mirror."
     );
 }

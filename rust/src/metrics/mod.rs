@@ -11,6 +11,7 @@
 use std::collections::HashSet;
 
 use crate::util::json::{arr, num, obj, Json};
+use crate::util::stats;
 
 /// Per-round record emitted by the coordinator.
 #[derive(Clone, Debug, Default)]
@@ -170,6 +171,83 @@ impl ExperimentResult {
     }
 }
 
+/// Aggregated record for one sweep-grid cell (selector × round-mode ×
+/// availability × partition), summarizing the paper's evaluation axes
+/// across its seeds. Accuracy statistics are over the runs that reached at
+/// least one eval round (`None` when none did — e.g. every round failed).
+#[derive(Clone, Debug, Default)]
+pub struct CellSummary {
+    pub label: String,
+    pub selector: String,
+    pub mode: String,
+    pub avail: String,
+    pub partition: String,
+    /// Number of runs (seeds) aggregated into this cell.
+    pub seeds: usize,
+    pub mean_accuracy: Option<f64>,
+    pub std_accuracy: Option<f64>,
+    pub mean_resource_hours: f64,
+    pub std_resource_hours: f64,
+    pub mean_waste_fraction: f64,
+    pub mean_sim_time: f64,
+    pub mean_unique_participants: f64,
+    /// Total failed rounds across all seeds (availability churn signal).
+    pub failed_rounds: usize,
+}
+
+impl CellSummary {
+    /// Aggregate one cell's per-seed results. Axis fields (`selector`,
+    /// `mode`, ...) are left empty for the caller to fill in.
+    pub fn from_results(label: impl Into<String>, results: &[ExperimentResult]) -> CellSummary {
+        let accs: Vec<f64> = results.iter().filter_map(|r| r.final_accuracy()).collect();
+        let res: Vec<f64> = results.iter().map(|r| r.final_resource_hours()).collect();
+        let waste: Vec<f64> = results.iter().map(|r| r.waste_fraction()).collect();
+        let sim: Vec<f64> = results.iter().map(|r| r.final_sim_time()).collect();
+        let uniq: Vec<f64> = results
+            .iter()
+            .map(|r| r.rounds.last().map(|x| x.unique_participants).unwrap_or(0) as f64)
+            .collect();
+        CellSummary {
+            label: label.into(),
+            seeds: results.len(),
+            mean_accuracy: (!accs.is_empty()).then(|| stats::mean(&accs)),
+            std_accuracy: (!accs.is_empty()).then(|| stats::std_dev(&accs)),
+            mean_resource_hours: stats::mean(&res),
+            std_resource_hours: stats::std_dev(&res),
+            mean_waste_fraction: stats::mean(&waste),
+            mean_sim_time: stats::mean(&sim),
+            mean_unique_participants: stats::mean(&uniq),
+            failed_rounds: results
+                .iter()
+                .map(|r| r.rounds.iter().filter(|x| x.failed).count())
+                .sum(),
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("selector", Json::Str(self.selector.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("avail", Json::Str(self.avail.clone())),
+            ("partition", Json::Str(self.partition.clone())),
+            ("seeds", num(self.seeds as f64)),
+            ("mean_accuracy", self.mean_accuracy.map(num).unwrap_or(Json::Null)),
+            ("std_accuracy", self.std_accuracy.map(num).unwrap_or(Json::Null)),
+            ("mean_resource_hours", num(self.mean_resource_hours)),
+            ("std_resource_hours", num(self.std_resource_hours)),
+            ("mean_waste_fraction", num(self.mean_waste_fraction)),
+            ("mean_sim_time", num(self.mean_sim_time)),
+            (
+                "mean_unique_participants",
+                num(self.mean_unique_participants),
+            ),
+            ("failed_rounds", num(self.failed_rounds as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +315,30 @@ mod tests {
         let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
         assert_eq!(rounds.len(), 1);
         assert_eq!(rounds[0].get("test_accuracy").unwrap().as_f64(), Some(0.4));
+    }
+
+    #[test]
+    fn cell_summary_aggregates_across_seeds() {
+        let a = result_with(vec![rr(0, 3600.0, Some(0.4))]);
+        let b = result_with(vec![rr(0, 7200.0, Some(0.6))]);
+        let s = CellSummary::from_results("cell", &[a, b]);
+        assert_eq!(s.seeds, 2);
+        assert!((s.mean_accuracy.unwrap() - 0.5).abs() < 1e-12);
+        assert!((s.std_accuracy.unwrap() - 0.1).abs() < 1e-12);
+        assert!((s.mean_resource_hours - 1.5).abs() < 1e-12);
+        let j = s.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("seeds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("mean_accuracy").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn cell_summary_without_evals_has_null_accuracy() {
+        let r = result_with(vec![rr(0, 100.0, None)]);
+        let s = CellSummary::from_results("no-eval", &[r]);
+        assert!(s.mean_accuracy.is_none());
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("mean_accuracy"), Some(&Json::Null));
     }
 
     #[test]

@@ -5,10 +5,14 @@
 //! Python is never on this path: artifacts are produced once by
 //! `make artifacts` and the rust binary is self-contained afterwards.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{anyhow, Result};
 
 use super::manifest::{Manifest, VariantInfo};
 
@@ -53,6 +57,7 @@ pub trait Executor: Send + Sync {
 /// Send/Sync by the crate, but the XLA CPU PJRT client supports concurrent
 /// `Execute` calls on the same loaded executable (each call owns its run
 /// state). We serialize compile-time access and allow concurrent execute.
+#[cfg(feature = "pjrt")]
 struct Loaded {
     train: xla::PjRtLoadedExecutable,
     eval: xla::PjRtLoadedExecutable,
@@ -61,9 +66,12 @@ struct Loaded {
     dev: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Loaded {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Loaded {}
 
+#[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     info: VariantInfo,
     loaded: Loaded,
@@ -71,6 +79,66 @@ pub struct PjrtExecutor {
     pub calls: Mutex<HashMap<&'static str, u64>>,
 }
 
+/// Stub used when the crate is built without the `pjrt` feature (the `xla`
+/// bindings are unavailable offline): `load` always errors, so this type is
+/// uninhabited and the `Executor` impl below is unreachable by construction.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtExecutor {
+    _uninhabited: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtExecutor {
+    pub fn load(_manifest: &Manifest, variant: &str) -> Result<PjrtExecutor> {
+        Err(anyhow!(
+            "PJRT backend unavailable: built without the `pjrt` feature \
+             (variant '{variant}'); use --backend native, or add the `xla` \
+             dependency and rebuild with --features pjrt"
+        ))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executor for PjrtExecutor {
+    fn variant(&self) -> &VariantInfo {
+        match self._uninhabited {}
+    }
+
+    fn init_params(&self, _seed: i32) -> Result<Vec<f32>> {
+        match self._uninhabited {}
+    }
+
+    fn train_step(
+        &self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _mask: &[f32],
+        _lr: f32,
+    ) -> Result<TrainOut> {
+        match self._uninhabited {}
+    }
+
+    fn eval_batch(
+        &self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        match self._uninhabited {}
+    }
+
+    fn agg_combine(&self, _updates: &[&[f32]], _weights: &[f32]) -> Result<Vec<f32>> {
+        match self._uninhabited {}
+    }
+
+    fn agg_dev(&self, _fresh: &[f32], _stale: &[&[f32]]) -> Result<Vec<f32>> {
+        match self._uninhabited {}
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtExecutor {
     /// Compile all five computations of `variant` from `manifest`.
     pub fn load(manifest: &Manifest, variant: &str) -> Result<PjrtExecutor> {
@@ -147,12 +215,14 @@ impl PjrtExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e:?}")
 }
 
 /// Build an f32 literal of the given shape in ONE copy (avoids the extra
 /// full-buffer copy of `Literal::vec1(..).reshape(..)` — §Perf iteration 3).
+#[cfg(feature = "pjrt")]
 fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
     debug_assert_eq!(dims.iter().product::<usize>(), data.len());
     let bytes =
@@ -161,6 +231,7 @@ fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
         .map_err(wrap)
 }
 
+#[cfg(feature = "pjrt")]
 fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
     lit.to_vec::<f32>()
         .map_err(wrap)?
@@ -169,6 +240,7 @@ fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
         .ok_or_else(|| anyhow!("empty scalar literal"))
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor for PjrtExecutor {
     fn variant(&self) -> &VariantInfo {
         &self.info
@@ -249,6 +321,7 @@ impl Executor for PjrtExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn check_batch(v: &VariantInfo, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<()> {
     if params.len() != v.num_params {
         return Err(anyhow!("params len {} != P={}", params.len(), v.num_params));

@@ -136,6 +136,50 @@ mod tests {
     }
 
     #[test]
+    fn selectors_fill_target_around_cooldowns() {
+        // Engine-style cooldown interaction: learners on cooldown never
+        // appear among the candidates (coordinator::checked_in filters
+        // them), and a selector must fill its target from whoever is left
+        // rather than stall or resurrect a cooling id.
+        for name in ["random", "oort", "priority"] {
+            let mut s = by_name(name).unwrap();
+            let mut rng = Rng::new(7);
+            let mut cooldown_until = vec![0usize; 12];
+            let cooldown_rounds = 2;
+            for round in 0..8 {
+                let candidates: Vec<Candidate> = (0..12)
+                    .filter(|&id| cooldown_until[id] <= round)
+                    .map(|id| Candidate {
+                        id,
+                        avail_prob: 0.5,
+                        expected_duration: 15.0,
+                    })
+                    .collect();
+                let mut ctx = SelectionCtx {
+                    round,
+                    now: 0.0,
+                    target: 4,
+                    candidates: &candidates,
+                    rng: &mut rng,
+                };
+                let picked = s.select(&mut ctx);
+                assert_eq!(
+                    picked.len(),
+                    4usize.min(candidates.len()),
+                    "{name}: short pick in round {round}"
+                );
+                for &id in &picked {
+                    assert!(
+                        cooldown_until[id] <= round,
+                        "{name}: picked cooling learner {id} in round {round}"
+                    );
+                    cooldown_until[id] = round + 1 + cooldown_rounds;
+                }
+            }
+        }
+    }
+
+    #[test]
     fn selectors_handle_zero_candidates() {
         for n in ["random", "oort", "priority", "safa"] {
             let mut s = by_name(n).unwrap();

@@ -240,6 +240,37 @@ mod tests {
     }
 
     #[test]
+    fn exploitation_ranks_strictly_by_utility() {
+        // epsilon pinned to 0 => pure exploitation: the pick must be the
+        // top-`target` explored learners ordered by descending utility
+        let mut s = OortSelector::new(OortConfig {
+            epsilon0: 0.0,
+            epsilon_min: 0.0,
+            ..OortConfig::default()
+        });
+        let cands: Vec<Candidate> = (0..8)
+            .map(|i| Candidate { id: i, avail_prob: 1.0, expected_duration: 10.0 })
+            .collect();
+        // all durations are below the preferred duration, so ranking is by
+        // statistical utility alone
+        s.feedback(&RoundFeedback {
+            round: 0,
+            completed: &[
+                (3, 50.0, 10.0),
+                (1, 40.0, 10.0),
+                (6, 30.0, 10.0),
+                (0, 20.0, 10.0),
+                (4, 10.0, 10.0),
+                (7, 5.0, 10.0),
+            ],
+            missed: &[],
+            round_duration: 60.0,
+        });
+        let picked = run_round(&mut s, &cands, 1, 42);
+        assert_eq!(picked, vec![3, 1, 6, 0, 4]);
+    }
+
+    #[test]
     fn system_utility_penalizes_slow_learners() {
         let mut s = OortSelector::default();
         s.explored.insert(1, LearnerStats { stat_util: 10.0, duration: 30.0, last_round: 0 });

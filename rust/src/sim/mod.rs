@@ -9,7 +9,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::trace::TraceSet;
+use crate::trace::{LazyTraceSet, TraceSet};
 
 /// Virtual wall-clock (seconds since experiment start).
 #[derive(Clone, Copy, Debug, Default)]
@@ -28,8 +28,13 @@ impl Clock {
 pub enum Availability {
     /// Every learner is always available.
     All,
-    /// Availability follows a charging trace.
+    /// Availability follows a fully-materialized charging trace.
     Dynamic(TraceSet),
+    /// Availability follows a lazily-generated charging trace: a learner's
+    /// week is generated at first touch, so 100k+-learner populations
+    /// construct without any up-front trace work (bit-identical replay to
+    /// `Dynamic` for the same seed).
+    Lazy(LazyTraceSet),
 }
 
 impl Availability {
@@ -44,7 +49,7 @@ impl Availability {
     pub fn label(&self) -> &'static str {
         match self {
             Availability::All => "AllAvail",
-            Availability::Dynamic(_) => "DynAvail",
+            Availability::Dynamic(_) | Availability::Lazy(_) => "DynAvail",
         }
     }
 
@@ -52,6 +57,7 @@ impl Availability {
         match self {
             Availability::All => true,
             Availability::Dynamic(tr) => tr.available(learner, t),
+            Availability::Lazy(tr) => tr.available(learner, t),
         }
     }
 
@@ -60,13 +66,26 @@ impl Availability {
         match self {
             Availability::All => true,
             Availability::Dynamic(tr) => tr.available_through(learner, t, dur),
+            Availability::Lazy(tr) => tr.available_through(learner, t, dur),
         }
     }
 
-    pub fn trace(&self) -> Option<&TraceSet> {
+    /// Sampled 0/1 availability series for one learner (the forecaster
+    /// bootstrap input); `None` under AllAvail.
+    pub fn sample_series(&self, learner: usize, step: f64) -> Option<Vec<f64>> {
         match self {
             Availability::All => None,
+            Availability::Dynamic(tr) => Some(tr.sample_series(learner, step)),
+            Availability::Lazy(tr) => Some(tr.sample_series(learner, step)),
+        }
+    }
+
+    /// The eager trace, when this availability holds one (`Lazy` exposes
+    /// its sessions through the query methods instead).
+    pub fn trace(&self) -> Option<&TraceSet> {
+        match self {
             Availability::Dynamic(tr) => Some(tr),
+            _ => None,
         }
     }
 }
@@ -177,6 +196,26 @@ mod tests {
         let a = Availability::Dynamic(tr);
         assert!(a.available(0, (s + e) / 2.0));
         assert_eq!(a.label(), "DynAvail");
+    }
+
+    #[test]
+    fn lazy_availability_matches_eager() {
+        let tr = TraceSet::generate(6, 9, TraceConfig::default());
+        let lz = crate::trace::LazyTraceSet::new(6, 9, TraceConfig::default());
+        let eager = Availability::Dynamic(tr);
+        let lazy = Availability::Lazy(lz);
+        assert_eq!(lazy.label(), "DynAvail");
+        for l in 0..6 {
+            for t in [0.0, 5_000.0, 200_000.0, 700_000.0] {
+                assert_eq!(eager.available(l, t), lazy.available(l, t), "l={l} t={t}");
+                assert_eq!(
+                    eager.available_through(l, t, 900.0),
+                    lazy.available_through(l, t, 900.0)
+                );
+            }
+            assert_eq!(eager.sample_series(l, 1800.0), lazy.sample_series(l, 1800.0));
+        }
+        assert!(lazy.trace().is_none() && eager.trace().is_some());
     }
 
     #[test]

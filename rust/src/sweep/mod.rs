@@ -1,0 +1,395 @@
+//! Parallel experiment-grid engine.
+//!
+//! The paper's results are *grids* — selector × round-mode × availability ×
+//! partition, replicated over seeds — and the client-selection literature
+//! (PAPERS.md, arXiv 2306.04862) stresses that selector comparisons are only
+//! meaningful across many seeds and scenarios. [`GridSpec`] declares such a
+//! grid; [`run_grid`] expands it into `ExpConfig`s, executes whole
+//! experiments concurrently on `util::threadpool` (experiment-level
+//! parallelism: each run's RNG streams derive from its own config seed and
+//! the executor is a shared read-only `Arc`), streams progress/ETA lines to
+//! stderr, and aggregates per-cell mean/std metrics into one JSON report.
+//!
+//! Determinism: results depend only on each run's config, never on worker
+//! interleaving — `run_parallel` returns results in job order and nothing
+//! wall-clock-dependent enters the report — so the aggregated JSON is
+//! byte-identical across `workers` settings (tests/sweep_determinism.rs
+//! locks this in).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{AvailMode, ExpConfig, RoundMode};
+use crate::coordinator::run_experiment;
+use crate::data::partition::PartitionScheme;
+use crate::metrics::{CellSummary, ExperimentResult};
+use crate::runtime::Executor;
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::threadpool;
+
+/// Declarative experiment grid: the cross product of every axis, replicated
+/// for every seed. `base` supplies all knobs an axis doesn't override.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub label: String,
+    pub base: ExpConfig,
+    /// Selector axis; "relay" expands to the full RELAY stack (IPS+SAA+APT).
+    pub selectors: Vec<String>,
+    pub modes: Vec<RoundMode>,
+    pub avails: Vec<AvailMode>,
+    pub partitions: Vec<PartitionScheme>,
+    pub seeds: Vec<u64>,
+}
+
+impl GridSpec {
+    /// A 1-cell grid around `base` (each axis defaults to the base value).
+    pub fn new(base: ExpConfig) -> GridSpec {
+        GridSpec {
+            label: "sweep".into(),
+            selectors: vec![base.selector.clone()],
+            modes: vec![base.mode],
+            avails: vec![base.avail],
+            partitions: vec![base.partition],
+            seeds: vec![base.seed],
+            base,
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.selectors.len() * self.modes.len() * self.avails.len() * self.partitions.len()
+    }
+
+    pub fn total_runs(&self) -> usize {
+        self.cells() * self.seeds.len()
+    }
+
+    /// Expand into per-cell config groups, cell-major / seed-minor, in a
+    /// fixed axis order (selector, mode, avail, partition) so reports are
+    /// reproducible run-to-run.
+    pub fn expand(&self) -> Vec<GridCell> {
+        let mut cells = Vec::with_capacity(self.cells());
+        for sel in &self.selectors {
+            for mode in &self.modes {
+                for avail in &self.avails {
+                    for part in &self.partitions {
+                        let label = format!(
+                            "{sel}-{}-{}-{}",
+                            mode_label(mode),
+                            avail_label(*avail),
+                            part.label()
+                        );
+                        let mut runs = Vec::with_capacity(self.seeds.len());
+                        for &seed in &self.seeds {
+                            let mut c = self.base.clone();
+                            if sel == "relay" {
+                                c = c.relay();
+                            } else {
+                                c.selector = sel.clone();
+                            }
+                            c.mode = *mode;
+                            c.avail = *avail;
+                            c.partition = *part;
+                            c.seed = seed;
+                            c.label = format!("{label}/s{seed}");
+                            runs.push(c);
+                        }
+                        cells.push(GridCell {
+                            label,
+                            selector: sel.clone(),
+                            mode: mode_label(mode),
+                            avail: avail_label(*avail).to_string(),
+                            partition: part.label(),
+                            runs,
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One expanded grid cell: its report key plus the per-seed configs.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub label: String,
+    pub selector: String,
+    pub mode: String,
+    pub avail: String,
+    pub partition: String,
+    pub runs: Vec<ExpConfig>,
+}
+
+fn mode_label(m: &RoundMode) -> String {
+    match m {
+        RoundMode::OverCommit { factor } => format!("oc{factor}"),
+        RoundMode::Deadline { deadline } => format!("dl{deadline}"),
+    }
+}
+
+fn avail_label(a: AvailMode) -> &'static str {
+    match a {
+        AvailMode::AllAvail => "all",
+        AvailMode::DynAvail => "dyn",
+    }
+}
+
+/// Sweep execution knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOpts {
+    /// Concurrent experiments (0 = one per core, capped at 8).
+    pub workers: usize,
+    /// Stream per-run progress/ETA lines to stderr.
+    pub progress: bool,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts { workers: 0, progress: false }
+    }
+}
+
+/// The aggregated result of one grid run.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub label: String,
+    pub cells: Vec<CellSummary>,
+    /// Total experiments executed (cells × seeds).
+    pub runs: usize,
+}
+
+impl SweepReport {
+    /// Deterministic report JSON: everything here is a pure function of the
+    /// grid spec + seeds (no wall-clock, no worker count).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", Json::Str("relay-sweep-v1".into())),
+            ("label", Json::Str(self.label.clone())),
+            ("runs", num(self.runs as f64)),
+            ("cells", arr(self.cells.iter().map(|c| c.to_json()))),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path.as_ref(), self.to_json().to_string())
+            .with_context(|| format!("writing sweep report {:?}", path.as_ref()))
+    }
+
+    /// Paper-style comparison table over cells.
+    pub fn print_table(&self) {
+        println!(
+            "  {:<36} {:>5} {:>8} {:>7} {:>8} {:>7}",
+            "cell", "seeds", "acc", "±std", "res(h)", "waste%"
+        );
+        for c in &self.cells {
+            println!(
+                "  {:<36} {:>5} {:>8} {:>7} {:>8.2} {:>6.1}%",
+                c.label,
+                c.seeds,
+                c.mean_accuracy
+                    .map(|a| format!("{:.1}%", 100.0 * a))
+                    .unwrap_or_else(|| "n/a".into()),
+                c.std_accuracy
+                    .map(|s| format!("{:.2}", 100.0 * s))
+                    .unwrap_or_else(|| "-".into()),
+                c.mean_resource_hours,
+                100.0 * c.mean_waste_fraction,
+            );
+        }
+    }
+}
+
+/// Run every config on the worker pool; results come back in input order, so
+/// downstream grouping/aggregation is independent of scheduling. When
+/// experiments themselves run concurrently, each run's inner per-learner
+/// training pool is pinned to one thread (nested pools oversubscribe the
+/// machine without helping wall-clock; results are unaffected either way).
+pub fn run_many(
+    runs: Vec<(ExpConfig, Arc<dyn Executor>)>,
+    workers: usize,
+    progress: bool,
+) -> Result<Vec<ExperimentResult>> {
+    let workers = if workers == 0 {
+        threadpool::default_workers().min(8)
+    } else {
+        workers
+    };
+    let total = runs.len();
+    // Experiments only truly run concurrently when both the pool and the
+    // run list allow it; only then pin the inner training pools (a single
+    // experiment on a wide pool should keep its inner parallelism).
+    let concurrent = workers.min(total.max(1)) > 1;
+    let done = AtomicUsize::new(0);
+    let done_ref = &done;
+    let t0 = Instant::now();
+    let jobs: Vec<_> = runs
+        .into_iter()
+        .map(|(mut cfg, exec)| {
+            if concurrent {
+                cfg.workers = 1;
+            }
+            let label = if cfg.label.is_empty() {
+                cfg.selector.clone()
+            } else {
+                cfg.label.clone()
+            };
+            move || {
+                let r = run_experiment(cfg, exec)
+                    .with_context(|| format!("sweep run '{label}' failed"));
+                let k = done_ref.fetch_add(1, Ordering::SeqCst) + 1;
+                if progress {
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    let eta = elapsed / k as f64 * (total - k) as f64;
+                    match &r {
+                        Ok(res) => eprintln!(
+                            "[sweep] {k:>4}/{total} {} ({elapsed:.1}s elapsed, eta {eta:.0}s)",
+                            res.summary()
+                        ),
+                        Err(e) => eprintln!(
+                            "[sweep] {k:>4}/{total} {label} FAILED: {e:#} ({elapsed:.1}s elapsed)"
+                        ),
+                    }
+                }
+                r
+            }
+        })
+        .collect();
+    threadpool::run_parallel(workers, jobs).into_iter().collect()
+}
+
+/// Execute a whole grid and aggregate per-cell summaries.
+pub fn run_grid(
+    spec: &GridSpec,
+    exec: Arc<dyn Executor>,
+    opts: &SweepOpts,
+) -> Result<SweepReport> {
+    let cells = spec.expand();
+    let per_cell = spec.seeds.len();
+    let mut flat = Vec::with_capacity(spec.total_runs());
+    for cell in &cells {
+        for cfg in &cell.runs {
+            flat.push((cfg.clone(), Arc::clone(&exec)));
+        }
+    }
+    if opts.progress {
+        eprintln!(
+            "[sweep] {}: {} cells x {} seeds = {} runs",
+            spec.label,
+            cells.len(),
+            per_cell,
+            flat.len()
+        );
+    }
+    let results = run_many(flat, opts.workers, opts.progress)?;
+    let mut summaries = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        let group = &results[i * per_cell..(i + 1) * per_cell];
+        let mut s = CellSummary::from_results(cell.label.clone(), group);
+        s.selector = cell.selector.clone();
+        s.mode = cell.mode.clone();
+        s.avail = cell.avail.clone();
+        s.partition = cell.partition.clone();
+        summaries.push(s);
+    }
+    Ok(SweepReport {
+        label: spec.label.clone(),
+        cells: summaries,
+        runs: results.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ExpConfig {
+        ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 12,
+            rounds: 3,
+            target_participants: 3,
+            mean_samples: 8,
+            test_per_class: 2,
+            eval_every: 2,
+            lr: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn expansion_is_cell_major_and_counts_match() {
+        let spec = GridSpec {
+            label: "x".into(),
+            selectors: vec!["random".into(), "oort".into()],
+            modes: vec![
+                RoundMode::OverCommit { factor: 1.3 },
+                RoundMode::Deadline { deadline: 60.0 },
+            ],
+            avails: vec![AvailMode::AllAvail],
+            partitions: vec![PartitionScheme::UniformIid],
+            seeds: vec![1, 2, 3],
+            base: base(),
+        };
+        assert_eq!(spec.cells(), 4);
+        assert_eq!(spec.total_runs(), 12);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].label, "random-oc1.3-all-iid");
+        assert_eq!(cells[1].label, "random-dl60-all-iid");
+        assert_eq!(cells[2].label, "oort-oc1.3-all-iid");
+        for c in &cells {
+            assert_eq!(c.runs.len(), 3);
+            assert_eq!(
+                c.runs.iter().map(|r| r.seed).collect::<Vec<_>>(),
+                vec![1, 2, 3]
+            );
+        }
+    }
+
+    #[test]
+    fn relay_axis_enables_full_stack() {
+        let mut spec = GridSpec::new(base());
+        spec.selectors = vec!["relay".into()];
+        let cells = spec.expand();
+        let cfg = &cells[0].runs[0];
+        assert_eq!(cfg.selector, "priority");
+        assert!(cfg.use_saa && cfg.apt);
+        assert!(cells[0].label.starts_with("relay-"));
+    }
+
+    #[test]
+    fn run_many_handles_empty_input() {
+        let out = run_many(Vec::new(), 4, false).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_cell_grid_runs_and_reports() {
+        use crate::runtime::{builtin_variant, NativeExecutor};
+        let spec = GridSpec {
+            seeds: vec![5, 6],
+            ..GridSpec::new(base())
+        };
+        let exec: Arc<dyn Executor> =
+            Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+        let r = run_grid(&spec, exec, &SweepOpts { workers: 2, progress: false }).unwrap();
+        assert_eq!(r.runs, 2);
+        assert_eq!(r.cells.len(), 1);
+        assert_eq!(r.cells[0].seeds, 2);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(
+            parsed.get("format").and_then(|f| f.as_str()),
+            Some("relay-sweep-v1")
+        );
+        assert_eq!(parsed.get("runs").and_then(|x| x.as_usize()), Some(2));
+    }
+}

@@ -1,4 +1,15 @@
 //! Synthetic diurnal availability traces + replay queries + trace file IO.
+//!
+//! Two representations share one generator (`learner_sessions`, a pure
+//! function of the population root RNG + learner id + config, so both are
+//! bit-identical):
+//!
+//! * [`TraceSet`] — every learner's week materialized up front (figure
+//!   harness, trace statistics, file IO);
+//! * [`LazyTraceSet`] — sessions generated at first touch: construction does
+//!   no trace work, and memory is bounded by the learners actually queried
+//!   (the coordinator's scale path; a run that probes the whole population
+//!   still materializes everyone by its first check-in sweep).
 
 use std::path::Path;
 
@@ -6,6 +17,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::{DAY, WEEK};
 use crate::util::json::{arr, num, obj, Json};
+use crate::util::lazy::LazySlots;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -70,60 +82,115 @@ pub struct TraceSet {
     pub config: TraceConfig,
 }
 
+/// One learner's week of charging sessions, drawn from the population root
+/// RNG (`Rng::new(seed ^ 0x7EAC_E5E7)`). Pure function of
+/// (root, learner, config): [`TraceSet::generate`] and [`LazyTraceSet`] both
+/// go through here, so eager and lazy traces are bit-identical.
+fn learner_sessions(root: &Rng, learner: usize, config: &TraceConfig) -> Vec<(f64, f64)> {
+    let mut rng = root.stream(learner as u64);
+    // Device-local night peak: common ~2am peak with per-device
+    // jitter (timezones, habits) -> pronounced aggregate diurnal
+    // cycle like the paper's Fig. 14a.
+    let phase = (2.0 * 3600.0 + rng.normal() * config.phase_jitter).rem_euclid(DAY);
+    let mut s = Vec::new();
+    // near-deterministic nightly charging block (regular devices)
+    if let Some((dur_mean, jitter)) = config.nightly_block {
+        let start_of_day = (phase - dur_mean / 2.0).rem_euclid(DAY);
+        for day in 0..7 {
+            let start = (day as f64 * DAY + start_of_day + rng.normal() * jitter).max(0.0);
+            let dur = (dur_mean + rng.normal() * jitter).max(1800.0);
+            let end = (start + dur).min(WEEK);
+            if start < WEEK {
+                s.push((start, end));
+            }
+        }
+    }
+    let mut t = rng.uniform(0.0, config.peak_gap);
+    while t < WEEK {
+        // diurnal gap modulation: cosine bump, peak at `phase`
+        let day_pos = (t - phase).rem_euclid(DAY) / DAY; // 0 at peak
+        let cycle = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * day_pos).cos());
+        let gap_scale = 1.0 + (config.diurnal_strength - 1.0) * cycle;
+        let dur = if rng.bool(config.overnight_frac) {
+            // overnight charge: hours-long
+            rng.lognormal((4.0 * 3600.0f64).ln(), 0.5)
+        } else {
+            rng.lognormal(config.median_session.ln(), config.session_sigma)
+        };
+        let dur = dur.clamp(20.0, 12.0 * 3600.0);
+        let end = (t + dur).min(WEEK);
+        s.push((t, end));
+        let gap = rng.exponential(1.0 / (config.peak_gap * gap_scale));
+        t = end + gap.max(30.0);
+    }
+    // sort + merge overlaps (nightly block vs random sessions)
+    s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(s.len());
+    for (a, b) in s {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    merged
+}
+
+// ---- session-list queries shared by the eager and lazy trace types ------
+
+#[inline]
+fn wrap_week(t: f64) -> f64 {
+    t.rem_euclid(WEEK)
+}
+
+/// Session containing wrapped time `tw`, if any.
+fn session_at_in(s: &[(f64, f64)], tw: f64) -> Option<(f64, f64)> {
+    let idx = s.partition_point(|&(start, _)| start <= tw);
+    if idx == 0 {
+        return None;
+    }
+    let (start, end) = s[idx - 1];
+    (tw < end).then_some((start, end))
+}
+
+/// Available for the whole interval [t, t+dur]? Conservative: the session
+/// containing t must extend past t+dur (crossing the week boundary is
+/// handled by re-querying).
+fn available_through_in(s: &[(f64, f64)], t: f64, dur: f64) -> bool {
+    let tw = wrap_week(t);
+    match session_at_in(s, tw) {
+        None => false,
+        Some((_, end)) => {
+            if tw + dur <= end {
+                true
+            } else if end >= WEEK - 1e-9 {
+                // session clipped at week end: continue into next cycle
+                available_through_in(s, 0.0, dur - (end - tw))
+            } else {
+                false
+            }
+        }
+    }
+}
+
+/// Sampled 0/1 availability series over one week (forecaster input).
+fn sample_series_in(s: &[(f64, f64)], step: f64) -> Vec<f64> {
+    let n = (WEEK / step) as usize;
+    (0..n)
+        .map(|i| {
+            if session_at_in(s, wrap_week(i as f64 * step)).is_some() {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
 impl TraceSet {
     /// Generate traces for `n` learners, deterministic per seed.
     pub fn generate(n: usize, seed: u64, config: TraceConfig) -> TraceSet {
         let root = Rng::new(seed ^ 0x7EAC_E5E7);
-        let mut sessions = Vec::with_capacity(n);
-        for l in 0..n {
-            let mut rng = root.stream(l as u64);
-            // Device-local night peak: common ~2am peak with per-device
-            // jitter (timezones, habits) -> pronounced aggregate diurnal
-            // cycle like the paper's Fig. 14a.
-            let phase = (2.0 * 3600.0 + rng.normal() * config.phase_jitter).rem_euclid(DAY);
-            let mut s = Vec::new();
-            // near-deterministic nightly charging block (regular devices)
-            if let Some((dur_mean, jitter)) = config.nightly_block {
-                let start_of_day = (phase - dur_mean / 2.0).rem_euclid(DAY);
-                for day in 0..7 {
-                    let start =
-                        (day as f64 * DAY + start_of_day + rng.normal() * jitter).max(0.0);
-                    let dur = (dur_mean + rng.normal() * jitter).max(1800.0);
-                    let end = (start + dur).min(WEEK);
-                    if start < WEEK {
-                        s.push((start, end));
-                    }
-                }
-            }
-            let mut t = rng.uniform(0.0, config.peak_gap);
-            while t < WEEK {
-                // diurnal gap modulation: cosine bump, peak at `phase`
-                let day_pos = (t - phase).rem_euclid(DAY) / DAY; // 0 at peak
-                let cycle = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * day_pos).cos());
-                let gap_scale = 1.0 + (config.diurnal_strength - 1.0) * cycle;
-                let dur = if rng.bool(config.overnight_frac) {
-                    // overnight charge: hours-long
-                    rng.lognormal((4.0 * 3600.0f64).ln(), 0.5)
-                } else {
-                    rng.lognormal(config.median_session.ln(), config.session_sigma)
-                };
-                let dur = dur.clamp(20.0, 12.0 * 3600.0);
-                let end = (t + dur).min(WEEK);
-                s.push((t, end));
-                let gap = rng.exponential(1.0 / (config.peak_gap * gap_scale));
-                t = end + gap.max(30.0);
-            }
-            // sort + merge overlaps (nightly block vs random sessions)
-            s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(s.len());
-            for (a, b) in s {
-                match merged.last_mut() {
-                    Some(last) if a <= last.1 => last.1 = last.1.max(b),
-                    _ => merged.push((a, b)),
-                }
-            }
-            sessions.push(merged);
-        }
+        let sessions = (0..n).map(|l| learner_sessions(&root, l, &config)).collect();
         TraceSet { sessions, config }
     }
 
@@ -138,18 +205,12 @@ impl TraceSet {
     /// Wrap absolute time into the one-week trace window.
     #[inline]
     fn wrap(t: f64) -> f64 {
-        t.rem_euclid(WEEK)
+        wrap_week(t)
     }
 
     /// Session containing wrapped time `tw`, if any.
     fn session_at(&self, learner: usize, tw: f64) -> Option<(f64, f64)> {
-        let s = &self.sessions[learner];
-        let idx = s.partition_point(|&(start, _)| start <= tw);
-        if idx == 0 {
-            return None;
-        }
-        let (start, end) = s[idx - 1];
-        (tw < end).then_some((start, end))
+        session_at_in(&self.sessions[learner], tw)
     }
 
     /// Is the learner available (charging) at absolute time `t`?
@@ -160,22 +221,7 @@ impl TraceSet {
     /// Is the learner available for the whole interval [t, t+dur]?
     /// (Used to decide whether a participant completes training or drops.)
     pub fn available_through(&self, learner: usize, t: f64, dur: f64) -> bool {
-        // Conservative: the session containing t must extend past t+dur
-        // (crossing the week boundary is handled by re-querying).
-        let tw = Self::wrap(t);
-        match self.session_at(learner, tw) {
-            None => false,
-            Some((_, end)) => {
-                if tw + dur <= end {
-                    true
-                } else if end >= WEEK - 1e-9 {
-                    // session clipped at week end: continue into next cycle
-                    self.available_through(learner, 0.0, dur - (end - tw))
-                } else {
-                    false
-                }
-            }
-        }
+        available_through_in(&self.sessions[learner], t, dur)
     }
 
     /// Empirical probability the learner is available throughout
@@ -219,16 +265,7 @@ impl TraceSet {
 
     /// Sampled 0/1 availability series for one learner (forecaster input).
     pub fn sample_series(&self, learner: usize, step: f64) -> Vec<f64> {
-        let n = (WEEK / step) as usize;
-        (0..n)
-            .map(|i| {
-                if self.available(learner, i as f64 * step) {
-                    1.0
-                } else {
-                    0.0
-                }
-            })
-            .collect()
+        sample_series_in(&self.sessions[learner], step)
     }
 
     // ---- file IO (replayable trace artifacts) ---------------------------
@@ -267,6 +304,69 @@ impl TraceSet {
             sessions.push(s);
         }
         Ok(TraceSet { sessions, config: TraceConfig::default() })
+    }
+}
+
+/// Per-learner traces generated on demand (at most once each, thread-safe).
+///
+/// `TraceSet::generate` materializes all `n` learners' sessions at
+/// construction — tens of seconds and gigabytes at 100k+ learners even
+/// though an experiment only replays the learners it actually touches.
+/// `LazyTraceSet` keeps the population root RNG and generates a learner's
+/// week at first touch, bit-identically to the eager path (both call
+/// `learner_sessions`).
+pub struct LazyTraceSet {
+    root: Rng,
+    config: TraceConfig,
+    slots: LazySlots<Vec<(f64, f64)>>,
+}
+
+impl LazyTraceSet {
+    /// Lazy population handle; does no trace generation.
+    pub fn new(n: usize, seed: u64, config: TraceConfig) -> LazyTraceSet {
+        LazyTraceSet {
+            root: Rng::new(seed ^ 0x7EAC_E5E7),
+            config,
+            slots: LazySlots::new(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.config
+    }
+
+    /// This learner's sessions, generating them at first touch.
+    pub fn sessions(&self, learner: usize) -> &[(f64, f64)] {
+        self.slots
+            .get_or_init(learner, || learner_sessions(&self.root, learner, &self.config))
+    }
+
+    /// How many learners' traces have been generated so far.
+    pub fn materialized(&self) -> usize {
+        self.slots.initialized()
+    }
+
+    /// Is the learner available (charging) at absolute time `t`?
+    pub fn available(&self, learner: usize, t: f64) -> bool {
+        session_at_in(self.sessions(learner), wrap_week(t)).is_some()
+    }
+
+    /// Is the learner available for the whole interval [t, t+dur]?
+    pub fn available_through(&self, learner: usize, t: f64, dur: f64) -> bool {
+        available_through_in(self.sessions(learner), t, dur)
+    }
+
+    /// Sampled 0/1 availability series for one learner (forecaster input).
+    pub fn sample_series(&self, learner: usize, step: f64) -> Vec<f64> {
+        sample_series_in(self.sessions(learner), step)
     }
 }
 
@@ -386,6 +486,31 @@ mod tests {
             }
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn lazy_is_actually_lazy_and_identical() {
+        let eager = TraceSet::generate(20, 6, TraceConfig::default());
+        let lazy = LazyTraceSet::new(20, 6, TraceConfig::default());
+        assert_eq!(lazy.materialized(), 0);
+        // out-of-order touches must not perturb anything
+        assert_eq!(eager.sessions[13].as_slice(), lazy.sessions(13));
+        assert_eq!(lazy.materialized(), 1);
+        for l in 0..20 {
+            assert_eq!(eager.sessions[l].as_slice(), lazy.sessions(l), "learner {l}");
+        }
+        assert_eq!(lazy.materialized(), 20);
+        // query surface agrees too
+        for l in (0..20).step_by(3) {
+            for t in [0.0, 1234.5, 3.2 * DAY, WEEK + 777.0] {
+                assert_eq!(eager.available(l, t), lazy.available(l, t));
+                assert_eq!(
+                    eager.available_through(l, t, 600.0),
+                    lazy.available_through(l, t, 600.0)
+                );
+            }
+            assert_eq!(eager.sample_series(l, 1800.0), lazy.sample_series(l, 1800.0));
+        }
     }
 
     #[test]

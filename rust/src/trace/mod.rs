@@ -15,7 +15,7 @@
 
 pub mod generator;
 
-pub use generator::{TraceConfig, TraceSet};
+pub use generator::{LazyTraceSet, TraceConfig, TraceSet};
 
 pub const DAY: f64 = 86_400.0;
 pub const WEEK: f64 = 7.0 * DAY;

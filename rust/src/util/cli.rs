@@ -72,6 +72,16 @@ impl Args {
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.str_opt(name), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Comma-separated list flag (`--selectors random,oort`); empty entries
+    /// are dropped, whitespace around entries is trimmed.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.str_or(name, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +120,15 @@ mod tests {
     #[should_panic(expected = "expects an integer")]
     fn bad_int_panics() {
         parse("run --rounds abc").usize_or("rounds", 0);
+    }
+
+    #[test]
+    fn list_flags_split_and_trim() {
+        let a = parse("sweep --selectors random,oort,priority");
+        assert_eq!(a.list_or("selectors", ""), vec!["random", "oort", "priority"]);
+        assert_eq!(a.list_or("modes", "oc,dl"), vec!["oc", "dl"]);
+        let b = Args::parse(["sweep".into(), "--x".into(), " a , b ,".into()]);
+        assert_eq!(b.list_or("x", ""), vec!["a", "b"]);
+        assert!(b.list_or("missing", "").is_empty());
     }
 }

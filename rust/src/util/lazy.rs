@@ -1,0 +1,61 @@
+//! Lazy per-index slot table: each slot is initialized at most once, at
+//! first touch, thread-safely. Shared by the trace and forecaster scale
+//! paths (`trace::LazyTraceSet`, `forecast::ForecasterBank`) so the
+//! on-demand machinery — and its eager/lazy-equivalence guarantees — live
+//! in one place.
+
+use std::sync::OnceLock;
+
+pub struct LazySlots<T> {
+    slots: Vec<OnceLock<T>>,
+}
+
+impl<T> LazySlots<T> {
+    /// `n` empty slots; does no initialization work.
+    pub fn new(n: usize) -> LazySlots<T> {
+        LazySlots { slots: (0..n).map(|_| OnceLock::new()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The slot's value, computing it via `init` at first touch.
+    pub fn get_or_init<F: FnOnce() -> T>(&self, index: usize, init: F) -> &T {
+        self.slots[index].get_or_init(init)
+    }
+
+    /// How many slots have been initialized so far.
+    pub fn initialized(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initializes_each_slot_at_most_once() {
+        let slots: LazySlots<usize> = LazySlots::new(3);
+        assert_eq!(slots.len(), 3);
+        assert_eq!(slots.initialized(), 0);
+        let a = slots.get_or_init(1, || 41) as *const usize;
+        assert_eq!(slots.initialized(), 1);
+        let b = slots.get_or_init(1, || panic!("must not re-init")) as *const usize;
+        assert_eq!(a, b);
+        assert_eq!(*slots.get_or_init(1, || 0), 41);
+        assert_eq!(slots.initialized(), 1);
+    }
+
+    #[test]
+    fn empty_table() {
+        let slots: LazySlots<u8> = LazySlots::new(0);
+        assert!(slots.is_empty());
+        assert_eq!(slots.initialized(), 0);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod lazy;
 pub mod prop;
 pub mod rng;
 pub mod stats;

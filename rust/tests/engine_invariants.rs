@@ -107,9 +107,14 @@ fn check_invariants(cfg: &ExpConfig) -> PropResult {
             rec.unique_participants <= cfg.total_learners,
             "unique participants exceed population",
         )?;
+        // Fresh updates come only from this round's cohort: every fresh
+        // update is a selected participant that finished before round end.
         prop_assert(
-            rec.fresh_updates + rec.selected >= rec.fresh_updates,
-            "fresh exceeds selected",
+            rec.fresh_updates <= rec.selected,
+            format!(
+                "round {}: fresh updates {} exceed the selected cohort {}",
+                rec.round, rec.fresh_updates, rec.selected
+            ),
         )?;
         if let Some(acc) = rec.test_accuracy {
             prop_assert((0.0..=1.0).contains(&acc), format!("accuracy {acc} out of range"))?;

@@ -1,0 +1,138 @@
+//! Lazy-vs-eager equivalence for the scale refactor: lazily-generated
+//! traces and forecasters must be bit-identical to eager materialization,
+//! whole experiments must produce identical results, and a 100k-learner
+//! DynAvail coordinator must construct without touching a single trace.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_experiment_eager, Coordinator};
+use relay::forecast::SeasonalForecaster;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::trace::{LazyTraceSet, TraceConfig, TraceSet};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+#[test]
+fn lazy_sessions_bit_identical_to_eager() {
+    for seed in [0u64, 9, 1234, 0xFFFF_FFFF_FFFF] {
+        let eager = TraceSet::generate(50, seed, TraceConfig::default());
+        let lazy = LazyTraceSet::new(50, seed, TraceConfig::default());
+        // touch in reverse order to prove per-learner independence
+        for l in (0..50).rev() {
+            assert_eq!(
+                eager.sessions[l].as_slice(),
+                lazy.sessions(l),
+                "seed {seed} learner {l}"
+            );
+        }
+    }
+    // the regular-charger config (nightly block) too
+    let eager = TraceSet::generate(20, 5, TraceConfig::regular());
+    let lazy = LazyTraceSet::new(20, 5, TraceConfig::regular());
+    for l in 0..20 {
+        assert_eq!(eager.sessions[l].as_slice(), lazy.sessions(l));
+    }
+}
+
+#[test]
+fn lazy_forecaster_probs_match_eager() {
+    let eager = TraceSet::generate(10, 3, TraceConfig::default());
+    let lazy = LazyTraceSet::new(10, 3, TraceConfig::default());
+    for l in 0..10 {
+        let fe = SeasonalForecaster::train_on_week(&eager.sample_series(l, 1800.0), 1800.0);
+        let fl = SeasonalForecaster::train_on_week(&lazy.sample_series(l, 1800.0), 1800.0);
+        for h in 0..168 {
+            let (a, b) = (h as f64 * 3600.0, h as f64 * 3600.0 + 7200.0);
+            assert_eq!(fe.prob_slot(a, b), fl.prob_slot(a, b), "learner {l} hour {h}");
+        }
+    }
+}
+
+#[test]
+fn experiment_results_identical_lazy_vs_eager() {
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 30,
+        rounds: 10,
+        target_participants: 5,
+        avail: AvailMode::DynAvail,
+        mode: RoundMode::Deadline { deadline: 80.0 },
+        use_saa: true,
+        mean_samples: 10,
+        test_per_class: 4,
+        eval_every: 2,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let lazy = run_experiment(cfg.clone(), exec()).unwrap();
+    let eager = run_experiment_eager(cfg, exec()).unwrap();
+    assert_eq!(lazy.final_accuracy(), eager.final_accuracy());
+    assert_eq!(lazy.rounds.len(), eager.rounds.len());
+    for (a, b) in lazy.rounds.iter().zip(&eager.rounds) {
+        assert_eq!(a.selected, b.selected, "round {}", a.round);
+        assert_eq!(a.fresh_updates, b.fresh_updates, "round {}", a.round);
+        assert_eq!(a.stale_updates, b.stale_updates, "round {}", a.round);
+        assert_eq!(a.dropouts, b.dropouts, "round {}", a.round);
+        assert_eq!(a.failed, b.failed, "round {}", a.round);
+        assert_eq!(a.round_duration, b.round_duration, "round {}", a.round);
+        assert_eq!(a.cum_resource_secs, b.cum_resource_secs, "round {}", a.round);
+        assert_eq!(a.cum_waste_secs, b.cum_waste_secs, "round {}", a.round);
+        assert_eq!(a.test_accuracy, b.test_accuracy, "round {}", a.round);
+    }
+}
+
+#[test]
+fn huge_population_constructs_without_materializing() {
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 100_000,
+        rounds: 1,
+        target_participants: 10,
+        avail: AvailMode::DynAvail,
+        mean_samples: 4,
+        test_per_class: 2,
+        eval_every: 1000,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg, exec()).unwrap();
+    assert_eq!(
+        coord.materialized_traces(),
+        0,
+        "construction must not generate any learner trace"
+    );
+    assert_eq!(
+        coord.trained_forecasters(),
+        0,
+        "construction must not train any forecaster"
+    );
+}
+
+#[test]
+fn forecasters_train_only_for_available_checkins() {
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 200,
+        rounds: 2,
+        target_participants: 5,
+        avail: AvailMode::DynAvail,
+        mean_samples: 6,
+        test_per_class: 2,
+        eval_every: 1000,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, exec()).unwrap();
+    let r = coord.run().unwrap();
+    assert_eq!(r.rounds.len(), 2);
+    // availability checks touch traces; forecasters are only trained for
+    // learners that were actually available at a check-in window
+    assert!(coord.materialized_traces() >= coord.trained_forecasters());
+    assert!(
+        coord.trained_forecasters() < 200,
+        "charging traces are mostly-off; some learners must never be probed"
+    );
+}

@@ -1,0 +1,102 @@
+//! Property tests over the sim/trace substrate (via `relay::util::prop`):
+//! delivery-queue determinism under `deliver_at` ties, trace well-formedness
+//! across randomized generator configs, and lazy==eager trace equivalence.
+
+use relay::sim::DeliveryQueue;
+use relay::trace::{LazyTraceSet, TraceConfig, TraceSet, WEEK};
+use relay::util::prop::{prop_assert, prop_check, PropResult};
+use relay::util::rng::Rng;
+
+fn random_trace_config(rng: &mut Rng) -> TraceConfig {
+    TraceConfig {
+        median_session: rng.uniform(60.0, 1200.0),
+        session_sigma: rng.uniform(0.4, 1.5),
+        overnight_frac: rng.f64() * 0.3,
+        peak_gap: rng.uniform(1800.0, 6.0 * 3600.0),
+        diurnal_strength: rng.uniform(1.0, 8.0),
+        phase_jitter: rng.uniform(600.0, 4.0 * 3600.0),
+        nightly_block: if rng.bool(0.4) {
+            Some((rng.uniform(3600.0, 6.0 * 3600.0), rng.uniform(60.0, 900.0)))
+        } else {
+            None
+        },
+    }
+}
+
+#[test]
+fn delivery_queue_deterministic_under_ties() {
+    prop_check(100, 0x71E5, |rng| {
+        let n = rng.range(1, 40);
+        // deliver_at drawn from a tiny discrete set so ties are the norm
+        let times: Vec<f64> = (0..n).map(|_| rng.below(4) as f64).collect();
+        let mut q1 = DeliveryQueue::default();
+        let mut q2 = DeliveryQueue::default();
+        for (i, &t) in times.iter().enumerate() {
+            q1.push(t, i);
+            q2.push(t, i);
+        }
+        let mut d1: Vec<(i64, usize)> = Vec::new();
+        let mut d2: Vec<(i64, usize)> = Vec::new();
+        for cut in [0.0, 1.0, 3.0] {
+            d1.extend(q1.due(cut).into_iter().map(|p| (p.deliver_at as i64, p.item)));
+            d2.extend(q2.due(cut).into_iter().map(|p| (p.deliver_at as i64, p.item)));
+        }
+        // identical push sequences must drain in an identical order, even
+        // among equal deliver_at ties (the coordinator's stale-update
+        // aggregation order — and therefore the model — depends on it)
+        prop_assert(d1 == d2, format!("tie order diverged: {d1:?} vs {d2:?}"))?;
+        prop_assert(
+            d1.windows(2).all(|w| w[0].0 <= w[1].0),
+            format!("deliveries out of time order: {d1:?}"),
+        )?;
+        prop_assert(
+            d1.len() == times.len(),
+            format!("drained {} of {} due items", d1.len(), times.len()),
+        )?;
+        prop_assert(q1.is_empty() && q2.is_empty(), "queue not fully drained")
+    });
+}
+
+#[test]
+fn generated_traces_sorted_nonoverlapping_within_week() {
+    prop_check(30, 0x7ACE, |rng| {
+        let config = random_trace_config(rng);
+        let n = rng.range(1, 12);
+        let t = TraceSet::generate(n, rng.next_u64(), config);
+        for (l, s) in t.sessions.iter().enumerate() {
+            for w in s.windows(2) {
+                prop_assert(
+                    w[0].1 <= w[1].0,
+                    format!("learner {l}: overlapping sessions {w:?}"),
+                )?;
+            }
+            for &(a, b) in s {
+                prop_assert(a < b, format!("learner {l}: empty session ({a},{b})"))?;
+                prop_assert(
+                    a >= 0.0 && b <= WEEK + 1e-9,
+                    format!("learner {l}: session outside week ({a},{b})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lazy_matches_eager_for_random_populations() {
+    prop_check(20, 0x1A27, |rng| {
+        let config = random_trace_config(rng);
+        let n = rng.range(1, 20);
+        let seed = rng.next_u64();
+        let eager = TraceSet::generate(n, seed, config);
+        let lazy = LazyTraceSet::new(n, seed, config);
+        prop_assert(lazy.materialized() == 0, "lazy generated traces up front")?;
+        for l in 0..n {
+            prop_assert(
+                eager.sessions[l].as_slice() == lazy.sessions(l),
+                format!("learner {l} diverged (seed {seed})"),
+            )?;
+        }
+        prop_assert(lazy.materialized() == n, "materialized count wrong after touch")
+    });
+}

@@ -1,0 +1,116 @@
+//! Sweep-engine integration tests: the aggregated grid report must be
+//! byte-identical regardless of worker count (experiment-level parallelism
+//! must never leak into results), and grid bookkeeping must match the spec.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::data::partition::PartitionScheme;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::sweep::{run_grid, GridSpec, SweepOpts};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+fn tiny_base() -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 16,
+        rounds: 5,
+        target_participants: 4,
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        // default 5-round cooldown starves a 16-learner population (safa
+        // selects everyone); 1 keeps every selector active each round pair
+        cooldown_rounds: 1,
+        lr: 0.1,
+        ..Default::default()
+    }
+}
+
+/// The acceptance grid: 4 selectors x 2 round modes x 3 seeds = 24 runs.
+fn paper_grid() -> GridSpec {
+    GridSpec {
+        label: "det".into(),
+        selectors: ["random", "oort", "priority", "safa"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        modes: vec![
+            RoundMode::OverCommit { factor: 1.3 },
+            RoundMode::Deadline { deadline: 40.0 },
+        ],
+        avails: vec![AvailMode::AllAvail],
+        partitions: vec![PartitionScheme::UniformIid],
+        seeds: vec![1, 1001, 2001],
+        base: tiny_base(),
+    }
+}
+
+#[test]
+fn grid_report_byte_identical_across_worker_counts() {
+    let spec = paper_grid();
+    assert_eq!(spec.total_runs(), 24);
+    let a = run_grid(&spec, exec(), &SweepOpts { workers: 1, progress: false }).unwrap();
+    let b = run_grid(&spec, exec(), &SweepOpts { workers: 8, progress: false }).unwrap();
+    assert_eq!(a.cells.len(), 8);
+    assert_eq!(a.runs, 24);
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "aggregated report must not depend on worker count"
+    );
+}
+
+#[test]
+fn grid_cells_carry_meaningful_aggregates() {
+    let spec = paper_grid();
+    let r = run_grid(&spec, exec(), &SweepOpts { workers: 4, progress: false }).unwrap();
+    for c in &r.cells {
+        assert_eq!(c.seeds, 3, "{}", c.label);
+        assert!(
+            c.mean_resource_hours > 0.0,
+            "{}: AllAvail cells must spend resources",
+            c.label
+        );
+        let acc = c
+            .mean_accuracy
+            .unwrap_or_else(|| panic!("{}: eval_every=2 over 5 rounds must eval", c.label));
+        assert!((0.0..=1.0).contains(&acc), "{}: acc {acc}", c.label);
+        assert!(!c.selector.is_empty() && !c.mode.is_empty());
+    }
+}
+
+#[test]
+fn dyn_avail_grid_aggregates_without_panicking() {
+    let mut spec = GridSpec::new(tiny_base());
+    spec.selectors = vec!["random".into(), "relay".into()];
+    spec.avails = vec![AvailMode::DynAvail];
+    spec.seeds = vec![7, 1007];
+    let r = run_grid(&spec, exec(), &SweepOpts { workers: 4, progress: false }).unwrap();
+    assert_eq!(r.runs, 4);
+    assert_eq!(r.cells.len(), 2);
+    for c in &r.cells {
+        assert_eq!(c.avail, "dyn");
+        // tiny DynAvail populations may fail every round; the aggregates
+        // must still be well-formed (no NaN leaking into the JSON)
+        let json = c.to_json().to_string();
+        assert!(!json.contains("NaN"), "{json}");
+    }
+}
+
+#[test]
+fn report_roundtrips_to_disk() {
+    let mut spec = GridSpec::new(tiny_base());
+    spec.seeds = vec![3];
+    let r = run_grid(&spec, exec(), &SweepOpts { workers: 1, progress: false }).unwrap();
+    let path = std::env::temp_dir().join("relay_sweep_test.json");
+    r.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, r.to_json().to_string());
+    let parsed = relay::util::json::Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("format").and_then(|f| f.as_str()), Some("relay-sweep-v1"));
+    std::fs::remove_file(path).ok();
+}

@@ -3,9 +3,11 @@
 //!
 //! * runtime: PJRT vs native train-step / eval / aggregation kernels
 //! * SAA merge at realistic update counts (the per-round server hot path)
+//! * the discrete-event kernel (schedule/drain under heavy time ties)
 //! * selectors at 1k/10k/100k checked-in learners
 //! * availability trace queries + forecaster probes (per check-in cost)
-//! * one full coordinator round (the paper's end-to-end unit)
+//! * one full coordinator round (the paper's end-to-end unit) and a
+//!   buffered-async run (per-departure selection + K-arrival merges)
 //! * lazy 100k-learner construction + the sweep engine at 1 vs N workers
 //!
 //! Results feed EXPERIMENTS.md §Perf.
@@ -21,6 +23,7 @@ use relay::data::partition::PartitionScheme;
 use relay::forecast::SeasonalForecaster;
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
 use relay::selection::{Candidate, SelectionCtx};
+use relay::sim::{EventClass, EventKernel};
 use relay::sweep::{run_grid, GridSpec, SweepOpts};
 use relay::trace::{LazyTraceSet, TraceConfig, TraceSet};
 use relay::util::bench;
@@ -152,6 +155,49 @@ fn bench_trace_forecast() {
     });
 }
 
+fn bench_kernel() {
+    println!("\n== discrete-event kernel ==");
+    // schedule + drain 10k events with heavy time ties (worst case for the
+    // (time, class, seq) comparator)
+    bench::run("kernel/schedule_drain_10k", || {
+        let mut k = EventKernel::default();
+        for i in 0..10_000usize {
+            let class = match i % 3 {
+                0 => EventClass::Delivery,
+                1 => EventClass::Departure,
+                _ => EventClass::CheckIn,
+            };
+            k.schedule((i % 97) as f64, class, i);
+        }
+        while let Some(ev) = k.pop_next() {
+            std::hint::black_box(ev.payload);
+        }
+    });
+}
+
+fn bench_async_round() {
+    println!("\n== buffered-async regime (tiny variant, native) ==");
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 100,
+        rounds: 3,
+        target_participants: 10,
+        mode: RoundMode::Async { buffer_k: 10, max_staleness: Some(5) },
+        avail: AvailMode::AllAvail,
+        mean_samples: 20,
+        test_per_class: 4,
+        eval_every: 1000,
+        cooldown_rounds: 1,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+    bench::run("coordinator/async_3_merges/tiny/native", || {
+        let mut c = Coordinator::new(cfg.clone(), Arc::clone(&exec)).unwrap();
+        std::hint::black_box(c.run().unwrap());
+    });
+}
+
 fn bench_round() {
     println!("\n== end-to-end coordinator round (tiny variant, native) ==");
     let cfg = ExpConfig {
@@ -267,12 +313,14 @@ fn main() {
     println!("relay benchmark suite (hand-rolled harness; budget ~1.5s per bench)");
     let t0 = std::time::Instant::now();
     bench_substrates();
+    bench_kernel();
     bench_trace_forecast();
     bench_scale_path();
     bench_selectors();
     bench_runtime();
     bench_saa();
     bench_round();
+    bench_async_round();
     println!("\ntotal bench wallclock: {:.1}s", t0.elapsed().as_secs_f64());
     let _ = Duration::from_secs(0);
 }

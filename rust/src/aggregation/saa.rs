@@ -109,6 +109,22 @@ pub fn merge(
     })
 }
 
+/// FedBuff-style buffered merge (the async regime's server step): partition
+/// one buffer of updates by staleness relative to the current model
+/// `version` — entries trained against the current version are "fresh"
+/// (w = 1), older entries get the configured Eq.-2 staleness weight — and
+/// run the same deviation-aware [`merge`] the synchronous regimes use.
+pub fn merge_buffer(
+    exec: &dyn Executor,
+    updates: Vec<UpdateEntry>,
+    rule: ScalingRule,
+    version: usize,
+) -> Result<MergeOutcome> {
+    let (fresh, stale): (Vec<UpdateEntry>, Vec<UpdateEntry>) =
+        updates.into_iter().partition(|u| u.origin_round == version);
+    merge(exec, &fresh, &stale, rule, version)
+}
+
 /// agg_combine in row-chunks of the executor's static max_updates capacity.
 fn chunked_combine(exec: &dyn Executor, rows: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
     let cap = exec.variant().max_updates;
@@ -243,6 +259,42 @@ mod tests {
     fn empty_merge_errors() {
         let e = exec();
         assert!(merge(&e, &[], &[], ScalingRule::Equal, 0).is_err());
+    }
+
+    #[test]
+    fn merge_buffer_partitions_by_version() {
+        let e = exec();
+        // two current-version entries, one from two versions back: the
+        // buffered merge must weight them exactly like a fresh/stale merge
+        let buffer = vec![entry(0, 1.0, 10), entry(1, 1.0, 10), entry(2, 4.0, 8)];
+        let buffered = merge_buffer(&e, buffer, ScalingRule::DynSgd, 10).unwrap();
+        let split = merge(
+            &e,
+            &[entry(0, 1.0, 10), entry(1, 1.0, 10)],
+            &[entry(2, 4.0, 8)],
+            ScalingRule::DynSgd,
+            10,
+        )
+        .unwrap();
+        assert_eq!(buffered.delta, split.delta);
+        assert_eq!(buffered.coefficients, split.coefficients);
+        // stale weight 1/(tau+1) = 1/3; coefficients (1, 1, 1/3)/sum
+        let c_stale = buffered.coefficients[2].1;
+        assert!((c_stale - (1.0 / 3.0) / (7.0 / 3.0)).abs() < 1e-9, "{c_stale}");
+    }
+
+    #[test]
+    fn merge_buffer_all_fresh_is_plain_mean() {
+        let e = exec();
+        let buffer = vec![entry(0, 2.0, 4), entry(1, 4.0, 4)];
+        let out = merge_buffer(&e, buffer, ScalingRule::Relay { beta: 0.35 }, 4).unwrap();
+        assert!(out.delta.iter().all(|&v| (v - 3.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn merge_buffer_empty_errors() {
+        let e = exec();
+        assert!(merge_buffer(&e, Vec::new(), ScalingRule::Equal, 0).is_err());
     }
 
     #[test]

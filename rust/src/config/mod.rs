@@ -8,7 +8,8 @@ use crate::data::partition::PartitionScheme;
 use crate::learners::HardwareScenario;
 use crate::util::json::{num, obj, Json};
 
-/// Round-termination regime (paper §5.1 "Experimental Scenarios").
+/// Round-termination regime (paper §5.1 "Experimental Scenarios", plus the
+/// buffered-asynchronous regime the SAA idea generalizes to).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum RoundMode {
     /// OC: over-commit the target by `factor` (1.3 in the paper) and end
@@ -16,6 +17,14 @@ pub enum RoundMode {
     OverCommit { factor: f64 },
     /// DL: select `target` and aggregate whatever arrives by `deadline`.
     Deadline { deadline: f64 },
+    /// ASYNC: FedBuff-style buffered aggregation on the event kernel. The
+    /// server keeps `target_participants` tasks in flight (selection is
+    /// re-triggered per departure, not per round), merges every `buffer_k`
+    /// arrivals with Eq.-2 staleness weights, and discards updates older
+    /// than `max_staleness` model versions (`None` = keep everything).
+    /// `cfg.rounds` counts merges; `cfg.apt` is ignored (there is no
+    /// round-synchronous target to shrink).
+    Async { buffer_k: usize, max_staleness: Option<usize> },
 }
 
 impl RoundMode {
@@ -23,6 +32,7 @@ impl RoundMode {
         match self {
             RoundMode::OverCommit { .. } => "OC",
             RoundMode::Deadline { .. } => "DL",
+            RoundMode::Async { .. } => "ASYNC",
         }
     }
 }
@@ -157,6 +167,16 @@ impl ExpConfig {
                 return Err(anyhow!("deadline must be positive"));
             }
         }
+        if let RoundMode::Async { buffer_k, .. } = self.mode {
+            if buffer_k == 0 {
+                return Err(anyhow!("async buffer_k must be >= 1"));
+            }
+            if self.oracle {
+                return Err(anyhow!(
+                    "the SAFA+O oracle is defined only for round-synchronous (OC/DL) modes"
+                ));
+            }
+        }
         if crate::selection::by_name(&self.selector).is_none() {
             return Err(anyhow!("unknown selector '{}'", self.selector));
         }
@@ -169,9 +189,14 @@ impl ExpConfig {
     // ---- JSON -----------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        let (mode, mode_param) = match self.mode {
-            RoundMode::OverCommit { factor } => ("oc", factor),
-            RoundMode::Deadline { deadline } => ("dl", deadline),
+        // mode_param carries the regime's primary knob (OC factor, DL
+        // deadline, async buffer size); mode_staleness is async-only.
+        let (mode, mode_param, mode_staleness) = match self.mode {
+            RoundMode::OverCommit { factor } => ("oc", factor, None),
+            RoundMode::Deadline { deadline } => ("dl", deadline, None),
+            RoundMode::Async { buffer_k, max_staleness } => {
+                ("async", buffer_k as f64, max_staleness)
+            }
         };
         obj(vec![
             ("label", Json::Str(self.label.clone())),
@@ -181,6 +206,10 @@ impl ExpConfig {
             ("target_participants", num(self.target_participants as f64)),
             ("mode", Json::Str(mode.into())),
             ("mode_param", num(mode_param)),
+            (
+                "mode_staleness",
+                mode_staleness.map(|t| num(t as f64)).unwrap_or(Json::Null),
+            ),
             (
                 "avail",
                 Json::Str(match self.avail {
@@ -237,6 +266,10 @@ impl ExpConfig {
         let mode = match gs("mode", "oc").as_str() {
             "oc" => RoundMode::OverCommit { factor: gf("mode_param", 1.3) },
             "dl" => RoundMode::Deadline { deadline: gf("mode_param", 100.0) },
+            "async" => RoundMode::Async {
+                buffer_k: gf("mode_param", 10.0) as usize,
+                max_staleness: j.get("mode_staleness").and_then(|v| v.as_usize()),
+            },
             m => return Err(anyhow!("unknown mode '{m}'")),
         };
         let avail = match gs("avail", "dyn").as_str() {
@@ -369,6 +402,34 @@ mod tests {
         assert_eq!(c2.hardware, HardwareScenario::Hs3);
         assert!(c2.oracle);
         assert_eq!(c2.selector, "priority");
+    }
+
+    #[test]
+    fn async_json_roundtrip() {
+        let mut c = ExpConfig::default().with_label("async");
+        c.mode = RoundMode::Async { buffer_k: 7, max_staleness: Some(3) };
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = ExpConfig::from_json(&j).unwrap();
+        assert_eq!(c2.mode, RoundMode::Async { buffer_k: 7, max_staleness: Some(3) });
+        assert_eq!(c2.mode.label(), "ASYNC");
+
+        c.mode = RoundMode::Async { buffer_k: 1, max_staleness: None };
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = ExpConfig::from_json(&j).unwrap();
+        assert_eq!(c2.mode, RoundMode::Async { buffer_k: 1, max_staleness: None });
+    }
+
+    #[test]
+    fn rejects_bad_async_configs() {
+        let mut c = ExpConfig::default();
+        c.mode = RoundMode::Async { buffer_k: 0, max_staleness: None };
+        assert!(c.validate().is_err());
+        let mut c = ExpConfig::default();
+        c.mode = RoundMode::Async { buffer_k: 4, max_staleness: Some(2) };
+        c.oracle = true;
+        assert!(c.validate().is_err());
+        c.oracle = false;
+        c.validate().unwrap();
     }
 
     #[test]

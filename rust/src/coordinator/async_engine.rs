@@ -1,0 +1,546 @@
+//! The buffered-asynchronous round regime (`RoundMode::Async`) — FedBuff-
+//! style aggregation on the discrete-event kernel.
+//!
+//! Where the OC/DL regimes sweep the kernel one round window at a time,
+//! this driver pops events one by one:
+//!
+//! * **check-in / departure-triggered selection** — the server keeps up to
+//!   `target_participants` tasks in flight; every completion or dropout
+//!   immediately re-triggers selection for the freed slot, so "straggler"
+//!   stops being a special case (there is no round to straggle past);
+//! * **task completions** deliver updates into a server-side buffer; every
+//!   `buffer_k` arrivals the buffer is merged with the paper's Eq.-2
+//!   staleness weights (`aggregation::saa::merge_buffer`), advancing the
+//!   model version;
+//! * **staleness bound** — updates older than `max_staleness` versions are
+//!   discarded (and waste-accounted) instead of merged; `None` keeps every
+//!   arrival, the RELAY default;
+//! * **per-event accounting** — every device-second is tracked through
+//!   exactly one of three buckets: aggregated, wasted, or still in flight
+//!   (`tests/substrate_props.rs` asserts the three always sum to spent).
+//!
+//! One `RoundRecord` is emitted per merge ("version"), so downstream
+//! metrics/figures treat async cells exactly like OC/DL cells. When nothing
+//! is in flight and nobody checks in, a failed round slot is burned —
+//! mirroring the synchronous engine's aborted round — which also lets
+//! version-denominated cooldowns expire. APT does not apply here (there is
+//! no round-synchronous target to shrink); the round-duration EMA is still
+//! maintained as the forecaster slot/burn-cadence estimate.
+//!
+//! Scale note: re-selection currently re-runs the `checked_in` scan
+//! (O(total_learners)) on every departure, which is exact but makes the
+//! event loop O(N · events); an incremental candidate set is the obvious
+//! follow-up once async cells move to 100k-learner populations
+//! (`cargo bench coordinator/async_3_merges` tracks the cost).
+
+use anyhow::{anyhow, Result};
+
+use crate::aggregation::saa::{merge_buffer, UpdateEntry};
+use crate::config::RoundMode;
+use crate::metrics::{ExperimentResult, RoundRecord};
+use crate::selection::SelectionCtx;
+use crate::sim::EventClass;
+
+use super::engine::{AsyncDrop, AsyncTask, Coordinator, EngineEvent};
+
+/// Mutable state of one async run, threaded through the event handlers.
+struct AsyncState {
+    buffer_k: usize,
+    max_staleness: Option<usize>,
+    /// Server model version == merge slots completed so far (burns
+    /// included): the RoundRecord index and the loop-termination counter.
+    version: usize,
+    /// Tasks currently running on devices.
+    in_flight: usize,
+    /// Device-seconds spent but not yet aggregated or wasted (running tasks
+    /// plus buffered, unmerged updates).
+    in_flight_secs: f64,
+    /// Arrived updates awaiting the next merge.
+    buffer: Vec<AsyncTask>,
+    // ---- per-version (inter-merge interval) statistics -------------------
+    selected: usize,
+    dropouts: usize,
+    discarded: usize,
+    events: usize,
+    interval_start: f64,
+    /// Time-integral of `in_flight` over the interval (for mean concurrency).
+    conc_area: f64,
+    conc_last_t: f64,
+}
+
+impl AsyncState {
+    fn reset_interval(&mut self, at: f64) {
+        self.interval_start = at;
+        self.conc_area = 0.0;
+        self.conc_last_t = at;
+        self.selected = 0;
+        self.dropouts = 0;
+        self.discarded = 0;
+        self.events = 0;
+    }
+}
+
+impl Coordinator {
+    /// Run the buffered-async regime to `cfg.rounds` merges.
+    pub(crate) fn run_async(&mut self, result: &mut ExperimentResult) -> Result<()> {
+        let RoundMode::Async { buffer_k, max_staleness } = self.cfg.mode else {
+            return Err(anyhow!("run_async requires RoundMode::Async"));
+        };
+        let mut st = AsyncState {
+            buffer_k,
+            max_staleness,
+            version: 0,
+            in_flight: 0,
+            in_flight_secs: 0.0,
+            buffer: Vec::new(),
+            selected: 0,
+            dropouts: 0,
+            discarded: 0,
+            events: 0,
+            interval_start: 0.0,
+            conc_area: 0.0,
+            conc_last_t: 0.0,
+        };
+        self.kernel.schedule(0.0, EventClass::CheckIn, EngineEvent::CheckIn);
+        while st.version < self.cfg.rounds {
+            let Some(ev) = self.kernel.pop_next() else {
+                // drained with nothing in flight: retry selection now
+                let now = self.kernel.now();
+                self.kernel.schedule(now, EventClass::CheckIn, EngineEvent::CheckIn);
+                continue;
+            };
+            let now = ev.at;
+            st.events += 1;
+            st.conc_area += st.in_flight as f64 * (now - st.conc_last_t);
+            st.conc_last_t = now;
+            match ev.payload {
+                EngineEvent::CheckIn => {
+                    let spawned = self.async_fill(&mut st)?;
+                    if spawned == 0 && st.in_flight == 0 {
+                        // nobody available, nothing in flight: burn a failed
+                        // round slot (the sync engine's aborted round); this
+                        // advances time and versions so availability windows
+                        // and cooldowns can expire
+                        self.async_burn_failed(&mut st, result);
+                    }
+                }
+                EngineEvent::Arrival(task) => {
+                    st.in_flight -= 1;
+                    self.async_arrival(task, &mut st, result)?;
+                    // don't refill after the final merge: newly spawned
+                    // tasks could never merge — they'd only burn real SGD
+                    // compute and inflate the waste accounting
+                    if st.version < self.cfg.rounds {
+                        self.async_fill(&mut st)?;
+                    }
+                }
+                EngineEvent::Dropout(d) => {
+                    st.in_flight -= 1;
+                    st.in_flight_secs -= d.spent;
+                    st.dropouts += 1;
+                    self.accounting.waste(d.spent);
+                    self.selector.on_departure(st.version, d.learner, self.apt.mu());
+                    self.async_fill(&mut st)?;
+                }
+                EngineEvent::StaleDelivery(_) => {
+                    unreachable!("async runs never schedule sync stale deliveries")
+                }
+            }
+            if st.version < self.cfg.rounds && st.in_flight == 0 && self.kernel.is_empty() {
+                // keep the loop alive: nothing left to pop, so re-enter
+                // selection (which burns a failed slot if nobody shows up)
+                let now = self.kernel.now();
+                self.kernel.schedule(now, EventClass::CheckIn, EngineEvent::CheckIn);
+            }
+        }
+        // still-running tasks and unmerged buffer entries never made it in
+        self.accounting.waste(st.in_flight_secs);
+        if let Some(last) = result.rounds.last_mut() {
+            last.cum_waste_secs = self.accounting.cum_waste_secs;
+            last.in_flight_secs = Some(0.0);
+        }
+        Ok(())
+    }
+
+    /// Top up the in-flight pool to `target_participants`: per-departure
+    /// re-selection. Returns how many tasks were actually spawned.
+    fn async_fill(&mut self, st: &mut AsyncState) -> Result<usize> {
+        let target = self.cfg.target_participants;
+        if st.in_flight >= target {
+            return Ok(0);
+        }
+        let now = self.kernel.now();
+        let mu = self.apt.mu();
+        let candidates = self.checked_in(st.version, now, mu);
+        if candidates.is_empty() {
+            return Ok(0);
+        }
+        let need = target - st.in_flight;
+        let mut selected = {
+            let mut ctx = SelectionCtx {
+                round: st.version,
+                now,
+                target: need,
+                candidates: &candidates,
+                rng: &mut self.rng,
+            };
+            self.selector.select(&mut ctx)
+        };
+        // SAFA-style selectors return the whole pool; async concurrency is
+        // capped at the target either way
+        selected.truncate(need);
+        // timing + dropout classification first (mirrors the sync engine)
+        let mut plans: Vec<(usize, f64, Option<f64>)> = Vec::with_capacity(selected.len());
+        for &id in &selected {
+            let n_samples = self.shards[id].len();
+            let t = self
+                .profiles
+                .get(id)
+                .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
+            let dropped = if self.avail.available_through(id, now, t) {
+                None
+            } else {
+                // drops out at (approximately) the end of its current session
+                let mut lo = 0.0f64;
+                let mut hi = t;
+                for _ in 0..20 {
+                    let mid = 0.5 * (lo + hi);
+                    if self.avail.available_through(id, now, mid) {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                Some(lo)
+            };
+            plans.push((id, t, dropped));
+        }
+        // train NOW against the current global model: the async regime's
+        // defining property is that this snapshot ages (by whole model
+        // versions) while the device computes. All of this fill's tasks
+        // share one snapshot, so they train on the worker pool together
+        // (results come back in job order — determinism is unaffected).
+        let train_ids: Vec<usize> = plans
+            .iter()
+            .filter(|(_, _, d)| d.is_none())
+            .map(|&(id, _, _)| id)
+            .collect();
+        let mut outcomes = self.train_participants(&train_ids)?.into_iter();
+        let mut spawned = 0usize;
+        for (id, t, dropped) in plans {
+            match dropped {
+                Some(dt) if dt <= 0.0 => {
+                    // availability boundary: the learner cannot even start.
+                    // Spawning a zero-length task would loop at this instant
+                    // forever (drop -> reselect -> drop); skip it, time
+                    // advances via other events or a burned slot.
+                    continue;
+                }
+                Some(dt) => {
+                    // partial work until the session ends; wasted at departure
+                    self.accounting.spend(id, dt);
+                    st.in_flight_secs += dt;
+                    self.busy_until[id] = now + dt;
+                    self.kernel.schedule(
+                        now + dt,
+                        EventClass::Departure,
+                        EngineEvent::Dropout(AsyncDrop { learner: id, spent: dt }),
+                    );
+                }
+                None => {
+                    let outcome = outcomes
+                        .next()
+                        .expect("one training outcome per non-dropped plan")?;
+                    self.accounting.spend(id, t);
+                    st.in_flight_secs += t;
+                    self.busy_until[id] = now + t;
+                    self.kernel.schedule(
+                        now + t,
+                        EventClass::Delivery,
+                        EngineEvent::Arrival(AsyncTask {
+                            learner: id,
+                            delta: outcome.delta,
+                            mean_loss: outcome.mean_loss,
+                            stat_util: outcome.stat_util,
+                            origin_version: st.version,
+                            duration: t,
+                        }),
+                    );
+                }
+            }
+            st.in_flight += 1;
+            st.selected += 1;
+            spawned += 1;
+        }
+        Ok(spawned)
+    }
+
+    /// One update arrived: per-arrival selector feedback, staleness gate,
+    /// buffer insert, and a merge whenever `buffer_k` updates are waiting.
+    fn async_arrival(
+        &mut self,
+        task: AsyncTask,
+        st: &mut AsyncState,
+        result: &mut ExperimentResult,
+    ) -> Result<()> {
+        let id = task.learner;
+        let tau = st.version - task.origin_version;
+        let within = st.max_staleness.map(|th| tau <= th).unwrap_or(true);
+        if !within {
+            // beyond the staleness bound on arrival: discarded outright.
+            // Mirror the sync engine's discard branch — missed feedback
+            // (Oort dampening), no completion credit, no cooldown — so the
+            // staleness bound doesn't end up *rewarding* the stalest devices
+            self.selector.on_departure(st.version, id, self.apt.mu());
+            self.async_discard(st, task.duration);
+            return Ok(());
+        }
+        self.selector
+            .on_arrival(st.version, (id, task.stat_util, task.duration), self.apt.mu());
+        self.cooldown_until[id] = st.version + 1 + self.cfg.cooldown_rounds;
+        st.buffer.push(task);
+        if st.buffer.len() >= st.buffer_k {
+            self.async_merge(st, result)?;
+        }
+        Ok(())
+    }
+
+    /// Merge the buffered updates (Eq.-2 staleness weights), advance the
+    /// model version, and emit this version's RoundRecord.
+    fn async_merge(
+        &mut self,
+        st: &mut AsyncState,
+        result: &mut ExperimentResult,
+    ) -> Result<()> {
+        let end = self.kernel.now();
+        let entries = std::mem::take(&mut st.buffer);
+        // re-check staleness at merge time: burned (failed) slots may have
+        // advanced the version while an entry sat in the buffer
+        let mut keep: Vec<AsyncTask> = Vec::new();
+        for e in entries {
+            let tau = st.version - e.origin_version;
+            if st.max_staleness.map(|th| tau <= th).unwrap_or(true) {
+                keep.push(e);
+            } else {
+                self.async_discard(st, e.duration);
+            }
+        }
+        let fresh = keep.iter().filter(|e| e.origin_version == st.version).count();
+        let stale = keep.len() - fresh;
+        let failed = keep.is_empty();
+        // 0.0 (the sync engine's failed-round default) rather than NaN when
+        // nothing merged: the hand-rolled JSON writer has no NaN encoding
+        let train_loss = if keep.is_empty() {
+            0.0
+        } else {
+            keep.iter().map(|e| e.mean_loss).sum::<f64>() / keep.len() as f64
+        };
+        let mut updates: Vec<UpdateEntry> = Vec::with_capacity(keep.len());
+        for e in keep {
+            self.accounting.aggregate(e.duration);
+            st.in_flight_secs -= e.duration;
+            updates.push(UpdateEntry {
+                learner: e.learner,
+                delta: e.delta,
+                origin_round: e.origin_version,
+            });
+        }
+        if !updates.is_empty() {
+            let outcome =
+                merge_buffer(self.exec.as_ref(), updates, self.cfg.scaling, st.version)?;
+            self.server_opt.apply(&mut self.global, &outcome.delta)?;
+        }
+        let interval = end - st.interval_start;
+        self.apt.observe_round(interval);
+        let mut rec = self.async_record(st, end, failed, fresh, stale, train_loss);
+        st.version += 1;
+        // evaluation cadence mirrors the sync engine (version == round + 1)
+        if st.version % self.cfg.eval_every == 0 || st.version == self.cfg.rounds {
+            let (loss, acc) = self.evaluate()?;
+            rec.test_loss = Some(loss);
+            rec.test_accuracy = Some(acc);
+        }
+        result.rounds.push(rec);
+        st.reset_interval(end);
+        Ok(())
+    }
+
+    /// Discard one spent-but-unmergeable update: the single source of the
+    /// waste / in-flight / discarded triple, so the
+    /// `spent == aggregated + wasted + in-flight` identity (asserted by
+    /// tests/substrate_props.rs) cannot drift between discard sites.
+    fn async_discard(&mut self, st: &mut AsyncState, duration: f64) {
+        self.accounting.waste(duration);
+        st.in_flight_secs -= duration;
+        st.discarded += 1;
+    }
+
+    /// Nobody available and nothing in flight: burn a failed round slot of
+    /// one round-duration estimate, exactly like the sync engine's aborted
+    /// round. Advancing the version lets cooldowns expire.
+    fn async_burn_failed(&mut self, st: &mut AsyncState, result: &mut ExperimentResult) {
+        let dur = self.apt.mu().max(1.0);
+        let end = self.kernel.now() + dur;
+        // in_flight == 0 here, so the concurrency integral gains nothing
+        st.conc_last_t = end;
+        self.kernel.advance_to(end);
+        self.apt.observe_round(dur);
+        // train_loss 0.0: the sync engine's failed-round default (NaN would
+        // break the JSON writer)
+        let rec = self.async_record(st, end, true, 0, 0, 0.0);
+        result.rounds.push(rec);
+        st.version += 1;
+        st.reset_interval(end);
+        if st.version < self.cfg.rounds {
+            self.kernel.schedule(end, EventClass::CheckIn, EngineEvent::CheckIn);
+        }
+    }
+
+    /// Assemble this version's RoundRecord from the interval statistics.
+    fn async_record(
+        &self,
+        st: &AsyncState,
+        end: f64,
+        failed: bool,
+        fresh: usize,
+        stale: usize,
+        train_loss: f64,
+    ) -> RoundRecord {
+        let interval = end - st.interval_start;
+        let mean_conc = if interval > 0.0 {
+            st.conc_area / interval
+        } else {
+            st.in_flight as f64
+        };
+        RoundRecord {
+            round: st.version,
+            sim_time: end,
+            round_duration: interval,
+            selected: st.selected,
+            fresh_updates: fresh,
+            stale_updates: stale,
+            dropouts: st.dropouts,
+            discarded: st.discarded,
+            cum_resource_secs: self.accounting.cum_resource_secs,
+            cum_waste_secs: self.accounting.cum_waste_secs,
+            unique_participants: self.accounting.unique_participants(),
+            failed,
+            train_loss,
+            mean_concurrency: Some(mean_conc),
+            cum_aggregated_secs: Some(self.accounting.cum_aggregated_secs),
+            in_flight_secs: Some(st.in_flight_secs),
+            kernel_events: Some(st.events),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::config::{AvailMode, ExpConfig, RoundMode};
+    use crate::coordinator::run_experiment;
+    use crate::runtime::{builtin_variant, Executor, NativeExecutor};
+
+    fn exec() -> Arc<dyn Executor> {
+        Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+    }
+
+    fn async_cfg() -> ExpConfig {
+        ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 16,
+            rounds: 6,
+            target_participants: 3,
+            mode: RoundMode::Async { buffer_k: 3, max_staleness: Some(4) },
+            avail: AvailMode::AllAvail,
+            mean_samples: 8,
+            test_per_class: 4,
+            eval_every: 2,
+            cooldown_rounds: 1,
+            lr: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn async_emits_one_record_per_merge() {
+        let r = run_experiment(async_cfg(), exec()).unwrap();
+        assert_eq!(r.rounds.len(), 6);
+        for (i, rec) in r.rounds.iter().enumerate() {
+            assert_eq!(rec.round, i);
+            assert!(rec.mean_concurrency.is_some(), "round {i} missing concurrency");
+            assert!(rec.cum_aggregated_secs.is_some());
+            assert!(rec.in_flight_secs.is_some());
+            assert!(rec.kernel_events.is_some());
+            let conc = rec.mean_concurrency.unwrap();
+            assert!(
+                (0.0..=3.0 + 1e-9).contains(&conc),
+                "round {i}: concurrency {conc} outside [0, target]"
+            );
+        }
+        assert!(r.final_resource_hours() > 0.0);
+        assert!(r.final_accuracy().is_some());
+    }
+
+    #[test]
+    fn async_is_deterministic() {
+        let a = run_experiment(async_cfg(), exec()).unwrap();
+        let b = run_experiment(async_cfg(), exec()).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn async_unbounded_staleness_never_discards() {
+        let mut cfg = async_cfg();
+        cfg.mode = RoundMode::Async { buffer_k: 2, max_staleness: None };
+        cfg.rounds = 8;
+        let r = run_experiment(cfg, exec()).unwrap();
+        let discarded: usize = r.rounds.iter().map(|x| x.discarded).sum();
+        assert_eq!(discarded, 0);
+    }
+
+    #[test]
+    fn async_accounting_closes_at_end() {
+        // after the final leftover sweep: spent == aggregated + wasted
+        let r = run_experiment(async_cfg(), exec()).unwrap();
+        let last = r.rounds.last().unwrap();
+        assert_eq!(last.in_flight_secs, Some(0.0));
+        let agg = last.cum_aggregated_secs.unwrap();
+        let closed = agg + last.cum_waste_secs;
+        assert!(
+            (last.cum_resource_secs - closed).abs() <= 1e-6 * last.cum_resource_secs.max(1.0),
+            "spent {} != aggregated {} + wasted {}",
+            last.cum_resource_secs,
+            agg,
+            last.cum_waste_secs
+        );
+    }
+
+    #[test]
+    fn async_learns_on_tiny() {
+        let mut cfg = async_cfg();
+        cfg.rounds = 40;
+        cfg.target_participants = 4;
+        cfg.mode = RoundMode::Async { buffer_k: 4, max_staleness: Some(6) };
+        let r = run_experiment(cfg, exec()).unwrap();
+        let acc = r.final_accuracy().unwrap();
+        assert!(acc > 0.3, "async tiny run failed to learn: {acc}");
+    }
+
+    #[test]
+    fn async_dynavail_runs_to_completion() {
+        let mut cfg = async_cfg();
+        cfg.avail = AvailMode::DynAvail;
+        cfg.rounds = 8;
+        let r = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(r.rounds.len(), 8);
+        // availability churn shows up as dropouts, discards or burned slots
+        let _eventful: usize = r
+            .rounds
+            .iter()
+            .map(|x| x.dropouts + usize::from(x.failed))
+            .sum();
+    }
+}

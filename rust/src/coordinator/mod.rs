@@ -1,8 +1,15 @@
-//! The FL server (L3): round engine, local-training execution through the
-//! runtime, SAFA protocol variant, SAFA+O oracle, and the semi-centralized
-//! baseline of Table 2.
+//! The FL server (L3): the event-kernel round engine (sync OC/DL sweeps +
+//! the buffered-async regime), local-training execution through the
+//! runtime, SAFA protocol variant, SAFA+O oracle, the frozen pre-refactor
+//! reference engine (the equivalence oracle of
+//! `tests/kernel_equivalence.rs`), and the semi-centralized baseline of
+//! Table 2.
 
 pub mod centralized;
 pub mod engine;
+pub mod reference;
+
+mod async_engine;
 
 pub use engine::{run_experiment, run_experiment_eager, Coordinator};
+pub use reference::{run_reference_experiment, ReferenceCoordinator};

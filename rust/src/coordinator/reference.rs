@@ -1,23 +1,29 @@
-//! The round engine — the paper's Fig. 1 life-cycle made executable, driven
-//! by the discrete-event kernel (`sim::EventKernel`):
+//! **Frozen pre-refactor round engine** — the equivalence oracle for the
+//! event-kernel engine.
 //!
-//! selection window (check-in + availability probe) → participant selection
-//! (Random / Oort / IPS / SAFA, optionally APT-adjusted, OC or DL regime) →
-//! real local SGD through the AOT executor → reporting (fresh before the
-//! round ends, stragglers become stale deliveries) → staleness-aware
-//! aggregation (Eq. 2 weights via the L1 kernels) → server optimizer →
-//! evaluation; with full resource/waste accounting along the way.
+//! This is the monolithic OC/DL round loop exactly as it stood before
+//! `engine.rs` was re-expressed on `sim::EventKernel`. It is kept verbatim
+//! (modulo the `DeliveryQueue` iterator now yielding `(deliver_at, &item)`
+//! tuples) so `tests/kernel_equivalence.rs` can assert, for a grid of
+//! OC/DL × AllAvail/DynAvail × selector configs, that the refactored engine
+//! produces **byte-identical** `ExperimentResult` JSON. The shared training
+//! math (`local_train`, `evaluate_params`) is imported from `engine` — both
+//! engines must run the exact same floating-point kernels for bytewise
+//! comparison to be meaningful.
 //!
-//! All time-ordered state flows through one event kernel: the virtual clock
-//! lives in it, and straggler uploads are `EngineEvent::StaleDelivery`
-//! events popped back out when their round window sweeps past them. The
-//! round-synchronous regimes (OC/DL) sweep the kernel one round window at a
-//! time and are **bit-identical** to the pre-refactor monolithic loop
-//! (frozen in `coordinator::reference`, locked by
-//! `tests/kernel_equivalence.rs`). The buffered-asynchronous regime
-//! (`RoundMode::Async`, `coordinator::async_engine`) instead pops events one
-//! at a time — check-ins, task completions, dropouts — re-triggering
-//! selection per departure and merging every `buffer_k` arrivals.
+//! Do not extend this module with new features; behavioral changes defeat
+//! its purpose. It intentionally rejects `RoundMode::Async`, which did not
+//! exist pre-refactor.
+//!
+//! One deliberate tradeoff: this oracle rides the kernel-backed
+//! `DeliveryQueue` rather than carrying its own copy of the old
+//! `BinaryHeap<Pending>` — so the *round-loop logic* is what the suite pins,
+//! while the queue substrate (and its equal-time tie-break, which the old
+//! heap left arbitrary) is shared with the code under test. Sharing the
+//! substrate is what makes bytewise equality a meaningful test of the loop
+//! refactor: task completion times are continuous (lognormal), so exact
+//! ties essentially never occur, and every floating-point kernel on both
+//! sides is literally the same code.
 
 use std::sync::Arc;
 
@@ -34,100 +40,60 @@ use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
 use crate::runtime::Executor;
 use crate::selection::apt::AdaptiveTarget;
 use crate::selection::{Candidate, RoundFeedback, SelectionCtx, Selector};
-use crate::sim::{Availability, EventClass, EventKernel};
+use crate::sim::{Availability, Clock, DeliveryQueue};
 use crate::trace::{LazyTraceSet, TraceConfig};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
+
+use super::engine::{evaluate_params, local_train, LocalOutcome};
 
 /// Sampling step (seconds) of the one-week series each learner's personal
 /// forecaster is bootstrapped from (Appendix A).
 const FORECAST_STEP: f64 = 1800.0;
 
-/// A straggler's update in flight to the server (sync regimes). Doomed
-/// stragglers are waste-accounted up front and never scheduled, so a
-/// scheduled delivery always carries a real delta (the pre-refactor
-/// `Option<Vec<f32>>` was dead generality with a hidden accounting leak in
-/// its `None` branch).
-pub(crate) struct PendingUpdate {
-    pub(crate) learner: usize,
-    pub(crate) delta: Vec<f32>,
-    pub(crate) origin_round: usize,
+/// A straggler's update in flight to the server.
+struct PendingUpdate {
+    learner: usize,
+    delta: Option<Vec<f32>>, // None when training was skipped as doomed
+    origin_round: usize,
     /// Device-seconds this update cost (for waste accounting on discard).
-    pub(crate) spent: f64,
-    pub(crate) stat_util: f64,
-    pub(crate) duration: f64,
+    spent: f64,
+    stat_util: f64,
+    duration: f64,
 }
 
-/// An async-regime task in flight: trained at spawn time against the then-
-/// current global model, delivered when the device finishes.
-pub(crate) struct AsyncTask {
-    pub(crate) learner: usize,
-    pub(crate) delta: Vec<f32>,
-    pub(crate) mean_loss: f64,
-    pub(crate) stat_util: f64,
-    /// Server model version the task trained against (staleness base).
-    pub(crate) origin_version: usize,
-    /// Full task duration in device-seconds.
-    pub(crate) duration: f64,
-}
-
-/// An async-regime participant leaving availability mid-task.
-pub(crate) struct AsyncDrop {
-    pub(crate) learner: usize,
-    /// Partial device-seconds spent before dropping (all wasted).
-    pub(crate) spent: f64,
-}
-
-/// Payloads flowing through the coordinator's event kernel.
-pub(crate) enum EngineEvent {
-    /// A straggler update finishing after its origin round (sync regimes).
-    StaleDelivery(PendingUpdate),
-    /// An async-regime task completing and delivering its update.
-    Arrival(AsyncTask),
-    /// An async-regime participant dropping out mid-task.
-    Dropout(AsyncDrop),
-    /// An async-regime (re-)selection retry when nothing is in flight.
-    CheckIn,
-}
-
-/// Outcome of one participant's local training task.
-pub(crate) struct LocalOutcome {
-    pub(crate) delta: Vec<f32>,
-    pub(crate) mean_loss: f64,
-    pub(crate) stat_util: f64,
-}
-
-pub struct Coordinator {
+/// The pre-refactor coordinator: one synchronous `run_round` per round.
+pub struct ReferenceCoordinator {
     pub cfg: ExpConfig,
-    pub(crate) exec: Arc<dyn Executor>,
-    pub(crate) dataset: Dataset,
-    pub(crate) shards: Vec<LearnerShard>,
-    pub(crate) profiles: ProfilePool,
-    pub(crate) avail: Availability,
-    pub(crate) forecasters: ForecasterBank,
-    pub(crate) selector: Box<dyn Selector>,
-    pub(crate) server_opt: Box<dyn ServerOptimizer>,
-    pub(crate) apt: AdaptiveTarget,
+    exec: Arc<dyn Executor>,
+    dataset: Dataset,
+    shards: Vec<LearnerShard>,
+    profiles: ProfilePool,
+    avail: Availability,
+    forecasters: ForecasterBank,
+    selector: Box<dyn Selector>,
+    server_opt: Box<dyn ServerOptimizer>,
+    apt: AdaptiveTarget,
     pub global: Vec<f32>,
-    /// The discrete-event kernel: virtual clock + unified event heap.
-    pub(crate) kernel: EventKernel<EngineEvent>,
+    clock: Clock,
+    pending: DeliveryQueue<PendingUpdate>,
     /// Round index until which each learner holds from checking in.
-    pub(crate) cooldown_until: Vec<usize>,
+    cooldown_until: Vec<usize>,
     /// Absolute time until which each learner is busy with a task.
-    pub(crate) busy_until: Vec<f64>,
-    pub(crate) accounting: Accounting,
-    pub(crate) rng: Rng,
-    pub(crate) test: TestSet,
-    pub(crate) model_bytes: usize,
+    busy_until: Vec<f64>,
+    accounting: Accounting,
+    rng: Rng,
+    test: TestSet,
+    model_bytes: usize,
     /// SAFA+O: the set of (learner, origin_round) straggler updates that a
     /// first (plain) pass aggregated; the oracle pass only trains these.
-    pub(crate) oracle_plan: Option<std::collections::HashSet<(usize, usize)>>,
+    oracle_plan: Option<std::collections::HashSet<(usize, usize)>>,
     /// Recorded by every run: which straggler updates got aggregated.
-    pub(crate) aggregated_stale: std::collections::HashSet<(usize, usize)>,
+    aggregated_stale: std::collections::HashSet<(usize, usize)>,
 }
 
-impl Coordinator {
-    pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Coordinator> {
+impl ReferenceCoordinator {
+    pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<ReferenceCoordinator> {
         cfg.validate()?;
         let info = exec.variant().clone();
         if info.name != cfg.variant {
@@ -143,11 +109,6 @@ impl Coordinator {
             Partitioner::new(cfg.partition, info.num_classes, cfg.mean_samples);
         let shards = partitioner.assign(cfg.total_learners, cfg.seed ^ 0x9A);
         let profiles = ProfilePool::generate(cfg.total_learners, cfg.seed ^ 0x0F, cfg.hardware);
-        // Scale path: traces and learner-side forecasters are generated at
-        // first touch (bit-identical to eager generation — the trace comes
-        // from the same per-learner RNG stream, the forecaster from the same
-        // two-week replay), so a 100k-learner DynAvail population constructs
-        // in milliseconds instead of materializing every learner up front.
         let avail = match cfg.avail {
             AvailMode::AllAvail => Availability::All,
             AvailMode::DynAvail => Availability::Lazy(LazyTraceSet::new(
@@ -166,13 +127,18 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("unknown server optimizer"))?;
         let initial_mu = match cfg.mode {
             RoundMode::Deadline { deadline } => deadline,
-            RoundMode::OverCommit { .. } | RoundMode::Async { .. } => 100.0,
+            RoundMode::OverCommit { .. } => 100.0,
+            RoundMode::Async { .. } => {
+                return Err(anyhow!(
+                    "the frozen reference engine predates RoundMode::Async"
+                ))
+            }
         };
         let apt = AdaptiveTarget::new(cfg.target_participants, cfg.apt_alpha, initial_mu);
         let global = exec.init_params(cfg.seed as i32)?;
         let test = dataset.test_set(cfg.test_per_class);
         let model_bytes = info.num_params * 4;
-        Ok(Coordinator {
+        Ok(ReferenceCoordinator {
             cooldown_until: vec![0; cfg.total_learners],
             busy_until: vec![0.0; cfg.total_learners],
             accounting: Accounting::default(),
@@ -182,7 +148,8 @@ impl Coordinator {
             server_opt,
             apt,
             global,
-            kernel: EventKernel::default(),
+            clock: Clock::default(),
+            pending: DeliveryQueue::default(),
             dataset,
             shards,
             profiles,
@@ -196,32 +163,19 @@ impl Coordinator {
         })
     }
 
-    /// Run the configured experiment; returns the full result log. OC/DL
-    /// regimes sweep the kernel one round window at a time; `Async` runs the
-    /// fully event-driven buffered loop (`coordinator::async_engine`).
+    /// Run the configured number of rounds; returns the full result log.
     pub fn run(&mut self) -> Result<ExperimentResult> {
         let mut result = ExperimentResult {
             label: self.cfg.label.clone(),
             perplexity_metric: self.exec.variant().perplexity,
             ..Default::default()
         };
-        if matches!(self.cfg.mode, RoundMode::Async { .. }) {
-            self.run_async(&mut result)?;
-            return Ok(result);
-        }
         for round in 0..self.cfg.rounds {
             let rec = self.run_round(round)?;
             result.rounds.push(rec);
         }
         // whatever is still in flight at the end never got aggregated
-        let leftover: f64 = self
-            .kernel
-            .iter()
-            .map(|e| match &e.payload {
-                EngineEvent::StaleDelivery(p) => p.spent,
-                _ => 0.0,
-            })
-            .sum();
+        let leftover: f64 = self.pending.iter().map(|(_, u)| u.spent).sum();
         self.accounting.waste(leftover);
         if let Some(last) = result.rounds.last_mut() {
             last.cum_waste_secs = self.accounting.cum_waste_secs;
@@ -229,12 +183,9 @@ impl Coordinator {
         Ok(result)
     }
 
-    /// The paper's Fig. 1 sequence for one round-synchronous (OC/DL) round,
-    /// expressed as one sweep of the event kernel: pull the round's
-    /// parameters, schedule this cohort's straggler uploads as future
-    /// delivery events, then pop every delivery due within the round window.
+    /// The paper's Fig. 1 sequence for one round.
     fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
-        let now = self.kernel.now();
+        let now = self.clock.now;
         let mu = self.apt.mu();
         let mut rec = RoundRecord { round, ..Default::default() };
 
@@ -244,15 +195,10 @@ impl Coordinator {
         // ---- target adjustment (APT) + overcommit ------------------------
         let mut target = self.cfg.target_participants;
         if self.cfg.apt {
-            // probe in-flight stragglers (pending delivery events) for their
-            // remaining upload times
             let remaining: Vec<f64> = self
-                .kernel
+                .pending
                 .iter()
-                .filter_map(|e| match &e.payload {
-                    EngineEvent::StaleDelivery(_) => Some((e.at - now).max(0.0)),
-                    _ => None,
-                })
+                .map(|(deliver_at, _)| (deliver_at - now).max(0.0))
                 .collect();
             target = self.apt.target(&remaining);
         }
@@ -260,8 +206,7 @@ impl Coordinator {
             RoundMode::OverCommit { factor } => {
                 ((target as f64) * factor).ceil() as usize
             }
-            RoundMode::Deadline { .. } => target,
-            RoundMode::Async { .. } => unreachable!("async mode uses run_async"),
+            _ => target,
         };
 
         let selected = if candidates.is_empty() {
@@ -281,11 +226,11 @@ impl Coordinator {
         if selected.is_empty() {
             // Nothing checked in: burn a round slot (paper: round aborted).
             let dur = mu.max(1.0);
-            self.kernel.advance_to(now + dur);
+            self.clock.advance(dur);
             self.apt.observe_round(dur);
             rec.failed = true;
             rec.round_duration = dur;
-            rec.sim_time = self.kernel.now();
+            rec.sim_time = self.clock.now;
             rec.cum_resource_secs = self.accounting.cum_resource_secs;
             rec.cum_waste_secs = self.accounting.cum_waste_secs;
             rec.unique_participants = self.accounting.unique_participants();
@@ -345,8 +290,8 @@ impl Coordinator {
                     deadline
                 }
             }
-            RoundMode::OverCommit { .. } => {
-                // OC: round ends when `target` updates have arrived
+            _ => {
+                // round ends when `target` updates have arrived
                 if completions.is_empty() {
                     mu.max(1.0)
                 } else if self.cfg.selector == "safa" {
@@ -359,14 +304,12 @@ impl Coordinator {
                     completions[k - 1]
                 }
             }
-            RoundMode::Async { .. } => unreachable!("async mode uses run_async"),
         };
         // selection-window/configuration floor (Fig. 1 phases); never
         // extends past a configured reporting deadline
         let floor = match self.cfg.mode {
             RoundMode::Deadline { deadline } => self.cfg.min_round_duration.min(deadline),
-            RoundMode::OverCommit { .. } => self.cfg.min_round_duration,
-            RoundMode::Async { .. } => unreachable!("async mode uses run_async"),
+            _ => self.cfg.min_round_duration,
         };
         let round_duration = round_duration.max(floor);
         let round_end = now + round_duration;
@@ -397,8 +340,7 @@ impl Coordinator {
         // `round + ceil((t - dur) / expected_future_round_duration)`.
         let est_round_dur = match self.cfg.mode {
             RoundMode::Deadline { deadline } => deadline,
-            RoundMode::OverCommit { .. } => mu.max(1.0),
-            RoundMode::Async { .. } => unreachable!("async mode uses run_async"),
+            _ => mu.max(1.0),
         };
         // Staleness-doom analysis for the non-oracle training-skip
         // optimization: skip the SGD only when the update CERTAINLY exceeds
@@ -464,7 +406,7 @@ impl Coordinator {
             &train_ids.iter().map(|&(id, _, _)| id).collect::<Vec<_>>(),
         )?;
 
-        // ---- route updates: fresh vs scheduled stale deliveries -----------
+        // ---- route updates: fresh vs pending (stale) ----------------------
         let mut fresh_updates: Vec<UpdateEntry> = Vec::new();
         let mut feedback_completed: Vec<(usize, f64, f64)> = Vec::new();
         let mut losses = Vec::new();
@@ -479,43 +421,46 @@ impl Coordinator {
                     origin_round: round,
                 });
             } else {
-                self.kernel.schedule(
+                self.pending.push(
                     now + task_time,
-                    EventClass::Delivery,
-                    EngineEvent::StaleDelivery(PendingUpdate {
+                    PendingUpdate {
                         learner: *id,
-                        delta: outcome.delta,
+                        delta: Some(outcome.delta),
                         origin_round: round,
                         spent: *task_time,
                         stat_util: outcome.stat_util,
                         duration: *task_time,
-                    }),
+                    },
                 );
             }
         }
 
-        // ---- pop stale deliveries that landed during this round -----------
+        // ---- collect stale deliveries that landed during this round -------
         let mut stale_updates: Vec<UpdateEntry> = Vec::new();
-        for ev in self.kernel.pop_due(round_end) {
-            let EngineEvent::StaleDelivery(p) = ev.payload else {
-                unreachable!("sync rounds schedule only stale deliveries");
-            };
-            let tau = round - p.origin_round;
+        for p in self.pending.due(round_end) {
+            let tau = round - p.item.origin_round;
             let within = self
                 .cfg
                 .staleness_threshold
                 .map(|th| tau <= th)
                 .unwrap_or(true);
             if self.cfg.use_saa && within {
-                feedback_completed.push((p.learner, p.stat_util, p.duration));
-                self.aggregated_stale.insert((p.learner, p.origin_round));
-                stale_updates.push(UpdateEntry {
-                    learner: p.learner,
-                    delta: p.delta,
-                    origin_round: p.origin_round,
-                });
+                if let Some(delta) = p.item.delta {
+                    feedback_completed.push((
+                        p.item.learner,
+                        p.item.stat_util,
+                        p.item.duration,
+                    ));
+                    self.aggregated_stale
+                        .insert((p.item.learner, p.item.origin_round));
+                    stale_updates.push(UpdateEntry {
+                        learner: p.item.learner,
+                        delta,
+                        origin_round: p.item.origin_round,
+                    });
+                }
             } else {
-                self.accounting.waste(p.spent);
+                self.accounting.waste(p.item.spent);
                 rec.discarded += 1;
             }
         }
@@ -554,7 +499,7 @@ impl Coordinator {
             round_duration,
         });
         self.apt.observe_round(round_duration);
-        self.kernel.advance_to(round_end);
+        self.clock.advance(round_duration);
 
         // ---- evaluation ------------------------------------------------------
         if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds {
@@ -564,7 +509,7 @@ impl Coordinator {
         }
 
         rec.round_duration = round_duration;
-        rec.sim_time = self.kernel.now();
+        rec.sim_time = self.clock.now;
         rec.cum_resource_secs = self.accounting.cum_resource_secs;
         rec.cum_waste_secs = self.accounting.cum_waste_secs;
         rec.unique_participants = self.accounting.unique_participants();
@@ -572,8 +517,7 @@ impl Coordinator {
     }
 
     /// Checked-in learners with their probe answers (Algorithm 1 steps 1-3).
-    /// In async mode `round` is the server's merge-version counter.
-    pub(crate) fn checked_in(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
+    fn checked_in(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
         let mut out = Vec::new();
         for id in 0..self.cfg.total_learners {
             if self.cooldown_until[id] > round || self.busy_until[id] > now {
@@ -600,7 +544,7 @@ impl Coordinator {
     }
 
     /// Execute real local SGD for each participant (parallel over learners).
-    pub(crate) fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
+    fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
         let workers = if self.cfg.workers == 0 {
             threadpool::default_workers().min(8)
         } else {
@@ -637,10 +581,8 @@ impl Coordinator {
     }
 
     /// This learner's personal forecaster, trained at first touch on (two
-    /// replayed weeks of) its own trace — the paper's "learners maintain
-    /// trace of their charging events" (Appendix A). Learners that never
-    /// check in never pay the training cost.
-    pub(crate) fn forecaster(&self, id: usize) -> &SeasonalForecaster {
+    /// replayed weeks of) its own trace.
+    fn forecaster(&self, id: usize) -> &SeasonalForecaster {
         let avail = &self.avail;
         self.forecasters.get_or_train(id, || {
             let series = avail
@@ -649,141 +591,26 @@ impl Coordinator {
             SeasonalForecaster::train_on_week(&series, FORECAST_STEP)
         })
     }
-
-    /// Pre-generate every learner's trace and forecaster — the pre-refactor
-    /// eager construction. Tests and benches use this to prove the lazy
-    /// path is result-identical and to measure what laziness saves.
-    pub fn materialize_all(&self) {
-        if matches!(self.avail, Availability::All) {
-            return;
-        }
-        for id in 0..self.cfg.total_learners {
-            self.forecaster(id);
-        }
-    }
-
-    /// Learner traces generated so far (== total_learners on the eager path).
-    pub fn materialized_traces(&self) -> usize {
-        match &self.avail {
-            Availability::All => 0,
-            Availability::Dynamic(tr) => tr.len(),
-            Availability::Lazy(tr) => tr.materialized(),
-        }
-    }
-
-    /// Learner forecasters trained so far.
-    pub fn trained_forecasters(&self) -> usize {
-        self.forecasters.trained()
-    }
 }
 
-/// One participant's local training task (pure function of its inputs so it
-/// can run on the worker pool). Shared with the frozen reference engine —
-/// both must execute identical floating-point kernels for the bytewise
-/// equivalence suite to be meaningful.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn local_train(
-    exec: &dyn Executor,
-    dataset: &Dataset,
-    shard: &LearnerShard,
-    learner: usize,
-    global: &[f32],
-    lr: f32,
-    epochs: usize,
-    seed: u64,
-) -> Result<LocalOutcome> {
-    let v = exec.variant();
-    let (b, d) = (v.batch, v.input_dim);
-    let mut params = global.to_vec();
-    let mut rng = Rng::new(seed ^ 0x10CA1).stream(learner as u64);
-    let mut losses = Vec::new();
-    let n = shard.len();
-    if n == 0 {
-        return Err(anyhow!("learner {learner} has an empty shard"));
-    }
-    let mut order: Vec<usize> = (0..n).collect();
-    for _ in 0..epochs.max(1) {
-        rng.shuffle(&mut order);
-        for chunk in order.chunks(b) {
-            let mut x = vec![0f32; b * d];
-            let mut y = vec![0i32; b];
-            let mut mask = vec![0f32; b];
-            for (row, &sample_idx) in chunk.iter().enumerate() {
-                let label = shard.labels[sample_idx] as usize;
-                let f = dataset.features(learner as u64, sample_idx as u64, label);
-                x[row * d..(row + 1) * d].copy_from_slice(&f);
-                y[row] = label as i32;
-                mask[row] = 1.0;
-            }
-            let out = exec.train_step(&params, &x, &y, &mask, lr)?;
-            params = out.params;
-            losses.push(out.loss as f64);
-        }
-    }
-    let delta: Vec<f32> = params.iter().zip(global).map(|(p, g)| p - g).collect();
-    let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
-    // Oort's statistical utility: |B_i| * sqrt(mean of squared losses).
-    let sq_mean = losses.iter().map(|l| l * l).sum::<f64>() / losses.len() as f64;
-    let stat_util = n as f64 * sq_mean.sqrt();
-    Ok(LocalOutcome { delta, mean_loss, stat_util })
-}
-
-/// Evaluate arbitrary parameters on a test set.
-pub fn evaluate_params(
-    exec: &dyn Executor,
-    test: &TestSet,
-    params: &[f32],
-) -> Result<(f64, f64)> {
-    let v = exec.variant();
-    let mut sum_loss = 0f64;
-    let mut correct = 0f64;
-    let mut total = 0f64;
-    for (x, y, mask) in test.batches(v.batch) {
-        let (l, c) = exec.eval_batch(params, &x, &y, &mask)?;
-        sum_loss += l as f64;
-        correct += c as f64;
-        total += mask.iter().sum::<f32>() as f64;
-    }
-    if total == 0.0 {
-        return Err(anyhow!("empty test set"));
-    }
-    Ok((sum_loss / total, correct / total))
-}
-
-/// Convenience: build a coordinator (native or artifact backend chosen by
-/// the caller) and run to completion.
-///
-/// `cfg.oracle` (SAFA+O, Fig. 2) runs TWO passes: a plain pass to learn
-/// exactly which straggler updates end up aggregated, then the accounted
-/// pass in which the perfect oracle prevents all other stragglers from ever
-/// training. The model trajectory is identical across both by construction.
-pub fn run_experiment(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<ExperimentResult> {
-    if cfg.oracle {
-        let mut probe_cfg = cfg.clone();
-        probe_cfg.oracle = false;
-        let mut probe = Coordinator::new(probe_cfg, Arc::clone(&exec))?;
-        probe.run()?;
-        let plan = probe.aggregated_stale;
-        let mut coord = Coordinator::new(cfg, exec)?;
-        coord.oracle_plan = Some(plan);
-        return coord.run();
-    }
-    Coordinator::new(cfg, exec)?.run()
-}
-
-/// [`run_experiment`], but with every trace and forecaster materialized at
-/// construction — the pre-refactor eager behaviour. Exists so tests can
-/// assert the lazy path changes nothing but construction cost.
-pub fn run_experiment_eager(
+/// [`super::run_experiment`], but on the frozen pre-refactor loop. Includes
+/// the SAFA+O two-pass oracle protocol, mirroring the original
+/// `run_experiment` exactly.
+pub fn run_reference_experiment(
     cfg: ExpConfig,
     exec: Arc<dyn Executor>,
 ) -> Result<ExperimentResult> {
     if cfg.oracle {
-        return Err(anyhow!("run_experiment_eager: oracle configs unsupported"));
+        let mut probe_cfg = cfg.clone();
+        probe_cfg.oracle = false;
+        let mut probe = ReferenceCoordinator::new(probe_cfg, Arc::clone(&exec))?;
+        probe.run()?;
+        let plan = probe.aggregated_stale;
+        let mut coord = ReferenceCoordinator::new(cfg, exec)?;
+        coord.oracle_plan = Some(plan);
+        return coord.run();
     }
-    let mut coord = Coordinator::new(cfg, exec)?;
-    coord.materialize_all();
-    coord.run()
+    ReferenceCoordinator::new(cfg, exec)?.run()
 }
 
 #[cfg(test)]
@@ -791,176 +618,34 @@ mod tests {
     use super::*;
     use crate::runtime::{builtin_variant, NativeExecutor};
 
-    fn exec() -> Arc<dyn Executor> {
-        Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+    #[test]
+    fn reference_rejects_async_mode() {
+        let cfg = ExpConfig {
+            variant: "tiny".into(),
+            mode: RoundMode::Async { buffer_k: 4, max_staleness: None },
+            ..Default::default()
+        };
+        let exec: Arc<dyn Executor> =
+            Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+        assert!(ReferenceCoordinator::new(cfg, exec).is_err());
     }
 
-    fn base_cfg() -> ExpConfig {
-        ExpConfig {
+    #[test]
+    fn reference_runs_a_small_experiment() {
+        let cfg = ExpConfig {
             variant: "tiny".into(),
-            total_learners: 24,
-            rounds: 12,
-            target_participants: 4,
-            mean_samples: 16,
-            test_per_class: 8,
-            eval_every: 3,
+            total_learners: 12,
+            rounds: 4,
+            target_participants: 3,
+            mean_samples: 8,
+            test_per_class: 2,
+            eval_every: 2,
             lr: 0.1,
             ..Default::default()
-        }
-    }
-
-    #[test]
-    fn random_allavail_learns() {
-        let mut cfg = base_cfg();
-        cfg.avail = AvailMode::AllAvail;
-        cfg.rounds = 40;
-        let r = run_experiment(cfg, exec()).unwrap();
-        let acc = r.final_accuracy().unwrap();
-        assert!(acc > 0.5, "tiny 4-class task should exceed 50%, got {acc}");
-        assert!(r.final_resource_hours() > 0.0);
-    }
-
-    #[test]
-    fn variant_mismatch_rejected() {
-        let mut cfg = base_cfg();
-        cfg.variant = "speech".into();
-        assert!(Coordinator::new(cfg, exec()).is_err());
-    }
-
-    #[test]
-    fn relay_full_stack_runs() {
-        let mut cfg = base_cfg().relay();
-        cfg.mode = RoundMode::Deadline { deadline: 60.0 };
-        let r = run_experiment(cfg, exec()).unwrap();
-        assert_eq!(r.rounds.len(), 12);
-        // some rounds should have stale updates under a 60s deadline
-        let stale: usize = r.rounds.iter().map(|x| x.stale_updates).sum();
-        let fresh: usize = r.rounds.iter().map(|x| x.fresh_updates).sum();
-        assert!(fresh > 0);
-        let _ = stale; // stale may be 0 on fast profiles; asserted in bigger tests
-    }
-
-    #[test]
-    fn safa_trains_all_available() {
-        let mut cfg = base_cfg();
-        cfg.selector = "safa".into();
-        cfg.use_saa = true;
-        cfg.staleness_threshold = Some(5);
-        cfg.mode = RoundMode::Deadline { deadline: 60.0 };
-        cfg.avail = AvailMode::AllAvail;
-        cfg.rounds = 4;
-        let r = run_experiment(cfg, exec()).unwrap();
-        // all 24 learners (minus cooldowns) should be selected in round 0
-        assert!(r.rounds[0].selected >= 20, "selected={}", r.rounds[0].selected);
-    }
-
-    #[test]
-    fn no_saa_wastes_stragglers() {
-        let mut cfg = base_cfg();
-        cfg.use_saa = false;
-        cfg.mode = RoundMode::Deadline { deadline: 2.0 }; // tight: many stragglers
-        cfg.avail = AvailMode::AllAvail;
-        let r = run_experiment(cfg, exec()).unwrap();
-        assert!(
-            r.waste_fraction() > 0.0,
-            "tight deadline without SAA must waste work: {}",
-            r.waste_fraction()
-        );
-    }
-
-    #[test]
-    fn saa_reduces_waste_vs_no_saa() {
-        let mk = |use_saa: bool| {
-            let mut cfg = base_cfg();
-            cfg.use_saa = use_saa;
-            cfg.scaling = crate::aggregation::scaling::ScalingRule::Relay { beta: 0.35 };
-            cfg.mode = RoundMode::Deadline { deadline: 2.0 };
-            cfg.avail = AvailMode::AllAvail;
-            cfg.rounds = 16;
-            run_experiment(cfg, exec()).unwrap()
         };
-        let with = mk(true);
-        let without = mk(false);
-        assert!(
-            with.waste_fraction() < without.waste_fraction(),
-            "SAA should reduce waste: {} vs {}",
-            with.waste_fraction(),
-            without.waste_fraction()
-        );
-    }
-
-    #[test]
-    fn oracle_uses_fewer_resources() {
-        let mk = |oracle: bool| {
-            let mut cfg = base_cfg();
-            cfg.selector = "safa".into();
-            cfg.use_saa = true;
-            cfg.staleness_threshold = Some(1);
-            cfg.oracle = oracle;
-            cfg.mode = RoundMode::Deadline { deadline: 12.0 };
-            cfg.avail = AvailMode::AllAvail;
-            cfg.rounds = 10;
-            run_experiment(cfg, exec()).unwrap()
-        };
-        let plain = mk(false);
-        let oracle = mk(true);
-        assert!(
-            oracle.final_resource_hours() <= plain.final_resource_hours(),
-            "oracle {} vs plain {}",
-            oracle.final_resource_hours(),
-            plain.final_resource_hours()
-        );
-    }
-
-    #[test]
-    fn dynavail_has_dropouts_or_failures() {
-        let mut cfg = base_cfg();
-        cfg.avail = AvailMode::DynAvail;
-        cfg.rounds = 20;
-        let r = run_experiment(cfg, exec()).unwrap();
-        let eventful: usize = r
-            .rounds
-            .iter()
-            .map(|x| x.dropouts + usize::from(x.failed))
-            .sum();
-        assert!(eventful > 0, "dyn availability should cause churn");
-    }
-
-    #[test]
-    fn cooldown_enforced() {
-        let mut cfg = base_cfg();
-        cfg.avail = AvailMode::AllAvail;
-        cfg.total_learners = 5;
-        cfg.target_participants = 5;
-        cfg.cooldown_rounds = 3;
-        cfg.rounds = 2;
-        let r = run_experiment(cfg, exec()).unwrap();
-        // round 0 uses all 5; round 1 everyone cools down -> failed round
-        assert!(r.rounds[0].selected >= 4);
-        assert!(r.rounds[1].failed || r.rounds[1].selected == 0);
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let r1 = run_experiment(base_cfg(), exec()).unwrap();
-        let r2 = run_experiment(base_cfg(), exec()).unwrap();
-        assert_eq!(r1.final_accuracy(), r2.final_accuracy());
-        assert_eq!(
-            r1.rounds.last().unwrap().cum_resource_secs,
-            r2.rounds.last().unwrap().cum_resource_secs
-        );
-    }
-
-    #[test]
-    fn sync_records_leave_async_accounting_unset() {
-        // the async-only RoundRecord fields must stay None on OC/DL paths —
-        // the bytewise equivalence vs the frozen reference depends on it
-        let r = run_experiment(base_cfg(), exec()).unwrap();
-        for rec in &r.rounds {
-            assert!(rec.mean_concurrency.is_none());
-            assert!(rec.cum_aggregated_secs.is_none());
-            assert!(rec.in_flight_secs.is_none());
-            assert!(rec.kernel_events.is_none());
-        }
+        let exec: Arc<dyn Executor> =
+            Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+        let r = run_reference_experiment(cfg, exec).unwrap();
+        assert_eq!(r.rounds.len(), 4);
     }
 }

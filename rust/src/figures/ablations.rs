@@ -6,6 +6,8 @@
 //! * `cooldown`  — post-participation hold-out rounds (paper: 5)
 //! * `overcommit`— OC factor (paper: 1.3)
 //! * `alpha`     — APT's round-duration EMA (paper: 0.25)
+//! * `buffer`    — async-regime merge buffer size K (FedBuff-style cells)
+//! * `staleness-bound` — async-regime max staleness in model versions
 
 use anyhow::{anyhow, Result};
 
@@ -68,9 +70,28 @@ pub fn run(name: &str, opts: &FigureOpts) -> Result<()> {
                 c.with_label(format!("apt-alpha={a}"))
             })
             .collect(),
+        "buffer" => [2usize, 5, 10, 20]
+            .iter()
+            .map(|&k| {
+                let mut c = base(opts);
+                c.mode = RoundMode::Async { buffer_k: k, max_staleness: Some(10) };
+                c.with_label(format!("buffer={k}"))
+            })
+            .collect(),
+        "staleness-bound" => [Some(1usize), Some(5), Some(20), None]
+            .iter()
+            .map(|&th| {
+                let mut c = base(opts);
+                c.mode = RoundMode::Async { buffer_k: 10, max_staleness: th };
+                c.with_label(match th {
+                    Some(t) => format!("staleness-bound={t}"),
+                    None => "staleness-bound=none".into(),
+                })
+            })
+            .collect(),
         other => {
             return Err(anyhow!(
-                "unknown ablation '{other}' (beta|threshold|cooldown|overcommit|alpha|all)"
+                "unknown ablation '{other}' (beta|threshold|cooldown|overcommit|alpha|buffer|staleness-bound|all)"
             ))
         }
     };
@@ -85,7 +106,15 @@ pub fn run(name: &str, opts: &FigureOpts) -> Result<()> {
 }
 
 pub fn run_all(opts: &FigureOpts) -> Result<()> {
-    for name in ["beta", "threshold", "cooldown", "overcommit", "alpha"] {
+    for name in [
+        "beta",
+        "threshold",
+        "cooldown",
+        "overcommit",
+        "alpha",
+        "buffer",
+        "staleness-bound",
+    ] {
         run(name, opts)?;
     }
     Ok(())
@@ -99,6 +128,16 @@ mod tests {
     fn unknown_ablation_errors() {
         let opts = FigureOpts::default();
         assert!(run("bogus", &opts).is_err());
+    }
+
+    #[test]
+    fn async_ablation_configs_validate() {
+        // the relay base sets apt=true; async mode must still validate
+        // (APT is defined as ignored there, not rejected)
+        let opts = FigureOpts::default();
+        let mut c = base(&opts);
+        c.mode = RoundMode::Async { buffer_k: 5, max_staleness: Some(10) };
+        c.validate().unwrap();
     }
 
     #[test]

@@ -96,7 +96,38 @@ fn cmd_run(args: &Args) -> Result<()> {
         };
     }
     if let Some(d) = args.str_opt("deadline") {
+        if args.str_opt("buffer-k").is_some() {
+            return Err(anyhow!("--deadline and --buffer-k select conflicting round modes"));
+        }
         cfg.mode = RoundMode::Deadline { deadline: d.parse()? };
+    }
+    if let Some(k) = args.str_opt("buffer-k") {
+        // buffered-async regime: merge every K arrivals (FedBuff-style).
+        // A staleness bound already loaded via --config is preserved unless
+        // --max-staleness overrides it.
+        let prior = match cfg.mode {
+            RoundMode::Async { max_staleness, .. } => max_staleness,
+            _ => None,
+        };
+        let max_staleness = match args.str_opt("max-staleness") {
+            Some(s) => Some(s.parse::<usize>()?),
+            None => prior,
+        };
+        cfg.mode = RoundMode::Async { buffer_k: k.parse()?, max_staleness };
+    } else if let Some(s) = args.str_opt("max-staleness") {
+        match cfg.mode {
+            RoundMode::Async { buffer_k, .. } => {
+                cfg.mode = RoundMode::Async {
+                    buffer_k,
+                    max_staleness: Some(s.parse::<usize>()?),
+                };
+            }
+            _ => {
+                return Err(anyhow!(
+                    "--max-staleness requires an async mode (--buffer-k or an async --config)"
+                ))
+            }
+        }
     }
     if cfg.label.is_empty() {
         cfg.label = format!("{}-{}", cfg.selector, cfg.partition.label());
@@ -152,7 +183,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         modes.push(match m.as_str() {
             "oc" => RoundMode::OverCommit { factor: args.f64_or("oc-factor", 1.3) },
             "dl" => RoundMode::Deadline { deadline: args.f64_or("deadline", 100.0) },
-            other => return Err(anyhow!("--modes entries must be oc|dl, got '{other}'")),
+            "async" => RoundMode::Async {
+                buffer_k: args.usize_or("buffer-k", 10),
+                max_staleness: args
+                    .str_opt("max-staleness")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+            },
+            other => {
+                return Err(anyhow!("--modes entries must be oc|dl|async, got '{other}'"))
+            }
         });
     }
     let mut avails = Vec::new();
@@ -219,10 +259,12 @@ fn print_help() {
 USAGE:
   relay run   [--benchmark speech|cifar|openimage|nlp] [--selector random|oort|priority|safa|relay]
               [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
-              [--avail all|dyn] [--deadline SECS] [--backend pjrt|native] [--config cfg.json] [--out r.json]
-  relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl]
+              [--avail all|dyn] [--deadline SECS] [--buffer-k K [--max-staleness T]]
+              [--backend pjrt|native] [--config cfg.json] [--out r.json]
+  relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
-              [--workers N] [--deadline SECS] [--oc-factor F] [--report results/sweep.json] [--quiet]
+              [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
+              [--report results/sweep.json] [--quiet]
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
   relay trace-stats | forecast-eval | validate
 

@@ -36,13 +36,29 @@ pub struct RoundRecord {
     /// Test metrics, present on eval rounds.
     pub test_accuracy: Option<f64>,
     pub test_loss: Option<f64>,
+    // ---- async (buffered) regime accounting; None on OC/DL records ------
+    /// Time-averaged number of in-flight tasks over this merge interval.
+    pub mean_concurrency: Option<f64>,
+    /// Device-seconds whose updates were merged into the model so far.
+    pub cum_aggregated_secs: Option<f64>,
+    /// Device-seconds spent but neither aggregated nor wasted yet (running
+    /// tasks + buffered unmerged updates) at record time.
+    pub in_flight_secs: Option<f64>,
+    /// Kernel events processed during this merge interval.
+    pub kernel_events: Option<usize>,
 }
 
-/// Running accounting state.
+/// Running accounting state. In the async regime every spent device-second
+/// ends up in exactly one of two terminal buckets — aggregated or wasted —
+/// with the difference `spent - aggregated - wasted` being the work still
+/// in flight (tests/substrate_props.rs asserts the identity).
 #[derive(Default)]
 pub struct Accounting {
     pub cum_resource_secs: f64,
     pub cum_waste_secs: f64,
+    /// Device-seconds whose updates were merged into the model (maintained
+    /// by the async engine; the sync engines leave it 0).
+    pub cum_aggregated_secs: f64,
     unique: HashSet<usize>,
 }
 
@@ -57,6 +73,12 @@ impl Accounting {
     /// (update dropped, discarded, or never aggregated).
     pub fn waste(&mut self, secs: f64) {
         self.cum_waste_secs += secs;
+    }
+
+    /// Record that `secs` of previously-spent time produced an update that
+    /// was merged into the model (async per-event accounting).
+    pub fn aggregate(&mut self, secs: f64) {
+        self.cum_aggregated_secs += secs;
     }
 
     pub fn unique_participants(&self) -> usize {
@@ -94,6 +116,26 @@ impl ExperimentResult {
         } else {
             0.0
         }
+    }
+
+    /// Mean of the per-round `mean_concurrency` values; `None` unless this
+    /// was an async (buffered) run.
+    pub fn mean_concurrency(&self) -> Option<f64> {
+        let concs: Vec<f64> =
+            self.rounds.iter().filter_map(|r| r.mean_concurrency).collect();
+        if concs.is_empty() {
+            None
+        } else {
+            Some(concs.iter().sum::<f64>() / concs.len() as f64)
+        }
+    }
+
+    /// Device-hours whose updates were merged into the model (async runs).
+    pub fn final_aggregated_hours(&self) -> Option<f64> {
+        self.rounds
+            .last()
+            .and_then(|r| r.cum_aggregated_secs)
+            .map(|s| s / 3600.0)
     }
 
     /// First (sim_time, resource_hours) at which test accuracy reached `acc`.
@@ -148,6 +190,22 @@ impl ExperimentResult {
                             r.test_accuracy.map(num).unwrap_or(Json::Null),
                         ),
                         ("test_loss", r.test_loss.map(num).unwrap_or(Json::Null)),
+                        (
+                            "mean_concurrency",
+                            r.mean_concurrency.map(num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "cum_aggregated_secs",
+                            r.cum_aggregated_secs.map(num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "in_flight_secs",
+                            r.in_flight_secs.map(num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "kernel_events",
+                            r.kernel_events.map(|e| num(e as f64)).unwrap_or(Json::Null),
+                        ),
                     ])
                 })),
             ),
@@ -276,6 +334,45 @@ mod tests {
         assert_eq!(a.unique_participants(), 2);
         assert_eq!(a.cum_resource_secs, 25.0);
         assert_eq!(a.cum_waste_secs, 5.0);
+    }
+
+    #[test]
+    fn accounting_tracks_aggregated_bucket() {
+        let mut a = Accounting::default();
+        a.spend(1, 10.0);
+        a.spend(2, 4.0);
+        a.aggregate(10.0);
+        a.waste(4.0);
+        assert_eq!(a.cum_aggregated_secs, 10.0);
+        // every spent second landed in a terminal bucket
+        assert_eq!(a.cum_resource_secs, a.cum_aggregated_secs + a.cum_waste_secs);
+    }
+
+    #[test]
+    fn async_fields_serialize_and_default_to_null() {
+        // sync-style record: async fields absent -> null in JSON
+        let sync_rec = rr(0, 10.0, None);
+        let j = result_with(vec![sync_rec]).to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let r0 = parsed.get("rounds").unwrap().idx(0).unwrap();
+        assert_eq!(r0.get("mean_concurrency"), Some(&Json::Null));
+        assert_eq!(r0.get("cum_aggregated_secs"), Some(&Json::Null));
+        assert_eq!(r0.get("in_flight_secs"), Some(&Json::Null));
+        assert_eq!(r0.get("kernel_events"), Some(&Json::Null));
+
+        // async-style record: values survive the JSON writer
+        let mut async_rec = rr(0, 10.0, Some(0.5));
+        async_rec.mean_concurrency = Some(3.5);
+        async_rec.cum_aggregated_secs = Some(7.0);
+        async_rec.in_flight_secs = Some(2.0);
+        async_rec.kernel_events = Some(11);
+        let r = result_with(vec![async_rec]);
+        assert_eq!(r.mean_concurrency(), Some(3.5));
+        assert!((r.final_aggregated_hours().unwrap() - 7.0 / 3600.0).abs() < 1e-12);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let r0 = parsed.get("rounds").unwrap().idx(0).unwrap();
+        assert_eq!(r0.get("mean_concurrency").unwrap().as_f64(), Some(3.5));
+        assert_eq!(r0.get("kernel_events").unwrap().as_usize(), Some(11));
     }
 
     #[test]

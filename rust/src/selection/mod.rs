@@ -58,6 +58,33 @@ pub trait Selector: Send {
 
     /// Observe the round outcome (default: stateless).
     fn feedback(&mut self, _fb: &RoundFeedback) {}
+
+    /// Async-regime hook: one update arrived outside the round cadence.
+    /// `round` is the server's merge-version counter and `completed` is the
+    /// usual (learner, statistical utility, task duration) triple. Defaults
+    /// to a single-entry [`Selector::feedback`], so stateful selectors
+    /// (Oort) learn per arrival; note this also ticks Oort's pacer window
+    /// per arrival instead of per round — in async mode the window is
+    /// measured in arrivals.
+    fn on_arrival(&mut self, round: usize, completed: (usize, f64, f64), round_duration: f64) {
+        self.feedback(&RoundFeedback {
+            round,
+            completed: &[completed],
+            missed: &[],
+            round_duration,
+        });
+    }
+
+    /// Async-regime hook: a selected learner departed (dropout) without
+    /// delivering. Defaults to a single-entry missed [`Selector::feedback`].
+    fn on_departure(&mut self, round: usize, learner: usize, round_duration: f64) {
+        self.feedback(&RoundFeedback {
+            round,
+            completed: &[],
+            missed: &[learner],
+            round_duration,
+        });
+    }
 }
 
 /// Construct a selector by name ("random" | "oort" | "priority" | "safa").
@@ -177,6 +204,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn arrival_and_departure_hooks_route_through_feedback() {
+        // a recording selector proves the default hook implementations fold
+        // per-arrival/per-departure events into the feedback channel
+        struct Recorder {
+            completed: Vec<(usize, f64, f64)>,
+            missed: Vec<usize>,
+        }
+        impl Selector for Recorder {
+            fn name(&self) -> &'static str {
+                "recorder"
+            }
+            fn select(&mut self, _ctx: &mut SelectionCtx) -> Vec<usize> {
+                Vec::new()
+            }
+            fn feedback(&mut self, fb: &RoundFeedback) {
+                self.completed.extend_from_slice(fb.completed);
+                self.missed.extend_from_slice(fb.missed);
+            }
+        }
+        let mut s = Recorder { completed: Vec::new(), missed: Vec::new() };
+        s.on_arrival(3, (7, 42.0, 10.5), 60.0);
+        s.on_arrival(4, (9, 1.0, 2.0), 60.0);
+        s.on_departure(4, 11, 60.0);
+        assert_eq!(s.completed, vec![(7, 42.0, 10.5), (9, 1.0, 2.0)]);
+        assert_eq!(s.missed, vec![11]);
     }
 
     #[test]

@@ -321,6 +321,18 @@ mod tests {
     }
 
     #[test]
+    fn per_arrival_feedback_updates_exploration_state() {
+        // async-regime hooks: each arrival registers the learner as
+        // explored with its observed utility; each departure dampens it
+        let mut s = OortSelector::default();
+        s.on_arrival(0, (3, 12.0, 20.0), 60.0);
+        assert!((s.explored[&3].stat_util - 12.0).abs() < 1e-12);
+        assert!((s.explored[&3].duration - 20.0).abs() < 1e-12);
+        s.on_departure(1, 3, 60.0);
+        assert!((s.explored[&3].stat_util - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn missed_deadline_dampens_utility() {
         let mut s = OortSelector::default();
         s.explored.insert(7, LearnerStats { stat_util: 8.0, duration: 10.0, last_round: 0 });

@@ -1,0 +1,230 @@
+//! The discrete-event kernel: one unified min-heap of timestamped events
+//! (check-ins, task completions/departures, stale deliveries, evaluations)
+//! with fully deterministic ordering, generalizing the original
+//! stale-delivery-only [`crate::sim::DeliveryQueue`].
+//!
+//! Ordering is the triple `(at, class, seq)`:
+//!
+//! * `at` — event time, compared with `f64::total_cmp` (never `partial_cmp`,
+//!   whose `None` on NaN silently corrupted heap order in the pre-kernel
+//!   queue). Non-finite times are rejected at insertion, so a NaN produced
+//!   by upstream timing math fails loudly instead of reordering the heap.
+//! * `class` — [`EventClass`] priority among same-time events (deliveries
+//!   before departures before evals before check-ins), so simultaneous
+//!   events of different kinds resolve the same way on every run.
+//! * `seq` — monotonically increasing insertion index: same-time same-class
+//!   events pop in FIFO order regardless of how insertions interleave
+//!   (tests/substrate_props.rs locks this in).
+//!
+//! The kernel also carries the virtual clock: `pop_next` advances `now` to
+//! the popped event's time, which is how the asynchronous (buffered) round
+//! regime advances time; round-synchronous drivers instead use `pop_due` +
+//! `advance_to` to sweep a whole round window at once.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Priority class breaking ties among events scheduled at the same instant.
+/// Lower-numbered classes pop first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventClass {
+    /// An update arriving at the server (fresh/stale delivery, async task
+    /// completion).
+    Delivery = 0,
+    /// A learner leaving mid-task (dropout) without delivering.
+    Departure = 1,
+    /// A scheduled evaluation.
+    Eval = 2,
+    /// A (re-)selection opportunity: the async regime's check-in retry.
+    CheckIn = 3,
+}
+
+/// One scheduled event, as returned by [`EventKernel::pop_next`]/`pop_due`.
+#[derive(Clone, Debug)]
+pub struct Scheduled<P> {
+    /// Absolute event time (seconds since experiment start). Always finite.
+    pub at: f64,
+    pub class: EventClass,
+    /// Insertion index: FIFO order among `(at, class)` ties.
+    pub seq: u64,
+    pub payload: P,
+}
+
+impl<P> PartialEq for Scheduled<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl<P> Eq for Scheduled<P> {}
+impl<P> PartialOrd for Scheduled<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for Scheduled<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest
+        // (at, class, seq) triple on top.
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.class.cmp(&self.class))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Unified event heap + virtual clock. See the module docs for ordering.
+pub struct EventKernel<P> {
+    heap: BinaryHeap<Scheduled<P>>,
+    next_seq: u64,
+    now: f64,
+}
+
+impl<P> Default for EventKernel<P> {
+    fn default() -> Self {
+        EventKernel { heap: BinaryHeap::new(), next_seq: 0, now: 0.0 }
+    }
+}
+
+impl<P> EventKernel<P> {
+    /// Current virtual time (seconds since experiment start).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at`.
+    ///
+    /// Panics on non-finite `at` (a NaN/inf would corrupt heap order — the
+    /// hazard the pre-kernel `Pending::cmp` silently swallowed) and on
+    /// scheduling into the past.
+    pub fn schedule(&mut self, at: f64, class: EventClass, payload: P) {
+        assert!(at.is_finite(), "event kernel: non-finite event time {at}");
+        assert!(
+            at >= self.now,
+            "event kernel: event at {at} is before now {}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { at, class, seq, payload });
+    }
+
+    /// Pop the earliest event and advance the clock to its time.
+    pub fn pop_next(&mut self) -> Option<Scheduled<P>> {
+        let ev = self.heap.pop()?;
+        self.now = ev.at; // >= now: enforced at schedule time
+        Some(ev)
+    }
+
+    /// Pop every event due at or before `t`, in deterministic
+    /// `(at, class, seq)` order, without touching the clock (the
+    /// round-synchronous drivers sweep a whole round window at once).
+    pub fn pop_due(&mut self, t: f64) -> Vec<Scheduled<P>> {
+        let mut out = Vec::new();
+        while let Some(top) = self.heap.peek() {
+            if top.at <= t {
+                out.push(self.heap.pop().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Advance the clock without popping (round-synchronous drivers).
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(t >= self.now, "time cannot go backwards");
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Time of the earliest pending event, if any.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Iterate pending events in unspecified (but deterministic) order —
+    /// for order-insensitive probes like APT's straggler scan.
+    pub fn iter(&self) -> impl Iterator<Item = &Scheduled<P>> {
+        self.heap.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_and_advances_clock() {
+        let mut k = EventKernel::default();
+        k.schedule(10.0, EventClass::Delivery, "c");
+        k.schedule(1.0, EventClass::Delivery, "a");
+        k.schedule(5.0, EventClass::Delivery, "b");
+        assert_eq!(k.len(), 3);
+        assert_eq!(k.peek_at(), Some(1.0));
+        let first = k.pop_next().unwrap();
+        assert_eq!((first.at, first.payload), (1.0, "a"));
+        assert_eq!(k.now(), 1.0);
+        let rest: Vec<&str> = k.pop_due(10.0).into_iter().map(|e| e.payload).collect();
+        assert_eq!(rest, vec!["b", "c"]);
+        assert!(k.is_empty());
+    }
+
+    #[test]
+    fn same_time_orders_by_class_then_fifo() {
+        let mut k = EventKernel::default();
+        k.schedule(3.0, EventClass::CheckIn, 0);
+        k.schedule(3.0, EventClass::Delivery, 1);
+        k.schedule(3.0, EventClass::Delivery, 2);
+        k.schedule(3.0, EventClass::Departure, 3);
+        k.schedule(3.0, EventClass::Eval, 4);
+        let order: Vec<i32> = k.pop_due(3.0).into_iter().map(|e| e.payload).collect();
+        // deliveries (FIFO) -> departure -> eval -> check-in
+        assert_eq!(order, vec![1, 2, 3, 4, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_times() {
+        let mut k = EventKernel::default();
+        k.schedule(f64::NAN, EventClass::Delivery, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_infinite_times() {
+        let mut k = EventKernel::default();
+        k.schedule(f64::INFINITY, EventClass::Delivery, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "is before now")]
+    fn rejects_scheduling_into_the_past() {
+        let mut k = EventKernel::default();
+        k.schedule(5.0, EventClass::Delivery, ());
+        k.pop_next();
+        k.schedule(1.0, EventClass::Delivery, ());
+    }
+
+    #[test]
+    fn pop_due_leaves_clock_and_later_events() {
+        let mut k = EventKernel::default();
+        k.schedule(1.0, EventClass::Delivery, 1);
+        k.schedule(2.0, EventClass::Delivery, 2);
+        let due = k.pop_due(1.5);
+        assert_eq!(due.len(), 1);
+        assert_eq!(k.now(), 0.0);
+        k.advance_to(2.0);
+        assert_eq!(k.now(), 2.0);
+        assert_eq!(k.pop_next().unwrap().payload, 2);
+    }
+}

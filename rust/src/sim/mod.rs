@@ -1,13 +1,17 @@
 //! Event-driven simulation core: the virtual clock, the availability view
-//! (AllAvail vs DynAvail over a trace), and a pending-delivery queue used
-//! for post-deadline (stale) update arrivals.
+//! (AllAvail vs DynAvail over a trace), the discrete-event kernel
+//! ([`kernel::EventKernel`] — a unified heap of check-ins, task
+//! completions, stale deliveries and evals with deterministic tie-breaking),
+//! and the legacy pending-delivery queue ([`DeliveryQueue`], now a thin
+//! wrapper over the kernel) used for post-deadline (stale) update arrivals.
 //!
 //! The paper's testbed time-multiplexes simulated learners on GPUs; here
 //! *training math is real* (AOT HLO through PJRT) while *time* is simulated:
 //! completion times come from device profiles, availability from traces.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+pub mod kernel;
+
+pub use kernel::{EventClass, EventKernel, Scheduled};
 
 use crate::trace::{LazyTraceSet, TraceSet};
 
@@ -90,74 +94,60 @@ impl Availability {
     }
 }
 
-/// A scheduled future delivery (straggler upload finishing after its round).
+/// A scheduled future delivery (straggler upload finishing after its round),
+/// as returned by [`DeliveryQueue::due`]. This used to be the heap entry
+/// itself, with a `partial_cmp(..).unwrap_or(Equal)` comparator that
+/// silently corrupted heap order for non-finite times; ordering now lives
+/// entirely in [`EventKernel`] (total-order comparator + non-finite times
+/// rejected at insertion), and `Pending` is just the plain return value.
 #[derive(Clone, Debug)]
 pub struct Pending<T> {
     pub deliver_at: f64,
     pub item: T,
 }
 
-impl<T> PartialEq for Pending<T> {
-    fn eq(&self, other: &Self) -> bool {
-        self.deliver_at == other.deliver_at
-    }
-}
-impl<T> Eq for Pending<T> {}
-impl<T> PartialOrd for Pending<T> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<T> Ord for Pending<T> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on deliver_at
-        other
-            .deliver_at
-            .partial_cmp(&self.deliver_at)
-            .unwrap_or(Ordering::Equal)
-    }
-}
-
-/// Min-heap of future deliveries.
+/// Min-heap of future deliveries — the pre-kernel API, now a thin wrapper
+/// over [`EventKernel`] (class [`EventClass::Delivery`]), so it inherits the
+/// kernel's deterministic FIFO tie-breaking and non-finite-time rejection.
 pub struct DeliveryQueue<T> {
-    heap: BinaryHeap<Pending<T>>,
+    kernel: EventKernel<T>,
 }
 
 impl<T> Default for DeliveryQueue<T> {
     fn default() -> Self {
-        DeliveryQueue { heap: BinaryHeap::new() }
+        DeliveryQueue { kernel: EventKernel::default() }
     }
 }
 
 impl<T> DeliveryQueue<T> {
+    /// Schedule a delivery. Panics on non-finite `deliver_at` (a NaN would
+    /// silently corrupt heap order — see `Pending::cmp` above).
     pub fn push(&mut self, deliver_at: f64, item: T) {
-        self.heap.push(Pending { deliver_at, item });
+        self.kernel.schedule(deliver_at, EventClass::Delivery, item);
     }
 
-    /// Pop every item due at or before `t`, in delivery order.
+    /// Pop every item due at or before `t`, in delivery order (FIFO among
+    /// equal `deliver_at`).
     pub fn due(&mut self, t: f64) -> Vec<Pending<T>> {
-        let mut out = Vec::new();
-        while let Some(top) = self.heap.peek() {
-            if top.deliver_at <= t {
-                out.push(self.heap.pop().unwrap());
-            } else {
-                break;
-            }
-        }
-        out
+        self.kernel
+            .pop_due(t)
+            .into_iter()
+            .map(|e| Pending { deliver_at: e.at, item: e.payload })
+            .collect()
     }
 
-    /// Iterate items still pending (e.g. APT's straggler probe).
-    pub fn iter(&self) -> impl Iterator<Item = &Pending<T>> {
-        self.heap.iter()
+    /// Iterate `(deliver_at, item)` still pending (e.g. APT's straggler
+    /// probe), in unspecified (but deterministic) order.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, &T)> {
+        self.kernel.iter().map(|e| (e.at, &e.payload))
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.kernel.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.kernel.is_empty()
     }
 }
 
@@ -216,6 +206,25 @@ mod tests {
             assert_eq!(eager.sample_series(l, 1800.0), lazy.sample_series(l, 1800.0));
         }
         assert!(lazy.trace().is_none() && eager.trace().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn delivery_queue_rejects_nan_times() {
+        // Regression: a NaN deliver_at used to enter the heap and compare
+        // Equal to everything, silently corrupting delivery order.
+        let mut q = DeliveryQueue::default();
+        q.push(f64::NAN, "x");
+    }
+
+    #[test]
+    fn delivery_queue_breaks_ties_fifo() {
+        let mut q = DeliveryQueue::default();
+        q.push(2.0, "first");
+        q.push(2.0, "second");
+        q.push(2.0, "third");
+        let items: Vec<&str> = q.due(2.0).into_iter().map(|p| p.item).collect();
+        assert_eq!(items, vec!["first", "second", "third"]);
     }
 
     #[test]

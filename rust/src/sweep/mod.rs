@@ -128,6 +128,10 @@ fn mode_label(m: &RoundMode) -> String {
     match m {
         RoundMode::OverCommit { factor } => format!("oc{factor}"),
         RoundMode::Deadline { deadline } => format!("dl{deadline}"),
+        RoundMode::Async { buffer_k, max_staleness } => match max_staleness {
+            Some(s) => format!("async{buffer_k}s{s}"),
+            None => format!("async{buffer_k}"),
+        },
     }
 }
 
@@ -353,6 +357,20 @@ mod tests {
                 vec![1, 2, 3]
             );
         }
+    }
+
+    #[test]
+    fn async_mode_cells_get_descriptive_labels() {
+        let mut spec = GridSpec::new(base());
+        spec.modes = vec![
+            RoundMode::Async { buffer_k: 4, max_staleness: Some(8) },
+            RoundMode::Async { buffer_k: 10, max_staleness: None },
+        ];
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].mode, "async4s8");
+        assert_eq!(cells[1].mode, "async10");
+        assert!(cells[0].label.contains("async4s8"), "{}", cells[0].label);
     }
 
     #[test]

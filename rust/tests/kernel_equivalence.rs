@@ -1,0 +1,154 @@
+//! The event-kernel equivalence suite: for a grid of OC/DL ×
+//! AllAvail/DynAvail × selector configs, the refactored kernel-driven
+//! engine (`coordinator::engine`) must produce `ExperimentResult` JSON that
+//! is **byte-identical** to the pre-refactor monolithic round loop, which
+//! is kept frozen in-tree as `coordinator::reference` (this container image
+//! has no way to replay historical binaries, so the oracle is the frozen
+//! source itself, executing the exact same floating-point kernels).
+//!
+//! Golden files: every cell can additionally be pinned to a committed
+//! golden output under `tests/golden/`. Regenerate with
+//! `RELAY_WRITE_GOLDEN=1 cargo test --test kernel_equivalence`; whenever a
+//! golden file exists for a cell, the kernel engine's bytes are compared
+//! against it too, so accidental behavioral drift in *either* engine fails
+//! the suite.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use relay::aggregation::scaling::ScalingRule;
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_reference_experiment};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// Small but straggler-rich base: no round-duration floor and a tight
+/// deadline, so the stale-delivery path (the part the kernel replaced) is
+/// exercised hard in every DL cell.
+fn tiny_base() -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 16,
+        rounds: 6,
+        target_participants: 4,
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        use_saa: true,
+        staleness_threshold: Some(3),
+        scaling: ScalingRule::Relay { beta: 0.35 },
+        ..Default::default()
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Run one cell through both engines and assert bytewise equality (and
+/// equality against the committed golden output, when present).
+fn check_cell(label: &str, cfg: ExpConfig) {
+    let reference = run_reference_experiment(cfg.clone(), exec())
+        .unwrap_or_else(|e| panic!("cell '{label}': reference engine failed: {e:#}"));
+    let kernel = run_experiment(cfg, exec())
+        .unwrap_or_else(|e| panic!("cell '{label}': kernel engine failed: {e:#}"));
+    let ref_json = reference.to_json().to_string();
+    let kern_json = kernel.to_json().to_string();
+    assert_eq!(
+        ref_json, kern_json,
+        "cell '{label}': event-kernel engine diverged from the frozen pre-refactor loop"
+    );
+    let path = golden_dir().join(format!("{label}.json"));
+    if std::env::var("RELAY_WRITE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, &ref_json).unwrap();
+    } else if path.exists() {
+        let golden = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            golden, kern_json,
+            "cell '{label}': diverged from committed golden output {path:?}"
+        );
+    }
+}
+
+/// The acceptance grid: 4 selectors × {OC, DL} × {AllAvail, DynAvail}.
+#[test]
+fn oc_dl_grid_matches_reference_byte_for_byte() {
+    for sel in ["random", "oort", "priority", "safa"] {
+        for (mode_name, mode) in [
+            ("oc1.3", RoundMode::OverCommit { factor: 1.3 }),
+            ("dl2", RoundMode::Deadline { deadline: 2.0 }),
+        ] {
+            for (avail_name, avail) in [
+                ("all", AvailMode::AllAvail),
+                ("dyn", AvailMode::DynAvail),
+            ] {
+                let mut cfg = tiny_base();
+                cfg.selector = sel.into();
+                cfg.mode = mode;
+                cfg.avail = avail;
+                let label = format!("{sel}-{mode_name}-{avail_name}");
+                cfg.label = label.clone();
+                check_cell(&label, cfg);
+            }
+        }
+    }
+}
+
+/// The full RELAY stack (IPS + SAA + APT): APT's straggler probe now walks
+/// the kernel's pending delivery events — its target math must not move.
+#[test]
+fn relay_full_stack_matches_reference() {
+    let mut cfg = tiny_base().relay();
+    cfg.mode = RoundMode::Deadline { deadline: 2.0 };
+    cfg.avail = AvailMode::DynAvail;
+    cfg.rounds = 8;
+    cfg.label = "relay-dl2-dyn".into();
+    check_cell("relay-dl2-dyn", cfg);
+}
+
+/// Without SAA every straggler is waste-accounted up front (the doomed-skip
+/// path) — none of that bookkeeping may shift.
+#[test]
+fn no_saa_matches_reference() {
+    let mut cfg = tiny_base();
+    cfg.use_saa = false;
+    cfg.staleness_threshold = None;
+    cfg.mode = RoundMode::Deadline { deadline: 2.0 };
+    cfg.avail = AvailMode::AllAvail;
+    cfg.label = "nosaa-dl2-all".into();
+    check_cell("nosaa-dl2-all", cfg);
+}
+
+/// Unbounded staleness (the RELAY default) keeps deliveries pending across
+/// many rounds — the longest-lived kernel events.
+#[test]
+fn unbounded_staleness_matches_reference() {
+    let mut cfg = tiny_base();
+    cfg.staleness_threshold = None;
+    cfg.mode = RoundMode::OverCommit { factor: 1.3 };
+    cfg.avail = AvailMode::AllAvail;
+    cfg.rounds = 8;
+    cfg.label = "unbounded-oc-all".into();
+    check_cell("unbounded-oc-all", cfg);
+}
+
+/// SAFA+O runs the two-pass oracle protocol on both engines: the probe
+/// pass's aggregated-stale plan must transfer identically.
+#[test]
+fn safa_oracle_matches_reference() {
+    let mut cfg = tiny_base();
+    cfg.selector = "safa".into();
+    cfg.staleness_threshold = Some(1);
+    cfg.oracle = true;
+    cfg.mode = RoundMode::Deadline { deadline: 2.0 };
+    cfg.avail = AvailMode::AllAvail;
+    cfg.label = "safa-oracle-dl2-all".into();
+    check_cell("safa-oracle-dl2-all", cfg);
+}

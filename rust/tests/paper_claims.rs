@@ -148,6 +148,54 @@ fn scaling_rules_differ_but_all_learn() {
     }
 }
 
+/// The logical endpoint of SAA (FedBuff-style buffered async): with a
+/// staleness bound, the async regime reaches accuracy at least matching the
+/// DL regime at equal resource-hours on the tiny benchmark — and wastes
+/// less, because the buffer keeps the stragglers a tight deadline discards.
+#[test]
+fn async_matches_deadline_at_equal_resources() {
+    let mk = |mode: RoundMode| {
+        let mut c = base();
+        c.mode = mode;
+        c.avail = AvailMode::AllAvail;
+        c.rounds = 40;
+        c.cooldown_rounds = 2;
+        c.eval_every = 2;
+        run_experiment(c, exec()).unwrap()
+    };
+    let dl = mk(RoundMode::Deadline { deadline: 2.0 });
+    let asy = mk(RoundMode::Async { buffer_k: 6, max_staleness: Some(8) });
+
+    // equal-resource comparison: best accuracy either regime reached within
+    // the smaller of the two total device-hour budgets
+    let budget = dl.final_resource_hours().min(asy.final_resource_hours());
+    let acc_within = |r: &relay::metrics::ExperimentResult| {
+        r.rounds
+            .iter()
+            .filter(|rec| rec.cum_resource_secs / 3600.0 <= budget + 1e-9)
+            .filter_map(|rec| rec.test_accuracy)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let (a_async, a_dl) = (acc_within(&asy), acc_within(&dl));
+    assert!(
+        a_async.is_finite() && a_dl.is_finite(),
+        "both regimes must eval within the shared budget: async {a_async}, dl {a_dl}"
+    );
+    assert!(a_async > 0.4, "async regime failed to learn: {a_async}");
+    assert!(
+        a_async >= a_dl - 0.05,
+        "async accuracy {a_async} fell below DL {a_dl} at equal resource-hours ({budget}h)"
+    );
+    // the waste mechanism is the point: the tight deadline throws away
+    // every straggler (no SAA here), the buffer merges them
+    assert!(
+        asy.waste_fraction() < dl.waste_fraction(),
+        "async waste {} !< DL waste {}",
+        asy.waste_fraction(),
+        dl.waste_fraction()
+    );
+}
+
 /// Fig. 12: HS4 (all devices 2x faster) shortens wall-clock time to finish
 /// the same number of rounds in OC mode.
 #[test]

@@ -1,8 +1,15 @@
 //! Property tests over the sim/trace substrate (via `relay::util::prop`):
-//! delivery-queue determinism under `deliver_at` ties, trace well-formedness
-//! across randomized generator configs, and lazy==eager trace equivalence.
+//! delivery-queue determinism under `deliver_at` ties, event-kernel FIFO
+//! ordering among simultaneous events, async-regime accounting invariants,
+//! trace well-formedness across randomized generator configs, and
+//! lazy==eager trace equivalence.
 
-use relay::sim::DeliveryQueue;
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::sim::{DeliveryQueue, EventClass, EventKernel};
 use relay::trace::{LazyTraceSet, TraceConfig, TraceSet, WEEK};
 use relay::util::prop::{prop_assert, prop_check, PropResult};
 use relay::util::rng::Rng;
@@ -54,6 +61,104 @@ fn delivery_queue_deterministic_under_ties() {
             format!("drained {} of {} due items", d1.len(), times.len()),
         )?;
         prop_assert(q1.is_empty() && q2.is_empty(), "queue not fully drained")
+    });
+}
+
+#[test]
+fn kernel_simultaneous_events_pop_in_fifo_order() {
+    // Simultaneous events must pop in deterministic (time, class, FIFO)
+    // order no matter how insertions interleave: the oracle is a stable
+    // sort by (time, class), which preserves insertion order among ties.
+    prop_check(100, 0xF1F0, |rng| {
+        let n = rng.range(1, 50);
+        let classes = [
+            EventClass::Delivery,
+            EventClass::Departure,
+            EventClass::Eval,
+            EventClass::CheckIn,
+        ];
+        // times drawn from a tiny discrete set so ties are the norm
+        let evs: Vec<(f64, EventClass, usize)> = (0..n)
+            .map(|i| (rng.below(3) as f64, classes[rng.below(4)], i))
+            .collect();
+        let mut k = EventKernel::default();
+        for &(t, c, i) in &evs {
+            k.schedule(t, c, i);
+        }
+        let popped: Vec<(f64, EventClass, usize)> = k
+            .pop_due(3.0)
+            .into_iter()
+            .map(|e| (e.at, e.class, e.payload))
+            .collect();
+        let mut expected = evs.clone();
+        expected.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        prop_assert(
+            popped == expected,
+            format!("kernel order diverged:\n  got      {popped:?}\n  expected {expected:?}"),
+        )?;
+        prop_assert(k.is_empty(), "kernel not fully drained")
+    });
+}
+
+#[test]
+fn async_accounting_invariants_hold_for_random_configs() {
+    // The async engine's per-event accounting: at every merge record,
+    // aggregated + wasted + in-flight device-seconds must sum to spent,
+    // and the concurrency integral must stay within [0, target].
+    prop_check(8, 0xA51C, |rng| {
+        let selectors = ["random", "priority", "oort"];
+        let cfg = ExpConfig {
+            variant: "tiny".into(),
+            total_learners: rng.range(8, 24),
+            rounds: rng.range(2, 6),
+            target_participants: rng.range(2, 6),
+            mode: RoundMode::Async {
+                buffer_k: rng.range(1, 5),
+                max_staleness: if rng.bool(0.5) { Some(rng.range(0, 4)) } else { None },
+            },
+            avail: if rng.bool(0.5) { AvailMode::AllAvail } else { AvailMode::DynAvail },
+            selector: selectors[rng.below(3)].into(),
+            mean_samples: 8,
+            test_per_class: 2,
+            eval_every: 2,
+            cooldown_rounds: 1,
+            lr: 0.1,
+            seed: rng.next_u64() % 10_000,
+            ..Default::default()
+        };
+        let exec: Arc<dyn Executor> =
+            Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+        let r = run_experiment(cfg.clone(), exec).map_err(|e| format!("run failed: {e:#}"))?;
+        prop_assert(
+            r.rounds.len() == cfg.rounds,
+            format!("{} records for {} rounds", r.rounds.len(), cfg.rounds),
+        )?;
+        for rec in &r.rounds {
+            let agg = rec
+                .cum_aggregated_secs
+                .ok_or("async record missing cum_aggregated_secs")?;
+            let inflight = rec.in_flight_secs.ok_or("async record missing in_flight_secs")?;
+            let conc = rec.mean_concurrency.ok_or("async record missing mean_concurrency")?;
+            prop_assert(
+                inflight >= -1e-9,
+                format!("negative in-flight {inflight} at round {}", rec.round),
+            )?;
+            prop_assert(agg >= 0.0, format!("negative aggregated {agg}"))?;
+            let spent = rec.cum_resource_secs;
+            let closed = agg + rec.cum_waste_secs + inflight;
+            prop_assert(
+                (spent - closed).abs() <= 1e-6 * spent.max(1.0),
+                format!(
+                    "round {}: spent {spent} != aggregated {agg} + wasted {} + in-flight {inflight}",
+                    rec.round, rec.cum_waste_secs
+                ),
+            )?;
+            prop_assert(
+                (0.0..=cfg.target_participants as f64 + 1e-9).contains(&conc),
+                format!("round {}: mean concurrency {conc} outside [0, target]", rec.round),
+            )?;
+        }
+        Ok(())
     });
 }
 

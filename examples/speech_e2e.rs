@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
                     rec.round,
                     rec.sim_time,
                     rec.cum_resource_secs / 3600.0,
-                    rec.train_loss,
+                    rec.train_loss.unwrap_or(f64::NAN),
                     tl,
                     100.0 * acc
                 );

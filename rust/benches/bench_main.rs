@@ -21,9 +21,10 @@ use relay::config::{preset, AvailMode, ExpConfig, RoundMode};
 use relay::coordinator::Coordinator;
 use relay::data::partition::PartitionScheme;
 use relay::forecast::SeasonalForecaster;
+use relay::population::{AvailabilityIndex, CandidateSet};
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
 use relay::selection::{Candidate, SelectionCtx};
-use relay::sim::{EventClass, EventKernel};
+use relay::sim::{Availability, EventClass, EventKernel};
 use relay::sweep::{run_grid, GridSpec, SweepOpts};
 use relay::trace::{LazyTraceSet, TraceConfig, TraceSet};
 use relay::util::bench;
@@ -309,12 +310,49 @@ fn bench_scale_path() {
     }
 }
 
+fn bench_population() {
+    println!("\n== population substrate (candidate set + availability index) ==");
+    // candidate-set ops at 1M ids: the per-event cost of the async engine
+    let n = 1_000_000usize;
+    let mut set = CandidateSet::new(n);
+    for id in (0..n).step_by(7) {
+        set.insert(id);
+    }
+    let mut i = 0usize;
+    bench::run("population/candidate_set_toggle_1M", || {
+        i = (i + 13) % n;
+        if !set.insert(i) {
+            set.remove(i);
+        }
+    });
+    let mut rng = Rng::new(9);
+    bench::run("population/candidate_set_sample100_of_1M", || {
+        std::hint::black_box(set.sample_k(&mut rng, 100));
+    });
+    // per-advance cost of the availability index at 10k vs 100k learners:
+    // transitions due dominate, not population size (the sub-linear claim)
+    for n in [10_000usize, 100_000] {
+        let mut idx = AvailabilityIndex::new(
+            Availability::Lazy(LazyTraceSet::new(n, 4, TraceConfig::default())),
+            n,
+            8,
+        );
+        idx.advance_to(0.0, threadpool::default_workers()); // one-time build
+        let mut t = 0.0f64;
+        bench::run(&format!("population/index_advance_1s/n={n}"), || {
+            t += 1.0;
+            std::hint::black_box(idx.advance_to(t, 1).len());
+        });
+    }
+}
+
 fn main() {
     println!("relay benchmark suite (hand-rolled harness; budget ~1.5s per bench)");
     let t0 = std::time::Instant::now();
     bench_substrates();
     bench_kernel();
     bench_trace_forecast();
+    bench_population();
     bench_scale_path();
     bench_selectors();
     bench_runtime();

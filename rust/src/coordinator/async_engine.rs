@@ -27,11 +27,17 @@
 //! no round-synchronous target to shrink); the round-duration EMA is still
 //! maintained as the forecaster slot/burn-cadence estimate.
 //!
-//! Scale note: re-selection currently re-runs the `checked_in` scan
-//! (O(total_learners)) on every departure, which is exact but makes the
-//! event loop O(N · events); an incremental candidate set is the obvious
-//! follow-up once async cells move to 100k-learner populations
-//! (`cargo bench coordinator/async_3_merges` tracks the cost).
+//! Scale: per-departure re-selection draws from the population substrate's
+//! incrementally-maintained eligible set (`population::Population`) instead
+//! of re-running a full `checked_in` scan — availability transitions arrive
+//! as index events, busy/cooldown membership is updated at the spawn /
+//! arrival / dropout / merge points below, and sampling selectors (Random)
+//! draw in O(k log n) per fill without ever materializing the pool. The
+//! per-event cost is therefore independent of `total_learners` (sub-linear
+//! end to end; `relay bench` and `cargo bench population/...` track it),
+//! which is what makes million-learner async cells run in seconds. The
+//! sampled path is bit-compatible with the old scan-and-select, so results
+//! are unchanged.
 
 use anyhow::{anyhow, Result};
 
@@ -126,6 +132,9 @@ impl Coordinator {
                 }
                 EngineEvent::Arrival(task) => {
                     st.in_flight -= 1;
+                    // the device is free again as of this instant (whether
+                    // the update merges, buffers, or is discarded)
+                    self.population.release(task.learner, st.version, now);
                     self.async_arrival(task, &mut st, result)?;
                     // don't refill after the final merge: newly spawned
                     // tasks could never merge — they'd only burn real SGD
@@ -139,6 +148,9 @@ impl Coordinator {
                     st.in_flight_secs -= d.spent;
                     st.dropouts += 1;
                     self.accounting.waste(d.spent);
+                    // free again; still eligible iff its session hasn't
+                    // actually ended yet (the index decides)
+                    self.population.release(d.learner, st.version, now);
                     self.selector.on_departure(st.version, d.learner, self.apt.mu());
                     self.async_fill(&mut st)?;
                 }
@@ -163,7 +175,8 @@ impl Coordinator {
     }
 
     /// Top up the in-flight pool to `target_participants`: per-departure
-    /// re-selection. Returns how many tasks were actually spawned.
+    /// re-selection against the incrementally-maintained eligible set.
+    /// Returns how many tasks were actually spawned.
     fn async_fill(&mut self, st: &mut AsyncState) -> Result<usize> {
         let target = self.cfg.target_participants;
         if st.in_flight >= target {
@@ -171,20 +184,35 @@ impl Coordinator {
         }
         let now = self.kernel.now();
         let mu = self.apt.mu();
-        let candidates = self.checked_in(st.version, now, mu);
-        if candidates.is_empty() {
-            return Ok(0);
-        }
+        // bring the eligible set up to (version, now): availability flips
+        // from the index, cooldown-bucket expiries from merges/burns
+        self.population.async_sync_to(st.version, now);
         let need = target - st.in_flight;
-        let mut selected = {
-            let mut ctx = SelectionCtx {
-                round: st.version,
-                now,
-                target: need,
-                candidates: &candidates,
-                rng: &mut self.rng,
-            };
-            self.selector.select(&mut ctx)
+        let sampled = self.selector.select_from(
+            self.population.eligible_set(),
+            st.version,
+            now,
+            need,
+            &mut self.rng,
+        );
+        let mut selected = match sampled {
+            // sampling selector: O(need log n), never materializes the pool
+            Some(ids) => ids,
+            // rank-the-pool selector: materialize the eligible ids only
+            None => {
+                let candidates = self.population.async_candidates(now, mu);
+                if candidates.is_empty() {
+                    return Ok(0);
+                }
+                let mut ctx = SelectionCtx {
+                    round: st.version,
+                    now,
+                    target: need,
+                    candidates: &candidates,
+                    rng: &mut self.rng,
+                };
+                self.selector.select(&mut ctx)
+            }
         };
         // SAFA-style selectors return the whole pool; async concurrency is
         // capped at the target either way
@@ -194,10 +222,11 @@ impl Coordinator {
         for &id in &selected {
             let n_samples = self.shards[id].len();
             let t = self
-                .profiles
-                .get(id)
+                .population
+                .profile(id)
                 .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
-            let dropped = if self.avail.available_through(id, now, t) {
+            let avail = self.population.availability();
+            let dropped = if avail.available_through(id, now, t) {
                 None
             } else {
                 // drops out at (approximately) the end of its current session
@@ -205,7 +234,7 @@ impl Coordinator {
                 let mut hi = t;
                 for _ in 0..20 {
                     let mid = 0.5 * (lo + hi);
-                    if self.avail.available_through(id, now, mid) {
+                    if avail.available_through(id, now, mid) {
                         lo = mid;
                     } else {
                         hi = mid;
@@ -240,7 +269,7 @@ impl Coordinator {
                     // partial work until the session ends; wasted at departure
                     self.accounting.spend(id, dt);
                     st.in_flight_secs += dt;
-                    self.busy_until[id] = now + dt;
+                    self.population.mark_busy(id, now + dt);
                     self.kernel.schedule(
                         now + dt,
                         EventClass::Departure,
@@ -253,7 +282,7 @@ impl Coordinator {
                         .expect("one training outcome per non-dropped plan")?;
                     self.accounting.spend(id, t);
                     st.in_flight_secs += t;
-                    self.busy_until[id] = now + t;
+                    self.population.mark_busy(id, now + t);
                     self.kernel.schedule(
                         now + t,
                         EventClass::Delivery,
@@ -297,7 +326,8 @@ impl Coordinator {
         }
         self.selector
             .on_arrival(st.version, (id, task.stat_util, task.duration), self.apt.mu());
-        self.cooldown_until[id] = st.version + 1 + self.cfg.cooldown_rounds;
+        self.population
+            .begin_cooldown(id, st.version + 1 + self.cfg.cooldown_rounds);
         st.buffer.push(task);
         if st.buffer.len() >= st.buffer_k {
             self.async_merge(st, result)?;
@@ -328,12 +358,12 @@ impl Coordinator {
         let fresh = keep.iter().filter(|e| e.origin_version == st.version).count();
         let stale = keep.len() - fresh;
         let failed = keep.is_empty();
-        // 0.0 (the sync engine's failed-round default) rather than NaN when
-        // nothing merged: the hand-rolled JSON writer has no NaN encoding
+        // None (-> JSON null) when nothing merged, matching the sync
+        // engines' nothing-trained rounds
         let train_loss = if keep.is_empty() {
-            0.0
+            None
         } else {
-            keep.iter().map(|e| e.mean_loss).sum::<f64>() / keep.len() as f64
+            Some(keep.iter().map(|e| e.mean_loss).sum::<f64>() / keep.len() as f64)
         };
         let mut updates: Vec<UpdateEntry> = Vec::with_capacity(keep.len());
         for e in keep {
@@ -385,9 +415,7 @@ impl Coordinator {
         st.conc_last_t = end;
         self.kernel.advance_to(end);
         self.apt.observe_round(dur);
-        // train_loss 0.0: the sync engine's failed-round default (NaN would
-        // break the JSON writer)
-        let rec = self.async_record(st, end, true, 0, 0, 0.0);
+        let rec = self.async_record(st, end, true, 0, 0, None);
         result.rounds.push(rec);
         st.version += 1;
         st.reset_interval(end);
@@ -404,7 +432,7 @@ impl Coordinator {
         failed: bool,
         fresh: usize,
         stale: usize,
-        train_loss: f64,
+        train_loss: Option<f64>,
     ) -> RoundRecord {
         let interval = end - st.interval_start;
         let mean_conc = if interval > 0.0 {

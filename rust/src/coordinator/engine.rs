@@ -28,20 +28,16 @@ use crate::aggregation::ServerOptimizer;
 use crate::config::{AvailMode, ExpConfig, RoundMode};
 use crate::data::partition::{LearnerShard, Partitioner};
 use crate::data::synth::{Dataset, TestSet};
-use crate::forecast::{ForecasterBank, SeasonalForecaster};
 use crate::learners::ProfilePool;
 use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
+use crate::population::{Population, Registry};
 use crate::runtime::Executor;
 use crate::selection::apt::AdaptiveTarget;
-use crate::selection::{Candidate, RoundFeedback, SelectionCtx, Selector};
+use crate::selection::{RoundFeedback, SelectionCtx, Selector};
 use crate::sim::{Availability, EventClass, EventKernel};
 use crate::trace::{LazyTraceSet, TraceConfig};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
-
-/// Sampling step (seconds) of the one-week series each learner's personal
-/// forecaster is bootstrapped from (Appendix A).
-const FORECAST_STEP: f64 = 1800.0;
 
 /// A straggler's update in flight to the server (sync regimes). Doomed
 /// stragglers are waste-accounted up front and never scheduled, so a
@@ -102,19 +98,16 @@ pub struct Coordinator {
     pub(crate) exec: Arc<dyn Executor>,
     pub(crate) dataset: Dataset,
     pub(crate) shards: Vec<LearnerShard>,
-    pub(crate) profiles: ProfilePool,
-    pub(crate) avail: Availability,
-    pub(crate) forecasters: ForecasterBank,
+    /// The population substrate: who exists (sharded registry), who is
+    /// available (incremental availability index), who is selectable
+    /// (candidate set) — replaces the per-engine O(total_learners) scans.
+    pub(crate) population: Population,
     pub(crate) selector: Box<dyn Selector>,
     pub(crate) server_opt: Box<dyn ServerOptimizer>,
     pub(crate) apt: AdaptiveTarget,
     pub global: Vec<f32>,
     /// The discrete-event kernel: virtual clock + unified event heap.
     pub(crate) kernel: EventKernel<EngineEvent>,
-    /// Round index until which each learner holds from checking in.
-    pub(crate) cooldown_until: Vec<usize>,
-    /// Absolute time until which each learner is busy with a task.
-    pub(crate) busy_until: Vec<f64>,
     pub(crate) accounting: Accounting,
     pub(crate) rng: Rng,
     pub(crate) test: TestSet,
@@ -156,10 +149,6 @@ impl Coordinator {
                 TraceConfig::default(),
             )),
         };
-        let forecasters = match &avail {
-            Availability::All => ForecasterBank::new(0),
-            _ => ForecasterBank::new(cfg.total_learners),
-        };
         let selector = crate::selection::by_name(&cfg.selector)
             .ok_or_else(|| anyhow!("unknown selector"))?;
         let server_opt = crate::aggregation::by_name(&cfg.server_opt)
@@ -172,12 +161,28 @@ impl Coordinator {
         let global = exec.init_params(cfg.seed as i32)?;
         let test = dataset.test_set(cfg.test_per_class);
         let model_bytes = info.num_params * 4;
+        // population substrate: sharded registry over the (eagerly-sampled,
+        // value-compatible) device profiles + per-learner dynamic state,
+        // with the availability index building lazily at first selection
+        // (parallel when the run has workers, result-identical either way)
+        let n_samples: Vec<u32> = shards.iter().map(|s| s.len() as u32).collect();
+        let build_workers = if cfg.workers == 0 {
+            threadpool::default_workers().min(8)
+        } else {
+            cfg.workers
+        };
+        let population = Population::new(
+            Registry::eager(profiles, n_samples, crate::population::DEFAULT_SHARDS),
+            avail,
+            cfg.avail,
+            cfg.local_epochs,
+            model_bytes,
+            build_workers,
+        );
         Ok(Coordinator {
-            cooldown_until: vec![0; cfg.total_learners],
-            busy_until: vec![0.0; cfg.total_learners],
             accounting: Accounting::default(),
             rng: rng.stream(0xC0),
-            forecasters,
+            population,
             selector,
             server_opt,
             apt,
@@ -185,8 +190,6 @@ impl Coordinator {
             kernel: EventKernel::default(),
             dataset,
             shards,
-            profiles,
-            avail,
             test,
             model_bytes,
             exec,
@@ -239,7 +242,9 @@ impl Coordinator {
         let mut rec = RoundRecord { round, ..Default::default() };
 
         // ---- selection window: check-in + availability probe ------------
-        let candidates = self.checked_in(round, now, mu);
+        // (the population substrate's available-set iteration + registry
+        // filters produce exactly the old full scan's candidate vector)
+        let candidates = self.population.sync_candidates(round, now, mu);
 
         // ---- target adjustment (APT) + overcommit ------------------------
         let mut target = self.cfg.target_participants;
@@ -299,10 +304,11 @@ impl Coordinator {
         for &id in &selected {
             let n_samples = self.shards[id].len();
             let t = self
-                .profiles
-                .get(id)
+                .population
+                .profile(id)
                 .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
-            let dropped = if self.avail.available_through(id, now, t) {
+            let avail = self.population.availability();
+            let dropped = if avail.available_through(id, now, t) {
                 None
             } else {
                 // drops out at (approximately) the end of its current session
@@ -310,7 +316,7 @@ impl Coordinator {
                 let mut hi = t;
                 for _ in 0..20 {
                     let mid = 0.5 * (lo + hi);
-                    if self.avail.available_through(id, now, mid) {
+                    if avail.available_through(id, now, mid) {
                         lo = mid;
                     } else {
                         hi = mid;
@@ -381,7 +387,7 @@ impl Coordinator {
                     self.accounting.spend(id, dt);
                     self.accounting.waste(dt);
                     rec.dropouts += 1;
-                    self.busy_until[id] = now + dt;
+                    self.population.set_busy_until(id, now + dt);
                 }
                 None if t <= round_duration => {
                     fresh_ids.push((id, t));
@@ -440,11 +446,11 @@ impl Coordinator {
                 // all — no resources spent, nothing delivered. The learner
                 // stays reserved for the same window so the system timeline
                 // (selection dynamics) is identical to plain SAFA.
-                self.busy_until[id] = now + t;
+                self.population.set_busy_until(id, now + t);
                 continue;
             }
             self.accounting.spend(id, t);
-            self.busy_until[id] = now + t;
+            self.population.set_busy_until(id, now + t);
             if doomed(t) {
                 // Will certainly be discarded (no SAA, or staleness bound
                 // certainly exceeded): account the waste now and skip the
@@ -457,7 +463,7 @@ impl Coordinator {
         }
         for &(id, t) in &fresh_ids {
             self.accounting.spend(id, t);
-            self.busy_until[id] = now + t;
+            self.population.set_busy_until(id, now + t);
         }
 
         let outcomes = self.train_participants(
@@ -522,10 +528,13 @@ impl Coordinator {
 
         rec.fresh_updates = fresh_updates.len();
         rec.stale_updates = stale_updates.len();
+        // None (-> JSON null) when nothing trained this round: the seed's
+        // f64::NAN here produced invalid JSON. Fixed jointly with the frozen
+        // reference oracle so byte-equivalence pins both sides.
         rec.train_loss = if losses.is_empty() {
-            f64::NAN
+            None
         } else {
-            losses.iter().sum::<f64>() / losses.len() as f64
+            Some(losses.iter().sum::<f64>() / losses.len() as f64)
         };
 
         // ---- aggregate + server update ------------------------------------
@@ -544,7 +553,7 @@ impl Coordinator {
 
         // ---- cooldowns, feedback, clock ------------------------------------
         for (id, _, _) in &feedback_completed {
-            self.cooldown_until[*id] = round + 1 + self.cfg.cooldown_rounds;
+            self.population.set_cooldown_until(*id, round + 1 + self.cfg.cooldown_rounds);
         }
         let missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
         self.selector.feedback(&RoundFeedback {
@@ -569,34 +578,6 @@ impl Coordinator {
         rec.cum_waste_secs = self.accounting.cum_waste_secs;
         rec.unique_participants = self.accounting.unique_participants();
         Ok(rec)
-    }
-
-    /// Checked-in learners with their probe answers (Algorithm 1 steps 1-3).
-    /// In async mode `round` is the server's merge-version counter.
-    pub(crate) fn checked_in(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
-        let mut out = Vec::new();
-        for id in 0..self.cfg.total_learners {
-            if self.cooldown_until[id] > round || self.busy_until[id] > now {
-                continue;
-            }
-            if !self.avail.available(id, now) {
-                continue;
-            }
-            let avail_prob = match self.cfg.avail {
-                AvailMode::AllAvail => 1.0,
-                AvailMode::DynAvail => {
-                    // learner-side forecast for the slot (mu, 2mu)
-                    self.forecaster(id).prob_slot(now + mu, now + 2.0 * mu)
-                }
-            };
-            let expected_duration = self.profiles.get(id).completion_time(
-                self.shards[id].len(),
-                self.cfg.local_epochs,
-                self.model_bytes,
-            );
-            out.push(Candidate { id, avail_prob, expected_duration });
-        }
-        out
     }
 
     /// Execute real local SGD for each participant (parallel over learners).
@@ -636,44 +617,21 @@ impl Coordinator {
         evaluate_params(self.exec.as_ref(), &self.test, &self.global)
     }
 
-    /// This learner's personal forecaster, trained at first touch on (two
-    /// replayed weeks of) its own trace — the paper's "learners maintain
-    /// trace of their charging events" (Appendix A). Learners that never
-    /// check in never pay the training cost.
-    pub(crate) fn forecaster(&self, id: usize) -> &SeasonalForecaster {
-        let avail = &self.avail;
-        self.forecasters.get_or_train(id, || {
-            let series = avail
-                .sample_series(id, FORECAST_STEP)
-                .expect("DynAvail always carries a trace");
-            SeasonalForecaster::train_on_week(&series, FORECAST_STEP)
-        })
-    }
-
     /// Pre-generate every learner's trace and forecaster — the pre-refactor
     /// eager construction. Tests and benches use this to prove the lazy
     /// path is result-identical and to measure what laziness saves.
     pub fn materialize_all(&self) {
-        if matches!(self.avail, Availability::All) {
-            return;
-        }
-        for id in 0..self.cfg.total_learners {
-            self.forecaster(id);
-        }
+        self.population.materialize_all();
     }
 
     /// Learner traces generated so far (== total_learners on the eager path).
     pub fn materialized_traces(&self) -> usize {
-        match &self.avail {
-            Availability::All => 0,
-            Availability::Dynamic(tr) => tr.len(),
-            Availability::Lazy(tr) => tr.materialized(),
-        }
+        self.population.materialized_traces()
     }
 
     /// Learner forecasters trained so far.
     pub fn trained_forecasters(&self) -> usize {
-        self.forecasters.trained()
+        self.population.trained_forecasters()
     }
 }
 

@@ -13,7 +13,10 @@
 //!
 //! Do not extend this module with new features; behavioral changes defeat
 //! its purpose. It intentionally rejects `RoundMode::Async`, which did not
-//! exist pre-refactor.
+//! exist pre-refactor. One sanctioned joint edit (ROADMAP item): the seed's
+//! `train_loss: NaN` emission for nothing-trained rounds was fixed to
+//! `None`/null **in both engines in the same commit**, so the equivalence
+//! suite pins the fixed pair exactly as it pinned the buggy pair.
 //!
 //! One deliberate tradeoff: this oracle rides the kernel-backed
 //! `DeliveryQueue` rather than carrying its own copy of the old
@@ -467,10 +470,15 @@ impl ReferenceCoordinator {
 
         rec.fresh_updates = fresh_updates.len();
         rec.stale_updates = stale_updates.len();
+        // The ONE sanctioned post-freeze edit (see module docs): the seed
+        // emitted f64::NAN here for nothing-trained rounds, which the JSON
+        // writer rendered as invalid `NaN`. Both engines now record None
+        // (-> JSON null), changed together so byte-equivalence still pins
+        // the pair.
         rec.train_loss = if losses.is_empty() {
-            f64::NAN
+            None
         } else {
-            losses.iter().sum::<f64>() / losses.len() as f64
+            Some(losses.iter().sum::<f64>() / losses.len() as f64)
         };
 
         // ---- aggregate + server update ------------------------------------

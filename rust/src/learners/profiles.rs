@@ -84,6 +84,21 @@ impl HardwareScenario {
 const CLUSTER_SEC_PER_SAMPLE: [f64; 6] = [0.02, 0.036, 0.065, 0.12, 0.22, 0.48];
 const CLUSTER_WEIGHTS: [f64; 6] = [0.22, 0.26, 0.20, 0.16, 0.10, 0.06];
 
+/// Draw one device profile from the 6-cluster mixture. The sequential
+/// [`ProfilePool::generate`] loop and the per-learner-stream lazy registry
+/// path (`population::Registry::lazy`) both come through here, so the
+/// *distribution* is shared even though the two paths thread RNG state
+/// differently (one stream vs one stream per learner).
+pub fn sample_profile(rng: &mut Rng) -> DeviceProfile {
+    let cluster = rng.weighted(&CLUSTER_WEIGHTS);
+    let center = CLUSTER_SEC_PER_SAMPLE[cluster];
+    let sec_per_sample = rng.lognormal(center.ln(), 0.25);
+    // WiFi-grade network: ~20 Mbps median upload, long-tailed.
+    let upload_bps = rng.lognormal((20e6f64 / 8.0).ln(), 0.6).max(100e3);
+    let download_bps = upload_bps * rng.uniform(1.2, 2.5);
+    DeviceProfile { sec_per_sample, upload_bps, download_bps, cluster }
+}
+
 /// A population of device profiles.
 pub struct ProfilePool {
     pub profiles: Vec<DeviceProfile>,
@@ -95,13 +110,7 @@ impl ProfilePool {
         let mut rng = Rng::new(seed ^ 0xDE71CE);
         let mut profiles = Vec::with_capacity(n);
         for _ in 0..n {
-            let cluster = rng.weighted(&CLUSTER_WEIGHTS);
-            let center = CLUSTER_SEC_PER_SAMPLE[cluster];
-            let sec_per_sample = rng.lognormal(center.ln(), 0.25);
-            // WiFi-grade network: ~20 Mbps median upload, long-tailed.
-            let upload_bps = rng.lognormal((20e6f64 / 8.0).ln(), 0.6).max(100e3);
-            let download_bps = upload_bps * rng.uniform(1.2, 2.5);
-            profiles.push(DeviceProfile { sec_per_sample, upload_bps, download_bps, cluster });
+            profiles.push(sample_profile(&mut rng));
         }
         // Apply the hardware-advancement scenario to the top X% fastest.
         let frac = scenario.top_fraction();

@@ -33,6 +33,7 @@ pub mod trace;
 pub mod forecast;
 pub mod sim;
 pub mod selection;
+pub mod population;
 pub mod aggregation;
 pub mod metrics;
 pub mod config;

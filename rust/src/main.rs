@@ -5,6 +5,8 @@
 //!   sweep         a parallel experiment grid (selectors x modes x avails x
 //!                 partitions x seeds) with one aggregated JSON report
 //!   figure <id>   regenerate a paper figure/table (2..21, t1, t2, forecast, all)
+//!   bench         population-scale benchmark (construct + select + async
+//!                 merges at 100k/1M learners) -> BENCH_population.json
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
 //!   validate      check artifacts + backends and exit
@@ -58,8 +60,11 @@ fn real_main() -> Result<()> {
         }
         Some("trace-stats") => figures::run("14", &figure_opts(&args)?),
         Some("forecast-eval") => figures::run("forecast", &figure_opts(&args)?),
+        Some("bench") => cmd_bench(&args),
         Some("validate") => cmd_validate(&args),
-        Some(other) => Err(anyhow!("unknown command '{other}' (run|sweep|figure|trace-stats|forecast-eval|validate)")),
+        Some(other) => Err(anyhow!(
+            "unknown command '{other}' (run|sweep|figure|bench|trace-stats|forecast-eval|validate)"
+        )),
         None => {
             print_help();
             Ok(())
@@ -241,6 +246,152 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `relay bench`: the population-scale benchmark. For each population size
+/// it measures (a) lazy substrate construction, (b) the one-time
+/// availability-index build + candidate-set sampling, and (c) a full lazy
+/// DynAvail buffered-async cell running `--merges` merges on the
+/// incremental eligible set — then writes one `BENCH_population.json`
+/// trajectory file. Per-event cost staying flat (sub-linear end to end)
+/// as the population grows 10x is the acceptance signal for the
+/// no-O(total_learners)-scan rewiring.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use relay::config::RoundMode;
+    use relay::coordinator::Coordinator;
+    use relay::population::{AvailabilityIndex, Registry};
+    use relay::sim::Availability;
+    use relay::trace::{LazyTraceSet, TraceConfig};
+    use relay::util::json::{arr, num, obj, Json};
+    use std::time::Instant;
+
+    let mut populations = Vec::new();
+    for p in args.list_or("populations", "100000,1000000") {
+        let n: usize = p
+            .parse()
+            .map_err(|_| anyhow!("--populations expects integers, got '{p}'"))?;
+        if n == 0 {
+            return Err(anyhow!("--populations entries must be >= 1"));
+        }
+        populations.push(n);
+    }
+    let merges = args.usize_or("merges", 50);
+    let target = args.usize_or("participants", 100);
+    let workers = args.usize_or("workers", 0);
+    let out = args.str_or("out", "BENCH_population.json");
+    let mut cells = Vec::new();
+
+    for &n in &populations {
+        println!("== population {n} ==");
+        // (a) substrate-level lazy construction: a standalone lazy registry
+        // + index pair (per-learner profile streams; the coordinator cell in
+        // (c) uses the eager, value-compatible registry path)
+        let t0 = Instant::now();
+        let registry = Registry::lazy(n, 7, 4, relay::population::DEFAULT_SHARDS);
+        let mut index = AvailabilityIndex::new(
+            Availability::Lazy(LazyTraceSet::new(n, 7, TraceConfig::default())),
+            n,
+            relay::population::DEFAULT_SHARDS,
+        );
+        let construct_secs = t0.elapsed().as_secs_f64();
+        println!("  lazy construct (registry+index):   {construct_secs:>9.4}s");
+
+        // (b) one-time index build (materializes every trace) + sampling
+        let build_workers = if workers == 0 {
+            relay::util::threadpool::default_workers()
+        } else {
+            workers
+        };
+        let t0 = Instant::now();
+        index.advance_to(0.0, build_workers);
+        let build_secs = t0.elapsed().as_secs_f64();
+        let available0 = index.available_count();
+        println!(
+            "  index build (all traces, avail={available0}): {build_secs:>9.3}s"
+        );
+        let mut select_rng = relay::util::rng::Rng::new(3);
+        let mut avail_set = relay::population::CandidateSet::new(n);
+        index.for_each_available(|id| {
+            avail_set.insert(id);
+        });
+        let t0 = Instant::now();
+        let select_rounds = 1000usize;
+        for _ in 0..select_rounds {
+            std::hint::black_box(avail_set.sample_k(&mut select_rng, target));
+        }
+        let select_us = t0.elapsed().as_secs_f64() * 1e6 / select_rounds as f64;
+        println!("  sample {target} of {available0}:        {select_us:>9.2}us/selection");
+        let _ = registry.profile(n / 2); // touch the lazy profile path
+
+        // (c) full lazy DynAvail async cell on the coordinator
+        let cfg = relay::config::ExpConfig {
+            variant: "tiny".into(),
+            total_learners: n,
+            rounds: merges,
+            target_participants: target,
+            mode: RoundMode::Async { buffer_k: (target / 5).max(1), max_staleness: None },
+            avail: relay::config::AvailMode::DynAvail,
+            selector: "random".into(),
+            mean_samples: 4,
+            test_per_class: 2,
+            eval_every: 1_000_000,
+            cooldown_rounds: 1,
+            lr: 0.1,
+            workers,
+            ..Default::default()
+        };
+        let exec: Arc<dyn runtime::Executor> = Arc::new(runtime::NativeExecutor::new(
+            runtime::builtin_variant("tiny"),
+        ));
+        let t0 = Instant::now();
+        let mut coord = Coordinator::new(cfg, exec)?;
+        let cell_construct_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let result = coord.run()?;
+        let run_secs = t0.elapsed().as_secs_f64();
+        let events: usize = result.rounds.iter().filter_map(|r| r.kernel_events).sum();
+        let per_event_us = if events > 0 {
+            run_secs * 1e6 / events as f64
+        } else {
+            0.0
+        };
+        println!(
+            "  async cell: construct {cell_construct_secs:.3}s, {merges} merges in \
+             {run_secs:.3}s ({events} kernel events, {per_event_us:.1}us/event)"
+        );
+        let trajectory = arr(result.rounds.iter().map(|r| {
+            obj(vec![
+                ("round", num(r.round as f64)),
+                ("sim_time", num(r.sim_time)),
+                ("selected", num(r.selected as f64)),
+                ("kernel_events", num(r.kernel_events.unwrap_or(0) as f64)),
+                ("failed", Json::Bool(r.failed)),
+            ])
+        }));
+        cells.push(obj(vec![
+            ("population", num(n as f64)),
+            ("construct_secs", num(construct_secs)),
+            ("index_build_secs", num(build_secs)),
+            ("available_at_t0", num(available0 as f64)),
+            ("select_us", num(select_us)),
+            ("cell_construct_secs", num(cell_construct_secs)),
+            ("merges", num(result.rounds.len() as f64)),
+            ("run_secs", num(run_secs)),
+            ("kernel_events", num(events as f64)),
+            ("per_event_us", num(per_event_us)),
+            ("trajectory", trajectory),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("format", Json::Str("relay-bench-population-v1".into())),
+        ("merges", num(merges as f64)),
+        ("target_participants", num(target as f64)),
+        ("cells", arr(cells)),
+    ]);
+    std::fs::write(&out, report.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -266,6 +417,8 @@ USAGE:
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
               [--report results/sweep.json] [--quiet]
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
+  relay bench [--populations 100000,1000000] [--merges 50] [--participants 100]
+              [--workers N] [--out BENCH_population.json]
   relay trace-stats | forecast-eval | validate
 
 Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to

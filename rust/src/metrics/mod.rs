@@ -31,8 +31,10 @@ pub struct RoundRecord {
     pub cum_waste_secs: f64,
     pub unique_participants: usize,
     pub failed: bool,
-    /// Mean training loss over participants' local steps.
-    pub train_loss: f64,
+    /// Mean training loss over participants' local steps; `None` when
+    /// nothing trained (failed/aborted rounds, empty merges) — serialized
+    /// as JSON `null` (the seed's `NaN` here produced invalid JSON).
+    pub train_loss: Option<f64>,
     /// Test metrics, present on eval rounds.
     pub test_accuracy: Option<f64>,
     pub test_loss: Option<f64>,
@@ -184,7 +186,7 @@ impl ExperimentResult {
                         ("cum_waste_secs", num(r.cum_waste_secs)),
                         ("unique", num(r.unique_participants as f64)),
                         ("failed", Json::Bool(r.failed)),
-                        ("train_loss", num(r.train_loss)),
+                        ("train_loss", r.train_loss.map(num).unwrap_or(Json::Null)),
                         (
                             "test_accuracy",
                             r.test_accuracy.map(num).unwrap_or(Json::Null),
@@ -373,6 +375,24 @@ mod tests {
         let r0 = parsed.get("rounds").unwrap().idx(0).unwrap();
         assert_eq!(r0.get("mean_concurrency").unwrap().as_f64(), Some(3.5));
         assert_eq!(r0.get("kernel_events").unwrap().as_usize(), Some(11));
+    }
+
+    #[test]
+    fn train_loss_serializes_as_null_when_nothing_trained() {
+        // regression: the seed wrote f64::NAN here, which is invalid JSON
+        let mut failed = rr(0, 10.0, None);
+        failed.failed = true;
+        let mut trained = rr(1, 20.0, None);
+        trained.train_loss = Some(1.25);
+        let j = result_with(vec![failed, trained]).to_json().to_string();
+        assert!(!j.contains("NaN"), "{j}");
+        let parsed = Json::parse(&j).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        assert_eq!(rounds.idx(0).unwrap().get("train_loss"), Some(&Json::Null));
+        assert_eq!(
+            rounds.idx(1).unwrap().get("train_loss").unwrap().as_f64(),
+            Some(1.25)
+        );
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! The availability index: *who is available*, maintained incrementally.
+//!
+//! The pre-population engines rediscovered availability by scanning all
+//! `total_learners` trace queries on every selection — O(n) per event, the
+//! ROADMAP's scaling blocker. This index instead turns each learner's
+//! weekly charging sessions into a stream of **availability-transition
+//! events** on the existing discrete-event substrate
+//! ([`crate::sim::EventKernel`], class [`EventClass::Availability`]): one
+//! pending transition per learner, popped and re-armed as the simulation
+//! clock advances. Between transitions a learner's availability is constant,
+//! so the maintained [`CandidateSet`] equals a brute-force
+//! `Availability::available(id, now)` scan at every advance point
+//! (`tests/population_props.rs` checks this against randomized traces and
+//! advance orders), while the per-advance cost is O(transitions due ·
+//! log n) instead of O(n).
+//!
+//! Construction is lazy: a DynAvail index does **no** trace work until its
+//! first `advance_to`, preserving the coordinator's construct-without-
+//! materializing guarantee (`tests/lazy_equivalence.rs`). The first advance
+//! materializes every learner's trace — exactly what the first full scan
+//! used to do — optionally in parallel on the worker pool (trace generation
+//! is a pure per-learner function, so worker count never changes results).
+
+use crate::sim::{Availability, EventClass, EventKernel};
+use crate::trace::WEEK;
+use crate::util::threadpool;
+
+use super::candidate_set::CandidateSet;
+
+/// Per-learner replay position: the next boundary index within the weekly
+/// schedule, and which week replay we are in.
+#[derive(Clone, Copy)]
+struct Cursor {
+    k: u32,
+    week: u32,
+}
+
+struct IndexState {
+    /// Learners available at the last advance point, in id order.
+    set: CandidateSet,
+    /// One pending transition event per learner (payload = learner id).
+    kernel: EventKernel<u32>,
+    cursors: Vec<Cursor>,
+}
+
+/// Incremental availability view over an [`Availability`] (see module docs).
+pub struct AvailabilityIndex {
+    avail: Availability,
+    n: usize,
+    num_shards: usize,
+    state: Option<IndexState>,
+}
+
+/// One learner's weekly availability boundaries, derived on the fly from
+/// its sorted, non-overlapping session list (no extra storage): session
+/// starts flip availability on, session ends flip it off, and a final
+/// boundary at `WEEK` re-applies the week-start state (handling sessions
+/// clipped at the week edge and the cyclic replay).
+struct Bounds<'a> {
+    s: &'a [(f64, f64)],
+    skip_first: bool,
+    skip_last: bool,
+    state0: bool,
+}
+
+impl<'a> Bounds<'a> {
+    fn new(s: &'a [(f64, f64)]) -> Bounds<'a> {
+        let m = s.len();
+        // first session starting at 0 means the week begins mid-session:
+        // its "start" boundary is the WEEK event of the previous replay
+        let skip_first = m > 0 && s[0].0 <= 0.0;
+        let skip_last = m > 0 && s[m - 1].1 >= WEEK;
+        Bounds { s, skip_first, skip_last, state0: skip_first }
+    }
+
+    /// Number of boundaries per week, including the final WEEK event.
+    fn count(&self) -> usize {
+        if self.s.is_empty() {
+            0
+        } else {
+            2 * self.s.len() - self.skip_first as usize - self.skip_last as usize + 1
+        }
+    }
+
+    /// The `k`-th boundary as (time-in-week, availability-after).
+    fn get(&self, k: usize) -> (f64, bool) {
+        let vidx = k + self.skip_first as usize;
+        let real = 2 * self.s.len() - self.skip_last as usize;
+        if vidx < real {
+            let j = vidx / 2;
+            if vidx % 2 == 0 {
+                (self.s[j].0, true)
+            } else {
+                (self.s[j].1, false)
+            }
+        } else {
+            (WEEK, self.state0)
+        }
+    }
+
+    /// Smallest `k` whose boundary time is strictly after `tw`. Always
+    /// exists for non-empty schedules (the WEEK event is > any `tw < WEEK`).
+    fn first_after(&self, tw: f64) -> usize {
+        let mut lo = 0usize;
+        let mut hi = self.count() - 1; // the WEEK event always qualifies
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.get(mid).0 > tw {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+}
+
+fn sessions_of(avail: &Availability, id: usize) -> &[(f64, f64)] {
+    match avail {
+        Availability::All => &[],
+        Availability::Dynamic(tr) => &tr.sessions[id],
+        Availability::Lazy(tr) => tr.sessions(id),
+    }
+}
+
+impl AvailabilityIndex {
+    /// Wrap an availability view for `n` learners. Does no trace work —
+    /// DynAvail indexes build at first `advance_to` (see module docs).
+    pub fn new(avail: Availability, n: usize, num_shards: usize) -> AvailabilityIndex {
+        AvailabilityIndex { avail, n, num_shards, state: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The wrapped availability view (for direct interval queries like
+    /// `available_through`, which stay on the trace itself).
+    pub fn availability(&self) -> &Availability {
+        &self.avail
+    }
+
+    /// True under `Availability::All` (every learner, always available).
+    pub fn all_mode(&self) -> bool {
+        matches!(self.avail, Availability::All)
+    }
+
+    /// Has the transition schedule been built yet (trace modes only)?
+    pub fn built(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Apply every availability transition due at or before `now`; returns
+    /// the learners whose availability actually flipped, as `(id, now_on)`,
+    /// in deterministic event order. Builds the index on first call
+    /// (`workers > 1` parallelizes the one-time trace materialization).
+    pub fn advance_to(&mut self, now: f64, workers: usize) -> Vec<(usize, bool)> {
+        if matches!(self.avail, Availability::All) {
+            return Vec::new();
+        }
+        if self.state.is_none() {
+            self.build(now, workers);
+        }
+        let st = self.state.as_mut().expect("index built above");
+        let mut flips = Vec::new();
+        while st.kernel.peek_at().map(|t| t <= now).unwrap_or(false) {
+            let ev = st.kernel.pop_next().expect("peeked event exists");
+            let id = ev.payload as usize;
+            let s = sessions_of(&self.avail, id);
+            let b = Bounds::new(s);
+            let cur = st.cursors[id];
+            let (_, on) = b.get(cur.k as usize);
+            let changed = if on { st.set.insert(id) } else { st.set.remove(id) };
+            if changed {
+                flips.push((id, on));
+            }
+            // re-arm this learner's next transition
+            let mut k = cur.k as usize + 1;
+            let mut week = cur.week;
+            if k >= b.count() {
+                k = 0;
+                week += 1;
+            }
+            st.cursors[id] = Cursor { k: k as u32, week };
+            let at = week as f64 * WEEK + b.get(k).0;
+            st.kernel.schedule(at, EventClass::Availability, id as u32);
+        }
+        flips
+    }
+
+    /// Is the learner available as of the last `advance_to` point? Trace
+    /// modes require the index to be built (advance first).
+    pub fn is_available(&self, id: usize) -> bool {
+        match (&self.avail, &self.state) {
+            (Availability::All, _) => true,
+            (_, Some(st)) => st.set.contains(id),
+            (_, None) => panic!("availability index queried before first advance_to"),
+        }
+    }
+
+    /// Number of learners available at the last advance point (`n` under
+    /// AllAvail).
+    pub fn available_count(&self) -> usize {
+        match (&self.avail, &self.state) {
+            (Availability::All, _) => self.n,
+            (_, Some(st)) => st.set.len(),
+            (_, None) => 0,
+        }
+    }
+
+    /// Visit every available learner in ascending id order.
+    pub fn for_each_available(&self, mut f: impl FnMut(usize)) {
+        match (&self.avail, &self.state) {
+            (Availability::All, _) => (0..self.n).for_each(f),
+            (_, Some(st)) => st.set.iter().for_each(&mut f),
+            (_, None) => panic!("availability index iterated before first advance_to"),
+        }
+    }
+
+    /// One-time build: materialize every learner's sessions (in parallel
+    /// when `workers > 1` — pure per-learner work, result-identical at any
+    /// worker count), seed the available set from exact trace queries at
+    /// `now`, and arm one transition event per learner.
+    fn build(&mut self, now: f64, workers: usize) {
+        if let Availability::Lazy(tr) = &self.avail {
+            if workers > 1 && self.n > 1 {
+                let chunk = self.n.div_ceil(workers * 4).max(256);
+                let jobs: Vec<_> = (0..self.n)
+                    .step_by(chunk)
+                    .map(|start| {
+                        let end = (start + chunk).min(self.n);
+                        move || {
+                            for id in start..end {
+                                tr.sessions(id);
+                            }
+                        }
+                    })
+                    .collect();
+                threadpool::run_parallel(workers, jobs);
+            }
+        }
+        let tw = now.rem_euclid(WEEK);
+        let week = (now / WEEK).floor().max(0.0) as u32;
+        let mut set = CandidateSet::with_shards(self.n, self.num_shards);
+        let mut kernel = EventKernel::default();
+        let mut cursors = Vec::with_capacity(self.n);
+        for id in 0..self.n {
+            if self.avail.available(id, now) {
+                set.insert(id);
+            }
+            let s = sessions_of(&self.avail, id);
+            let b = Bounds::new(s);
+            if b.count() == 0 {
+                // never-available learner: no transitions, stays out forever
+                cursors.push(Cursor { k: 0, week });
+                continue;
+            }
+            let k = b.first_after(tw);
+            cursors.push(Cursor { k: k as u32, week });
+            let at = week as f64 * WEEK + b.get(k).0;
+            kernel.schedule(at, EventClass::Availability, id as u32);
+        }
+        self.state = Some(IndexState { set, kernel, cursors });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{LazyTraceSet, TraceConfig, TraceSet};
+
+    fn brute_force(avail: &Availability, n: usize, t: f64) -> Vec<usize> {
+        (0..n).filter(|&id| avail.available(id, t)).collect()
+    }
+
+    fn collect(idx: &AvailabilityIndex) -> Vec<usize> {
+        let mut v = Vec::new();
+        idx.for_each_available(|id| v.push(id));
+        v
+    }
+
+    #[test]
+    fn all_mode_is_trivial() {
+        let mut idx = AvailabilityIndex::new(Availability::All, 5, 2);
+        assert!(idx.all_mode());
+        assert!(idx.advance_to(1000.0, 1).is_empty());
+        assert!(idx.is_available(3));
+        assert_eq!(collect(&idx), vec![0, 1, 2, 3, 4]);
+        assert_eq!(idx.available_count(), 5);
+        assert!(!idx.built());
+    }
+
+    #[test]
+    fn matches_brute_force_scan_over_advancing_time() {
+        let n = 40;
+        let idx_avail = Availability::Lazy(LazyTraceSet::new(n, 17, TraceConfig::default()));
+        let ref_avail = Availability::Lazy(LazyTraceSet::new(n, 17, TraceConfig::default()));
+        let mut idx = AvailabilityIndex::new(idx_avail, n, 4);
+        // irregular step sizes, crossing the week boundary twice
+        let mut t = 0.0;
+        let steps = [13.0, 400.0, 7.7, 86_000.0, 3600.0, 250_000.0, 604_000.0, 86_400.0];
+        for (i, &dt) in steps.iter().cycle().take(40).enumerate() {
+            t += dt;
+            idx.advance_to(t, 1);
+            assert_eq!(
+                collect(&idx),
+                brute_force(&ref_avail, n, t),
+                "step {i} at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn flips_report_real_changes_only() {
+        let n = 12;
+        let avail = Availability::Lazy(LazyTraceSet::new(n, 3, TraceConfig::default()));
+        let mut idx = AvailabilityIndex::new(avail, n, 2);
+        idx.advance_to(0.0, 1);
+        let before = collect(&idx);
+        let flips = idx.advance_to(40_000.0, 1);
+        let mut state: std::collections::HashSet<usize> = before.into_iter().collect();
+        for (id, on) in flips {
+            if on {
+                assert!(state.insert(id), "flip-on for already-on learner {id}");
+            } else {
+                assert!(state.remove(&id), "flip-off for already-off learner {id}");
+            }
+        }
+        let mut expect: Vec<usize> = state.into_iter().collect();
+        expect.sort_unstable();
+        assert_eq!(collect(&idx), expect);
+    }
+
+    #[test]
+    fn dynamic_trace_supported_too() {
+        let n = 10;
+        let tr = TraceSet::generate(n, 8, TraceConfig::default());
+        let reference = Availability::Dynamic(TraceSet::generate(n, 8, TraceConfig::default()));
+        let mut idx = AvailabilityIndex::new(Availability::Dynamic(tr), n, 3);
+        for t in [0.0, 500.0, 90_000.0, 700_000.0] {
+            idx.advance_to(t, 1);
+            assert_eq!(collect(&idx), brute_force(&reference, n, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_build_matches_serial() {
+        let n = 200;
+        let mk = || Availability::Lazy(LazyTraceSet::new(n, 5, TraceConfig::default()));
+        let mut a = AvailabilityIndex::new(mk(), n, 8);
+        let mut b = AvailabilityIndex::new(mk(), n, 8);
+        a.advance_to(12_345.0, 1);
+        b.advance_to(12_345.0, 6);
+        assert_eq!(collect(&a), collect(&b));
+        let fa = a.advance_to(500_000.0, 1);
+        let fb = b.advance_to(500_000.0, 6);
+        assert_eq!(fa, fb, "flip streams must be worker-count independent");
+    }
+
+    #[test]
+    fn bounds_cover_week_edge_sessions() {
+        // a session starting at 0 and one clipped at WEEK: the week wraps
+        // mid-session on both ends
+        let s = vec![(0.0, 100.0), (604_000.0, WEEK)];
+        let b = Bounds::new(&s);
+        assert!(b.state0);
+        assert_eq!(b.count(), 2 * 2 - 1 - 1 + 1);
+        assert_eq!(b.get(0), (100.0, false));
+        assert_eq!(b.get(1), (604_000.0, true));
+        assert_eq!(b.get(2), (WEEK, true));
+        assert_eq!(b.first_after(0.0), 0);
+        assert_eq!(b.first_after(100.0), 1);
+        assert_eq!(b.first_after(604_500.0), 2);
+    }
+}

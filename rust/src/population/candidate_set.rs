@@ -1,0 +1,345 @@
+//! The incrementally-maintained candidate set: a sharded dynamic set of
+//! learner ids with O(log n) insert/remove and O(log n) rank queries, the
+//! structure selection strategies draw from instead of re-scanning the whole
+//! population.
+//!
+//! Internally each shard covers a contiguous id range and keeps a Fenwick
+//! (binary-indexed) tree over a membership bitmap; rank/select queries walk
+//! the shard prefix counts (shard counts are few) and then descend one
+//! shard's tree. All order-sensitive operations — ascending-id iteration,
+//! `nth` (global rank → id), and `sample_k` — are defined over the *global
+//! id space*, so results are byte-identical for any shard count
+//! (`tests/population_props.rs` locks this in).
+//!
+//! `sample_k` reproduces [`Rng::choose_k`] exactly: it runs the same partial
+//! Fisher-Yates over the implicit ascending-id candidate array, tracking the
+//! (at most k) displaced positions in a sparse map. Sampling k ids from the
+//! set therefore consumes the same RNG draws and returns the same ids as
+//! materializing the candidate list and calling `choose_k` on it — which is
+//! what makes the async engine's sampled fast path bit-compatible with the
+//! materializing path it replaces.
+
+use std::collections::HashMap;
+
+use super::registry::DEFAULT_SHARDS;
+use crate::util::rng::Rng;
+
+/// Fenwick tree over a 0/1 membership array (counts per node).
+struct Fenwick {
+    tree: Vec<u32>,
+    n: usize,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Fenwick {
+        Fenwick { tree: vec![0; n + 1], n }
+    }
+
+    fn add(&mut self, i: usize, delta: i32) {
+        let mut i = i + 1;
+        while i <= self.n {
+            self.tree[i] = (self.tree[i] as i64 + delta as i64) as u32;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Total number of members in this shard.
+    fn total(&self) -> usize {
+        let mut i = self.n;
+        let mut s = 0usize;
+        while i > 0 {
+            s += self.tree[i] as usize;
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Shard-local index of the k-th (0-based) member; requires k < total.
+    fn select(&self, k: usize) -> usize {
+        let mut pos = 0usize;
+        let mut rem = k + 1;
+        let mut step = self.n.next_power_of_two();
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n && (self.tree[next] as usize) < rem {
+                rem -= self.tree[next] as usize;
+                pos = next;
+            }
+            step >>= 1;
+        }
+        pos
+    }
+}
+
+/// Sharded dynamic set of learner ids (see the module docs).
+pub struct CandidateSet {
+    shards: Vec<Fenwick>,
+    /// Membership bitmap over the whole id space (word-packed).
+    bits: Vec<u64>,
+    shard_size: usize,
+    n: usize,
+    len: usize,
+}
+
+impl CandidateSet {
+    /// Empty set over ids `0..n` with the default shard count.
+    pub fn new(n: usize) -> CandidateSet {
+        CandidateSet::with_shards(n, DEFAULT_SHARDS)
+    }
+
+    /// Empty set over ids `0..n` split into `num_shards` contiguous ranges.
+    /// The shard count affects only internal layout, never results.
+    pub fn with_shards(n: usize, num_shards: usize) -> CandidateSet {
+        let num_shards = num_shards.max(1);
+        let shard_size = n.div_ceil(num_shards).max(1);
+        let count = n.div_ceil(shard_size).max(1);
+        let shards = (0..count)
+            .map(|i| {
+                let lo = i * shard_size;
+                let hi = ((i + 1) * shard_size).min(n);
+                Fenwick::new(hi.saturating_sub(lo))
+            })
+            .collect();
+        CandidateSet {
+            shards,
+            bits: vec![0u64; n.div_ceil(64).max(1)],
+            shard_size,
+            n,
+            len: 0,
+        }
+    }
+
+    /// Number of ids the set ranges over (the population size).
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        debug_assert!(id < self.n);
+        (self.bits[id / 64] >> (id % 64)) & 1 == 1
+    }
+
+    /// Insert `id`; returns true if it was not already a member.
+    pub fn insert(&mut self, id: usize) -> bool {
+        if self.contains(id) {
+            return false;
+        }
+        self.bits[id / 64] |= 1u64 << (id % 64);
+        self.shards[id / self.shard_size].add(id % self.shard_size, 1);
+        self.len += 1;
+        true
+    }
+
+    /// Remove `id`; returns true if it was a member.
+    pub fn remove(&mut self, id: usize) -> bool {
+        if !self.contains(id) {
+            return false;
+        }
+        self.bits[id / 64] &= !(1u64 << (id % 64));
+        self.shards[id / self.shard_size].add(id % self.shard_size, -1);
+        self.len -= 1;
+        true
+    }
+
+    /// The `rank`-th smallest member id (0-based); requires `rank < len()`.
+    pub fn nth(&self, rank: usize) -> usize {
+        assert!(rank < self.len, "rank {rank} out of range (len {})", self.len);
+        let mut rem = rank;
+        for (si, sh) in self.shards.iter().enumerate() {
+            let t = sh.total();
+            if rem < t {
+                return si * self.shard_size + sh.select(rem);
+            }
+            rem -= t;
+        }
+        unreachable!("rank within len must land in a shard")
+    }
+
+    /// Members in ascending id order.
+    pub fn iter(&self) -> SetIter<'_> {
+        SetIter {
+            bits: &self.bits,
+            word_idx: 0,
+            cur: self.bits.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// `k` distinct members, drawn exactly like [`Rng::choose_k`] over the
+    /// ascending-id member array (same RNG draws, same ids), but in
+    /// O(k log n) without materializing the array. Caps at `len()`.
+    pub fn sample_k(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        let n = self.len;
+        let k = k.min(n);
+        let mut swapped: HashMap<usize, usize> = HashMap::new();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = rng.range(i, n);
+            let vj = swapped.get(&j).copied().unwrap_or(j);
+            let vi = swapped.get(&i).copied().unwrap_or(i);
+            swapped.insert(j, vi);
+            out.push(self.nth(vj));
+        }
+        out
+    }
+}
+
+/// Ascending-id iterator over a [`CandidateSet`]'s membership bitmap.
+pub struct SetIter<'a> {
+    bits: &'a [u64],
+    word_idx: usize,
+    cur: u64,
+}
+
+impl Iterator for SetIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.bits.len() {
+                return None;
+            }
+            self.cur = self.bits[self.word_idx];
+        }
+        let b = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1;
+        Some(self.word_idx * 64 + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains_len() {
+        let mut s = CandidateSet::new(100);
+        assert!(s.is_empty());
+        assert!(s.insert(7));
+        assert!(!s.insert(7), "double insert must report false");
+        assert!(s.insert(99));
+        assert!(s.insert(0));
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(7) && s.contains(99) && s.contains(0));
+        assert!(!s.contains(1));
+        assert!(s.remove(7));
+        assert!(!s.remove(7), "double remove must report false");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 99]);
+    }
+
+    #[test]
+    fn nth_is_rank_order() {
+        let mut s = CandidateSet::with_shards(257, 4);
+        for id in [5usize, 63, 64, 128, 200, 256] {
+            s.insert(id);
+        }
+        let members: Vec<usize> = s.iter().collect();
+        assert_eq!(members, vec![5, 63, 64, 128, 200, 256]);
+        for (rank, &id) in members.iter().enumerate() {
+            assert_eq!(s.nth(rank), id, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn iter_matches_naive_filter() {
+        let mut rng = Rng::new(11);
+        let mut s = CandidateSet::new(500);
+        let mut naive = vec![false; 500];
+        for _ in 0..1000 {
+            let id = rng.below(500);
+            if rng.bool(0.6) {
+                s.insert(id);
+                naive[id] = true;
+            } else {
+                s.remove(id);
+                naive[id] = false;
+            }
+        }
+        let want: Vec<usize> = (0..500).filter(|&i| naive[i]).collect();
+        assert_eq!(s.iter().collect::<Vec<_>>(), want);
+        assert_eq!(s.len(), want.len());
+    }
+
+    #[test]
+    fn sample_k_equals_choose_k_over_members() {
+        // the contract the async fast path relies on: sampling from the set
+        // consumes the same draws and returns the same ids as materializing
+        // the ascending member list and running Rng::choose_k on it
+        let mut s = CandidateSet::new(300);
+        for id in (0..300).step_by(3) {
+            s.insert(id);
+        }
+        let members: Vec<usize> = s.iter().collect();
+        for seed in 0..20u64 {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let sampled = s.sample_k(&mut r1, 17);
+            let picked: Vec<usize> =
+                r2.choose_k(members.len(), 17).into_iter().map(|i| members[i]).collect();
+            assert_eq!(sampled, picked, "seed {seed}");
+            // and the rngs are left in identical states
+            assert_eq!(r1.next_u64(), r2.next_u64(), "seed {seed}: rng state diverged");
+        }
+    }
+
+    #[test]
+    fn sampling_is_byte_identical_across_shard_counts() {
+        let build = |shards: usize| {
+            let mut s = CandidateSet::with_shards(1000, shards);
+            for id in (0..1000).filter(|i| i % 7 == 0 || i % 11 == 0) {
+                s.insert(id);
+            }
+            s
+        };
+        let a = build(1);
+        let b = build(8);
+        let c = build(13);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.iter().collect::<Vec<_>>(), b.iter().collect::<Vec<_>>());
+        for seed in 0..10u64 {
+            let mut ra = Rng::new(seed);
+            let mut rb = Rng::new(seed);
+            let mut rc = Rng::new(seed);
+            let sa = a.sample_k(&mut ra, 25);
+            assert_eq!(sa, b.sample_k(&mut rb, 25), "seed {seed}: 1 vs 8 shards");
+            assert_eq!(sa, c.sample_k(&mut rc, 25), "seed {seed}: 1 vs 13 shards");
+        }
+    }
+
+    #[test]
+    fn sample_caps_at_len_and_handles_empty() {
+        let mut s = CandidateSet::new(10);
+        let mut rng = Rng::new(1);
+        assert!(s.sample_k(&mut rng, 5).is_empty());
+        s.insert(3);
+        s.insert(8);
+        let got = s.sample_k(&mut rng, 5);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![3, 8]);
+    }
+
+    #[test]
+    fn tiny_and_edge_capacities() {
+        let mut s = CandidateSet::with_shards(1, 8);
+        assert_eq!(s.capacity(), 1);
+        assert!(s.insert(0));
+        assert_eq!(s.nth(0), 0);
+        let s0 = CandidateSet::new(0);
+        assert_eq!(s0.len(), 0);
+        assert_eq!(s0.iter().count(), 0);
+    }
+}

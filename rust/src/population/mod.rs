@@ -1,0 +1,416 @@
+//! The population substrate: **who exists, who is available, who is
+//! selectable** — one subsystem owning every per-learner fact and the
+//! incremental indexes over them, replacing the per-engine
+//! O(total_learners) check-in scans that blocked 100k+-learner cells
+//! (ROADMAP "incremental candidate set" item).
+//!
+//! ```text
+//!   Registry ──────────► AvailabilityIndex ─────────► CandidateSet ──► Selector
+//!   (sharded profiles,   (trace sessions turned       (eligible ids:    (draws by
+//!    samples, cooldown/   into kernel transition       O(log n) insert/  rank or
+//!    busy state)          events; incremental          remove/sample,    full list)
+//!                         available-set)               shard-invariant)
+//! ```
+//!
+//! * [`Registry`] — sharded per-learner storage: device profile (eager or
+//!   lazy), local dataset size, cooldown round, busy-until time.
+//! * [`AvailabilityIndex`] — availability transitions scheduled as events
+//!   on the existing [`crate::sim::EventKernel`] substrate (one pending
+//!   transition per learner) instead of being rediscovered by scanning;
+//!   maintains the available-id set incrementally.
+//! * [`CandidateSet`] — the sharded dynamic id set selection strategies
+//!   draw from: O(log n) insert/remove/rank with seeded sampling that is
+//!   byte-identical for any shard count and bit-compatible with
+//!   `Rng::choose_k` over the materialized candidate list.
+//!
+//! [`Population`] composes the three for the coordinator. Two query modes:
+//!
+//! * **round-synchronous** (`sync_candidates`) — iterate the available set
+//!   in id order and filter cooldown/busy from the registry. Produces
+//!   exactly the candidate vector the old full scan produced (the OC/DL
+//!   engines stay byte-identical to the frozen `coordinator::reference`
+//!   oracle — `tests/kernel_equivalence.rs`).
+//! * **fully-incremental** (`async_sync_to` + `eligible_set` /
+//!   `async_candidates`) — the buffered-async engine keeps the *selectable*
+//!   set (available ∧ not busy ∧ not cooling) maintained per event:
+//!   availability flips from the index, busy transitions at task
+//!   spawn/arrival/dropout, cooldown expiries from version-keyed buckets.
+//!   Selectors that sample (Random) draw straight from the set in
+//!   O(k log n) per selection; rank-the-pool selectors (Oort/IPS/SAFA)
+//!   materialize only the eligible ids, never the whole population.
+
+pub mod avail_index;
+pub mod candidate_set;
+pub mod registry;
+
+pub use avail_index::AvailabilityIndex;
+pub use candidate_set::CandidateSet;
+pub use registry::{Registry, DEFAULT_SHARDS};
+
+use std::collections::BTreeMap;
+
+use crate::config::AvailMode;
+use crate::forecast::{ForecasterBank, SeasonalForecaster};
+use crate::learners::DeviceProfile;
+use crate::selection::Candidate;
+use crate::sim::Availability;
+
+/// Sampling step (seconds) of the one-week series each learner's personal
+/// forecaster is bootstrapped from (paper Appendix A).
+const FORECAST_STEP: f64 = 1800.0;
+
+/// Async-engine eligibility state: the selectable set plus the
+/// cooldown-expiry schedule that re-admits learners as versions advance.
+struct EligibleState {
+    set: CandidateSet,
+    /// cooldown_until value -> learners parked until that round. Entries can
+    /// go stale when a cooldown is re-set; `refresh` re-checks the registry.
+    buckets: BTreeMap<usize, Vec<usize>>,
+}
+
+/// Re-evaluate one learner's eligibility predicate and update the set.
+fn refresh(
+    elig: &mut EligibleState,
+    index: &AvailabilityIndex,
+    registry: &Registry,
+    id: usize,
+    round: usize,
+    now: f64,
+) {
+    let ok = index.is_available(id)
+        && registry.busy_until(id) <= now
+        && registry.cooldown_until(id) <= round;
+    if ok {
+        elig.set.insert(id);
+    } else {
+        elig.set.remove(id);
+    }
+}
+
+/// The coordinator-facing population substrate (see the module docs).
+pub struct Population {
+    registry: Registry,
+    index: AvailabilityIndex,
+    forecasters: ForecasterBank,
+    avail_mode: AvailMode,
+    local_epochs: usize,
+    model_bytes: usize,
+    /// Worker threads for the one-time index build (0/1 = serial).
+    workers: usize,
+    /// Present only while an async run maintains full eligibility.
+    eligible: Option<EligibleState>,
+}
+
+impl Population {
+    pub fn new(
+        registry: Registry,
+        avail: Availability,
+        avail_mode: AvailMode,
+        local_epochs: usize,
+        model_bytes: usize,
+        workers: usize,
+    ) -> Population {
+        let n = registry.len();
+        let forecasters = match &avail {
+            Availability::All => ForecasterBank::new(0),
+            _ => ForecasterBank::new(n),
+        };
+        let num_shards = registry.num_shards();
+        Population {
+            index: AvailabilityIndex::new(avail, n, num_shards),
+            forecasters,
+            registry,
+            avail_mode,
+            local_epochs,
+            model_bytes,
+            workers,
+            eligible: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.registry.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.registry.is_empty()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The wrapped availability view, for direct interval queries
+    /// (`available_through`) that stay on the trace itself.
+    pub fn availability(&self) -> &Availability {
+        self.index.availability()
+    }
+
+    pub fn profile(&self, id: usize) -> &DeviceProfile {
+        self.registry.profile(id)
+    }
+
+    pub fn cooldown_until(&self, id: usize) -> usize {
+        self.registry.cooldown_until(id)
+    }
+
+    pub fn busy_until(&self, id: usize) -> f64 {
+        self.registry.busy_until(id)
+    }
+
+    /// Plain state write for the round-synchronous engines (no eligibility
+    /// index to maintain — sync rounds rebuild candidates per round).
+    pub fn set_cooldown_until(&mut self, id: usize, round: usize) {
+        debug_assert!(self.eligible.is_none(), "async populations use begin_cooldown");
+        self.registry.set_cooldown_until(id, round);
+    }
+
+    /// Plain state write for the round-synchronous engines.
+    pub fn set_busy_until(&mut self, id: usize, t: f64) {
+        debug_assert!(self.eligible.is_none(), "async populations use mark_busy");
+        self.registry.set_busy_until(id, t);
+    }
+
+    /// This learner's personal forecaster, trained at first touch on (two
+    /// replayed weeks of) its own trace — the paper's "learners maintain a
+    /// trace of their charging events" (Appendix A). Learners that never
+    /// check in never pay the training cost.
+    pub fn forecaster(&self, id: usize) -> &SeasonalForecaster {
+        let avail = self.index.availability();
+        self.forecasters.get_or_train(id, || {
+            let series = avail
+                .sample_series(id, FORECAST_STEP)
+                .expect("DynAvail always carries a trace");
+            SeasonalForecaster::train_on_week(&series, FORECAST_STEP)
+        })
+    }
+
+    fn candidate(&self, id: usize, now: f64, mu: f64) -> Candidate {
+        let avail_prob = match self.avail_mode {
+            AvailMode::AllAvail => 1.0,
+            AvailMode::DynAvail => {
+                // learner-side forecast for the slot (mu, 2mu)
+                self.forecaster(id).prob_slot(now + mu, now + 2.0 * mu)
+            }
+        };
+        let expected_duration = self.registry.profile(id).completion_time(
+            self.registry.n_samples(id),
+            self.local_epochs,
+            self.model_bytes,
+        );
+        Candidate { id, avail_prob, expected_duration }
+    }
+
+    /// Checked-in learners with their probe answers (Algorithm 1 steps 1-3)
+    /// for the round-synchronous engines: the available set in ascending id
+    /// order, cooldown/busy filtered — element-for-element what the
+    /// pre-population full scan produced.
+    pub fn sync_candidates(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
+        debug_assert!(self.eligible.is_none(), "async populations use async_candidates");
+        self.index.advance_to(now, self.workers);
+        let mut out = Vec::new();
+        self.index.for_each_available(|id| {
+            if self.registry.cooldown_until(id) > round || self.registry.busy_until(id) > now {
+                return;
+            }
+            out.push(self.candidate(id, now, mu));
+        });
+        out
+    }
+
+    /// Bring the async eligibility state up to `(round, now)`: apply
+    /// availability flips, expire cooldown buckets, and on first call build
+    /// the index + selectable set (the only O(n) pass of an async run).
+    pub fn async_sync_to(&mut self, round: usize, now: f64) {
+        if self.eligible.is_none() {
+            self.index.advance_to(now, self.workers);
+            let shards = self.registry.num_shards();
+            let mut set = CandidateSet::with_shards(self.registry.len(), shards);
+            let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for id in 0..self.registry.len() {
+                let cd = self.registry.cooldown_until(id);
+                if cd > round {
+                    buckets.entry(cd).or_default().push(id);
+                    continue;
+                }
+                if self.index.is_available(id) && self.registry.busy_until(id) <= now {
+                    set.insert(id);
+                }
+            }
+            self.eligible = Some(EligibleState { set, buckets });
+            return;
+        }
+        let flips = self.index.advance_to(now, self.workers);
+        let elig = self.eligible.as_mut().expect("checked above");
+        for (id, _) in flips {
+            refresh(elig, &self.index, &self.registry, id, round, now);
+        }
+        loop {
+            let Some((&k, _)) = elig.buckets.first_key_value() else { break };
+            if k > round {
+                break;
+            }
+            let (_, ids) = elig.buckets.pop_first().expect("non-empty first key");
+            for id in ids {
+                refresh(elig, &self.index, &self.registry, id, round, now);
+            }
+        }
+    }
+
+    /// The selectable set (async runs; `async_sync_to` first). Sampling
+    /// selectors draw from this directly.
+    pub fn eligible_set(&self) -> &CandidateSet {
+        &self.eligible.as_ref().expect("async_sync_to before selection").set
+    }
+
+    /// Materialized candidates for rank-the-pool selectors (async runs):
+    /// the eligible ids in ascending order with their probe answers —
+    /// identical to the old full scan's output, built in O(|eligible|).
+    pub fn async_candidates(&self, now: f64, mu: f64) -> Vec<Candidate> {
+        let elig = self.eligible.as_ref().expect("async_sync_to before selection");
+        let mut out = Vec::with_capacity(elig.set.len());
+        for id in elig.set.iter() {
+            out.push(self.candidate(id, now, mu));
+        }
+        out
+    }
+
+    /// Async hook: a task was spawned on `id`, busy until `until`.
+    pub fn mark_busy(&mut self, id: usize, until: f64) {
+        self.registry.set_busy_until(id, until);
+        if let Some(elig) = self.eligible.as_mut() {
+            elig.set.remove(id);
+        }
+    }
+
+    /// Async hook: `id`'s task ended (arrival or dropout) at `now` — the
+    /// learner is selectable again if available and not cooling.
+    pub fn release(&mut self, id: usize, round: usize, now: f64) {
+        if let Some(elig) = self.eligible.as_mut() {
+            refresh(elig, &self.index, &self.registry, id, round, now);
+        }
+    }
+
+    /// Async hook: `id` enters cooldown until `until` (a future version, so
+    /// it leaves the selectable set now and re-enters via the bucket drain).
+    pub fn begin_cooldown(&mut self, id: usize, until: usize) {
+        self.registry.set_cooldown_until(id, until);
+        if let Some(elig) = self.eligible.as_mut() {
+            elig.buckets.entry(until).or_default().push(id);
+            elig.set.remove(id);
+        }
+    }
+
+    /// Pre-generate every learner's trace and forecaster — the pre-refactor
+    /// eager construction. Tests and benches use this to prove the lazy
+    /// path is result-identical and to measure what laziness saves.
+    pub fn materialize_all(&self) {
+        if matches!(self.index.availability(), Availability::All) {
+            return;
+        }
+        for id in 0..self.registry.len() {
+            self.forecaster(id);
+        }
+    }
+
+    /// Learner traces generated so far (== population size on eager paths).
+    pub fn materialized_traces(&self) -> usize {
+        match self.index.availability() {
+            Availability::All => 0,
+            Availability::Dynamic(tr) => tr.len(),
+            Availability::Lazy(tr) => tr.materialized(),
+        }
+    }
+
+    /// Learner forecasters trained so far.
+    pub fn trained_forecasters(&self) -> usize {
+        self.forecasters.trained()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learners::{HardwareScenario, ProfilePool};
+    use crate::trace::{LazyTraceSet, TraceConfig};
+
+    fn mk_population(n: usize, avail: Availability, mode: AvailMode) -> Population {
+        let pool = ProfilePool::generate(n, 4, HardwareScenario::Hs1);
+        let registry = Registry::eager(pool, vec![8; n], 4);
+        Population::new(registry, avail, mode, 1, 1000, 1)
+    }
+
+    #[test]
+    fn sync_candidates_match_brute_force_predicate() {
+        let n = 30;
+        let mut p = mk_population(
+            n,
+            Availability::Lazy(LazyTraceSet::new(n, 6, TraceConfig::default())),
+            AvailMode::DynAvail,
+        );
+        let reference = Availability::Lazy(LazyTraceSet::new(n, 6, TraceConfig::default()));
+        p.set_cooldown_until(3, 100);
+        p.set_busy_until(5, 1e9);
+        for (round, now) in [(0usize, 0.0f64), (1, 900.0), (2, 50_000.0), (3, 400_000.0)] {
+            let got: Vec<usize> =
+                p.sync_candidates(round, now, 60.0).iter().map(|c| c.id).collect();
+            let want: Vec<usize> = (0..n)
+                .filter(|&id| {
+                    reference.available(id, now)
+                        && (id != 3 || round >= 100)
+                        && (id != 5)
+                })
+                .collect();
+            assert_eq!(got, want, "round {round} now {now}");
+        }
+    }
+
+    #[test]
+    fn async_eligibility_tracks_busy_and_cooldown() {
+        let n = 10;
+        let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
+        p.async_sync_to(0, 0.0);
+        assert_eq!(p.eligible_set().len(), n);
+        p.mark_busy(2, 50.0);
+        p.begin_cooldown(7, 2);
+        assert!(!p.eligible_set().contains(2));
+        assert!(!p.eligible_set().contains(7));
+        assert_eq!(p.eligible_set().len(), n - 2);
+        // task ends: learner 2 returns
+        p.release(2, 0, 50.0);
+        assert!(p.eligible_set().contains(2));
+        // version advances past the cooldown: learner 7 returns
+        p.async_sync_to(2, 60.0);
+        assert!(p.eligible_set().contains(7));
+        assert_eq!(p.eligible_set().len(), n);
+    }
+
+    #[test]
+    fn async_candidates_are_id_ordered_and_probed() {
+        let n = 6;
+        let p_avail = Availability::All;
+        let mut p = mk_population(n, p_avail, AvailMode::AllAvail);
+        p.async_sync_to(0, 0.0);
+        let cands = p.async_candidates(0.0, 100.0);
+        assert_eq!(cands.len(), n);
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert_eq!(c.avail_prob, 1.0);
+            assert!(c.expected_duration > 0.0);
+        }
+    }
+
+    #[test]
+    fn stale_cooldown_buckets_are_harmless() {
+        let n = 4;
+        let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
+        p.async_sync_to(0, 0.0);
+        // cooldown set to round 2, then re-set (longer) before expiring
+        p.begin_cooldown(1, 2);
+        p.begin_cooldown(1, 5);
+        p.async_sync_to(2, 10.0); // drains the stale round-2 bucket
+        assert!(!p.eligible_set().contains(1), "stale bucket must not resurrect");
+        p.async_sync_to(5, 20.0);
+        assert!(p.eligible_set().contains(1));
+    }
+}

@@ -1,0 +1,229 @@
+//! The sharded learner registry: *who exists*. Owns every per-learner fact
+//! the server tracks outside the data plane — the device profile, the local
+//! dataset size, and the two pieces of selection-relevant dynamic state
+//! (cooldown round, busy-until time) — split into contiguous id-range
+//! shards so population-scale operations (construction, bulk state resets,
+//! future cross-thread partitioning) work shard-by-shard.
+//!
+//! Profiles come in two flavors:
+//!
+//! * **eager** — wraps a pre-generated [`ProfilePool`] (the sequential-RNG
+//!   generator every existing experiment uses; values are untouched by this
+//!   refactor, which is what keeps `tests/kernel_equivalence.rs` honest);
+//! * **lazy** — per-learner RNG streams sampled at first touch, for
+//!   synthetic mega-populations where nothing should be materialized up
+//!   front. Lazy profiles draw from the same cluster mixture but a
+//!   different RNG threading, so they are a *different* (equally valid)
+//!   population, deterministic per (seed, id) and independent of shard
+//!   count — never mix the two flavors within one comparison.
+
+use crate::learners::{profiles::sample_profile, DeviceProfile, ProfilePool};
+use crate::util::lazy::LazySlots;
+use crate::util::rng::Rng;
+
+/// Default number of contiguous id-range shards.
+pub const DEFAULT_SHARDS: usize = 8;
+
+enum ShardProfiles {
+    Eager(Vec<DeviceProfile>),
+    Lazy { root: Rng, base: usize, slots: LazySlots<DeviceProfile> },
+}
+
+struct RegistryShard {
+    profiles: ShardProfiles,
+    n_samples: Vec<u32>,
+    cooldown_until: Vec<usize>,
+    busy_until: Vec<f64>,
+}
+
+impl RegistryShard {
+    fn profile(&self, off: usize) -> &DeviceProfile {
+        match &self.profiles {
+            ShardProfiles::Eager(p) => &p[off],
+            ShardProfiles::Lazy { root, base, slots } => slots.get_or_init(off, || {
+                let mut rng = root.stream((base + off) as u64);
+                sample_profile(&mut rng)
+            }),
+        }
+    }
+}
+
+/// Sharded per-learner registry (see the module docs).
+pub struct Registry {
+    shards: Vec<RegistryShard>,
+    shard_size: usize,
+    n: usize,
+}
+
+impl Registry {
+    /// Wrap an eagerly-generated [`ProfilePool`] (the compatibility path:
+    /// profile values are bit-identical to the pre-registry coordinator).
+    pub fn eager(pool: ProfilePool, n_samples: Vec<u32>, num_shards: usize) -> Registry {
+        let n = pool.profiles.len();
+        assert_eq!(n, n_samples.len(), "one sample count per profile");
+        let shard_size = shard_size_for(n, num_shards);
+        let mut profiles = pool.profiles;
+        let mut samples = n_samples;
+        let mut shards = Vec::new();
+        while !profiles.is_empty() || shards.is_empty() {
+            let take = shard_size.min(profiles.len());
+            let rest_p = profiles.split_off(take);
+            let rest_s = samples.split_off(take);
+            shards.push(RegistryShard {
+                cooldown_until: vec![0; take],
+                busy_until: vec![0.0; take],
+                profiles: ShardProfiles::Eager(profiles),
+                n_samples: samples,
+            });
+            profiles = rest_p;
+            samples = rest_s;
+            if take == 0 {
+                break; // n == 0: one empty shard
+            }
+        }
+        Registry { shards, shard_size, n }
+    }
+
+    /// Per-learner-stream lazy profiles (Hs1-distribution only; no global
+    /// top-X% speedup pass is possible without materializing everyone).
+    /// Construction is O(n) empty slots; each profile is sampled at first
+    /// touch, deterministic per (seed, id) and independent of shard count.
+    pub fn lazy(n: usize, seed: u64, mean_samples: u32, num_shards: usize) -> Registry {
+        let root = Rng::new(seed ^ 0xDE71CE);
+        let shard_size = shard_size_for(n, num_shards);
+        let mut shards = Vec::new();
+        let mut base = 0usize;
+        while base < n || shards.is_empty() {
+            let take = shard_size.min(n - base);
+            shards.push(RegistryShard {
+                profiles: ShardProfiles::Lazy {
+                    root: root.clone(),
+                    base,
+                    slots: LazySlots::new(take),
+                },
+                n_samples: vec![mean_samples; take],
+                cooldown_until: vec![0; take],
+                busy_until: vec![0.0; take],
+            });
+            base += take;
+            if take == 0 {
+                break;
+            }
+        }
+        Registry { shards, shard_size, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn at(&self, id: usize) -> (&RegistryShard, usize) {
+        (&self.shards[id / self.shard_size], id % self.shard_size)
+    }
+
+    pub fn profile(&self, id: usize) -> &DeviceProfile {
+        let (s, off) = self.at(id);
+        s.profile(off)
+    }
+
+    pub fn n_samples(&self, id: usize) -> usize {
+        let (s, off) = self.at(id);
+        s.n_samples[off] as usize
+    }
+
+    pub fn cooldown_until(&self, id: usize) -> usize {
+        let (s, off) = self.at(id);
+        s.cooldown_until[off]
+    }
+
+    pub fn set_cooldown_until(&mut self, id: usize, round: usize) {
+        let shard = &mut self.shards[id / self.shard_size];
+        shard.cooldown_until[id % self.shard_size] = round;
+    }
+
+    pub fn busy_until(&self, id: usize) -> f64 {
+        let (s, off) = self.at(id);
+        s.busy_until[off]
+    }
+
+    pub fn set_busy_until(&mut self, id: usize, t: f64) {
+        let shard = &mut self.shards[id / self.shard_size];
+        shard.busy_until[id % self.shard_size] = t;
+    }
+}
+
+fn shard_size_for(n: usize, num_shards: usize) -> usize {
+    n.div_ceil(num_shards.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learners::HardwareScenario;
+
+    #[test]
+    fn eager_registry_preserves_pool_values_across_shard_counts() {
+        let pool = || ProfilePool::generate(50, 9, HardwareScenario::Hs1);
+        let flat = pool();
+        let samples: Vec<u32> = (0..50).map(|i| 10 + i as u32).collect();
+        for shards in [1usize, 4, 8, 13] {
+            let reg = Registry::eager(pool(), samples.clone(), shards);
+            assert_eq!(reg.len(), 50);
+            for id in 0..50 {
+                assert_eq!(reg.profile(id), &flat.profiles[id], "{shards} shards, id {id}");
+                assert_eq!(reg.n_samples(id), 10 + id);
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_state_round_trips() {
+        let reg_pool = ProfilePool::generate(20, 1, HardwareScenario::Hs1);
+        let mut reg = Registry::eager(reg_pool, vec![5; 20], 4);
+        assert_eq!(reg.cooldown_until(13), 0);
+        assert_eq!(reg.busy_until(13), 0.0);
+        reg.set_cooldown_until(13, 7);
+        reg.set_busy_until(13, 42.5);
+        assert_eq!(reg.cooldown_until(13), 7);
+        assert_eq!(reg.busy_until(13), 42.5);
+        // neighbours untouched
+        assert_eq!(reg.cooldown_until(12), 0);
+        assert_eq!(reg.busy_until(14), 0.0);
+    }
+
+    #[test]
+    fn lazy_registry_is_shard_count_independent_and_deterministic() {
+        let a = Registry::lazy(100, 77, 8, 1);
+        let b = Registry::lazy(100, 77, 8, 8);
+        let c = Registry::lazy(100, 77, 8, 7);
+        for id in (0..100).rev() {
+            let p = a.profile(id);
+            assert_eq!(p, b.profile(id), "id {id}: 1 vs 8 shards");
+            assert_eq!(p, c.profile(id), "id {id}: 1 vs 7 shards");
+            assert!(p.sec_per_sample > 0.0 && p.upload_bps >= 100e3);
+            assert_eq!(a.n_samples(id), 8);
+        }
+    }
+
+    #[test]
+    fn empty_population() {
+        let reg = Registry::eager(
+            ProfilePool::generate(0, 1, HardwareScenario::Hs1),
+            Vec::new(),
+            8,
+        );
+        assert!(reg.is_empty());
+        assert_eq!(reg.num_shards(), 1);
+        let lz = Registry::lazy(0, 1, 4, 8);
+        assert!(lz.is_empty());
+    }
+}

@@ -14,6 +14,7 @@ pub mod priority;
 pub mod random;
 pub mod safa;
 
+use crate::population::CandidateSet;
 use crate::util::rng::Rng;
 
 /// A checked-in learner visible to the selector this round.
@@ -55,6 +56,26 @@ pub trait Selector: Send {
 
     /// Pick up to `ctx.target` participants from `ctx.candidates`.
     fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize>;
+
+    /// Population-scale fast path: draw up to `target` participants
+    /// directly from an incrementally-maintained [`CandidateSet`] without
+    /// materializing `Vec<Candidate>`. Selectors whose policy needs the
+    /// full pool (utility ranking, probe answers) return `None` and the
+    /// engine falls back to [`Selector::select`] over the materialized
+    /// eligible list. Implementations must be **bit-compatible** with
+    /// their `select` over the ascending-id candidate list (same RNG
+    /// draws, same ids) so enabling the fast path never changes results —
+    /// `CandidateSet::sample_k` provides exactly that for uniform sampling.
+    fn select_from(
+        &mut self,
+        _pool: &CandidateSet,
+        _round: usize,
+        _now: f64,
+        _target: usize,
+        _rng: &mut Rng,
+    ) -> Option<Vec<usize>> {
+        None
+    }
 
     /// Observe the round outcome (default: stateless).
     fn feedback(&mut self, _fb: &RoundFeedback) {}

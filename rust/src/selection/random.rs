@@ -1,6 +1,9 @@
 //! Uniform random participant selection — the FedAvg / Google-scale default
 //! (Bonawitz et al.) and the paper's "Random" baseline.
 
+use crate::population::CandidateSet;
+use crate::util::rng::Rng;
+
 use super::{SelectionCtx, Selector};
 
 pub struct RandomSelector;
@@ -18,13 +21,63 @@ impl Selector for RandomSelector {
             .map(|i| ctx.candidates[i].id)
             .collect()
     }
+
+    /// Uniform sampling needs no probe answers: draw ranks straight from
+    /// the candidate set. `CandidateSet::sample_k` replays `Rng::choose_k`
+    /// over the ascending-id member list exactly, so this is bit-identical
+    /// to [`RandomSelector::select`] on the materialized candidates — the
+    /// async engine's O(k log n) fast path at million-learner populations.
+    fn select_from(
+        &mut self,
+        pool: &CandidateSet,
+        _round: usize,
+        _now: f64,
+        target: usize,
+        rng: &mut Rng,
+    ) -> Option<Vec<usize>> {
+        Some(pool.sample_k(rng, target))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::selection::mk_candidates;
-    use crate::util::rng::Rng;
+
+    #[test]
+    fn sampled_path_bit_identical_to_materialized_select() {
+        // the fast path's contract: same RNG draws, same picked ids as
+        // select() over the ascending-id candidate list
+        let ids: Vec<usize> = (0..200).filter(|i| i % 3 != 0).collect();
+        let mut pool = CandidateSet::new(200);
+        for &id in &ids {
+            pool.insert(id);
+        }
+        let candidates: Vec<crate::selection::Candidate> = ids
+            .iter()
+            .map(|&id| crate::selection::Candidate {
+                id,
+                avail_prob: 0.5,
+                expected_duration: 10.0,
+            })
+            .collect();
+        for seed in 0..10u64 {
+            let mut s = RandomSelector;
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let fast = s.select_from(&pool, 0, 0.0, 9, &mut r1).unwrap();
+            let mut ctx = SelectionCtx {
+                round: 0,
+                now: 0.0,
+                target: 9,
+                candidates: &candidates,
+                rng: &mut r2,
+            };
+            let slow = s.select(&mut ctx);
+            assert_eq!(fast, slow, "seed {seed}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "seed {seed}: rng state diverged");
+        }
+    }
 
     #[test]
     fn covers_population_over_rounds() {

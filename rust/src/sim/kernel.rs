@@ -37,6 +37,11 @@ pub enum EventClass {
     Eval = 2,
     /// A (re-)selection opportunity: the async regime's check-in retry.
     CheckIn = 3,
+    /// An availability transition (a learner's charging session starting or
+    /// ending). Used by `population::AvailabilityIndex`, which runs these on
+    /// its own `EventKernel` instance — one pending transition per learner —
+    /// so they never interleave with (or reorder) engine events.
+    Availability = 4,
 }
 
 /// One scheduled event, as returned by [`EventKernel::pop_next`]/`pop_due`.

@@ -270,14 +270,17 @@ pub fn run_many(
     threadpool::run_parallel(workers, jobs).into_iter().collect()
 }
 
-/// Execute a whole grid and aggregate per-cell summaries.
-pub fn run_grid(
+/// Execute a whole grid and return the expanded cells plus every per-run
+/// [`ExperimentResult`], cell-major / seed-minor
+/// (`results[cell_idx * seeds.len() + seed_idx]`). This is the layer the
+/// per-run JSON regression suite (`tests/sweep_json_valid.rs`) hooks into:
+/// every result a sweep produces must serialize to *parseable* JSON.
+pub fn run_grid_results(
     spec: &GridSpec,
     exec: Arc<dyn Executor>,
     opts: &SweepOpts,
-) -> Result<SweepReport> {
+) -> Result<(Vec<GridCell>, Vec<ExperimentResult>)> {
     let cells = spec.expand();
-    let per_cell = spec.seeds.len();
     let mut flat = Vec::with_capacity(spec.total_runs());
     for cell in &cells {
         for cfg in &cell.runs {
@@ -289,11 +292,22 @@ pub fn run_grid(
             "[sweep] {}: {} cells x {} seeds = {} runs",
             spec.label,
             cells.len(),
-            per_cell,
+            spec.seeds.len(),
             flat.len()
         );
     }
     let results = run_many(flat, opts.workers, opts.progress)?;
+    Ok((cells, results))
+}
+
+/// Execute a whole grid and aggregate per-cell summaries.
+pub fn run_grid(
+    spec: &GridSpec,
+    exec: Arc<dyn Executor>,
+    opts: &SweepOpts,
+) -> Result<SweepReport> {
+    let (cells, results) = run_grid_results(spec, exec, opts)?;
+    let per_cell = spec.seeds.len();
     let mut summaries = Vec::with_capacity(cells.len());
     for (i, cell) in cells.iter().enumerate() {
         let group = &results[i * per_cell..(i + 1) * per_cell];

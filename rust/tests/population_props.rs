@@ -1,0 +1,224 @@
+//! Property tests for the population substrate: the incremental
+//! `AvailabilityIndex` + `CandidateSet` must agree with a brute-force
+//! full-population scan on randomized traces and event (advance) orders,
+//! sampling must be byte-identical for 1 vs 8 shards, and the
+//! end-to-end engines must be unchanged by the rewiring (the sync engines
+//! are additionally pinned bytewise by `tests/kernel_equivalence.rs`).
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::population::{AvailabilityIndex, CandidateSet};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::sim::Availability;
+use relay::trace::{LazyTraceSet, TraceConfig};
+use relay::util::prop::{prop_assert, prop_check};
+use relay::util::rng::Rng;
+
+fn random_trace_config(rng: &mut Rng) -> TraceConfig {
+    TraceConfig {
+        median_session: rng.uniform(60.0, 1200.0),
+        session_sigma: rng.uniform(0.4, 1.5),
+        overnight_frac: rng.f64() * 0.3,
+        peak_gap: rng.uniform(1800.0, 6.0 * 3600.0),
+        diurnal_strength: rng.uniform(1.0, 8.0),
+        phase_jitter: rng.uniform(600.0, 4.0 * 3600.0),
+        nightly_block: if rng.bool(0.4) {
+            Some((rng.uniform(3600.0, 6.0 * 3600.0), rng.uniform(60.0, 900.0)))
+        } else {
+            None
+        },
+    }
+}
+
+fn collect(idx: &AvailabilityIndex) -> Vec<usize> {
+    let mut v = Vec::new();
+    idx.for_each_available(|id| v.push(id));
+    v
+}
+
+/// The core exactness property: after any sequence of time advances over
+/// any generator configuration, the index's available set equals the
+/// brute-force `available(id, t)` scan the engines used to run.
+#[test]
+fn availability_index_agrees_with_brute_force_scan() {
+    prop_check(25, 0xA11A, |rng| {
+        let config = random_trace_config(rng);
+        let n = rng.range(1, 30);
+        let seed = rng.next_u64();
+        let shards = rng.range(1, 9);
+        let mut idx = AvailabilityIndex::new(
+            Availability::Lazy(LazyTraceSet::new(n, seed, config)),
+            n,
+            shards,
+        );
+        let oracle = Availability::Lazy(LazyTraceSet::new(n, seed, config));
+        // randomized advance order: bursts of small steps and week-scale
+        // jumps, so transition batches of every size are exercised
+        let mut t = 0.0f64;
+        for step in 0..30 {
+            t += if rng.bool(0.3) {
+                rng.uniform(50_000.0, 900_000.0) // multi-day / cross-week jump
+            } else {
+                rng.uniform(0.1, 2000.0)
+            };
+            idx.advance_to(t, 1);
+            let got = collect(&idx);
+            let want: Vec<usize> = (0..n).filter(|&id| oracle.available(id, t)).collect();
+            prop_assert(
+                got == want,
+                format!(
+                    "seed {seed} shards {shards} step {step} t={t}: \
+                     index {got:?} != scan {want:?}"
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Candidate-set rank sampling must be a pure function of (membership,
+/// rng), independent of shard count, and bit-compatible with
+/// `Rng::choose_k` over the ascending member list.
+#[test]
+fn candidate_set_sampling_shard_count_invariant() {
+    prop_check(60, 0x5A3D, |rng| {
+        let n = rng.range(1, 400);
+        let members: Vec<usize> = (0..n).filter(|_| rng.bool(0.4)).collect();
+        let k = rng.range(0, 20);
+        let seed = rng.next_u64();
+        let mut baseline: Option<Vec<usize>> = None;
+        for shards in [1usize, 8, rng.range(2, 17)] {
+            let mut set = CandidateSet::with_shards(n, shards);
+            for &id in &members {
+                set.insert(id);
+            }
+            prop_assert(set.len() == members.len(), "len mismatch")?;
+            prop_assert(
+                set.iter().collect::<Vec<_>>() == members,
+                format!("{shards} shards: iteration order diverged"),
+            )?;
+            let sampled = set.sample_k(&mut Rng::new(seed), k);
+            match &baseline {
+                None => baseline = Some(sampled),
+                Some(b) => prop_assert(
+                    &sampled == b,
+                    format!("{shards} shards: sample diverged from 1-shard baseline"),
+                )?,
+            }
+        }
+        // bit-compatibility with choose_k over the materialized list
+        let want: Vec<usize> = Rng::new(seed)
+            .choose_k(members.len(), k.min(members.len()))
+            .into_iter()
+            .map(|i| members[i])
+            .collect();
+        prop_assert(
+            baseline.unwrap() == want,
+            "sample_k diverged from choose_k over the member list",
+        )
+    });
+}
+
+/// Random insert/remove churn: rank queries stay consistent with a naive
+/// sorted-vec model throughout.
+#[test]
+fn candidate_set_rank_queries_track_naive_model() {
+    prop_check(40, 0xC0DE5, |rng| {
+        let n = rng.range(1, 300);
+        let mut set = CandidateSet::with_shards(n, rng.range(1, 9));
+        let mut model = vec![false; n];
+        for _ in 0..rng.range(1, 500) {
+            let id = rng.below(n);
+            if rng.bool(0.55) {
+                set.insert(id);
+                model[id] = true;
+            } else {
+                set.remove(id);
+                model[id] = false;
+            }
+        }
+        let members: Vec<usize> = (0..n).filter(|&i| model[i]).collect();
+        prop_assert(set.len() == members.len(), "len diverged")?;
+        for (rank, &id) in members.iter().enumerate() {
+            prop_assert(
+                set.nth(rank) == id,
+                format!("nth({rank}) = {} != {id}", set.nth(rank)),
+            )?;
+            prop_assert(set.contains(id), "member not contained")?;
+        }
+        Ok(())
+    });
+}
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// End-to-end: the async engine rewired onto the population substrate is a
+/// pure function of its config (sampling fast path included), across both
+/// availability regimes and all selectors.
+#[test]
+fn async_runs_deterministic_on_population_substrate() {
+    prop_check(6, 0xFA57, |rng| {
+        let selectors = ["random", "priority", "oort", "safa"];
+        let cfg = ExpConfig {
+            variant: "tiny".into(),
+            total_learners: rng.range(8, 40),
+            rounds: rng.range(2, 6),
+            target_participants: rng.range(2, 6),
+            mode: RoundMode::Async {
+                buffer_k: rng.range(1, 5),
+                max_staleness: if rng.bool(0.5) { Some(rng.range(0, 4)) } else { None },
+            },
+            avail: if rng.bool(0.5) { AvailMode::AllAvail } else { AvailMode::DynAvail },
+            selector: selectors[rng.below(4)].into(),
+            mean_samples: 8,
+            test_per_class: 2,
+            eval_every: 2,
+            cooldown_rounds: rng.range(0, 3),
+            lr: 0.1,
+            seed: rng.next_u64() % 10_000,
+            ..Default::default()
+        };
+        let a = run_experiment(cfg.clone(), exec()).map_err(|e| format!("{e:#}"))?;
+        let b = run_experiment(cfg.clone(), exec()).map_err(|e| format!("{e:#}"))?;
+        prop_assert(
+            a.to_json().to_string() == b.to_json().to_string(),
+            format!("async run not deterministic for {:?}", cfg.selector),
+        )?;
+        prop_assert(a.rounds.len() == cfg.rounds, "missing merge records")
+    });
+}
+
+/// A mid-scale lazy DynAvail async cell (the shape of the 100k/1M bench
+/// cells) completes its merges through the incremental path — no
+/// per-event full scans — and still closes its accounting.
+#[test]
+fn larger_async_dynavail_cell_completes() {
+    let cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 20_000,
+        rounds: 10,
+        target_participants: 8,
+        mode: RoundMode::Async { buffer_k: 4, max_staleness: Some(6) },
+        avail: AvailMode::DynAvail,
+        selector: "random".into(),
+        mean_samples: 4,
+        test_per_class: 2,
+        eval_every: 1000,
+        cooldown_rounds: 1,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let r = run_experiment(cfg, exec()).unwrap();
+    assert_eq!(r.rounds.len(), 10);
+    let last = r.rounds.last().unwrap();
+    let agg = last.cum_aggregated_secs.unwrap();
+    let closed = agg + last.cum_waste_secs;
+    assert!(
+        (last.cum_resource_secs - closed).abs() <= 1e-6 * last.cum_resource_secs.max(1.0),
+        "accounting identity broken at 20k learners"
+    );
+}

@@ -1,0 +1,109 @@
+//! Regression suite: every `ExperimentResult` JSON produced by a sweep
+//! grid must parse with `util::json` — no non-finite float (the seed's
+//! `train_loss: NaN` on nothing-trained rounds) may ever leak into output
+//! again. The grid below deliberately includes cells whose rounds all fail
+//! (starved cooldowns) and async cells with burned slots, the two paths
+//! that used to emit NaN/0.0 placeholders.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::data::partition::PartitionScheme;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::sweep::{run_grid_results, GridSpec, SweepOpts};
+use relay::util::json::Json;
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+fn check_grid(spec: &GridSpec) {
+    let (cells, results) =
+        run_grid_results(spec, exec(), &SweepOpts { workers: 2, progress: false }).unwrap();
+    assert_eq!(results.len(), spec.total_runs());
+    let per_cell = spec.seeds.len();
+    for (i, r) in results.iter().enumerate() {
+        let cell = &cells[i / per_cell].label;
+        let text = r.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("cell '{cell}' run {i}: sweep produced unparseable JSON ({e}): {text}")
+        });
+        // the per-round records survive the round-trip with the expected
+        // shape: train_loss is a number or null, never a bare NaN token
+        let rounds = parsed.get("rounds").and_then(|x| x.as_arr()).unwrap_or_else(|| {
+            panic!("cell '{cell}' run {i}: missing rounds array")
+        });
+        assert_eq!(rounds.len(), r.rounds.len(), "cell '{cell}' run {i}");
+        for (rec, jr) in r.rounds.iter().zip(rounds) {
+            let tl = jr.get("train_loss").expect("train_loss key present");
+            match rec.train_loss {
+                Some(v) => {
+                    assert!(v.is_finite(), "cell '{cell}': non-finite train_loss {v}");
+                    assert_eq!(tl.as_f64(), Some(v), "cell '{cell}'");
+                }
+                None => assert_eq!(tl, &Json::Null, "cell '{cell}'"),
+            }
+        }
+    }
+}
+
+/// OC/DL grid including a starved cell: 4 learners, everyone selected in
+/// round 0, then a long cooldown fails several rounds in a row — the
+/// nothing-trained path that used to serialize `train_loss: NaN`.
+#[test]
+fn sync_grid_results_all_parse() {
+    let base = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 4,
+        rounds: 4,
+        target_participants: 4,
+        cooldown_rounds: 6,
+        mean_samples: 6,
+        test_per_class: 2,
+        eval_every: 2,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let spec = GridSpec {
+        label: "json-valid-sync".into(),
+        selectors: vec!["random".into(), "safa".into()],
+        modes: vec![
+            RoundMode::OverCommit { factor: 1.3 },
+            RoundMode::Deadline { deadline: 40.0 },
+        ],
+        avails: vec![AvailMode::AllAvail, AvailMode::DynAvail],
+        partitions: vec![PartitionScheme::UniformIid],
+        seeds: vec![1, 1001],
+        base,
+    };
+    check_grid(&spec);
+}
+
+/// Async grid with tiny DynAvail populations: burned slots produce failed
+/// merge records (train_loss null) that must stay valid JSON.
+#[test]
+fn async_grid_results_all_parse() {
+    let base = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 8,
+        rounds: 5,
+        target_participants: 3,
+        cooldown_rounds: 2,
+        mean_samples: 6,
+        test_per_class: 2,
+        eval_every: 2,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let spec = GridSpec {
+        label: "json-valid-async".into(),
+        selectors: vec!["random".into(), "priority".into()],
+        modes: vec![RoundMode::Async { buffer_k: 2, max_staleness: Some(3) }],
+        avails: vec![AvailMode::DynAvail],
+        partitions: vec![PartitionScheme::UniformIid],
+        seeds: vec![7, 1007],
+        base,
+    };
+    check_grid(&spec);
+}

@@ -23,7 +23,10 @@ use relay::data::partition::PartitionScheme;
 use relay::forecast::SeasonalForecaster;
 use relay::population::{AvailabilityIndex, CandidateSet};
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
-use relay::selection::{Candidate, SelectionCtx};
+use relay::selection::index::ScoreIndex;
+use relay::selection::{
+    Candidate, ProbeSource, RoundFeedback, SelectPool, SelectionCtx, SlotSig,
+};
 use relay::sim::{Availability, EventClass, EventKernel};
 use relay::sweep::{run_grid, GridSpec, SweepOpts};
 use relay::trace::{LazyTraceSet, TraceConfig, TraceSet};
@@ -130,6 +133,79 @@ fn bench_selectors() {
                 std::hint::black_box(picked);
             });
         }
+    }
+}
+
+fn bench_selection_index() {
+    println!("\n== selection index (samplable utility structures) ==");
+    // score-tree ops at 1M ids / ~333k entries
+    let n = 1_000_000usize;
+    let mut idx = ScoreIndex::new(n);
+    for id in (0..n).step_by(3) {
+        idx.insert(id, (id % 97) as f64 * 0.5);
+    }
+    // step stays inside the seeded residue class (multiples of 3) so every
+    // iteration is a true re-score of an existing entry, and the index the
+    // later top-k/sample benches measure keeps its ~333k size
+    let mut i = 0usize;
+    let mut tick = 0usize;
+    bench::run("selection/score_index_update_1M", || {
+        i = (i + 39) % n;
+        tick += 1;
+        idx.insert(i, ((i + tick) % 89) as f64 * 0.25);
+    });
+    bench::run("selection/score_index_top100_of_333k", || {
+        let mut c = 0usize;
+        idx.top_k_desc(100, |_, _| c += 1);
+        std::hint::black_box(c);
+    });
+    let mut rng = Rng::new(9);
+    bench::run("selection/score_index_weighted_sample", || {
+        std::hint::black_box(idx.weighted_sample(&mut rng));
+    });
+
+    // indexed select_from for the rank-the-pool selectors at 100k eligible:
+    // the cost that used to be O(|eligible|) materialize-and-rank per
+    // selection (compare select/{oort,priority}/n=100000 above)
+    struct FlatProbes;
+    impl ProbeSource for FlatProbes {
+        fn avail_prob(&self, id: usize, _now: f64, _mu: f64) -> f64 {
+            (id % 5) as f64 * 0.25
+        }
+        fn expected_duration(&self, id: usize) -> f64 {
+            10.0 + (id % 31) as f64
+        }
+        fn slot_sig(&self, _now: f64, _mu: f64) -> SlotSig {
+            SlotSig::Const
+        }
+    }
+    for name in ["oort", "priority", "safa"] {
+        let n = 100_000usize;
+        let mut set = relay::population::CandidateSet::new(n);
+        for id in 0..n {
+            set.insert(id);
+        }
+        let probes = FlatProbes;
+        let mut sel = relay::selection::by_name(name).unwrap();
+        if name == "oort" {
+            let completed: Vec<(usize, f64, f64)> = (0..n)
+                .step_by(50)
+                .map(|id| (id, (id % 83) as f64, 20.0))
+                .collect();
+            sel.feedback(&RoundFeedback {
+                round: 0,
+                completed: &completed,
+                missed: &[],
+                round_duration: 60.0,
+            });
+        }
+        let mut rng = Rng::new(4);
+        let mut round = 0usize;
+        bench::run(&format!("selection/indexed/{name}/n=100000"), || {
+            round += 1;
+            let pool = SelectPool { set: &set, probes: &probes, mu: 100.0 };
+            std::hint::black_box(sel.select_from(&pool, round, 0.0, 100, &mut rng).unwrap());
+        });
     }
 }
 
@@ -355,6 +431,7 @@ fn main() {
     bench_population();
     bench_scale_path();
     bench_selectors();
+    bench_selection_index();
     bench_runtime();
     bench_saa();
     bench_round();

@@ -31,20 +31,23 @@
 //! incrementally-maintained eligible set (`population::Population`) instead
 //! of re-running a full `checked_in` scan — availability transitions arrive
 //! as index events, busy/cooldown membership is updated at the spawn /
-//! arrival / dropout / merge points below, and sampling selectors (Random)
-//! draw in O(k log n) per fill without ever materializing the pool. The
-//! per-event cost is therefore independent of `total_learners` (sub-linear
-//! end to end; `relay bench` and `cargo bench population/...` track it),
-//! which is what makes million-learner async cells run in seconds. The
-//! sampled path is bit-compatible with the old scan-and-select, so results
-//! are unchanged.
+//! arrival / dropout / merge points below, and every eligible-set delta is
+//! forwarded to the selector's `on_eligible`/`on_ineligible` hooks so
+//! **indexed selectors** (Random via `CandidateSet::sample_k`; Oort and
+//! IPS/priority via the `selection::index` score trees; SAFA by streaming
+//! the set) select in O(k log n) per fill without ever materializing the
+//! pool. The per-event cost is therefore independent of `total_learners`
+//! (sub-linear end to end; `relay bench --suite selection` and
+//! `cargo bench selection/...` track it), which is what makes
+//! million-learner async cells run in seconds. Every indexed path is
+//! bit-compatible with materialize-and-select, so results are unchanged.
 
 use anyhow::{anyhow, Result};
 
 use crate::aggregation::saa::{merge_buffer, UpdateEntry};
 use crate::config::RoundMode;
 use crate::metrics::{ExperimentResult, RoundRecord};
-use crate::selection::SelectionCtx;
+use crate::selection::{SelectPool, SelectionCtx};
 use crate::sim::EventClass;
 
 use super::engine::{AsyncDrop, AsyncTask, Coordinator, EngineEvent};
@@ -134,7 +137,8 @@ impl Coordinator {
                     st.in_flight -= 1;
                     // the device is free again as of this instant (whether
                     // the update merges, buffers, or is discarded)
-                    self.population.release(task.learner, st.version, now);
+                    self.population
+                        .release(task.learner, st.version, now, self.selector.as_mut());
                     self.async_arrival(task, &mut st, result)?;
                     // don't refill after the final merge: newly spawned
                     // tasks could never merge — they'd only burn real SGD
@@ -150,7 +154,8 @@ impl Coordinator {
                     self.accounting.waste(d.spent);
                     // free again; still eligible iff its session hasn't
                     // actually ended yet (the index decides)
-                    self.population.release(d.learner, st.version, now);
+                    self.population
+                        .release(d.learner, st.version, now, self.selector.as_mut());
                     self.selector.on_departure(st.version, d.learner, self.apt.mu());
                     self.async_fill(&mut st)?;
                 }
@@ -185,22 +190,23 @@ impl Coordinator {
         let now = self.kernel.now();
         let mu = self.apt.mu();
         // bring the eligible set up to (version, now): availability flips
-        // from the index, cooldown-bucket expiries from merges/burns
-        self.population.async_sync_to(st.version, now);
+        // from the index, cooldown/busy-bucket expiries from merges/burns
+        self.population.sync_to(st.version, now, self.selector.as_mut());
         let need = target - st.in_flight;
-        let sampled = self.selector.select_from(
-            self.population.eligible_set(),
-            st.version,
-            now,
-            need,
-            &mut self.rng,
-        );
+        let sampled = {
+            let pool = SelectPool {
+                set: self.population.eligible_set(),
+                probes: &self.population,
+                mu,
+            };
+            self.selector.select_from(&pool, st.version, now, need, &mut self.rng)
+        };
         let mut selected = match sampled {
-            // sampling selector: O(need log n), never materializes the pool
+            // indexed selector: O(need log n), never materializes the pool
             Some(ids) => ids,
-            // rank-the-pool selector: materialize the eligible ids only
+            // un-indexed selector: materialize the eligible ids only
             None => {
-                let candidates = self.population.async_candidates(now, mu);
+                let candidates = self.population.pool_candidates(now, mu);
                 if candidates.is_empty() {
                     return Ok(0);
                 }
@@ -269,7 +275,7 @@ impl Coordinator {
                     // partial work until the session ends; wasted at departure
                     self.accounting.spend(id, dt);
                     st.in_flight_secs += dt;
-                    self.population.mark_busy(id, now + dt);
+                    self.population.mark_busy(id, now + dt, self.selector.as_mut());
                     self.kernel.schedule(
                         now + dt,
                         EventClass::Departure,
@@ -282,7 +288,7 @@ impl Coordinator {
                         .expect("one training outcome per non-dropped plan")?;
                     self.accounting.spend(id, t);
                     st.in_flight_secs += t;
-                    self.population.mark_busy(id, now + t);
+                    self.population.mark_busy(id, now + t, self.selector.as_mut());
                     self.kernel.schedule(
                         now + t,
                         EventClass::Delivery,
@@ -326,8 +332,11 @@ impl Coordinator {
         }
         self.selector
             .on_arrival(st.version, (id, task.stat_util, task.duration), self.apt.mu());
-        self.population
-            .begin_cooldown(id, st.version + 1 + self.cfg.cooldown_rounds);
+        self.population.begin_cooldown(
+            id,
+            st.version + 1 + self.cfg.cooldown_rounds,
+            self.selector.as_mut(),
+        );
         st.buffer.push(task);
         if st.buffer.len() >= st.buffer_k {
             self.async_merge(st, result)?;

@@ -33,7 +33,7 @@ use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
 use crate::population::{Population, Registry};
 use crate::runtime::Executor;
 use crate::selection::apt::AdaptiveTarget;
-use crate::selection::{RoundFeedback, SelectionCtx, Selector};
+use crate::selection::{RoundFeedback, SelectPool, SelectionCtx, Selector};
 use crate::sim::{Availability, EventClass, EventKernel};
 use crate::trace::{LazyTraceSet, TraceConfig};
 use crate::util::rng::Rng;
@@ -242,9 +242,11 @@ impl Coordinator {
         let mut rec = RoundRecord { round, ..Default::default() };
 
         // ---- selection window: check-in + availability probe ------------
-        // (the population substrate's available-set iteration + registry
-        // filters produce exactly the old full scan's candidate vector)
-        let candidates = self.population.sync_candidates(round, now, mu);
+        // Incremental: availability flips from the index, cooldown/busy
+        // re-admissions from the expiry buckets. The resulting eligible set
+        // equals the old full scan's id list element-for-element, and every
+        // set transition is forwarded to the selector's index hooks.
+        self.population.sync_to(round, now, self.selector.as_mut());
 
         // ---- target adjustment (APT) + overcommit ------------------------
         let mut target = self.cfg.target_participants;
@@ -269,17 +271,36 @@ impl Coordinator {
             RoundMode::Async { .. } => unreachable!("async mode uses run_async"),
         };
 
-        let selected = if candidates.is_empty() {
-            Vec::new()
-        } else {
-            let mut ctx = SelectionCtx {
-                round,
-                now,
-                target: n_select,
-                candidates: &candidates,
-                rng: &mut self.rng,
+        // indexed selectors draw straight from the eligible set (sub-linear
+        // in the pool); the fallback materializes the exact candidate
+        // vector the pre-population full scan produced. Both paths are
+        // element-for-element identical (same RNG draws), which is what
+        // keeps this engine byte-identical to the frozen reference.
+        let picked = {
+            let pool = SelectPool {
+                set: self.population.eligible_set(),
+                probes: &self.population,
+                mu,
             };
-            self.selector.select(&mut ctx)
+            self.selector.select_from(&pool, round, now, n_select, &mut self.rng)
+        };
+        let selected = match picked {
+            Some(ids) => ids,
+            None => {
+                let candidates = self.population.pool_candidates(now, mu);
+                if candidates.is_empty() {
+                    Vec::new()
+                } else {
+                    let mut ctx = SelectionCtx {
+                        round,
+                        now,
+                        target: n_select,
+                        candidates: &candidates,
+                        rng: &mut self.rng,
+                    };
+                    self.selector.select(&mut ctx)
+                }
+            }
         };
         rec.selected = selected.len();
 
@@ -387,7 +408,7 @@ impl Coordinator {
                     self.accounting.spend(id, dt);
                     self.accounting.waste(dt);
                     rec.dropouts += 1;
-                    self.population.set_busy_until(id, now + dt);
+                    self.population.mark_busy(id, now + dt, self.selector.as_mut());
                 }
                 None if t <= round_duration => {
                     fresh_ids.push((id, t));
@@ -446,11 +467,11 @@ impl Coordinator {
                 // all — no resources spent, nothing delivered. The learner
                 // stays reserved for the same window so the system timeline
                 // (selection dynamics) is identical to plain SAFA.
-                self.population.set_busy_until(id, now + t);
+                self.population.mark_busy(id, now + t, self.selector.as_mut());
                 continue;
             }
             self.accounting.spend(id, t);
-            self.population.set_busy_until(id, now + t);
+            self.population.mark_busy(id, now + t, self.selector.as_mut());
             if doomed(t) {
                 // Will certainly be discarded (no SAA, or staleness bound
                 // certainly exceeded): account the waste now and skip the
@@ -463,7 +484,7 @@ impl Coordinator {
         }
         for &(id, t) in &fresh_ids {
             self.accounting.spend(id, t);
-            self.population.set_busy_until(id, now + t);
+            self.population.mark_busy(id, now + t, self.selector.as_mut());
         }
 
         let outcomes = self.train_participants(
@@ -553,7 +574,11 @@ impl Coordinator {
 
         // ---- cooldowns, feedback, clock ------------------------------------
         for (id, _, _) in &feedback_completed {
-            self.population.set_cooldown_until(*id, round + 1 + self.cfg.cooldown_rounds);
+            self.population.begin_cooldown(
+                *id,
+                round + 1 + self.cfg.cooldown_rounds,
+                self.selector.as_mut(),
+            );
         }
         let missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
         self.selector.feedback(&RoundFeedback {

@@ -38,7 +38,7 @@ impl SeasonalForecaster {
         SeasonalForecaster { bins: vec![(0.0, 0.0); 168], decay: weekly_decay }
     }
 
-    fn bin_of(t: f64) -> usize {
+    pub(crate) fn bin_of(t: f64) -> usize {
         ((t.rem_euclid(WEEK)) / 3600.0) as usize % 168
     }
 
@@ -82,14 +82,46 @@ impl SeasonalForecaster {
         if b <= a {
             return self.prob_at(a);
         }
-        let steps = ((b - a) / 1800.0).ceil().max(1.0) as usize;
+        let steps = slot_steps(a, b);
         let mut acc = 0.0;
         for i in 0..steps {
-            let t = a + (b - a) * (i as f64 + 0.5) / steps as f64;
-            acc += self.prob_at(t);
+            acc += self.prob_at(slot_midpoint(a, b, i, steps));
         }
         acc / steps as f64
     }
+}
+
+/// Number of probe midpoints in the slot [a, b] (requires b > a). Shared by
+/// [`SeasonalForecaster::prob_slot`] and [`slot_bins`] so the two can never
+/// drift apart — the bitwise-equality lemma below depends on both reading
+/// the exact same midpoints.
+#[inline]
+fn slot_steps(a: f64, b: f64) -> usize {
+    ((b - a) / 1800.0).ceil().max(1.0) as usize
+}
+
+/// The `i`-th probe midpoint of the slot [a, b] (see [`slot_steps`]).
+#[inline]
+fn slot_midpoint(a: f64, b: f64, i: usize, steps: usize) -> f64 {
+    a + (b - a) * (i as f64 + 0.5) / steps as f64
+}
+
+/// The hour-of-week bins the midpoints of `prob_slot(a, b)` land in — the
+/// probe's piecewise-constant validity signature. A trained forecaster's
+/// bins never change afterwards, so **two slots with equal `slot_bins`
+/// produce bitwise-equal [`SeasonalForecaster::prob_slot`] answers for
+/// every learner** (the sum runs over the same bin values in the same
+/// order, divided by the same step count; both functions read the shared
+/// `slot_steps`/`slot_midpoint` arithmetic). The selection-index subsystem
+/// keys its per-time-bucket availability-probability trees on this.
+pub fn slot_bins(a: f64, b: f64) -> Vec<u16> {
+    if b <= a {
+        return vec![SeasonalForecaster::bin_of(a) as u16];
+    }
+    let steps = slot_steps(a, b);
+    (0..steps)
+        .map(|i| SeasonalForecaster::bin_of(slot_midpoint(a, b, i, steps)) as u16)
+        .collect()
 }
 
 /// A population of per-learner [`SeasonalForecaster`]s trained on demand
@@ -310,6 +342,37 @@ mod tests {
             let t = h as f64 * 3600.0 + 1.0;
             assert_eq!(trained.prob_at(t), manual.prob_at(t), "hour {h}");
         }
+    }
+
+    #[test]
+    fn equal_slot_bins_imply_equal_prob_slot() {
+        // the contract the per-time-bucket probability trees rest on: any
+        // two (a, b) slots with identical bin signatures get bitwise-equal
+        // prob_slot answers from any trained forecaster
+        let step = 1800.0;
+        let n = (WEEK / step) as usize;
+        let series: Vec<f64> =
+            (0..n).map(|i| if (i / 3) % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let f = SeasonalForecaster::train_on_week(&series, step);
+        let mut pairs: Vec<(f64, f64)> = Vec::new();
+        for i in 0..400 {
+            let a = i as f64 * 137.3;
+            pairs.push((a, a + 95.0)); // single-midpoint slots
+            pairs.push((a, a + 4321.0)); // multi-step slots
+        }
+        for (i, &(a1, b1)) in pairs.iter().enumerate() {
+            for &(a2, b2) in pairs.iter().skip(i + 1) {
+                if slot_bins(a1, b1) == slot_bins(a2, b2) {
+                    assert_eq!(
+                        f.prob_slot(a1, b1).to_bits(),
+                        f.prob_slot(a2, b2).to_bits(),
+                        "slots ({a1},{b1}) vs ({a2},{b2})"
+                    );
+                }
+            }
+        }
+        // degenerate slot falls back to the single start bin
+        assert_eq!(slot_bins(10.0, 10.0).len(), 1);
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //!   sweep         a parallel experiment grid (selectors x modes x avails x
 //!                 partitions x seeds) with one aggregated JSON report
 //!   figure <id>   regenerate a paper figure/table (2..21, t1, t2, forecast, all)
-//!   bench         population-scale benchmark (construct + select + async
-//!                 merges at 100k/1M learners) -> BENCH_population.json
+//!   bench         population-scale benchmarks: --suite population
+//!                 (construct + select + async merges at 100k/1M learners
+//!                 -> BENCH_population.json) and --suite selection
+//!                 (per-selector indexed vs materializing selection cost
+//!                 -> BENCH_selection.json)
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
 //!   validate      check artifacts + backends and exit
@@ -246,15 +249,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `relay bench`: the population-scale benchmark. For each population size
-/// it measures (a) lazy substrate construction, (b) the one-time
-/// availability-index build + candidate-set sampling, and (c) a full lazy
-/// DynAvail buffered-async cell running `--merges` merges on the
-/// incremental eligible set — then writes one `BENCH_population.json`
-/// trajectory file. Per-event cost staying flat (sub-linear end to end)
-/// as the population grows 10x is the acceptance signal for the
-/// no-O(total_learners)-scan rewiring.
+/// `relay bench`: population-scale benchmarks. `--suite population`
+/// (default) measures substrate construction + a full lazy DynAvail
+/// buffered-async cell (`BENCH_population.json`); `--suite selection`
+/// measures per-selector per-selection cost on the indexed vs the
+/// materializing path at 100k/1M pools, appending a run to
+/// `BENCH_selection.json`; `--suite all` runs both. Per-event /
+/// per-selection cost staying flat as the population grows 10x is the
+/// acceptance signal for the sub-linear selection pipeline.
 fn cmd_bench(args: &Args) -> Result<()> {
+    match args.str_or("suite", "population").as_str() {
+        "population" => cmd_bench_population(args),
+        "selection" => cmd_bench_selection(args),
+        "all" => {
+            cmd_bench_population(args)?;
+            cmd_bench_selection(args)
+        }
+        other => Err(anyhow!("--suite must be population|selection|all, got '{other}'")),
+    }
+}
+
+fn cmd_bench_population(args: &Args) -> Result<()> {
     use relay::config::RoundMode;
     use relay::coordinator::Coordinator;
     use relay::population::{AvailabilityIndex, Registry};
@@ -392,6 +407,154 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The selection benchmark: per-selector per-selection cost over a lazy
+/// DynAvail population, indexed (`select_from` on the maintained eligible
+/// set + score trees) vs materializing (candidate vector + `select`), at
+/// each `--populations` size. The sub-linear acceptance signal: indexed
+/// oort/priority per-selection time at 1M learners stays within ~2x of
+/// 100k, where the materializing path scales ~10x. Appends one run to
+/// `--selection-out` (default BENCH_selection.json) so trajectories
+/// accumulate across commits.
+fn cmd_bench_selection(args: &Args) -> Result<()> {
+    use relay::config::AvailMode;
+    use relay::population::{Population, Registry, DEFAULT_SHARDS};
+    use relay::selection::{by_name, RoundFeedback, SelectPool, SelectionCtx};
+    use relay::sim::Availability;
+    use relay::trace::{LazyTraceSet, TraceConfig};
+    use relay::util::json::{arr, num, obj, Json};
+    use relay::util::rng::Rng;
+    use std::time::Instant;
+
+    let mut populations = Vec::new();
+    for p in args.list_or("populations", "100000,1000000") {
+        let n: usize = p
+            .parse()
+            .map_err(|_| anyhow!("--populations expects integers, got '{p}'"))?;
+        if n == 0 {
+            return Err(anyhow!("--populations entries must be >= 1"));
+        }
+        populations.push(n);
+    }
+    let selections = args.usize_or("selections", 200).max(1);
+    let target = args.usize_or("participants", 100);
+    let workers = args.usize_or("workers", 0);
+    let out = args.str_or("selection-out", "BENCH_selection.json");
+    let mu = 100.0;
+    let mut cells = Vec::new();
+
+    for &n in &populations {
+        println!("== selection @ population {n} ==");
+        let registry = Registry::lazy(n, 7, 4, DEFAULT_SHARDS);
+        let avail = Availability::Lazy(LazyTraceSet::new(n, 7, TraceConfig::default()));
+        let mut pop = Population::new(registry, avail, AvailMode::DynAvail, 1, 1000, workers);
+        // shared monotone clocks: the availability index only moves forward
+        let mut now = 0.0f64;
+        let mut round = 0usize;
+        let mut selector_cells = Vec::new();
+        for name in ["random", "oort", "priority", "safa"] {
+            let mut sel = by_name(name).ok_or_else(|| anyhow!("unknown selector"))?;
+            let mut rng = Rng::new(5);
+            pop.sync_to(round, now, sel.as_mut());
+            if name == "oort" {
+                // seed an explored pool (~2k learners) so the utility tree
+                // ranks something real
+                let stride = (n / 2000).max(1);
+                let completed: Vec<(usize, f64, f64)> = (0..n)
+                    .step_by(stride)
+                    .map(|id| (id, rng.uniform(1.0, 100.0), rng.uniform(5.0, 300.0)))
+                    .collect();
+                sel.feedback(&RoundFeedback {
+                    round,
+                    completed: &completed,
+                    missed: &[],
+                    round_duration: mu,
+                });
+            }
+            let eligible0 = pop.eligible_set().len();
+            // warm-up: pays the one-time index build / probe materialization
+            {
+                let pool =
+                    SelectPool { set: pop.eligible_set(), probes: &pop, mu };
+                let _ = sel.select_from(&pool, round, now, target, &mut rng);
+            }
+            // indexed path, steady state
+            let t0 = Instant::now();
+            for _ in 0..selections {
+                now += 0.05;
+                round += 1;
+                pop.sync_to(round, now, sel.as_mut());
+                let pool =
+                    SelectPool { set: pop.eligible_set(), probes: &pop, mu };
+                let picked = sel
+                    .select_from(&pool, round, now, target, &mut rng)
+                    .expect("built-in selectors are indexed");
+                std::hint::black_box(picked);
+            }
+            let indexed_us = t0.elapsed().as_secs_f64() * 1e6 / selections as f64;
+            // materializing path (capped iterations: it is the slow one)
+            let mat_iters = (20_000_000 / n.max(1)).clamp(2, selections);
+            let t0 = Instant::now();
+            for _ in 0..mat_iters {
+                now += 0.05;
+                round += 1;
+                pop.sync_to(round, now, sel.as_mut());
+                let candidates = pop.pool_candidates(now, mu);
+                if !candidates.is_empty() {
+                    let mut ctx = SelectionCtx {
+                        round,
+                        now,
+                        target,
+                        candidates: &candidates,
+                        rng: &mut rng,
+                    };
+                    std::hint::black_box(sel.select(&mut ctx));
+                }
+            }
+            let materialized_us = t0.elapsed().as_secs_f64() * 1e6 / mat_iters as f64;
+            println!(
+                "  {name:<9} eligible={eligible0:>8}  indexed {indexed_us:>10.1}us/sel  \
+                 materialized {materialized_us:>10.1}us/sel  ({:.1}x)",
+                materialized_us / indexed_us.max(1e-9)
+            );
+            selector_cells.push(obj(vec![
+                ("selector", Json::Str(name.into())),
+                ("eligible", num(eligible0 as f64)),
+                ("indexed_us", num(indexed_us)),
+                ("materialized_us", num(materialized_us)),
+                ("materialized_iters", num(mat_iters as f64)),
+            ]));
+        }
+        cells.push(obj(vec![
+            ("population", num(n as f64)),
+            ("selections", num(selections as f64)),
+            ("target_participants", num(target as f64)),
+            ("selectors", arr(selector_cells)),
+        ]));
+    }
+
+    // append this run so the file keeps a trajectory across commits
+    let run = obj(vec![("cells", arr(cells))]);
+    let mut runs: Vec<Json> = match std::fs::read_to_string(&out) {
+        Ok(prev) => match Json::parse(&prev) {
+            Ok(j) => j
+                .get("runs")
+                .and_then(|r| r.as_arr())
+                .map(|r| r.to_vec())
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(run);
+    let report = obj(vec![
+        ("format", Json::Str("relay-bench-selection-v1".into())),
+        ("runs", arr(runs)),
+    ]);
+    std::fs::write(&out, report.to_string())?;
+    println!("appended run to {out}");
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -417,8 +580,9 @@ USAGE:
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
               [--report results/sweep.json] [--quiet]
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
-  relay bench [--populations 100000,1000000] [--merges 50] [--participants 100]
-              [--workers N] [--out BENCH_population.json]
+  relay bench [--suite population|selection|all] [--populations 100000,1000000]
+              [--merges 50] [--participants 100] [--selections 200] [--workers N]
+              [--out BENCH_population.json] [--selection-out BENCH_selection.json]
   relay trace-stats | forecast-eval | validate
 
 Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to

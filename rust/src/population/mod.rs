@@ -6,9 +6,9 @@
 //!
 //! ```text
 //!   Registry ──────────► AvailabilityIndex ─────────► CandidateSet ──► Selector
-//!   (sharded profiles,   (trace sessions turned       (eligible ids:    (draws by
-//!    samples, cooldown/   into kernel transition       O(log n) insert/  rank or
-//!    busy state)          events; incremental          remove/sample,    full list)
+//!   (sharded profiles,   (trace sessions turned       (eligible ids:    (indexed:
+//!    samples, cooldown/   into kernel transition       O(log n) insert/  hooks +
+//!    busy state)          events; incremental          remove/sample,    ScoreIndex)
 //!                         available-set)               shard-invariant)
 //! ```
 //!
@@ -23,21 +23,21 @@
 //!   byte-identical for any shard count and bit-compatible with
 //!   `Rng::choose_k` over the materialized candidate list.
 //!
-//! [`Population`] composes the three for the coordinator. Two query modes:
-//!
-//! * **round-synchronous** (`sync_candidates`) — iterate the available set
-//!   in id order and filter cooldown/busy from the registry. Produces
-//!   exactly the candidate vector the old full scan produced (the OC/DL
-//!   engines stay byte-identical to the frozen `coordinator::reference`
-//!   oracle — `tests/kernel_equivalence.rs`).
-//! * **fully-incremental** (`async_sync_to` + `eligible_set` /
-//!   `async_candidates`) — the buffered-async engine keeps the *selectable*
-//!   set (available ∧ not busy ∧ not cooling) maintained per event:
-//!   availability flips from the index, busy transitions at task
-//!   spawn/arrival/dropout, cooldown expiries from version-keyed buckets.
-//!   Selectors that sample (Random) draw straight from the set in
-//!   O(k log n) per selection; rank-the-pool selectors (Oort/IPS/SAFA)
-//!   materialize only the eligible ids, never the whole population.
+//! [`Population`] composes the three for the coordinator. Both engines now
+//! run **fully incrementally** ([`Population::sync_to`] + `eligible_set`):
+//! the *selectable* set (available ∧ not busy ∧ not cooling) is maintained
+//! per transition — availability flips from the index, busy expiries from
+//! time-keyed buckets, cooldown expiries from round-keyed buckets — and
+//! every eligible-set insert/remove is **forwarded to the active selector**
+//! through the `Selector::on_eligible`/`on_ineligible` hooks, which is what
+//! feeds the selection-index subsystem (`selection::index`). Selectors with
+//! an indexed `select_from` draw straight from the set in O(k log n) per
+//! selection; the materialized fallback ([`Population::pool_candidates`])
+//! produces exactly the candidate vector the old full scan produced, so the
+//! OC/DL engines stay byte-identical to the frozen `coordinator::reference`
+//! oracle (`tests/kernel_equivalence.rs`). [`Population`] also implements
+//! [`ProbeSource`], serving per-learner probe answers (and their
+//! [`SlotSig`] validity buckets) lazily to indexed selectors.
 
 pub mod avail_index;
 pub mod candidate_set;
@@ -50,22 +50,40 @@ pub use registry::{Registry, DEFAULT_SHARDS};
 use std::collections::BTreeMap;
 
 use crate::config::AvailMode;
-use crate::forecast::{ForecasterBank, SeasonalForecaster};
+use crate::forecast::{slot_bins, ForecasterBank, SeasonalForecaster};
 use crate::learners::DeviceProfile;
-use crate::selection::Candidate;
+use crate::selection::{Candidate, ProbeSource, Selector, SlotSig};
 use crate::sim::Availability;
 
 /// Sampling step (seconds) of the one-week series each learner's personal
 /// forecaster is bootstrapped from (paper Appendix A).
 const FORECAST_STEP: f64 = 1800.0;
 
-/// Async-engine eligibility state: the selectable set plus the
-/// cooldown-expiry schedule that re-admits learners as versions advance.
+/// Engine eligibility state: the selectable set plus the expiry schedules
+/// that re-admit learners as rounds/time advance.
 struct EligibleState {
     set: CandidateSet,
     /// cooldown_until value -> learners parked until that round. Entries can
     /// go stale when a cooldown is re-set; `refresh` re-checks the registry.
     buckets: BTreeMap<usize, Vec<usize>>,
+    /// busy_until (as order-preserving f64 bits) -> learners busy until that
+    /// time. The sync engines have no per-task release event, so busy
+    /// expiry is bucket-driven; stale entries are harmless (refresh).
+    busy_buckets: BTreeMap<u64, Vec<usize>>,
+}
+
+/// Insert into the eligible set, forwarding the delta to the selector.
+fn set_insert(elig: &mut EligibleState, sel: &mut dyn Selector, id: usize) {
+    if elig.set.insert(id) {
+        sel.on_eligible(id);
+    }
+}
+
+/// Remove from the eligible set, forwarding the delta to the selector.
+fn set_remove(elig: &mut EligibleState, sel: &mut dyn Selector, id: usize) {
+    if elig.set.remove(id) {
+        sel.on_ineligible(id);
+    }
 }
 
 /// Re-evaluate one learner's eligibility predicate and update the set.
@@ -76,14 +94,15 @@ fn refresh(
     id: usize,
     round: usize,
     now: f64,
+    sel: &mut dyn Selector,
 ) {
     let ok = index.is_available(id)
         && registry.busy_until(id) <= now
         && registry.cooldown_until(id) <= round;
     if ok {
-        elig.set.insert(id);
+        set_insert(elig, sel, id);
     } else {
-        elig.set.remove(id);
+        set_remove(elig, sel, id);
     }
 }
 
@@ -97,7 +116,7 @@ pub struct Population {
     model_bytes: usize,
     /// Worker threads for the one-time index build (0/1 = serial).
     workers: usize,
-    /// Present only while an async run maintains full eligibility.
+    /// Present once an engine runs incrementally (`sync_to`).
     eligible: Option<EligibleState>,
 }
 
@@ -158,16 +177,16 @@ impl Population {
         self.registry.busy_until(id)
     }
 
-    /// Plain state write for the round-synchronous engines (no eligibility
-    /// index to maintain — sync rounds rebuild candidates per round).
+    /// Plain state write for scan-driven callers (tests, the frozen
+    /// reference shape). Incremental engines use [`Population::begin_cooldown`].
     pub fn set_cooldown_until(&mut self, id: usize, round: usize) {
-        debug_assert!(self.eligible.is_none(), "async populations use begin_cooldown");
+        debug_assert!(self.eligible.is_none(), "incremental populations use begin_cooldown");
         self.registry.set_cooldown_until(id, round);
     }
 
-    /// Plain state write for the round-synchronous engines.
+    /// Plain state write for scan-driven callers (see above).
     pub fn set_busy_until(&mut self, id: usize, t: f64) {
-        debug_assert!(self.eligible.is_none(), "async populations use mark_busy");
+        debug_assert!(self.eligible.is_none(), "incremental populations use mark_busy");
         self.registry.set_busy_until(id, t);
     }
 
@@ -185,28 +204,42 @@ impl Population {
         })
     }
 
-    fn candidate(&self, id: usize, now: f64, mu: f64) -> Candidate {
-        let avail_prob = match self.avail_mode {
+    /// The probe answer for `id` at `(now, mu)` — shared by candidate
+    /// materialization and the lazy [`ProbeSource`] path, so both produce
+    /// bitwise-identical values.
+    fn probe_avail_prob(&self, id: usize, now: f64, mu: f64) -> f64 {
+        match self.avail_mode {
             AvailMode::AllAvail => 1.0,
             AvailMode::DynAvail => {
                 // learner-side forecast for the slot (mu, 2mu)
                 self.forecaster(id).prob_slot(now + mu, now + 2.0 * mu)
             }
-        };
-        let expected_duration = self.registry.profile(id).completion_time(
+        }
+    }
+
+    /// Profile-based expected task duration for `id` (no trace touch).
+    fn probe_expected_duration(&self, id: usize) -> f64 {
+        self.registry.profile(id).completion_time(
             self.registry.n_samples(id),
             self.local_epochs,
             self.model_bytes,
-        );
-        Candidate { id, avail_prob, expected_duration }
+        )
+    }
+
+    fn candidate(&self, id: usize, now: f64, mu: f64) -> Candidate {
+        Candidate {
+            id,
+            avail_prob: self.probe_avail_prob(id, now, mu),
+            expected_duration: self.probe_expected_duration(id),
+        }
     }
 
     /// Checked-in learners with their probe answers (Algorithm 1 steps 1-3)
-    /// for the round-synchronous engines: the available set in ascending id
-    /// order, cooldown/busy filtered — element-for-element what the
-    /// pre-population full scan produced.
+    /// via a per-round scan of the available set — the pre-incremental
+    /// query shape, kept for scan-driven callers and as the equivalence
+    /// oracle for the incremental path.
     pub fn sync_candidates(&mut self, round: usize, now: f64, mu: f64) -> Vec<Candidate> {
-        debug_assert!(self.eligible.is_none(), "async populations use async_candidates");
+        debug_assert!(self.eligible.is_none(), "incremental populations use pool_candidates");
         self.index.advance_to(now, self.workers);
         let mut out = Vec::new();
         self.index.for_each_available(|id| {
@@ -218,32 +251,40 @@ impl Population {
         out
     }
 
-    /// Bring the async eligibility state up to `(round, now)`: apply
-    /// availability flips, expire cooldown buckets, and on first call build
-    /// the index + selectable set (the only O(n) pass of an async run).
-    pub fn async_sync_to(&mut self, round: usize, now: f64) {
+    /// Bring the eligibility state up to `(round, now)`: apply availability
+    /// flips, expire cooldown and busy buckets, and on first call build the
+    /// index + selectable set (the only O(n) pass of an incremental run).
+    /// Every resulting set transition is forwarded to `sel`'s
+    /// `on_eligible`/`on_ineligible` hooks.
+    pub fn sync_to(&mut self, round: usize, now: f64, sel: &mut dyn Selector) {
         if self.eligible.is_none() {
             self.index.advance_to(now, self.workers);
             let shards = self.registry.num_shards();
-            let mut set = CandidateSet::with_shards(self.registry.len(), shards);
-            let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            let mut elig = EligibleState {
+                set: CandidateSet::with_shards(self.registry.len(), shards),
+                buckets: BTreeMap::new(),
+                busy_buckets: BTreeMap::new(),
+            };
             for id in 0..self.registry.len() {
                 let cd = self.registry.cooldown_until(id);
+                let bz = self.registry.busy_until(id);
                 if cd > round {
-                    buckets.entry(cd).or_default().push(id);
-                    continue;
+                    elig.buckets.entry(cd).or_default().push(id);
                 }
-                if self.index.is_available(id) && self.registry.busy_until(id) <= now {
-                    set.insert(id);
+                if bz > now {
+                    elig.busy_buckets.entry(bz.to_bits()).or_default().push(id);
+                }
+                if cd <= round && bz <= now && self.index.is_available(id) {
+                    set_insert(&mut elig, sel, id);
                 }
             }
-            self.eligible = Some(EligibleState { set, buckets });
+            self.eligible = Some(elig);
             return;
         }
         let flips = self.index.advance_to(now, self.workers);
         let elig = self.eligible.as_mut().expect("checked above");
         for (id, _) in flips {
-            refresh(elig, &self.index, &self.registry, id, round, now);
+            refresh(elig, &self.index, &self.registry, id, round, now, sel);
         }
         loop {
             let Some((&k, _)) = elig.buckets.first_key_value() else { break };
@@ -252,22 +293,34 @@ impl Population {
             }
             let (_, ids) = elig.buckets.pop_first().expect("non-empty first key");
             for id in ids {
-                refresh(elig, &self.index, &self.registry, id, round, now);
+                refresh(elig, &self.index, &self.registry, id, round, now, sel);
+            }
+        }
+        // busy_until stored as order-preserving bits of a non-negative f64
+        let now_bits = now.to_bits();
+        loop {
+            let Some((&k, _)) = elig.busy_buckets.first_key_value() else { break };
+            if k > now_bits {
+                break;
+            }
+            let (_, ids) = elig.busy_buckets.pop_first().expect("non-empty first key");
+            for id in ids {
+                refresh(elig, &self.index, &self.registry, id, round, now, sel);
             }
         }
     }
 
-    /// The selectable set (async runs; `async_sync_to` first). Sampling
-    /// selectors draw from this directly.
+    /// The selectable set (`sync_to` first). Indexed selectors draw from
+    /// this directly.
     pub fn eligible_set(&self) -> &CandidateSet {
-        &self.eligible.as_ref().expect("async_sync_to before selection").set
+        &self.eligible.as_ref().expect("sync_to before selection").set
     }
 
-    /// Materialized candidates for rank-the-pool selectors (async runs):
-    /// the eligible ids in ascending order with their probe answers —
-    /// identical to the old full scan's output, built in O(|eligible|).
-    pub fn async_candidates(&self, now: f64, mu: f64) -> Vec<Candidate> {
-        let elig = self.eligible.as_ref().expect("async_sync_to before selection");
+    /// Materialized candidates for selectors without an indexed path: the
+    /// eligible ids in ascending order with their probe answers — identical
+    /// to the old full scan's output, built in O(|eligible|).
+    pub fn pool_candidates(&self, now: f64, mu: f64) -> Vec<Candidate> {
+        let elig = self.eligible.as_ref().expect("sync_to before selection");
         let mut out = Vec::with_capacity(elig.set.len());
         for id in elig.set.iter() {
             out.push(self.candidate(id, now, mu));
@@ -275,29 +328,34 @@ impl Population {
         out
     }
 
-    /// Async hook: a task was spawned on `id`, busy until `until`.
-    pub fn mark_busy(&mut self, id: usize, until: f64) {
+    /// Incremental hook: a task was spawned on `id`, busy until `until`.
+    /// Schedules the bucket that re-admits it (sync engines have no
+    /// completion event; in async runs `release` gets there first and the
+    /// drained bucket is a no-op).
+    pub fn mark_busy(&mut self, id: usize, until: f64, sel: &mut dyn Selector) {
         self.registry.set_busy_until(id, until);
         if let Some(elig) = self.eligible.as_mut() {
-            elig.set.remove(id);
+            elig.busy_buckets.entry(until.to_bits()).or_default().push(id);
+            set_remove(elig, sel, id);
         }
     }
 
-    /// Async hook: `id`'s task ended (arrival or dropout) at `now` — the
-    /// learner is selectable again if available and not cooling.
-    pub fn release(&mut self, id: usize, round: usize, now: f64) {
+    /// Incremental hook: `id`'s task ended (arrival or dropout) at `now` —
+    /// the learner is selectable again if available and not cooling.
+    pub fn release(&mut self, id: usize, round: usize, now: f64, sel: &mut dyn Selector) {
         if let Some(elig) = self.eligible.as_mut() {
-            refresh(elig, &self.index, &self.registry, id, round, now);
+            refresh(elig, &self.index, &self.registry, id, round, now, sel);
         }
     }
 
-    /// Async hook: `id` enters cooldown until `until` (a future version, so
-    /// it leaves the selectable set now and re-enters via the bucket drain).
-    pub fn begin_cooldown(&mut self, id: usize, until: usize) {
+    /// Incremental hook: `id` enters cooldown until `until` (a future
+    /// round, so it leaves the selectable set now and re-enters via the
+    /// bucket drain).
+    pub fn begin_cooldown(&mut self, id: usize, until: usize, sel: &mut dyn Selector) {
         self.registry.set_cooldown_until(id, until);
         if let Some(elig) = self.eligible.as_mut() {
             elig.buckets.entry(until).or_default().push(id);
-            elig.set.remove(id);
+            set_remove(elig, sel, id);
         }
     }
 
@@ -328,11 +386,56 @@ impl Population {
     }
 }
 
+impl ProbeSource for Population {
+    fn avail_prob(&self, id: usize, now: f64, mu: f64) -> f64 {
+        self.probe_avail_prob(id, now, mu)
+    }
+
+    fn expected_duration(&self, id: usize) -> f64 {
+        self.probe_expected_duration(id)
+    }
+
+    fn slot_sig(&self, now: f64, mu: f64) -> SlotSig {
+        match self.avail_mode {
+            AvailMode::AllAvail => SlotSig::Const,
+            AvailMode::DynAvail => SlotSig::Bins(slot_bins(now + mu, now + 2.0 * mu)),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::learners::{HardwareScenario, ProfilePool};
+    use crate::selection::SelectionCtx;
     use crate::trace::{LazyTraceSet, TraceConfig};
+
+    /// Hook-recording no-op selector: lets the tests assert the population
+    /// forwards exactly the eligible-set deltas it applies.
+    struct Recorder {
+        log: Vec<(usize, bool)>,
+    }
+
+    impl Recorder {
+        fn new() -> Recorder {
+            Recorder { log: Vec::new() }
+        }
+    }
+
+    impl Selector for Recorder {
+        fn name(&self) -> &'static str {
+            "recorder"
+        }
+        fn select(&mut self, _ctx: &mut SelectionCtx) -> Vec<usize> {
+            Vec::new()
+        }
+        fn on_eligible(&mut self, id: usize) {
+            self.log.push((id, true));
+        }
+        fn on_ineligible(&mut self, id: usize) {
+            self.log.push((id, false));
+        }
+    }
 
     fn mk_population(n: usize, avail: Availability, mode: AvailMode) -> Population {
         let pool = ProfilePool::generate(n, 4, HardwareScenario::Hs1);
@@ -366,32 +469,60 @@ mod tests {
     }
 
     #[test]
-    fn async_eligibility_tracks_busy_and_cooldown() {
+    fn incremental_eligibility_tracks_busy_and_cooldown() {
         let n = 10;
         let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
-        p.async_sync_to(0, 0.0);
+        let mut sel = Recorder::new();
+        p.sync_to(0, 0.0, &mut sel);
         assert_eq!(p.eligible_set().len(), n);
-        p.mark_busy(2, 50.0);
-        p.begin_cooldown(7, 2);
+        assert_eq!(sel.log.len(), n, "init build must announce every insert");
+        p.mark_busy(2, 50.0, &mut sel);
+        p.begin_cooldown(7, 2, &mut sel);
         assert!(!p.eligible_set().contains(2));
         assert!(!p.eligible_set().contains(7));
         assert_eq!(p.eligible_set().len(), n - 2);
+        assert_eq!(&sel.log[n..], &[(2, false), (7, false)]);
         // task ends: learner 2 returns
-        p.release(2, 0, 50.0);
+        p.release(2, 0, 50.0, &mut sel);
         assert!(p.eligible_set().contains(2));
         // version advances past the cooldown: learner 7 returns
-        p.async_sync_to(2, 60.0);
+        p.sync_to(2, 60.0, &mut sel);
         assert!(p.eligible_set().contains(7));
         assert_eq!(p.eligible_set().len(), n);
+        assert_eq!(&sel.log[n + 2..], &[(2, true), (7, true)]);
     }
 
     #[test]
-    fn async_candidates_are_id_ordered_and_probed() {
+    fn busy_expiry_is_bucket_driven_without_release() {
+        // the sync engines never call release: a busy learner must come
+        // back purely from the time-keyed bucket drain
+        let n = 4;
+        let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
+        let mut sel = Recorder::new();
+        p.sync_to(0, 0.0, &mut sel);
+        p.mark_busy(1, 30.0, &mut sel);
+        // also cooling: both triggers must fire before it returns
+        p.begin_cooldown(2, 3, &mut sel);
+        p.mark_busy(2, 100.0, &mut sel);
+        p.sync_to(1, 10.0, &mut sel);
+        assert!(!p.eligible_set().contains(1));
+        p.sync_to(2, 30.0, &mut sel);
+        assert!(p.eligible_set().contains(1), "busy_until == now must re-admit");
+        // cooldown expired but still busy
+        p.sync_to(3, 50.0, &mut sel);
+        assert!(!p.eligible_set().contains(2));
+        // busy expired too
+        p.sync_to(4, 100.0, &mut sel);
+        assert!(p.eligible_set().contains(2));
+    }
+
+    #[test]
+    fn pool_candidates_are_id_ordered_and_probed() {
         let n = 6;
-        let p_avail = Availability::All;
-        let mut p = mk_population(n, p_avail, AvailMode::AllAvail);
-        p.async_sync_to(0, 0.0);
-        let cands = p.async_candidates(0.0, 100.0);
+        let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
+        let mut sel = Recorder::new();
+        p.sync_to(0, 0.0, &mut sel);
+        let cands = p.pool_candidates(0.0, 100.0);
         assert_eq!(cands.len(), n);
         for (i, c) in cands.iter().enumerate() {
             assert_eq!(c.id, i);
@@ -404,13 +535,44 @@ mod tests {
     fn stale_cooldown_buckets_are_harmless() {
         let n = 4;
         let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
-        p.async_sync_to(0, 0.0);
+        let mut sel = Recorder::new();
+        p.sync_to(0, 0.0, &mut sel);
         // cooldown set to round 2, then re-set (longer) before expiring
-        p.begin_cooldown(1, 2);
-        p.begin_cooldown(1, 5);
-        p.async_sync_to(2, 10.0); // drains the stale round-2 bucket
+        p.begin_cooldown(1, 2, &mut sel);
+        p.begin_cooldown(1, 5, &mut sel);
+        p.sync_to(2, 10.0, &mut sel); // drains the stale round-2 bucket
         assert!(!p.eligible_set().contains(1), "stale bucket must not resurrect");
-        p.async_sync_to(5, 20.0);
+        p.sync_to(5, 20.0, &mut sel);
         assert!(p.eligible_set().contains(1));
+    }
+
+    #[test]
+    fn probe_source_matches_candidate_materialization() {
+        let n = 8;
+        let mut p = mk_population(
+            n,
+            Availability::Lazy(LazyTraceSet::new(n, 9, TraceConfig::default())),
+            AvailMode::DynAvail,
+        );
+        let mut sel = Recorder::new();
+        p.sync_to(0, 1000.0, &mut sel);
+        let (now, mu) = (1000.0, 80.0);
+        for c in p.pool_candidates(now, mu) {
+            assert_eq!(
+                ProbeSource::avail_prob(&p, c.id, now, mu).to_bits(),
+                c.avail_prob.to_bits(),
+                "learner {}",
+                c.id
+            );
+            assert_eq!(
+                ProbeSource::expected_duration(&p, c.id).to_bits(),
+                c.expected_duration.to_bits(),
+                "learner {}",
+                c.id
+            );
+        }
+        assert_eq!(p.slot_sig(now, mu), p.slot_sig(now + 1.0, mu), "same hour, same sig");
+        let all = mk_population(2, Availability::All, AvailMode::AllAvail);
+        assert_eq!(all.slot_sig(0.0, 100.0), SlotSig::Const);
     }
 }

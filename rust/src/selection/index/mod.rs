@@ -1,0 +1,469 @@
+//! The selection-index subsystem: **samplable utility structures** so
+//! rank-the-pool selectors scale sub-linearly in the population
+//! (ROADMAP item resolved by this subsystem).
+//!
+//! [`ScoreIndex`] is a sharded ordered-statistic score tree mapping
+//! learner id → score. Shards cover contiguous id ranges (mirroring
+//! [`crate::population::CandidateSet`]'s layout); each shard is an
+//! arena treap ordered by `(score, id)` under `f64::total_cmp` with
+//! subtree counts and score sums. Costs:
+//!
+//! * insert / update / remove — O(log n)
+//! * top-k extraction (score-descending, id-ascending ties) — O(k log n)
+//! * rank / level queries (`count_lt`, `level_len`, `nth_in_level`) —
+//!   O(S log n) for S shards
+//! * weighted sampling proportional to score — O(S + log n)
+//!
+//! Every ranking query is defined over the *global* `(score, id)` order,
+//! and treap shapes are a pure function of the member set (priorities
+//! derive from the id), so results are byte-identical for any shard count
+//! and for any maintenance history — rebuilt-from-scratch and
+//! hook-maintained indices answer identically
+//! (`tests/selection_index_props.rs` locks both in). The one exception is
+//! [`ScoreIndex::weighted_sample`], whose specific draw resolves against
+//! the shard-major prefix order: the distribution is layout-invariant, the
+//! drawn element is not.
+//!
+//! Ordering uses `total_cmp`, a *total* order: a non-finite score that
+//! leaks in degrades ranking quality but can never panic a comparator,
+//! matching the `total_cmp` hardening of the selector sort paths.
+
+mod treap;
+
+use std::collections::HashMap;
+
+use crate::population::DEFAULT_SHARDS;
+use crate::util::rng::Rng;
+use treap::Treap;
+
+/// Sharded ordered-statistic score tree (see the module docs).
+pub struct ScoreIndex {
+    shards: Vec<Treap>,
+    /// id → current score, the O(1) membership/update side table.
+    keys: HashMap<usize, f64>,
+    shard_size: usize,
+    n: usize,
+}
+
+impl ScoreIndex {
+    /// Empty index over ids `0..n` with the default shard count.
+    pub fn new(n: usize) -> ScoreIndex {
+        ScoreIndex::with_shards(n, DEFAULT_SHARDS)
+    }
+
+    /// Empty index over ids `0..n` split into `num_shards` contiguous id
+    /// ranges. The shard count affects only internal layout, never results.
+    pub fn with_shards(n: usize, num_shards: usize) -> ScoreIndex {
+        let num_shards = num_shards.max(1);
+        let shard_size = n.div_ceil(num_shards).max(1);
+        let count = n.div_ceil(shard_size).max(1);
+        ScoreIndex {
+            shards: (0..count).map(|_| Treap::new()).collect(),
+            keys: HashMap::new(),
+            shard_size,
+            n,
+        }
+    }
+
+    /// Number of ids the index ranges over (the population size).
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.keys.contains_key(&id)
+    }
+
+    /// Current score of `id`, if present.
+    pub fn score(&self, id: usize) -> Option<f64> {
+        self.keys.get(&id).copied()
+    }
+
+    #[inline]
+    fn shard_of(&self, id: usize) -> usize {
+        id / self.shard_size
+    }
+
+    /// Insert or update `id` with `score`; returns the previous score.
+    pub fn insert(&mut self, id: usize, score: f64) -> Option<f64> {
+        assert!(id < self.n, "id {id} out of range (capacity {})", self.n);
+        let s = self.shard_of(id);
+        let old = self.keys.insert(id, score);
+        if let Some(old_key) = old {
+            self.shards[s].remove(old_key, id);
+        }
+        self.shards[s].insert(score, id);
+        old
+    }
+
+    /// Remove `id`; returns its score if it was present.
+    pub fn remove(&mut self, id: usize) -> Option<f64> {
+        let old = self.keys.remove(&id)?;
+        let s = self.shard_of(id);
+        self.shards[s].remove(old, id);
+        Some(old)
+    }
+
+    pub fn clear(&mut self) {
+        for sh in &mut self.shards {
+            sh.clear();
+        }
+        self.keys.clear();
+    }
+
+    /// Number of entries with score strictly below `score` (total order).
+    pub fn count_lt(&self, score: f64) -> usize {
+        self.shards.iter().map(|sh| sh.count_lt(score)).sum()
+    }
+
+    /// Number of entries with score exactly `score` (total-order equality).
+    pub fn level_len(&self, score: f64) -> usize {
+        self.shards
+            .iter()
+            .map(|sh| sh.count_le(score) - sh.count_lt(score))
+            .sum()
+    }
+
+    /// The `i`-th smallest id among entries scored exactly `score`.
+    /// Requires `i < level_len(score)`.
+    pub fn nth_in_level(&self, score: f64, mut i: usize) -> usize {
+        // shards are contiguous ascending id ranges, so within a level the
+        // global id-ascending order is the shard-order concatenation
+        for sh in &self.shards {
+            let c = sh.count_le(score) - sh.count_lt(score);
+            if i < c {
+                let (_, id) = sh.select(sh.count_lt(score) + i);
+                return id;
+            }
+            i -= c;
+        }
+        panic!("nth_in_level index out of range");
+    }
+
+    /// Visit the ids scored exactly `score` in ascending id order while `f`
+    /// returns true.
+    pub fn for_level_asc(&self, score: f64, mut f: impl FnMut(usize) -> bool) {
+        let mut go = true;
+        for sh in &self.shards {
+            if !go {
+                break;
+            }
+            sh.for_eq(score, &mut |id| {
+                go = f(id);
+                go
+            });
+        }
+    }
+
+    /// Smallest score strictly greater than `bound` (`None` = the global
+    /// minimum). Drives ascending level streaming.
+    pub fn min_score_gt(&self, bound: Option<f64>) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for sh in &self.shards {
+            if let Some(k) = sh.min_key_gt(bound) {
+                best = Some(match best {
+                    None => k,
+                    Some(b) => {
+                        if k.total_cmp(&b) == std::cmp::Ordering::Less {
+                            k
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+        }
+        best
+    }
+
+    /// Largest score strictly less than `bound` (`None` = the global
+    /// maximum). Drives descending level streaming.
+    pub fn max_score_lt(&self, bound: Option<f64>) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for sh in &self.shards {
+            if let Some(k) = sh.max_key_lt(bound) {
+                best = Some(match best {
+                    None => k,
+                    Some(b) => {
+                        if k.total_cmp(&b) == std::cmp::Ordering::Greater {
+                            k
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+        }
+        best
+    }
+
+    /// The top `k` entries by score descending, ascending id within a score
+    /// tie — exactly the order a stable descending sort over an ascending-id
+    /// candidate list produces. O(k log n).
+    pub fn top_k_desc(&self, k: usize, mut f: impl FnMut(usize, f64)) {
+        let mut taken = 0usize;
+        let mut bound: Option<f64> = None;
+        while taken < k {
+            let Some(p) = self.max_score_lt(bound) else { break };
+            let want = (k - taken).min(self.level_len(p));
+            let mut c = 0usize;
+            self.for_level_asc(p, |id| {
+                f(id, p);
+                c += 1;
+                c < want
+            });
+            taken += want;
+            bound = Some(p);
+        }
+    }
+
+    /// Visit every entry in ascending `(score, id)` order (tests, rebuilds).
+    pub fn for_each_asc(&self, mut f: impl FnMut(usize, f64)) {
+        let mut bound: Option<f64> = None;
+        while let Some(p) = self.min_score_gt(bound) {
+            self.for_level_asc(p, |id| {
+                f(id, p);
+                true
+            });
+            bound = Some(p);
+        }
+    }
+
+    /// Total score mass (shard partial sums combined in shard order).
+    pub fn total_score(&self) -> f64 {
+        self.shards.iter().map(|sh| sh.total_sum()).sum()
+    }
+
+    /// Draw one id with probability proportional to its score (requires
+    /// non-negative scores; returns None on empty/zero-mass indices).
+    /// Consumes exactly one `rng.f64()` draw, resolved against the
+    /// shard-major `(score, id)` prefix order — each entry's mass is its
+    /// score regardless of position, so the *distribution* is independent
+    /// of the shard layout even though a specific draw is not.
+    pub fn weighted_sample(&self, rng: &mut Rng) -> Option<usize> {
+        let total = self.total_score();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut u = rng.f64() * total;
+        let mut last_nonempty: Option<&Treap> = None;
+        for sh in &self.shards {
+            let s = sh.total_sum();
+            if s > 0.0 {
+                if u < s {
+                    return Some(sh.sample_at(u));
+                }
+                last_nonempty = Some(sh);
+            }
+            u -= s;
+        }
+        // float round-off pushed u past the end: clamp to the last entry
+        last_nonempty.map(|sh| sh.sample_at(sh.total_sum() * 0.999_999_999))
+    }
+
+    /// Global rank of `id` in `(score, id)` order, if present.
+    pub fn rank_of(&self, id: usize) -> Option<usize> {
+        let score = self.score(id)?;
+        let mut rank = self.count_lt(score);
+        // entries on the same level in shards before this one, plus
+        // same-level smaller ids within this shard
+        for (si, sh) in self.shards.iter().enumerate() {
+            let in_level = sh.count_le(score) - sh.count_lt(score);
+            if si < self.shard_of(id) {
+                rank += in_level;
+            } else {
+                break;
+            }
+        }
+        let mut smaller = 0usize;
+        self.shards[self.shard_of(id)].for_eq(score, &mut |other| {
+            if other < id {
+                smaller += 1;
+                true
+            } else {
+                false
+            }
+        });
+        Some(rank + smaller)
+    }
+
+    /// All `(id, score)` entries in ascending `(score, id)` order (tests).
+    pub fn to_sorted_vec(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::with_capacity(self.len());
+        for sh in &self.shards {
+            sh.for_each(&mut |key, id| out.push((id, key)));
+        }
+        out.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute(entries: &[(usize, f64)]) -> Vec<(usize, f64)> {
+        let mut v = entries.to_vec();
+        v.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    #[test]
+    fn insert_update_remove_roundtrip() {
+        let mut idx = ScoreIndex::with_shards(100, 4);
+        assert!(idx.is_empty());
+        assert_eq!(idx.insert(7, 1.5), None);
+        assert_eq!(idx.insert(7, 2.5), Some(1.5), "update returns old score");
+        assert_eq!(idx.insert(3, 2.5), None);
+        assert_eq!(idx.insert(99, 0.25), None);
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.score(7), Some(2.5));
+        assert_eq!(idx.remove(7), Some(2.5));
+        assert_eq!(idx.remove(7), None);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.to_sorted_vec(), vec![(99, 0.25), (3, 2.5)]);
+    }
+
+    #[test]
+    fn top_k_is_score_desc_id_asc() {
+        let mut idx = ScoreIndex::with_shards(50, 3);
+        for (id, s) in [(4usize, 5.0f64), (9, 7.0), (11, 5.0), (2, 5.0), (30, 1.0)] {
+            idx.insert(id, s);
+        }
+        let mut got = Vec::new();
+        idx.top_k_desc(4, |id, s| got.push((id, s)));
+        assert_eq!(got, vec![(9, 7.0), (2, 5.0), (4, 5.0), (11, 5.0)]);
+        // k beyond len caps
+        let mut all = Vec::new();
+        idx.top_k_desc(10, |id, _| all.push(id));
+        assert_eq!(all, vec![9, 2, 4, 11, 30]);
+    }
+
+    #[test]
+    fn level_queries_match_brute_force() {
+        let mut idx = ScoreIndex::with_shards(64, 5);
+        let entries: Vec<(usize, f64)> = (0..40).map(|i| (i, (i % 4) as f64)).collect();
+        for &(id, s) in &entries {
+            idx.insert(id, s);
+        }
+        for level in 0..4 {
+            let p = level as f64;
+            let want: Vec<usize> =
+                entries.iter().filter(|e| e.1 == p).map(|e| e.0).collect();
+            assert_eq!(idx.level_len(p), want.len());
+            assert_eq!(idx.count_lt(p), entries.iter().filter(|e| e.1 < p).count());
+            for (i, &id) in want.iter().enumerate() {
+                assert_eq!(idx.nth_in_level(p, i), id, "level {level} pos {i}");
+            }
+            let mut seen = Vec::new();
+            idx.for_level_asc(p, |id| {
+                seen.push(id);
+                true
+            });
+            assert_eq!(seen, want);
+        }
+        assert_eq!(idx.to_sorted_vec(), brute(&entries));
+    }
+
+    #[test]
+    fn rank_of_matches_sorted_position() {
+        let mut idx = ScoreIndex::with_shards(40, 4);
+        let entries: Vec<(usize, f64)> =
+            (0..30).map(|i| (i, ((i * 7) % 5) as f64)).collect();
+        for &(id, s) in &entries {
+            idx.insert(id, s);
+        }
+        let sorted = brute(&entries);
+        for (rank, &(id, _)) in sorted.iter().enumerate() {
+            assert_eq!(idx.rank_of(id), Some(rank), "id {id}");
+        }
+        assert_eq!(idx.rank_of(39), None);
+    }
+
+    #[test]
+    fn non_finite_scores_are_ordered_not_panicking() {
+        let mut idx = ScoreIndex::new(10);
+        idx.insert(0, f64::NAN);
+        idx.insert(1, f64::INFINITY);
+        idx.insert(2, 1.0);
+        idx.insert(3, f64::NEG_INFINITY);
+        // total_cmp order: -inf < 1.0 < +inf < NaN
+        let ids: Vec<usize> = idx.to_sorted_vec().iter().map(|e| e.0).collect();
+        assert_eq!(ids, vec![3, 2, 1, 0]);
+        let mut top = Vec::new();
+        idx.top_k_desc(2, |id, _| top.push(id));
+        assert_eq!(top, vec![0, 1]);
+    }
+
+    #[test]
+    fn weighted_sample_follows_scores() {
+        let mut idx = ScoreIndex::with_shards(16, 2);
+        idx.insert(1, 1.0);
+        idx.insert(5, 0.0);
+        idx.insert(9, 3.0);
+        let mut rng = Rng::new(11);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..4000 {
+            let id = idx.weighted_sample(&mut rng).unwrap();
+            *counts.entry(id).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.get(&5), None, "zero-score id must never be drawn");
+        let ratio = counts[&9] as f64 / counts[&1] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "ratio {ratio}");
+        // empty / zero-mass
+        let empty = ScoreIndex::new(4);
+        assert_eq!(empty.weighted_sample(&mut rng), None);
+    }
+
+    #[test]
+    fn shard_count_never_changes_results() {
+        let entries: Vec<(usize, f64)> =
+            (0..200).map(|i| (i, ((i * 13) % 7) as f64 * 0.25)).collect();
+        let build = |shards: usize| {
+            let mut idx = ScoreIndex::with_shards(200, shards);
+            for &(id, s) in &entries {
+                idx.insert(id, s);
+            }
+            idx
+        };
+        let a = build(1);
+        for shards in [2usize, 8, 13] {
+            let b = build(shards);
+            assert_eq!(a.to_sorted_vec(), b.to_sorted_vec(), "{shards} shards");
+            let mut ta = Vec::new();
+            let mut tb = Vec::new();
+            a.top_k_desc(17, |id, s| ta.push((id, s)));
+            b.top_k_desc(17, |id, s| tb.push((id, s)));
+            assert_eq!(ta, tb, "{shards} shards: top-k diverged");
+            for level in 0..7 {
+                let p = level as f64 * 0.25;
+                assert_eq!(a.count_lt(p), b.count_lt(p), "{shards} shards");
+                assert_eq!(a.level_len(p), b.level_len(p), "{shards} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_and_empty_capacities() {
+        let mut idx = ScoreIndex::with_shards(1, 8);
+        assert_eq!(idx.capacity(), 1);
+        idx.insert(0, 4.0);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.min_score_gt(None), Some(4.0));
+        let z = ScoreIndex::new(0);
+        assert_eq!(z.len(), 0);
+        assert_eq!(z.max_score_lt(None), None);
+    }
+}

@@ -1,0 +1,324 @@
+//! One shard of the samplable score index: an arena-backed treap ordered by
+//! `(score, id)` under `f64::total_cmp`, with subtree counts (order
+//! statistics) and subtree score sums (weighted sampling).
+//!
+//! Node priorities are derived from the learner id alone (splitmix64), so
+//! the tree *shape* — and therefore every query result — is a pure function
+//! of the member set, never of the insertion/removal order. That is what
+//! lets the incremental maintenance paths (hook-driven deltas, lazy
+//! re-keying, full rebuilds) all land on identical structures.
+
+use crate::util::rng::splitmix64;
+
+const NIL: usize = usize::MAX;
+
+struct Node {
+    key: f64,
+    id: usize,
+    prio: u64,
+    left: usize,
+    right: usize,
+    /// Subtree entry count.
+    size: usize,
+    /// Subtree score sum (for weighted sampling).
+    sum: f64,
+}
+
+/// Strict `(key, id)` order under `total_cmp` (a total order, so non-finite
+/// scores cannot panic a comparator — the seed's `partial_cmp().unwrap()`
+/// hazard).
+#[inline]
+fn before(a_key: f64, a_id: usize, b_key: f64, b_id: usize) -> bool {
+    match a_key.total_cmp(&b_key) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a_id < b_id,
+    }
+}
+
+pub(super) struct Treap {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    root: usize,
+}
+
+impl Treap {
+    pub(super) fn new() -> Treap {
+        Treap { nodes: Vec::new(), free: Vec::new(), root: NIL }
+    }
+
+    pub(super) fn len(&self) -> usize {
+        self.size(self.root)
+    }
+
+    pub(super) fn clear(&mut self) {
+        self.nodes.clear();
+        self.free.clear();
+        self.root = NIL;
+    }
+
+    #[inline]
+    fn size(&self, t: usize) -> usize {
+        if t == NIL {
+            0
+        } else {
+            self.nodes[t].size
+        }
+    }
+
+    #[inline]
+    fn sum(&self, t: usize) -> f64 {
+        if t == NIL {
+            0.0
+        } else {
+            self.nodes[t].sum
+        }
+    }
+
+    fn pull(&mut self, t: usize) {
+        let (l, r) = (self.nodes[t].left, self.nodes[t].right);
+        self.nodes[t].size = 1 + self.size(l) + self.size(r);
+        self.nodes[t].sum = self.nodes[t].key + self.sum(l) + self.sum(r);
+    }
+
+    fn alloc(&mut self, key: f64, id: usize) -> usize {
+        let node = Node {
+            key,
+            id,
+            prio: splitmix64(&mut (id as u64 ^ 0x5EED_5C0E_1D11_D0E5)),
+            left: NIL,
+            right: NIL,
+            size: 1,
+            sum: key,
+        };
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Split into (entries before `(key, id)`, the rest).
+    fn split(&mut self, t: usize, key: f64, id: usize) -> (usize, usize) {
+        if t == NIL {
+            return (NIL, NIL);
+        }
+        if before(self.nodes[t].key, self.nodes[t].id, key, id) {
+            let r = self.nodes[t].right;
+            let (a, b) = self.split(r, key, id);
+            self.nodes[t].right = a;
+            self.pull(t);
+            (t, b)
+        } else {
+            let l = self.nodes[t].left;
+            let (a, b) = self.split(l, key, id);
+            self.nodes[t].left = b;
+            self.pull(t);
+            (a, t)
+        }
+    }
+
+    fn merge(&mut self, a: usize, b: usize) -> usize {
+        if a == NIL {
+            return b;
+        }
+        if b == NIL {
+            return a;
+        }
+        if self.nodes[a].prio >= self.nodes[b].prio {
+            let r = self.nodes[a].right;
+            let m = self.merge(r, b);
+            self.nodes[a].right = m;
+            self.pull(a);
+            a
+        } else {
+            let l = self.nodes[b].left;
+            let m = self.merge(a, l);
+            self.nodes[b].left = m;
+            self.pull(b);
+            b
+        }
+    }
+
+    /// Insert `(key, id)`; the caller guarantees `id` is not present.
+    pub(super) fn insert(&mut self, key: f64, id: usize) {
+        let n = self.alloc(key, id);
+        let root = self.root;
+        let (a, b) = self.split(root, key, id);
+        let left = self.merge(a, n);
+        self.root = self.merge(left, b);
+    }
+
+    /// Remove `(key, id)`; the caller guarantees it is present.
+    pub(super) fn remove(&mut self, key: f64, id: usize) {
+        let root = self.root;
+        let (a, rest) = self.split(root, key, id);
+        // `(key, id + 1)` is strictly after `(key, id)` and strictly before
+        // any other entry that follows it, so this isolates exactly one node
+        let (mid, b) = self.split(rest, key, id + 1);
+        debug_assert!(mid != NIL && self.nodes[mid].id == id, "remove of absent entry");
+        if mid != NIL {
+            self.free.push(mid);
+        }
+        self.root = self.merge(a, b);
+    }
+
+    /// Number of entries with key strictly less than `key` (total order).
+    pub(super) fn count_lt(&self, key: f64) -> usize {
+        let mut t = self.root;
+        let mut acc = 0usize;
+        while t != NIL {
+            if self.nodes[t].key.total_cmp(&key) == std::cmp::Ordering::Less {
+                acc += 1 + self.size(self.nodes[t].left);
+                t = self.nodes[t].right;
+            } else {
+                t = self.nodes[t].left;
+            }
+        }
+        acc
+    }
+
+    /// Number of entries with key less than or equal to `key`.
+    pub(super) fn count_le(&self, key: f64) -> usize {
+        let mut t = self.root;
+        let mut acc = 0usize;
+        while t != NIL {
+            if self.nodes[t].key.total_cmp(&key) != std::cmp::Ordering::Greater {
+                acc += 1 + self.size(self.nodes[t].left);
+                t = self.nodes[t].right;
+            } else {
+                t = self.nodes[t].left;
+            }
+        }
+        acc
+    }
+
+    /// The `rank`-th entry (0-based) in `(key, id)` order: `(key, id)`.
+    pub(super) fn select(&self, rank: usize) -> (f64, usize) {
+        debug_assert!(rank < self.len());
+        let mut t = self.root;
+        let mut rem = rank;
+        loop {
+            let ls = self.size(self.nodes[t].left);
+            if rem < ls {
+                t = self.nodes[t].left;
+            } else if rem == ls {
+                return (self.nodes[t].key, self.nodes[t].id);
+            } else {
+                rem -= ls + 1;
+                t = self.nodes[t].right;
+            }
+        }
+    }
+
+    /// Smallest key strictly greater than `bound` (`None` bound = smallest
+    /// key overall).
+    pub(super) fn min_key_gt(&self, bound: Option<f64>) -> Option<f64> {
+        let mut t = self.root;
+        let mut best: Option<f64> = None;
+        while t != NIL {
+            let k = self.nodes[t].key;
+            let above = match bound {
+                None => true,
+                Some(b) => k.total_cmp(&b) == std::cmp::Ordering::Greater,
+            };
+            if above {
+                best = Some(k);
+                t = self.nodes[t].left;
+            } else {
+                t = self.nodes[t].right;
+            }
+        }
+        best
+    }
+
+    /// Largest key strictly less than `bound` (`None` bound = largest key).
+    pub(super) fn max_key_lt(&self, bound: Option<f64>) -> Option<f64> {
+        let mut t = self.root;
+        let mut best: Option<f64> = None;
+        while t != NIL {
+            let k = self.nodes[t].key;
+            let below = match bound {
+                None => true,
+                Some(b) => k.total_cmp(&b) == std::cmp::Ordering::Less,
+            };
+            if below {
+                best = Some(k);
+                t = self.nodes[t].right;
+            } else {
+                t = self.nodes[t].left;
+            }
+        }
+        best
+    }
+
+    /// Total score mass of this shard.
+    pub(super) fn total_sum(&self) -> f64 {
+        self.sum(self.root)
+    }
+
+    /// The entry id at cumulative score offset `u` within this shard's
+    /// in-order prefix-sum (requires `0 <= u < total_sum()` and
+    /// non-negative keys for meaningful results).
+    pub(super) fn sample_at(&self, mut u: f64) -> usize {
+        let mut t = self.root;
+        loop {
+            debug_assert!(t != NIL, "sample_at beyond total_sum");
+            let ls = self.sum(self.nodes[t].left);
+            if u < ls && self.nodes[t].left != NIL {
+                t = self.nodes[t].left;
+                continue;
+            }
+            u -= ls;
+            if u < self.nodes[t].key || self.nodes[t].right == NIL {
+                return self.nodes[t].id;
+            }
+            u -= self.nodes[t].key;
+            t = self.nodes[t].right;
+        }
+    }
+
+    /// Visit the ids of every entry with key exactly `key` (total-order
+    /// equality), in ascending id order, while `f` returns true.
+    pub(super) fn for_eq(&self, key: f64, f: &mut dyn FnMut(usize) -> bool) {
+        self.for_eq_node(self.root, key, f);
+    }
+
+    fn for_eq_node(&self, t: usize, key: f64, f: &mut dyn FnMut(usize) -> bool) -> bool {
+        if t == NIL {
+            return true;
+        }
+        match self.nodes[t].key.total_cmp(&key) {
+            std::cmp::Ordering::Less => self.for_eq_node(self.nodes[t].right, key, f),
+            std::cmp::Ordering::Greater => self.for_eq_node(self.nodes[t].left, key, f),
+            std::cmp::Ordering::Equal => {
+                if !self.for_eq_node(self.nodes[t].left, key, f) {
+                    return false;
+                }
+                if !f(self.nodes[t].id) {
+                    return false;
+                }
+                self.for_eq_node(self.nodes[t].right, key, f)
+            }
+        }
+    }
+
+    /// In-order `(key, id)` visit of the whole shard (tests + rebuilds).
+    pub(super) fn for_each(&self, f: &mut dyn FnMut(f64, usize)) {
+        self.for_each_node(self.root, f);
+    }
+
+    fn for_each_node(&self, t: usize, f: &mut dyn FnMut(f64, usize)) {
+        if t == NIL {
+            return;
+        }
+        self.for_each_node(self.nodes[t].left, f);
+        f(self.nodes[t].key, self.nodes[t].id);
+        self.for_each_node(self.nodes[t].right, f);
+    }
+}

@@ -4,11 +4,15 @@
 //! * [`oort::OortSelector`] — utility-guided selection with pacer
 //!   (Lai et al., OSDI'21), the paper's main baseline,
 //! * [`priority::PrioritySelector`] — RELAY's IPS (Algorithm 1):
-//!   least-available-first with tie shuffling,
+//!   least-available-first, boundary-level ties randomly sampled,
 //! * [`safa::SafaSelector`] — SAFA's post-training selection (select all),
-//! * [`apt`] — RELAY's Adaptive Participant Target (N_t adjustment).
+//! * [`apt`] — RELAY's Adaptive Participant Target (N_t adjustment),
+//! * [`index`] — the samplable utility structures (sharded
+//!   ordered-statistic score trees) behind the indexed `select_from`
+//!   fast paths, fed by the `on_eligible`/`on_ineligible` hooks.
 
 pub mod apt;
+pub mod index;
 pub mod oort;
 pub mod priority;
 pub mod random;
@@ -16,6 +20,47 @@ pub mod safa;
 
 use crate::population::CandidateSet;
 use crate::util::rng::Rng;
+
+/// Identity of the piecewise-constant validity window of the availability
+/// probe at some `(now, mu)`: **equal sigs guarantee bitwise-equal
+/// `avail_prob` answers for every learner**. Under `AllAvail` the probe is
+/// the constant 1.0; under `DynAvail` it is a mean of the (static, trained
+/// at first touch) seasonal forecaster's hour-of-week bins, so the answer
+/// only moves when a slot midpoint crosses an hour bin — the "finite bucket
+/// values" that make per-time-bucket probability trees reusable across many
+/// selections instead of re-probing the pool each time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SlotSig {
+    /// Probe is a constant (AllAvail): one validity window forever.
+    Const,
+    /// The hour-of-week bins the slot's probe midpoints land in.
+    Bins(Vec<u16>),
+}
+
+/// On-demand per-learner facts an indexed selector may query during
+/// `select_from` — the same values `Candidate` materialization would have
+/// carried, served lazily so a selection only pays for the ids it touches.
+pub trait ProbeSource {
+    /// The learner's probe answer P(available during [now+mu, now+2mu]) —
+    /// bitwise-identical to the `Candidate::avail_prob` the materialized
+    /// path produces.
+    fn avail_prob(&self, id: usize, now: f64, mu: f64) -> f64;
+
+    /// Profile-based expected task duration — `Candidate::expected_duration`.
+    fn expected_duration(&self, id: usize) -> f64;
+
+    /// Validity signature of `avail_prob` at `(now, mu)` (see [`SlotSig`]).
+    fn slot_sig(&self, now: f64, mu: f64) -> SlotSig;
+}
+
+/// What an indexed selector draws from: the incrementally-maintained
+/// eligible-id set plus lazy probe access. `mu` is the server's current
+/// round-duration estimate (the probe slot is [now+mu, now+2mu]).
+pub struct SelectPool<'a> {
+    pub set: &'a CandidateSet,
+    pub probes: &'a dyn ProbeSource,
+    pub mu: f64,
+}
 
 /// A checked-in learner visible to the selector this round.
 #[derive(Clone, Copy, Debug)]
@@ -58,17 +103,24 @@ pub trait Selector: Send {
     fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize>;
 
     /// Population-scale fast path: draw up to `target` participants
-    /// directly from an incrementally-maintained [`CandidateSet`] without
-    /// materializing `Vec<Candidate>`. Selectors whose policy needs the
-    /// full pool (utility ranking, probe answers) return `None` and the
-    /// engine falls back to [`Selector::select`] over the materialized
-    /// eligible list. Implementations must be **bit-compatible** with
-    /// their `select` over the ascending-id candidate list (same RNG
-    /// draws, same ids) so enabling the fast path never changes results —
-    /// `CandidateSet::sample_k` provides exactly that for uniform sampling.
+    /// directly from the incrementally-maintained eligible pool without
+    /// materializing `Vec<Candidate>`. Selectors without an indexed
+    /// implementation return `None` and the engine falls back to
+    /// [`Selector::select`] over the materialized eligible list.
+    ///
+    /// The contract that lets engines switch paths freely: a `Some` result
+    /// must be **element-for-element identical** to what `select` would
+    /// return over the ascending-id candidate list for the same pool —
+    /// same RNG draws, same ids, same order, same selector-state updates.
+    /// When the pool is empty the engines skip `select` entirely, so an
+    /// indexed path must return `Some(vec![])` *without* touching the RNG
+    /// or per-call state (e.g. Oort's epsilon decay) in that case.
+    /// `tests/selection_index_props.rs` pins the equivalence per selector;
+    /// `tests/kernel_equivalence.rs` pins it end-to-end against the frozen
+    /// reference engine.
     fn select_from(
         &mut self,
-        _pool: &CandidateSet,
+        _pool: &SelectPool,
         _round: usize,
         _now: f64,
         _target: usize,
@@ -76,6 +128,17 @@ pub trait Selector: Send {
     ) -> Option<Vec<usize>> {
         None
     }
+
+    /// Index-maintenance hook: `id` entered the eligible pool. Wired from
+    /// the population's eligible-set insert transitions (availability
+    /// flips, cooldown/busy expiry, task completion). Stateless selectors
+    /// ignore it; indexed selectors log the delta and fold it into their
+    /// structures at the next `select_from`.
+    fn on_eligible(&mut self, _id: usize) {}
+
+    /// Index-maintenance hook: `id` left the eligible pool (went busy,
+    /// entered cooldown, or lost availability).
+    fn on_ineligible(&mut self, _id: usize) {}
 
     /// Observe the round outcome (default: stateless).
     fn feedback(&mut self, _fb: &RoundFeedback) {}
@@ -113,7 +176,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Selector>> {
     match name {
         "random" => Some(Box::new(random::RandomSelector)),
         "oort" => Some(Box::new(oort::OortSelector::default())),
-        "priority" => Some(Box::new(priority::PrioritySelector)),
+        "priority" => Some(Box::new(priority::PrioritySelector::default())),
         "safa" => Some(Box::new(safa::SafaSelector)),
         _ => None,
     }
@@ -128,6 +191,41 @@ pub(crate) fn mk_candidates(n: usize) -> Vec<Candidate> {
             expected_duration: 10.0 + i as f64,
         })
         .collect()
+}
+
+/// Test-only [`ProbeSource`] answering from fixed per-id tables, so selector
+/// unit/property tests can drive `select_from` without a `Population`.
+#[cfg(test)]
+pub(crate) struct MockProbes {
+    pub probs: std::collections::HashMap<usize, f64>,
+    pub eds: std::collections::HashMap<usize, f64>,
+    pub sig: SlotSig,
+}
+
+#[cfg(test)]
+impl MockProbes {
+    pub(crate) fn from_candidates(cands: &[Candidate]) -> MockProbes {
+        MockProbes {
+            probs: cands.iter().map(|c| (c.id, c.avail_prob)).collect(),
+            eds: cands.iter().map(|c| (c.id, c.expected_duration)).collect(),
+            sig: SlotSig::Const,
+        }
+    }
+}
+
+#[cfg(test)]
+impl ProbeSource for MockProbes {
+    fn avail_prob(&self, id: usize, _now: f64, _mu: f64) -> f64 {
+        self.probs[&id]
+    }
+
+    fn expected_duration(&self, id: usize) -> f64 {
+        self.eds[&id]
+    }
+
+    fn slot_sig(&self, _now: f64, _mu: f64) -> SlotSig {
+        self.sig.clone()
+    }
 }
 
 #[cfg(test)]
@@ -145,7 +243,7 @@ mod tests {
     #[test]
     fn all_selectors_respect_target_and_candidates() {
         let candidates = mk_candidates(20);
-        for n in ["random", "oort", "priority"] {
+        for n in ["random", "oort", "priority", "safa"] {
             let mut s = by_name(n).unwrap();
             let mut rng = Rng::new(1);
             let mut ctx = SelectionCtx {
@@ -156,11 +254,14 @@ mod tests {
                 rng: &mut rng,
             };
             let picked = s.select(&mut ctx);
-            assert_eq!(picked.len(), 5, "{n}");
+            // SAFA is select-all by design: everyone trains, the round's
+            // reporting fraction does the cutting — so it ignores `target`
+            let want = if n == "safa" { 20 } else { 5 };
+            assert_eq!(picked.len(), want, "{n}");
             let mut d = picked.clone();
             d.sort_unstable();
             d.dedup();
-            assert_eq!(d.len(), 5, "{n}: duplicates");
+            assert_eq!(d.len(), want, "{n}: duplicates");
             assert!(picked.iter().all(|&p| p < 20), "{n}: unknown id");
         }
     }

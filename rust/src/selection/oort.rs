@@ -9,10 +9,25 @@
 //!   learners, with epsilon decaying per round;
 //! * **pacer**: when accumulated exploited utility stops improving, relax T
 //!   by a step (trading longer rounds for unexplored/slow learners).
+//!
+//! At population scale the selector maintains **incremental indices**
+//! instead of ranking a materialized candidate list each round: explored
+//! eligible learners live in a [`ScoreIndex`] utility tree (re-scored on
+//! feedback, lazily re-keyed when the pacer moves the preferred duration),
+//! never-explored eligible learners in a [`CandidateSet`] that serves the
+//! epsilon share via `sample_k`. Eligibility deltas arrive through the
+//! `on_eligible`/`on_ineligible` hooks; `select_from` folds them in and
+//! answers in O(k log n) — independent of the total population — while
+//! staying element-for-element identical (same RNG draws) to
+//! [`OortSelector::select`] over the ascending-id candidate list.
 
 use std::collections::HashMap;
 
-use super::{RoundFeedback, SelectionCtx, Selector};
+use crate::population::CandidateSet;
+use crate::util::rng::Rng;
+
+use super::index::ScoreIndex;
+use super::{RoundFeedback, SelectPool, SelectionCtx, Selector};
 
 #[derive(Clone, Copy, Debug)]
 pub struct OortConfig {
@@ -49,6 +64,20 @@ struct LearnerStats {
     last_round: usize,
 }
 
+/// The incrementally-maintained eligible-pool view: explored learners in a
+/// utility tree, never-explored learners in a samplable id set. Rebuilt
+/// from the pool on first use; hook/feedback deltas keep it exact after.
+struct OortIndex {
+    unexplored: CandidateSet,
+    tree: ScoreIndex,
+    /// Eligibility deltas logged by the hooks since the last selection.
+    pending: Vec<(usize, bool)>,
+    /// Learners whose stats changed (feedback) since the last selection.
+    dirty: Vec<usize>,
+    /// The pacer moved `preferred_duration`: every tree score is stale.
+    rekey_all: bool,
+}
+
 pub struct OortSelector {
     cfg: OortConfig,
     epsilon: f64,
@@ -58,6 +87,7 @@ pub struct OortSelector {
     prev_window_util: f64,
     rounds_in_window: usize,
     preferred_duration: f64,
+    index: Option<OortIndex>,
 }
 
 impl Default for OortSelector {
@@ -76,6 +106,7 @@ impl OortSelector {
             window_util: 0.0,
             prev_window_util: 0.0,
             rounds_in_window: 0,
+            index: None,
         }
     }
 
@@ -94,6 +125,87 @@ impl OortSelector {
 
     pub fn current_preferred_duration(&self) -> f64 {
         self.preferred_duration
+    }
+
+    /// Rebuild the index from scratch over the pool's current membership.
+    fn rebuilt_index(&self, pool: &SelectPool) -> OortIndex {
+        let mut ix = OortIndex {
+            unexplored: CandidateSet::with_shards(pool.set.capacity(), pool.set.num_shards()),
+            tree: ScoreIndex::with_shards(pool.set.capacity(), pool.set.num_shards()),
+            pending: Vec::new(),
+            dirty: Vec::new(),
+            rekey_all: false,
+        };
+        for id in pool.set.iter() {
+            if self.explored.contains_key(&id) {
+                let u = self.utility(id, pool.probes.expected_duration(id));
+                ix.tree.insert(id, u);
+            } else {
+                ix.unexplored.insert(id);
+            }
+        }
+        ix
+    }
+
+    /// Bring the index in line with the pool: full rebuild on first use (or
+    /// pool change), otherwise fold in eligibility deltas, stat re-scores,
+    /// and the lazy pacer re-key.
+    fn sync_index(&mut self, pool: &SelectPool) {
+        let rebuild = match &self.index {
+            None => true,
+            Some(ix) => ix.unexplored.capacity() != pool.set.capacity(),
+        };
+        if rebuild {
+            self.index = Some(self.rebuilt_index(pool));
+            return;
+        }
+        let mut ix = self.index.take().expect("checked above");
+        for (id, elig) in std::mem::take(&mut ix.pending) {
+            if elig {
+                if self.explored.contains_key(&id) {
+                    let u = self.utility(id, pool.probes.expected_duration(id));
+                    ix.tree.insert(id, u);
+                } else {
+                    ix.unexplored.insert(id);
+                }
+            } else {
+                ix.tree.remove(id);
+                ix.unexplored.remove(id);
+            }
+        }
+        for id in std::mem::take(&mut ix.dirty) {
+            if ix.tree.contains(id) {
+                let u = self.utility(id, pool.probes.expected_duration(id));
+                ix.tree.insert(id, u);
+            } else if id < ix.unexplored.capacity()
+                && ix.unexplored.contains(id)
+                && self.explored.contains_key(&id)
+            {
+                // first feedback arrived while eligible: promote from
+                // the exploration pool into the utility tree
+                ix.unexplored.remove(id);
+                let u = self.utility(id, pool.probes.expected_duration(id));
+                ix.tree.insert(id, u);
+            }
+        }
+        if ix.rekey_all {
+            // pacer moved T: every explored score is stale — re-key the
+            // (bounded-by-participants-ever) tree, not the population
+            ix.rekey_all = false;
+            let members: Vec<usize> = ix.tree.to_sorted_vec().iter().map(|e| e.0).collect();
+            for id in members {
+                let u = self.utility(id, pool.probes.expected_duration(id));
+                ix.tree.insert(id, u);
+            }
+        }
+        if ix.tree.len() + ix.unexplored.len() != pool.set.len() {
+            // desync safety net: a selector driven against a pool whose
+            // deltas never reached the hooks (reuse across pools) must
+            // rebuild rather than serve a stale partition
+            self.index = Some(self.rebuilt_index(pool));
+            return;
+        }
+        self.index = Some(ix);
     }
 }
 
@@ -118,13 +230,14 @@ impl Selector for OortSelector {
             picked.push(unexplored[i].id);
         }
 
-        // exploitation: top utility among explored
+        // exploitation: top utility among explored (total_cmp: a non-finite
+        // utility ranks deterministically instead of panicking the sort)
         let n_exploit = k - picked.len();
         let mut ranked: Vec<(f64, usize)> = explored
             .iter()
             .map(|c| (self.utility(c.id, c.expected_duration), c.id))
             .collect();
-        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        ranked.sort_by(|a, b| b.0.total_cmp(&a.0));
         for (u, id) in ranked.into_iter().take(n_exploit) {
             self.window_util += u;
             picked.push(id);
@@ -147,17 +260,92 @@ impl Selector for OortSelector {
         picked
     }
 
+    /// Indexed fast path: epsilon share sampled from the unexplored set
+    /// (bit-compatible with `choose_k` over the ascending unexplored list),
+    /// exploitation streamed from the utility tree (score-descending,
+    /// id-ascending ties — a stable descending sort's exact order), backfill
+    /// from the unexplored set. O(k log n) per selection; same RNG draws and
+    /// state updates as [`OortSelector::select`].
+    fn select_from(
+        &mut self,
+        pool: &SelectPool,
+        _round: usize,
+        _now: f64,
+        target: usize,
+        rng: &mut Rng,
+    ) -> Option<Vec<usize>> {
+        self.sync_index(pool);
+        let n = pool.set.len();
+        if n == 0 {
+            // the engines skip select() entirely on an empty pool: no
+            // epsilon decay, no RNG draws
+            return Some(Vec::new());
+        }
+        let ix = self.index.take().expect("sync_index always builds");
+        debug_assert_eq!(
+            ix.tree.len() + ix.unexplored.len(),
+            n,
+            "oort index out of sync with pool"
+        );
+        let k = target.min(n);
+        let mut picked = Vec::with_capacity(k);
+
+        let n_explore = ((k as f64) * self.epsilon).round() as usize;
+        let n_explore = n_explore.min(ix.unexplored.len());
+        picked.extend(ix.unexplored.sample_k(rng, n_explore));
+
+        let n_exploit = k - picked.len();
+        ix.tree.top_k_desc(n_exploit, |id, u| {
+            self.window_util += u;
+            picked.push(id);
+        });
+
+        if picked.len() < k {
+            let already: std::collections::HashSet<usize> = picked.iter().copied().collect();
+            for id in ix.unexplored.iter() {
+                if picked.len() >= k {
+                    break;
+                }
+                if !already.contains(&id) {
+                    picked.push(id);
+                }
+            }
+        }
+
+        self.epsilon = (self.epsilon * self.cfg.epsilon_decay).max(self.cfg.epsilon_min);
+        self.index = Some(ix);
+        Some(picked)
+    }
+
+    fn on_eligible(&mut self, id: usize) {
+        if let Some(ix) = self.index.as_mut() {
+            ix.pending.push((id, true));
+        }
+    }
+
+    fn on_ineligible(&mut self, id: usize) {
+        if let Some(ix) = self.index.as_mut() {
+            ix.pending.push((id, false));
+        }
+    }
+
     fn feedback(&mut self, fb: &RoundFeedback) {
         for &(id, stat_util, duration) in fb.completed {
             let e = self.explored.entry(id).or_default();
             e.stat_util = stat_util;
             e.duration = duration;
             e.last_round = fb.round;
+            if let Some(ix) = self.index.as_mut() {
+                ix.dirty.push(id);
+            }
         }
         // learners that missed the deadline get their utility dampened
         for id in fb.missed {
             if let Some(e) = self.explored.get_mut(id) {
                 e.stat_util *= 0.5;
+                if let Some(ix) = self.index.as_mut() {
+                    ix.dirty.push(*id);
+                }
             }
         }
         // pacer: if exploited utility in this window dropped vs the
@@ -166,6 +354,11 @@ impl Selector for OortSelector {
         if self.rounds_in_window >= self.cfg.pacer_window {
             if self.window_util < 0.95 * self.prev_window_util {
                 self.preferred_duration += self.cfg.pacer_step;
+                // every indexed utility embeds T: re-key lazily at the
+                // next selection instead of eagerly per pacer move
+                if let Some(ix) = self.index.as_mut() {
+                    ix.rekey_all = true;
+                }
             }
             self.prev_window_util = self.window_util;
             self.window_util = 0.0;
@@ -177,7 +370,7 @@ impl Selector for OortSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::selection::Candidate;
+    use crate::selection::{Candidate, MockProbes, SelectPool};
     use crate::util::rng::Rng;
 
     fn candidates(n: usize) -> Vec<Candidate> {
@@ -343,5 +536,104 @@ mod tests {
             round_duration: 60.0,
         });
         assert!((s.explored[&7].stat_util - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_utility_feedback_does_not_panic() {
+        // regression: the seed's partial_cmp().unwrap() exploitation sort
+        // panicked if a NaN utility ever leaked in via feedback
+        let cands = candidates(8);
+        let mut s = OortSelector::new(OortConfig {
+            epsilon0: 0.0,
+            epsilon_min: 0.0,
+            ..OortConfig::default()
+        });
+        s.feedback(&RoundFeedback {
+            round: 0,
+            completed: &[(1, f64::NAN, 10.0), (2, 5.0, 10.0), (3, 1.0, 10.0)],
+            missed: &[],
+            round_duration: 60.0,
+        });
+        let picked = run_round(&mut s, &cands, 1, 9);
+        assert_eq!(picked.len(), 5, "NaN utility must degrade ranking, not panic");
+        // total_cmp ranks (positive) NaN greatest: the poisoned learner
+        // leads, the finite ones keep their relative order behind it
+        assert_eq!(&picked[..3], &[1, 2, 3]);
+    }
+
+    /// The fast-path contract under ongoing feedback, pacer re-keys, and
+    /// eligibility churn: identical picks AND identical RNG consumption vs
+    /// the materialized select at every step.
+    #[test]
+    fn indexed_path_bit_identical_to_select_under_churn() {
+        let n = 30usize;
+        let all = candidates(n);
+        let probes = MockProbes::from_candidates(&all);
+        let mut fast_sel = OortSelector::new(OortConfig {
+            pacer_window: 3,
+            ..OortConfig::default()
+        });
+        let mut slow_sel = OortSelector::new(OortConfig {
+            pacer_window: 3,
+            ..OortConfig::default()
+        });
+        let mut set = crate::population::CandidateSet::new(n);
+        let mut eligible = vec![true; n];
+        for id in 0..n {
+            set.insert(id);
+        }
+        let mut churn = Rng::new(0xC0FFEE);
+        for round in 0..40 {
+            // random eligibility churn, mirrored into the fast selector
+            for _ in 0..churn.range(0, 6) {
+                let id = churn.below(n);
+                if eligible[id] {
+                    eligible[id] = false;
+                    set.remove(id);
+                    fast_sel.on_ineligible(id);
+                } else {
+                    eligible[id] = true;
+                    set.insert(id);
+                    fast_sel.on_eligible(id);
+                }
+            }
+            let cands: Vec<Candidate> =
+                all.iter().filter(|c| eligible[c.id]).cloned().collect();
+            let target = churn.range(1, 8);
+            let seed = churn.next_u64();
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let pool = SelectPool { set: &set, probes: &probes, mu: 60.0 };
+            let fast = fast_sel.select_from(&pool, round, 0.0, target, &mut r1).unwrap();
+            let slow = if cands.is_empty() {
+                Vec::new()
+            } else {
+                let mut ctx = SelectionCtx {
+                    round,
+                    now: 0.0,
+                    target,
+                    candidates: &cands,
+                    rng: &mut r2,
+                };
+                slow_sel.select(&mut ctx)
+            };
+            assert_eq!(fast, slow, "round {round}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "round {round}: rng diverged");
+            // identical feedback to both (drives dirty re-scores + pacer)
+            let completed: Vec<(usize, f64, f64)> = fast
+                .iter()
+                .take(3)
+                .map(|&id| (id, churn.uniform(1.0, 50.0), 10.0 + 5.0 * id as f64))
+                .collect();
+            let missed: Vec<usize> = fast.iter().skip(3).take(1).copied().collect();
+            let fb = RoundFeedback {
+                round,
+                completed: &completed,
+                missed: &missed,
+                round_duration: 60.0,
+            };
+            fast_sel.feedback(&fb);
+            slow_sel.feedback(&fb);
+        }
     }
 }

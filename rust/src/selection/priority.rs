@@ -2,14 +2,76 @@
 //!
 //! On check-in the server sends the learner the slot (mu_t, 2mu_t); the
 //! learner answers with its forecast availability probability for that slot
-//! (already materialized in `Candidate::avail_prob`). At the end of the
-//! selection window the server sorts ascending, randomly shuffles ties, and
-//! takes the top N_t — i.e. the *least available* learners are prioritized,
-//! maximizing coverage of limited-availability learners' data.
+//! (materialized in `Candidate::avail_prob`, or served lazily through
+//! [`super::ProbeSource`]). The server prioritizes the *least available*
+//! learners: probabilities ascending, random tie-break, top N_t — maximizing
+//! coverage of limited-availability learners' data.
+//!
+//! Selection is **level-streamed**: equal-probability learners form a level;
+//! whole levels are taken ascending (id order within a level) until one no
+//! longer fits, and the boundary level is cut by a uniform `choose_k` over
+//! its id-ascending members — Algorithm 1's random tie-break applied exactly
+//! where it matters (the boundary), with O(k) RNG draws instead of a full
+//! O(n) pool shuffle. That is what lets the indexed fast path answer from a
+//! **per-time-bucket availability-probability tree** in O(k log n) per
+//! selection: the tree (learner → probe answer, [`ScoreIndex`]) stays valid
+//! for as long as the probe's [`super::SlotSig`] time bucket does, absorbing
+//! eligibility deltas from the `on_eligible`/`on_ineligible` hooks, and is
+//! rebuilt from the forecasters' finite bucket values only when the slot
+//! crosses an hour-of-week bin — amortized across the many selections that
+//! share a bucket. Both paths are element-for-element identical (same RNG
+//! draws), pinned by `tests/selection_index_props.rs`.
 
-use super::{SelectionCtx, Selector};
+use crate::util::rng::Rng;
 
-pub struct PrioritySelector;
+use super::index::ScoreIndex;
+use super::{SelectPool, SelectionCtx, Selector, SlotSig};
+
+#[derive(Default)]
+pub struct PrioritySelector {
+    /// Probability tree over the eligible pool, valid while `sig` holds.
+    tree: Option<ScoreIndex>,
+    sig: Option<SlotSig>,
+    /// Eligibility deltas logged by the hooks since the last selection.
+    pending: Vec<(usize, bool)>,
+}
+
+impl PrioritySelector {
+    /// Bring the probability tree in line with the pool: rebuild when the
+    /// probe's time bucket moved (or on first use), otherwise fold in the
+    /// hook-logged eligibility deltas.
+    fn sync_index(&mut self, pool: &SelectPool, now: f64) {
+        let sig = pool.probes.slot_sig(now, pool.mu);
+        let mut rebuild = match (&self.tree, &self.sig) {
+            (Some(t), Some(s)) => *s != sig || t.capacity() != pool.set.capacity(),
+            _ => true,
+        };
+        if !rebuild {
+            let tree = self.tree.as_mut().expect("checked above");
+            for (id, elig) in self.pending.drain(..) {
+                if elig {
+                    tree.insert(id, pool.probes.avail_prob(id, now, pool.mu));
+                } else {
+                    tree.remove(id);
+                }
+            }
+            // desync safety net: a selector driven against a pool whose
+            // deltas never reached the hooks (reuse across pools) must
+            // rebuild rather than panic or serve stale ids
+            rebuild = tree.len() != pool.set.len();
+        }
+        if rebuild {
+            let mut tree =
+                ScoreIndex::with_shards(pool.set.capacity(), pool.set.num_shards());
+            for id in pool.set.iter() {
+                tree.insert(id, pool.probes.avail_prob(id, now, pool.mu));
+            }
+            self.tree = Some(tree);
+            self.sig = Some(sig);
+            self.pending.clear();
+        }
+    }
+}
 
 impl Selector for PrioritySelector {
     fn name(&self) -> &'static str {
@@ -17,32 +79,103 @@ impl Selector for PrioritySelector {
     }
 
     fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
-        let k = ctx.target.min(ctx.candidates.len());
-        // Shuffle first, then stable-sort by probability: equal-probability
-        // learners keep the shuffled order = Algorithm 1's random tie-break.
-        let mut order: Vec<usize> = (0..ctx.candidates.len()).collect();
-        ctx.rng.shuffle(&mut order);
-        order.sort_by(|&a, &b| {
-            ctx.candidates[a]
-                .avail_prob
-                .partial_cmp(&ctx.candidates[b].avail_prob)
-                .unwrap()
-        });
-        order.truncate(k);
-        order.into_iter().map(|i| ctx.candidates[i].id).collect()
+        let cands = ctx.candidates;
+        let k = ctx.target.min(cands.len());
+        // candidates arrive in ascending id order; a stable sort by
+        // probability alone leaves each level's ids ascending (total_cmp:
+        // a non-finite probability sorts deterministically, never panics)
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by(|&a, &b| cands[a].avail_prob.total_cmp(&cands[b].avail_prob));
+        let mut picked = Vec::with_capacity(k);
+        let mut i = 0usize;
+        while picked.len() < k {
+            let p = cands[order[i]].avail_prob;
+            let mut j = i + 1;
+            while j < order.len()
+                && cands[order[j]].avail_prob.total_cmp(&p) == std::cmp::Ordering::Equal
+            {
+                j += 1;
+            }
+            let m = j - i;
+            let rem = k - picked.len();
+            if m <= rem {
+                for &oi in &order[i..j] {
+                    picked.push(cands[oi].id);
+                }
+            } else {
+                // boundary level: Algorithm 1's random tie-break
+                for pos in ctx.rng.choose_k(m, rem) {
+                    picked.push(cands[order[i + pos]].id);
+                }
+            }
+            i = j;
+        }
+        picked
+    }
+
+    /// Indexed fast path: stream levels ascending from the probability
+    /// tree — O((k + levels) log n) per selection, independent of the pool
+    /// size, with the same RNG draws as [`PrioritySelector::select`].
+    fn select_from(
+        &mut self,
+        pool: &SelectPool,
+        _round: usize,
+        now: f64,
+        target: usize,
+        rng: &mut Rng,
+    ) -> Option<Vec<usize>> {
+        self.sync_index(pool, now);
+        let n = pool.set.len();
+        let k = target.min(n);
+        let tree = self.tree.as_ref().expect("sync_index always builds");
+        debug_assert_eq!(tree.len(), n, "probability tree out of sync with pool");
+        let mut picked = Vec::with_capacity(k);
+        let mut bound: Option<f64> = None;
+        while picked.len() < k {
+            let p = tree
+                .min_score_gt(bound)
+                .expect("k <= len guarantees a next level");
+            let m = tree.level_len(p);
+            let rem = k - picked.len();
+            if m <= rem {
+                tree.for_level_asc(p, |id| {
+                    picked.push(id);
+                    true
+                });
+            } else {
+                for pos in rng.choose_k(m, rem) {
+                    picked.push(tree.nth_in_level(p, pos));
+                }
+            }
+            bound = Some(p);
+        }
+        Some(picked)
+    }
+
+    fn on_eligible(&mut self, id: usize) {
+        if self.tree.is_some() {
+            self.pending.push((id, true));
+        }
+    }
+
+    fn on_ineligible(&mut self, id: usize) {
+        if self.tree.is_some() {
+            self.pending.push((id, false));
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::selection::{mk_candidates, Candidate};
+    use crate::population::CandidateSet;
+    use crate::selection::{mk_candidates, Candidate, MockProbes};
     use crate::util::rng::Rng;
 
     #[test]
     fn picks_least_available() {
         let candidates = mk_candidates(20); // avail_prob = i/20
-        let mut s = PrioritySelector;
+        let mut s = PrioritySelector::default();
         let mut rng = Rng::new(1);
         let mut ctx = SelectionCtx {
             round: 0,
@@ -63,7 +196,7 @@ mod tests {
         let candidates: Vec<Candidate> = (0..30)
             .map(|i| Candidate { id: i, avail_prob: 1.0, expected_duration: 1.0 })
             .collect();
-        let mut s = PrioritySelector;
+        let mut s = PrioritySelector::default();
         let mut rng = Rng::new(2);
         let mut seen = std::collections::HashSet::new();
         for round in 0..40 {
@@ -90,7 +223,7 @@ mod tests {
         for i in 0..20 {
             candidates.push(Candidate { id: i, avail_prob: 0.9, expected_duration: 1.0 });
         }
-        let mut s = PrioritySelector;
+        let mut s = PrioritySelector::default();
         let mut rng = Rng::new(3);
         for round in 0..10 {
             let mut ctx = SelectionCtx {
@@ -103,6 +236,119 @@ mod tests {
             let picked = s.select(&mut ctx);
             assert!(picked.contains(&100));
             assert!(picked.contains(&101));
+        }
+    }
+
+    #[test]
+    fn non_finite_probability_does_not_panic() {
+        // regression: the seed's partial_cmp().unwrap() comparator panicked
+        // if a NaN probability ever leaked in; total_cmp ranks it last
+        // (greatest), i.e. a NaN-probed learner is selected only when the
+        // target reaches its level
+        let mut candidates = mk_candidates(6);
+        candidates[2].avail_prob = f64::NAN;
+        let mut s = PrioritySelector::default();
+        let mut rng = Rng::new(4);
+        let mut ctx = SelectionCtx {
+            round: 0,
+            now: 0.0,
+            target: 5,
+            candidates: &candidates,
+            rng: &mut rng,
+        };
+        let picked = s.select(&mut ctx);
+        assert_eq!(picked.len(), 5);
+        assert!(!picked.contains(&2), "NaN prob must rank last, not first");
+        // selecting everyone still terminates and includes the NaN learner
+        let mut ctx = SelectionCtx {
+            round: 1,
+            now: 0.0,
+            target: 6,
+            candidates: &candidates,
+            rng: &mut rng,
+        };
+        assert_eq!(s.select(&mut ctx).len(), 6);
+    }
+
+    /// The core fast-path contract: identical elements AND identical RNG
+    /// consumption vs the materialized select, across churn and re-probes.
+    #[test]
+    fn indexed_path_bit_identical_to_select() {
+        let mut gen = Rng::new(0x5EED);
+        for case in 0..30 {
+            let n = 5 + (case % 40);
+            let candidates: Vec<Candidate> = (0..n)
+                .map(|i| Candidate {
+                    id: i,
+                    // coarse grid => plenty of exact ties (levels)
+                    avail_prob: (gen.below(5) as f64) * 0.25,
+                    expected_duration: 10.0,
+                })
+                .collect();
+            let mut set = CandidateSet::new(n);
+            for c in &candidates {
+                set.insert(c.id);
+            }
+            let probes = MockProbes::from_candidates(&candidates);
+            let pool = SelectPool { set: &set, probes: &probes, mu: 60.0 };
+            let target = gen.range(0, n + 3);
+            let seed = gen.next_u64();
+            let mut fast_sel = PrioritySelector::default();
+            let mut slow_sel = PrioritySelector::default();
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let fast = fast_sel.select_from(&pool, 0, 0.0, target, &mut r1).unwrap();
+            let mut ctx = SelectionCtx {
+                round: 0,
+                now: 0.0,
+                target,
+                candidates: &candidates,
+                rng: &mut r2,
+            };
+            let slow = slow_sel.select(&mut ctx);
+            assert_eq!(fast, slow, "case {case}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "case {case}: rng diverged");
+        }
+    }
+
+    /// Hook-maintained deltas answer identically to a fresh rebuild.
+    #[test]
+    fn hook_deltas_match_rebuild() {
+        let n = 60usize;
+        let candidates = mk_candidates(n);
+        let probes = MockProbes::from_candidates(&candidates);
+        let mut set = CandidateSet::new(n);
+        for id in 0..n {
+            set.insert(id);
+        }
+        let mut maintained = PrioritySelector::default();
+        // warm the tree on the full pool
+        {
+            let pool = SelectPool { set: &set, probes: &probes, mu: 60.0 };
+            maintained.select_from(&pool, 0, 0.0, 5, &mut Rng::new(1));
+        }
+        // churn: remove odds, re-add some, all through the hooks
+        let mut churn = Rng::new(7);
+        for id in 0..n {
+            if id % 2 == 1 {
+                set.remove(id);
+                maintained.on_ineligible(id);
+            }
+        }
+        for _ in 0..20 {
+            let id = churn.below(n);
+            if set.insert(id) {
+                maintained.on_eligible(id);
+            }
+        }
+        for seed in 0..5u64 {
+            let pool = SelectPool { set: &set, probes: &probes, mu: 60.0 };
+            let a = maintained
+                .select_from(&pool, 1, 0.0, 12, &mut Rng::new(seed))
+                .unwrap();
+            let mut fresh = PrioritySelector::default();
+            let b = fresh.select_from(&pool, 1, 0.0, 12, &mut Rng::new(seed)).unwrap();
+            assert_eq!(a, b, "seed {seed}");
         }
     }
 }

@@ -1,10 +1,9 @@
 //! Uniform random participant selection — the FedAvg / Google-scale default
 //! (Bonawitz et al.) and the paper's "Random" baseline.
 
-use crate::population::CandidateSet;
 use crate::util::rng::Rng;
 
-use super::{SelectionCtx, Selector};
+use super::{SelectPool, SelectionCtx, Selector};
 
 pub struct RandomSelector;
 
@@ -26,16 +25,16 @@ impl Selector for RandomSelector {
     /// the candidate set. `CandidateSet::sample_k` replays `Rng::choose_k`
     /// over the ascending-id member list exactly, so this is bit-identical
     /// to [`RandomSelector::select`] on the materialized candidates — the
-    /// async engine's O(k log n) fast path at million-learner populations.
+    /// engines' O(k log n) fast path at million-learner populations.
     fn select_from(
         &mut self,
-        pool: &CandidateSet,
+        pool: &SelectPool,
         _round: usize,
         _now: f64,
         target: usize,
         rng: &mut Rng,
     ) -> Option<Vec<usize>> {
-        Some(pool.sample_k(rng, target))
+        Some(pool.set.sample_k(rng, target))
     }
 }
 
@@ -49,9 +48,9 @@ mod tests {
         // the fast path's contract: same RNG draws, same picked ids as
         // select() over the ascending-id candidate list
         let ids: Vec<usize> = (0..200).filter(|i| i % 3 != 0).collect();
-        let mut pool = CandidateSet::new(200);
+        let mut set = crate::population::CandidateSet::new(200);
         for &id in &ids {
-            pool.insert(id);
+            set.insert(id);
         }
         let candidates: Vec<crate::selection::Candidate> = ids
             .iter()
@@ -61,6 +60,8 @@ mod tests {
                 expected_duration: 10.0,
             })
             .collect();
+        let probes = crate::selection::MockProbes::from_candidates(&candidates);
+        let pool = SelectPool { set: &set, probes: &probes, mu: 100.0 };
         for seed in 0..10u64 {
             let mut s = RandomSelector;
             let mut r1 = Rng::new(seed);

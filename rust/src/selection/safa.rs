@@ -4,7 +4,9 @@
 //! coordinator's SAFA protocol handles the fraction; this selector simply
 //! returns all checked-in learners.
 
-use super::{SelectionCtx, Selector};
+use crate::util::rng::Rng;
+
+use super::{SelectPool, SelectionCtx, Selector};
 
 pub struct SafaSelector;
 
@@ -16,12 +18,27 @@ impl Selector for SafaSelector {
     fn select(&mut self, ctx: &mut SelectionCtx) -> Vec<usize> {
         ctx.candidates.iter().map(|c| c.id).collect()
     }
+
+    /// Select-all needs no ranking state at all: stream the eligible set in
+    /// ascending id order — exactly the id sequence `select` produces over
+    /// the materialized candidate list, with zero RNG draws. O(|eligible|)
+    /// output size, O(1) per element, independent of the total population.
+    fn select_from(
+        &mut self,
+        pool: &SelectPool,
+        _round: usize,
+        _now: f64,
+        _target: usize,
+        _rng: &mut Rng,
+    ) -> Option<Vec<usize>> {
+        Some(pool.set.iter().collect())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::selection::mk_candidates;
+    use crate::selection::{mk_candidates, MockProbes};
     use crate::util::rng::Rng;
 
     #[test]
@@ -37,5 +54,29 @@ mod tests {
             rng: &mut rng,
         };
         assert_eq!(s.select(&mut ctx).len(), 50);
+    }
+
+    #[test]
+    fn streamed_path_matches_select_with_no_rng_use() {
+        let candidates = mk_candidates(30);
+        let mut set = crate::population::CandidateSet::new(30);
+        for c in &candidates {
+            set.insert(c.id);
+        }
+        let probes = MockProbes::from_candidates(&candidates);
+        let pool = SelectPool { set: &set, probes: &probes, mu: 50.0 };
+        let mut s = SafaSelector;
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let fast = s.select_from(&pool, 0, 0.0, 5, &mut r1).unwrap();
+        let mut ctx = SelectionCtx {
+            round: 0,
+            now: 0.0,
+            target: 5,
+            candidates: &candidates,
+            rng: &mut r2,
+        };
+        assert_eq!(fast, s.select(&mut ctx));
+        assert_eq!(r1.next_u64(), r2.next_u64(), "rng must be untouched");
     }
 }

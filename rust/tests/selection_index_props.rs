@@ -1,0 +1,348 @@
+//! Property tests for the selection-index subsystem (`selection::index`)
+//! and the indexed selector fast paths:
+//!
+//! * the sharded [`ScoreIndex`] must agree with a brute-force sorted-Vec
+//!   model on randomized insert/remove/update sequences (top-k, rank,
+//!   level queries, weighted sampling) and be shard-count invariant;
+//! * every indexed `select_from` (oort / priority / safa / random) must be
+//!   **element-for-element identical** to the materialized `select` over
+//!   the ascending-id candidate list — same RNG draws — under eligibility
+//!   churn, feedback, pacer re-keys, and probe time-bucket changes;
+//! * the pipeline holds at scale: 20k-learner lazy DynAvail cells run
+//!   through the indexed paths, deterministic and byte-identical to the
+//!   frozen materializing reference on the sync grid.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_reference_experiment};
+use relay::population::CandidateSet;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::selection::index::ScoreIndex;
+use relay::selection::{by_name, Candidate, ProbeSource, SelectPool, SelectionCtx, SlotSig};
+use relay::util::prop::{prop_assert, prop_check};
+use relay::util::rng::Rng;
+
+/// Brute-force model entry list sorted by the index's global order.
+fn sorted_model(model: &[Option<f64>]) -> Vec<(usize, f64)> {
+    let mut v: Vec<(usize, f64)> = model
+        .iter()
+        .enumerate()
+        .filter_map(|(id, s)| s.map(|s| (id, s)))
+        .collect();
+    v.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    v
+}
+
+#[test]
+fn score_index_matches_sorted_vec_model() {
+    prop_check(40, 0x51DE, |rng| {
+        let n = rng.range(1, 300);
+        let num_shards = rng.range(1, 10);
+        let mut idx = ScoreIndex::with_shards(n, num_shards);
+        let mut model: Vec<Option<f64>> = vec![None; n];
+        for _ in 0..rng.range(1, 600) {
+            let id = rng.below(n);
+            if rng.bool(0.6) {
+                // multiples of 0.5: exactly representable, so float sums
+                // are association-free and the sampling model is exact
+                let score = rng.below(8) as f64 * 0.5;
+                idx.insert(id, score);
+                model[id] = Some(score);
+            } else {
+                idx.remove(id);
+                model[id] = None;
+            }
+        }
+        let sorted = sorted_model(&model);
+        prop_assert(idx.len() == sorted.len(), "len diverged")?;
+        prop_assert(idx.to_sorted_vec() == sorted, "sorted contents diverged")?;
+
+        // top-k: score descending, id ascending within a level
+        let k = rng.range(0, 25);
+        let mut top = Vec::new();
+        idx.top_k_desc(k, |id, s| top.push((id, s)));
+        let want_top: Vec<(usize, f64)> = {
+            let mut v = sorted.clone();
+            v.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            v.truncate(k.min(v.len()));
+            v
+        };
+        prop_assert(top == want_top, format!("top-{k} diverged"))?;
+
+        // rank + level queries
+        for (r, &(id, _)) in sorted.iter().enumerate() {
+            prop_assert(
+                idx.rank_of(id) == Some(r),
+                format!("rank_of({id}) = {:?} != {r}", idx.rank_of(id)),
+            )?;
+        }
+        for level in 0..8 {
+            let p = level as f64 * 0.5;
+            prop_assert(
+                idx.count_lt(p) == sorted.iter().filter(|e| e.1 < p).count(),
+                "count_lt diverged",
+            )?;
+            let members: Vec<usize> =
+                sorted.iter().filter(|e| e.1 == p).map(|e| e.0).collect();
+            prop_assert(idx.level_len(p) == members.len(), "level_len diverged")?;
+            for (i, &id) in members.iter().enumerate() {
+                prop_assert(
+                    idx.nth_in_level(p, i) == id,
+                    format!("nth_in_level({p}, {i}) diverged"),
+                )?;
+            }
+        }
+
+        // weighted sampling: exact replay of the shard-major prefix walk
+        let shard_size = n.div_ceil(num_shards).max(1);
+        let mut shard_major = sorted.clone();
+        shard_major.sort_by(|a, b| {
+            (a.0 / shard_size)
+                .cmp(&(b.0 / shard_size))
+                .then(a.1.total_cmp(&b.1))
+                .then(a.0.cmp(&b.0))
+        });
+        let total: f64 = shard_major.iter().map(|e| e.1).sum();
+        for _ in 0..3 {
+            let seed = rng.next_u64();
+            let got = idx.weighted_sample(&mut Rng::new(seed));
+            let want = if total > 0.0 {
+                let mut u = Rng::new(seed).f64() * total;
+                let mut pick = None;
+                for &(id, s) in &shard_major {
+                    if u < s {
+                        pick = Some(id);
+                        break;
+                    }
+                    u -= s;
+                }
+                pick.or_else(|| shard_major.iter().rev().find(|e| e.1 > 0.0).map(|e| e.0))
+            } else {
+                None
+            };
+            prop_assert(got == want, format!("weighted_sample diverged (seed {seed})"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn score_index_ranking_is_shard_count_invariant() {
+    prop_check(30, 0x5AAD, |rng| {
+        let n = rng.range(1, 250);
+        let entries: Vec<(usize, f64)> = (0..n)
+            .filter(|_| rng.bool(0.5))
+            .map(|id| (id, rng.below(6) as f64 * 0.25))
+            .collect();
+        let build = |shards: usize| {
+            let mut idx = ScoreIndex::with_shards(n, shards);
+            for &(id, s) in &entries {
+                idx.insert(id, s);
+            }
+            idx
+        };
+        let a = build(1);
+        let b = build(rng.range(2, 12));
+        prop_assert(a.to_sorted_vec() == b.to_sorted_vec(), "contents diverged")?;
+        let k = rng.range(0, 20);
+        let mut ta = Vec::new();
+        let mut tb = Vec::new();
+        a.top_k_desc(k, |id, s| ta.push((id, s)));
+        b.top_k_desc(k, |id, s| tb.push((id, s)));
+        prop_assert(ta == tb, "top-k diverged across shard counts")?;
+        for &(id, _) in &entries {
+            prop_assert(a.rank_of(id) == b.rank_of(id), "rank diverged")?;
+        }
+        Ok(())
+    });
+}
+
+/// Probe source whose answers vary by (id, hour-of-now) on a coarse value
+/// grid — plenty of exact ties (levels) and genuine time-bucket changes, so
+/// the per-bucket probability trees exercise both the delta-apply and the
+/// rebuild paths.
+struct GridProbes;
+
+impl GridProbes {
+    fn hour(now: f64) -> usize {
+        (now / 3600.0) as usize
+    }
+}
+
+impl ProbeSource for GridProbes {
+    fn avail_prob(&self, id: usize, now: f64, _mu: f64) -> f64 {
+        ((id * 31 + Self::hour(now) * 17) % 5) as f64 * 0.25
+    }
+
+    fn expected_duration(&self, id: usize) -> f64 {
+        10.0 + (id % 7) as f64
+    }
+
+    fn slot_sig(&self, now: f64, _mu: f64) -> SlotSig {
+        SlotSig::Bins(vec![Self::hour(now) as u16])
+    }
+}
+
+/// The tentpole equivalence: for every indexed selector, `select_from` over
+/// the maintained pool must equal `select` over the materialized
+/// ascending-id candidate list — same elements, same order, same RNG draws
+/// — at every step of a churning, feedback-driven, time-advancing run.
+#[test]
+fn indexed_select_from_is_bit_compatible_with_select() {
+    for name in ["random", "priority", "safa", "oort"] {
+        prop_check(8, 0xB17C0 ^ name.len() as u64, |rng| {
+            let n = rng.range(5, 60);
+            let probes = GridProbes;
+            let mut set = CandidateSet::new(n);
+            let mut eligible = vec![false; n];
+            let mut fast = by_name(name).unwrap();
+            let mut slow = by_name(name).unwrap();
+            let mut now = 0.0f64;
+            let mu = 80.0;
+            for step in 0..25 {
+                now += rng.uniform(0.0, 2500.0);
+                // eligibility churn, mirrored into the indexed selector
+                for _ in 0..rng.range(0, 8) {
+                    let id = rng.below(n);
+                    if eligible[id] {
+                        eligible[id] = false;
+                        set.remove(id);
+                        fast.on_ineligible(id);
+                    } else {
+                        eligible[id] = true;
+                        set.insert(id);
+                        fast.on_eligible(id);
+                    }
+                }
+                let cands: Vec<Candidate> = (0..n)
+                    .filter(|&id| eligible[id])
+                    .map(|id| Candidate {
+                        id,
+                        avail_prob: probes.avail_prob(id, now, mu),
+                        expected_duration: probes.expected_duration(id),
+                    })
+                    .collect();
+                let target = rng.range(0, n + 2);
+                let seed = rng.next_u64();
+                let mut r1 = Rng::new(seed);
+                let mut r2 = Rng::new(seed);
+                let pool = SelectPool { set: &set, probes: &probes, mu };
+                let a = fast
+                    .select_from(&pool, step, now, target, &mut r1)
+                    .expect("all built-in selectors are indexed");
+                // engines skip select() entirely on an empty pool
+                let b = if cands.is_empty() {
+                    Vec::new()
+                } else {
+                    let mut ctx = SelectionCtx {
+                        round: step,
+                        now,
+                        target,
+                        candidates: &cands,
+                        rng: &mut r2,
+                    };
+                    slow.select(&mut ctx)
+                };
+                prop_assert(a == b, format!("{name} step {step}: {a:?} != {b:?}"))?;
+                prop_assert(
+                    r1.next_u64() == r2.next_u64(),
+                    format!("{name} step {step}: rng state diverged"),
+                )?;
+                // identical feedback on both sides (drives oort's dirty
+                // re-scores, promotions, and — with a small window — pacer
+                // re-keys of the utility tree)
+                let completed: Vec<(usize, f64, f64)> = a
+                    .iter()
+                    .take(3)
+                    .map(|&id| (id, rng.below(40) as f64, 10.0 + (id % 7) as f64))
+                    .collect();
+                let missed: Vec<usize> = a.iter().skip(3).take(2).copied().collect();
+                let fb = relay::selection::RoundFeedback {
+                    round: step,
+                    completed: &completed,
+                    missed: &missed,
+                    round_duration: 60.0,
+                };
+                fast.feedback(&fb);
+                slow.feedback(&fb);
+            }
+            Ok(())
+        });
+    }
+}
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// End-to-end at scale: 20k-learner lazy DynAvail **async** cells run the
+/// intelligent selectors through the indexed path — deterministic, all
+/// merges delivered, accounting closed.
+#[test]
+fn larger_async_dynavail_cells_run_indexed_selectors() {
+    for sel in ["oort", "priority"] {
+        let cfg = ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 20_000,
+            rounds: 6,
+            target_participants: 8,
+            mode: RoundMode::Async { buffer_k: 4, max_staleness: Some(6) },
+            avail: AvailMode::DynAvail,
+            selector: sel.into(),
+            mean_samples: 4,
+            test_per_class: 2,
+            eval_every: 1000,
+            cooldown_rounds: 1,
+            lr: 0.1,
+            ..Default::default()
+        };
+        let a = run_experiment(cfg.clone(), exec()).unwrap();
+        let b = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "{sel}: indexed async run not deterministic"
+        );
+        assert_eq!(a.rounds.len(), 6, "{sel}");
+        let last = a.rounds.last().unwrap();
+        let closed = last.cum_aggregated_secs.unwrap() + last.cum_waste_secs;
+        assert!(
+            (last.cum_resource_secs - closed).abs()
+                <= 1e-6 * last.cum_resource_secs.max(1.0),
+            "{sel}: accounting identity broken at 20k learners"
+        );
+    }
+}
+
+/// End-to-end at scale, against the materializing oracle: a 20k-learner
+/// lazy DynAvail **sync** cell through the indexed engine must stay
+/// byte-identical to the frozen reference's full-scan + materialized-select
+/// loop — the strongest pin that indexing changed cost, not results.
+#[test]
+fn sync_20k_dynavail_matches_reference_byte_for_byte() {
+    for sel in ["priority", "oort"] {
+        let cfg = ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 20_000,
+            rounds: 3,
+            target_participants: 5,
+            mode: RoundMode::Deadline { deadline: 60.0 },
+            avail: AvailMode::DynAvail,
+            selector: sel.into(),
+            mean_samples: 4,
+            test_per_class: 2,
+            eval_every: 2,
+            cooldown_rounds: 1,
+            lr: 0.1,
+            ..Default::default()
+        };
+        let kernel = run_experiment(cfg.clone(), exec()).unwrap();
+        let reference = run_reference_experiment(cfg, exec()).unwrap();
+        assert_eq!(
+            kernel.to_json().to_string(),
+            reference.to_json().to_string(),
+            "{sel}: indexed sync engine diverged from the frozen reference at 20k"
+        );
+    }
+}

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 use crate::aggregation::scaling::ScalingRule;
 use crate::data::partition::PartitionScheme;
 use crate::learners::HardwareScenario;
+use crate::scenario::faults::FaultConfig;
 use crate::util::json::{num, obj, Json};
 
 /// Round-termination regime (paper §5.1 "Experimental Scenarios", plus the
@@ -96,6 +97,9 @@ pub struct ExpConfig {
     pub seed: u64,
     /// Worker threads for the per-participant training loop.
     pub workers: usize,
+    /// Deterministic fault injection (all-off by default); see
+    /// [`crate::scenario::faults`].
+    pub faults: FaultConfig,
 }
 
 impl Default for ExpConfig {
@@ -128,6 +132,7 @@ impl Default for ExpConfig {
             test_per_class: 20,
             seed: 1,
             workers: 0, // 0 = auto
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -177,6 +182,7 @@ impl ExpConfig {
                 ));
             }
         }
+        self.faults.validate()?;
         if crate::selection::by_name(&self.selector).is_none() {
             return Err(anyhow!("unknown selector '{}'", self.selector));
         }
@@ -251,6 +257,7 @@ impl ExpConfig {
             ("test_per_class", num(self.test_per_class as f64)),
             ("seed", num(self.seed as f64)),
             ("workers", num(self.workers as f64)),
+            ("faults", self.faults.to_json()),
         ])
     }
 
@@ -313,6 +320,7 @@ impl ExpConfig {
             test_per_class: gu("test_per_class", d.test_per_class),
             seed: gf("seed", d.seed as f64) as u64,
             workers: gu("workers", d.workers),
+            faults: j.get("faults").map(FaultConfig::from_json).unwrap_or_default(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -392,6 +400,13 @@ mod tests {
         c.partition = PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Zipf };
         c.hardware = HardwareScenario::Hs3;
         c.oracle = true;
+        c.faults = FaultConfig {
+            flap: 0.125,
+            crash: 0.25,
+            delay_secs: 64.0,
+            fault_seed: 77,
+            ..Default::default()
+        };
         let j = c.to_json();
         let c2 = ExpConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(c2.label, "x");
@@ -402,6 +417,18 @@ mod tests {
         assert_eq!(c2.hardware, HardwareScenario::Hs3);
         assert!(c2.oracle);
         assert_eq!(c2.selector, "priority");
+        assert_eq!(c2.faults, c.faults);
+    }
+
+    #[test]
+    fn configs_without_faults_key_load_as_fault_free() {
+        // a pre-fault-layer config file (no "faults" object) loads all-off
+        let parsed = Json::parse(r#"{"mode": "oc", "selector": "oort"}"#).unwrap();
+        let mut c = ExpConfig::from_json(&parsed).unwrap();
+        assert!(!c.faults.is_active());
+        assert_eq!(c.selector, "oort");
+        c.faults.crash = 1.5;
+        assert!(c.validate().is_err(), "bad fault rates must be rejected");
     }
 
     #[test]

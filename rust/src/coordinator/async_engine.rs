@@ -19,6 +19,17 @@
 //!   exactly one of three buckets: aggregated, wasted, or still in flight
 //!   (`tests/substrate_props.rs` asserts the three always sum to spent).
 //!
+//! The deterministic fault model (`scenario::faults`) threads through the
+//! same life-cycle points as in the sync engines: flaps skip the spawn,
+//! crashes flow through the Dropout event, transit delays push the Arrival
+//! past the task end, corrupted updates are rejected by validation on
+//! arrival, duplicates are deduped at no cost. Crashed and corrupted
+//! devices are additionally **quarantined** for a cooldown: fault
+//! decisions are keyed on (learner, version), so without the quarantine a
+//! flagged device could respawn-and-fail forever at a stuck version.
+//! Every fault lands in the usual waste buckets, so the accounting
+//! identity below is unchanged.
+//!
 //! One `RoundRecord` is emitted per merge ("version"), so downstream
 //! metrics/figures treat async cells exactly like OC/DL cells. When nothing
 //! is in flight and nobody checks in, a failed round slot is burned —
@@ -70,6 +81,8 @@ struct AsyncState {
     selected: usize,
     dropouts: usize,
     discarded: usize,
+    /// Injected fault events observed during the interval.
+    faults: usize,
     events: usize,
     interval_start: f64,
     /// Time-integral of `in_flight` over the interval (for mean concurrency).
@@ -85,6 +98,7 @@ impl AsyncState {
         self.selected = 0;
         self.dropouts = 0;
         self.discarded = 0;
+        self.faults = 0;
         self.events = 0;
     }
 }
@@ -105,6 +119,7 @@ impl Coordinator {
             selected: 0,
             dropouts: 0,
             discarded: 0,
+            faults: 0,
             events: 0,
             interval_start: 0.0,
             conc_area: 0.0,
@@ -156,6 +171,17 @@ impl Coordinator {
                     // actually ended yet (the index decides)
                     self.population
                         .release(d.learner, st.version, now, self.selector.as_mut());
+                    if d.crashed {
+                        // fault injection: quarantine the crashed device for
+                        // a normal cooldown — without it, the (learner,
+                        // version)-keyed crash decision would respawn-and-
+                        // crash the same device forever at a stuck version
+                        self.population.begin_cooldown(
+                            d.learner,
+                            st.version + 1 + self.cfg.cooldown_rounds,
+                            self.selector.as_mut(),
+                        );
+                    }
                     self.selector.on_departure(st.version, d.learner, self.apt.mu());
                     self.async_fill(&mut st)?;
                 }
@@ -223,16 +249,36 @@ impl Coordinator {
         // SAFA-style selectors return the whole pool; async concurrency is
         // capped at the target either way
         selected.truncate(need);
-        // timing + dropout classification first (mirrors the sync engine)
-        let mut plans: Vec<(usize, f64, Option<f64>)> = Vec::with_capacity(selected.len());
+        let faults = self.cfg.faults;
+        // timing + dropout classification first (mirrors the sync engine);
+        // (id, task_secs, dropped_after, crashed-by-fault)
+        let mut plans: Vec<(usize, f64, Option<f64>, bool)> =
+            Vec::with_capacity(selected.len());
         for &id in &selected {
+            if faults.flaps(id, st.version) {
+                // fault injection: check-in flap — the slot is lost before
+                // the task ever starts. Counted in selected + dropouts like
+                // the sync engines, and quarantined like crash/corrupt: the
+                // (learner, version)-keyed decision would otherwise re-fire
+                // on every refill at a stuck version, inflating the
+                // counters and starving the slot.
+                self.population.begin_cooldown(
+                    id,
+                    st.version + 1 + self.cfg.cooldown_rounds,
+                    self.selector.as_mut(),
+                );
+                st.selected += 1;
+                st.dropouts += 1;
+                st.faults += 1;
+                continue;
+            }
             let n_samples = self.shards[id].len();
             let t = self
                 .population
                 .profile(id)
                 .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
             let avail = self.population.availability();
-            let dropped = if avail.available_through(id, now, t) {
+            let mut dropped = if avail.available_through(id, now, t) {
                 None
             } else {
                 // drops out at (approximately) the end of its current session
@@ -248,21 +294,33 @@ impl Coordinator {
                 }
                 Some(lo)
             };
-            plans.push((id, t, dropped));
+            let mut crashed = false;
+            if dropped.is_none() {
+                if let Some(frac) = faults.crashes(id, st.version) {
+                    // fault injection: mid-task crash — flows through the
+                    // Dropout event like a trace departure (plus quarantine)
+                    st.faults += 1;
+                    dropped = Some(frac * t);
+                    crashed = true;
+                }
+            }
+            plans.push((id, t, dropped, crashed));
         }
         // train NOW against the current global model: the async regime's
         // defining property is that this snapshot ages (by whole model
         // versions) while the device computes. All of this fill's tasks
         // share one snapshot, so they train on the worker pool together
         // (results come back in job order — determinism is unaffected).
+        // Corrupted tasks skip the real SGD: validation rejects them on
+        // arrival, so the model never sees their delta.
         let train_ids: Vec<usize> = plans
             .iter()
-            .filter(|(_, _, d)| d.is_none())
-            .map(|&(id, _, _)| id)
+            .filter(|&&(id, _, d, _)| d.is_none() && !faults.corrupts(id, st.version))
+            .map(|&(id, _, _, _)| id)
             .collect();
         let mut outcomes = self.train_participants(&train_ids)?.into_iter();
         let mut spawned = 0usize;
-        for (id, t, dropped) in plans {
+        for (id, t, dropped, crashed) in plans {
             match dropped {
                 Some(dt) if dt <= 0.0 => {
                     // availability boundary: the learner cannot even start.
@@ -272,34 +330,61 @@ impl Coordinator {
                     continue;
                 }
                 Some(dt) => {
-                    // partial work until the session ends; wasted at departure
+                    // partial work until the session (or the device) dies;
+                    // wasted at departure
                     self.accounting.spend(id, dt);
                     st.in_flight_secs += dt;
                     self.population.mark_busy(id, now + dt, self.selector.as_mut());
                     self.kernel.schedule(
                         now + dt,
                         EventClass::Departure,
-                        EngineEvent::Dropout(AsyncDrop { learner: id, spent: dt }),
+                        EngineEvent::Dropout(AsyncDrop { learner: id, spent: dt, crashed }),
                     );
                 }
                 None => {
-                    let outcome = outcomes
-                        .next()
-                        .expect("one training outcome per non-dropped plan")?;
-                    self.accounting.spend(id, t);
-                    st.in_flight_secs += t;
-                    self.population.mark_busy(id, now + t, self.selector.as_mut());
-                    self.kernel.schedule(
-                        now + t,
-                        EventClass::Delivery,
-                        EngineEvent::Arrival(AsyncTask {
+                    // fault injection: in-transit delay pushes the arrival
+                    // past the task end (the device stays reserved for the
+                    // upload, so no second task can overlap it)
+                    let deliver = match faults.delays(id, st.version) {
+                        Some(d) => {
+                            st.faults += 1;
+                            now + t + d
+                        }
+                        None => now + t,
+                    };
+                    let task = if faults.corrupts(id, st.version) {
+                        // fault injection: corrupted at source — rejected by
+                        // validation on arrival; no SGD was run, the empty
+                        // delta is never read
+                        st.faults += 1;
+                        AsyncTask {
+                            learner: id,
+                            delta: Vec::new(),
+                            mean_loss: 0.0,
+                            stat_util: 0.0,
+                            origin_version: st.version,
+                            duration: t,
+                        }
+                    } else {
+                        let outcome = outcomes
+                            .next()
+                            .expect("one training outcome per trained plan")?;
+                        AsyncTask {
                             learner: id,
                             delta: outcome.delta,
                             mean_loss: outcome.mean_loss,
                             stat_util: outcome.stat_util,
                             origin_version: st.version,
                             duration: t,
-                        }),
+                        }
+                    };
+                    self.accounting.spend(id, t);
+                    st.in_flight_secs += t;
+                    self.population.mark_busy(id, deliver, self.selector.as_mut());
+                    self.kernel.schedule(
+                        deliver,
+                        EventClass::Delivery,
+                        EngineEvent::Arrival(task),
                     );
                 }
             }
@@ -319,6 +404,26 @@ impl Coordinator {
         result: &mut ExperimentResult,
     ) -> Result<()> {
         let id = task.learner;
+        if self.cfg.faults.corrupts(id, task.origin_version) {
+            // fault injection: server-side validation rejects the corrupted
+            // update — missed feedback, no completion credit, and a
+            // quarantine cooldown: the (learner, version)-keyed corrupt
+            // decision would otherwise respawn-and-reject the same device
+            // forever at a stuck version
+            self.population.begin_cooldown(
+                id,
+                st.version + 1 + self.cfg.cooldown_rounds,
+                self.selector.as_mut(),
+            );
+            self.selector.on_departure(st.version, id, self.apt.mu());
+            self.async_discard(st, task.duration);
+            return Ok(());
+        }
+        if self.cfg.faults.duplicates(id, task.origin_version) {
+            // fault injection: the delivery arrived twice; the server
+            // dedupes the copy at no cost
+            st.faults += 1;
+        }
         let tau = st.version - task.origin_version;
         let within = st.max_staleness.map(|th| tau <= th).unwrap_or(true);
         if !within {
@@ -458,6 +563,7 @@ impl Coordinator {
             stale_updates: stale,
             dropouts: st.dropouts,
             discarded: st.discarded,
+            faults: st.faults,
             cum_resource_secs: self.accounting.cum_resource_secs,
             cum_waste_secs: self.accounting.cum_waste_secs,
             unique_participants: self.accounting.unique_participants(),
@@ -564,6 +670,37 @@ mod tests {
         let r = run_experiment(cfg, exec()).unwrap();
         let acc = r.final_accuracy().unwrap();
         assert!(acc > 0.3, "async tiny run failed to learn: {acc}");
+    }
+
+    #[test]
+    fn async_fault_injection_keeps_accounting_closed() {
+        use crate::coordinator::Coordinator;
+        use crate::scenario::faults::FaultConfig;
+        let mut cfg = async_cfg();
+        cfg.rounds = 10;
+        cfg.faults = FaultConfig {
+            flap: 0.2,
+            crash: 0.25,
+            delay: 0.4,
+            delay_secs: 20.0,
+            corrupt: 0.3,
+            duplicate: 0.3,
+            fault_seed: 13,
+        };
+        let mut coord = Coordinator::new(cfg.clone(), exec()).unwrap();
+        let r = coord.run().unwrap();
+        assert_eq!(r.rounds.len(), 10);
+        let injected: usize = r.rounds.iter().map(|x| x.faults).sum();
+        assert!(injected > 0, "fault rates this high must fire");
+        // identity: after the final sweep, spent == aggregated + wasted
+        let (spent, agg, wasted) = coord.accounting_totals();
+        assert!(
+            (spent - (agg + wasted)).abs() <= 1e-6 * spent.max(1.0),
+            "spent {spent} != aggregated {agg} + wasted {wasted}"
+        );
+        // and the whole faulty run stays deterministic
+        let b = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(r.to_json().to_string(), b.to_json().to_string());
     }
 
     #[test]

@@ -72,6 +72,12 @@ pub(crate) struct AsyncDrop {
     pub(crate) learner: usize,
     /// Partial device-seconds spent before dropping (all wasted).
     pub(crate) spent: f64,
+    /// Injected mid-task crash (vs a trace departure). Crashed devices are
+    /// quarantined for a cooldown on arrival of the Dropout event: fault
+    /// decisions are keyed on (learner, version), so without the cooldown
+    /// a crash-flagged learner could respawn-and-crash forever at a stuck
+    /// version (versions only advance on merges/burns).
+    pub(crate) crashed: bool,
 }
 
 /// Payloads flowing through the coordinator's event kernel.
@@ -320,16 +326,25 @@ impl Coordinator {
 
         // ---- per-participant task timing ---------------------------------
         // (id, completion_secs, dropped_after) — dropped_after = Some(t) if
-        // the learner leaves availability before finishing.
+        // the learner leaves availability (or crashes) before finishing.
+        let faults = self.cfg.faults;
         let mut tasks: Vec<(usize, f64, Option<f64>)> = Vec::with_capacity(selected.len());
         for &id in &selected {
+            if faults.flaps(id, round) {
+                // fault injection: check-in flap — the learner vanishes
+                // between selection and configuration, so the task never
+                // starts (no device time spent, the slot is simply lost)
+                rec.dropouts += 1;
+                rec.faults += 1;
+                continue;
+            }
             let n_samples = self.shards[id].len();
             let t = self
                 .population
                 .profile(id)
                 .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
             let avail = self.population.availability();
-            let dropped = if avail.available_through(id, now, t) {
+            let mut dropped = if avail.available_through(id, now, t) {
                 None
             } else {
                 // drops out at (approximately) the end of its current session
@@ -345,6 +360,14 @@ impl Coordinator {
                 }
                 Some(lo)
             };
+            if dropped.is_none() {
+                if let Some(frac) = faults.crashes(id, round) {
+                    // fault injection: mid-task crash — accounted exactly
+                    // like a trace dropout at the crash point
+                    rec.faults += 1;
+                    dropped = Some(frac * t);
+                }
+            }
             tasks.push((id, t, dropped));
         }
 
@@ -450,8 +473,14 @@ impl Coordinator {
         // ---- run real local training --------------------------------------
         // Fresh participants always train. Stragglers train unless the
         // oracle knows (or conservative analysis proves) the update dies.
+        // Corrupted updates are rejected by server validation at delivery,
+        // so their SGD is skipped too (the model never sees the delta).
+        let mut corrupted_fresh: Vec<usize> = Vec::new();
         let mut train_ids: Vec<(usize, f64, bool)> = Vec::new(); // (id, task_time, is_fresh)
         for &(id, t) in &fresh_ids {
+            if faults.corrupts(id, round) {
+                continue; // spend/waste accounted in the fresh spend loop
+            }
             train_ids.push((id, t, true));
         }
         for &(id, t) in &straggler_ids {
@@ -472,6 +501,15 @@ impl Coordinator {
             }
             self.accounting.spend(id, t);
             self.population.mark_busy(id, now + t, self.selector.as_mut());
+            if faults.corrupts(id, round) {
+                // fault injection: corrupted straggler update — validation
+                // rejects it on delivery, so the spend is pure waste and
+                // nothing is ever scheduled
+                self.accounting.waste(t);
+                rec.discarded += 1;
+                rec.faults += 1;
+                continue;
+            }
             if doomed(t) {
                 // Will certainly be discarded (no SAA, or staleness bound
                 // certainly exceeded): account the waste now and skip the
@@ -485,6 +523,14 @@ impl Coordinator {
         for &(id, t) in &fresh_ids {
             self.accounting.spend(id, t);
             self.population.mark_busy(id, now + t, self.selector.as_mut());
+            if faults.corrupts(id, round) {
+                // fault injection: corrupted fresh update — rejected at
+                // delivery, full spend wasted
+                self.accounting.waste(t);
+                rec.discarded += 1;
+                rec.faults += 1;
+                corrupted_fresh.push(id);
+            }
         }
 
         let outcomes = self.train_participants(
@@ -499,6 +545,7 @@ impl Coordinator {
             let outcome = outcome?;
             losses.push(outcome.mean_loss);
             if *is_fresh {
+                self.accounting.aggregate(*task_time);
                 feedback_completed.push((*id, outcome.stat_util, *task_time));
                 fresh_updates.push(UpdateEntry {
                     learner: *id,
@@ -506,8 +553,18 @@ impl Coordinator {
                     origin_round: round,
                 });
             } else {
+                let mut deliver_at = now + task_time;
+                if let Some(d) = faults.delays(*id, round) {
+                    // fault injection: the upload is delayed in transit —
+                    // it arrives late and may die to the staleness bound.
+                    // (Sync rounds model in-transit uploads only for
+                    // stragglers; within-window reports are atomic with the
+                    // round. The async engine delays every completion.)
+                    rec.faults += 1;
+                    deliver_at += d;
+                }
                 self.kernel.schedule(
-                    now + task_time,
+                    deliver_at,
                     EventClass::Delivery,
                     EngineEvent::StaleDelivery(PendingUpdate {
                         learner: *id,
@@ -527,6 +584,11 @@ impl Coordinator {
             let EngineEvent::StaleDelivery(p) = ev.payload else {
                 unreachable!("sync rounds schedule only stale deliveries");
             };
+            if faults.duplicates(p.learner, p.origin_round) {
+                // fault injection: the upload arrived twice; the server
+                // dedupes the second copy (no accounting impact)
+                rec.faults += 1;
+            }
             let tau = round - p.origin_round;
             let within = self
                 .cfg
@@ -534,6 +596,7 @@ impl Coordinator {
                 .map(|th| tau <= th)
                 .unwrap_or(true);
             if self.cfg.use_saa && within {
+                self.accounting.aggregate(p.duration);
                 feedback_completed.push((p.learner, p.stat_util, p.duration));
                 self.aggregated_stale.insert((p.learner, p.origin_round));
                 stale_updates.push(UpdateEntry {
@@ -580,7 +643,8 @@ impl Coordinator {
                 self.selector.as_mut(),
             );
         }
-        let missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
+        let mut missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
+        missed.extend(corrupted_fresh);
         self.selector.feedback(&RoundFeedback {
             round,
             completed: &feedback_completed,
@@ -657,6 +721,20 @@ impl Coordinator {
     /// Learner forecasters trained so far.
     pub fn trained_forecasters(&self) -> usize {
         self.population.trained_forecasters()
+    }
+
+    /// Terminal resource buckets: `(spent, aggregated, wasted)`
+    /// device-seconds. After [`Coordinator::run`] returns, every spent
+    /// second sits in exactly one terminal bucket — `spent == aggregated +
+    /// wasted` (in-flight work is swept to waste at the end) — the
+    /// accounting identity the fuzz harness checks on every sampled
+    /// scenario, sync and async alike.
+    pub fn accounting_totals(&self) -> (f64, f64, f64) {
+        (
+            self.accounting.cum_resource_secs,
+            self.accounting.cum_aggregated_secs,
+            self.accounting.cum_waste_secs,
+        )
     }
 }
 
@@ -932,6 +1010,57 @@ mod tests {
             r1.rounds.last().unwrap().cum_resource_secs,
             r2.rounds.last().unwrap().cum_resource_secs
         );
+    }
+
+    #[test]
+    fn sync_accounting_identity_closes_at_end() {
+        // spent == aggregated + wasted once the final leftover sweep ran —
+        // with and without injected faults
+        for faulty in [false, true] {
+            let mut cfg = base_cfg();
+            cfg.mode = RoundMode::Deadline { deadline: 2.0 };
+            cfg.use_saa = true;
+            cfg.staleness_threshold = Some(2);
+            if faulty {
+                cfg.faults = crate::scenario::faults::FaultConfig {
+                    flap: 0.2,
+                    crash: 0.3,
+                    delay: 0.4,
+                    delay_secs: 10.0,
+                    corrupt: 0.3,
+                    duplicate: 0.3,
+                    fault_seed: 5,
+                };
+            }
+            let mut coord = Coordinator::new(cfg, exec()).unwrap();
+            let r = coord.run().unwrap();
+            let (spent, agg, wasted) = coord.accounting_totals();
+            assert!(spent > 0.0);
+            assert!(
+                (spent - (agg + wasted)).abs() <= 1e-6 * spent.max(1.0),
+                "faulty={faulty}: spent {spent} != aggregated {agg} + wasted {wasted}"
+            );
+            if faulty {
+                let injected: usize = r.rounds.iter().map(|x| x.faults).sum();
+                assert!(injected > 0, "fault rates this high must fire");
+            } else {
+                assert!(r.rounds.iter().all(|x| x.faults == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn fault_free_config_is_byte_identical_to_default() {
+        // zero rates gate every fault decision: a nonzero fault_seed with
+        // all-zero rates must not perturb a single byte
+        let r1 = run_experiment(base_cfg(), exec()).unwrap();
+        let mut cfg = base_cfg();
+        cfg.faults = crate::scenario::faults::FaultConfig {
+            fault_seed: 999,
+            ..Default::default()
+        };
+        let r2 = run_experiment(cfg, exec()).unwrap();
+        assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //!
 //! Do not extend this module with new features; behavioral changes defeat
 //! its purpose. It intentionally rejects `RoundMode::Async`, which did not
-//! exist pre-refactor. One sanctioned joint edit (ROADMAP item): the seed's
-//! `train_loss: NaN` emission for nothing-trained rounds was fixed to
-//! `None`/null **in both engines in the same commit**, so the equivalence
-//! suite pins the fixed pair exactly as it pinned the buggy pair.
+//! exist pre-refactor. Two sanctioned joint edits, each applied **in both
+//! engines in the same commit** so the equivalence suite pins the pair:
+//! the seed's `train_loss: NaN` emission for nothing-trained rounds was
+//! fixed to `None`/null, and the deterministic fault model
+//! (`scenario::faults`: flap / crash / delay / corrupt / duplicate) is
+//! threaded through the same life-cycle points as in the kernel engine so
+//! the differential fuzz harness can compare fault-injected cells too.
 //!
 //! One deliberate tradeoff: this oracle rides the kernel-backed
 //! `DeliveryQueue` rather than carrying its own copy of the old
@@ -242,15 +245,26 @@ impl ReferenceCoordinator {
 
         // ---- per-participant task timing ---------------------------------
         // (id, completion_secs, dropped_after) — dropped_after = Some(t) if
-        // the learner leaves availability before finishing.
+        // the learner leaves availability (or crashes) before finishing.
+        // The fault model (scenario::faults) is threaded here exactly as in
+        // the kernel engine — a sanctioned joint edit, like the train_loss
+        // fix, so the equivalence suite pins the fault paths of both
+        // engines as a pair.
+        let faults = self.cfg.faults;
         let mut tasks: Vec<(usize, f64, Option<f64>)> = Vec::with_capacity(selected.len());
         for &id in &selected {
+            if faults.flaps(id, round) {
+                // fault injection: check-in flap — the task never starts
+                rec.dropouts += 1;
+                rec.faults += 1;
+                continue;
+            }
             let n_samples = self.shards[id].len();
             let t = self
                 .profiles
                 .get(id)
                 .completion_time(n_samples, self.cfg.local_epochs, self.model_bytes);
-            let dropped = if self.avail.available_through(id, now, t) {
+            let mut dropped = if self.avail.available_through(id, now, t) {
                 None
             } else {
                 // drops out at (approximately) the end of its current session
@@ -266,6 +280,14 @@ impl ReferenceCoordinator {
                 }
                 Some(lo)
             };
+            if dropped.is_none() {
+                if let Some(frac) = faults.crashes(id, round) {
+                    // fault injection: mid-task crash, accounted like a
+                    // trace dropout at the crash point
+                    rec.faults += 1;
+                    dropped = Some(frac * t);
+                }
+            }
             tasks.push((id, t, dropped));
         }
 
@@ -368,8 +390,14 @@ impl ReferenceCoordinator {
         // ---- run real local training --------------------------------------
         // Fresh participants always train. Stragglers train unless the
         // oracle knows (or conservative analysis proves) the update dies.
+        // Corrupted updates are rejected by server validation at delivery,
+        // so their SGD is skipped too (the model never sees the delta).
+        let mut corrupted_fresh: Vec<usize> = Vec::new();
         let mut train_ids: Vec<(usize, f64, bool)> = Vec::new(); // (id, task_time, is_fresh)
         for &(id, t) in &fresh_ids {
+            if faults.corrupts(id, round) {
+                continue; // spend/waste accounted in the fresh spend loop
+            }
             train_ids.push((id, t, true));
         }
         for &(id, t) in &straggler_ids {
@@ -390,6 +418,14 @@ impl ReferenceCoordinator {
             }
             self.accounting.spend(id, t);
             self.busy_until[id] = now + t;
+            if faults.corrupts(id, round) {
+                // fault injection: corrupted straggler update — rejected at
+                // delivery, the spend is pure waste, nothing scheduled
+                self.accounting.waste(t);
+                rec.discarded += 1;
+                rec.faults += 1;
+                continue;
+            }
             if doomed(t) {
                 // Will certainly be discarded (no SAA, or staleness bound
                 // certainly exceeded): account the waste now and skip the
@@ -403,6 +439,14 @@ impl ReferenceCoordinator {
         for &(id, t) in &fresh_ids {
             self.accounting.spend(id, t);
             self.busy_until[id] = now + t;
+            if faults.corrupts(id, round) {
+                // fault injection: corrupted fresh update — rejected at
+                // delivery, full spend wasted
+                self.accounting.waste(t);
+                rec.discarded += 1;
+                rec.faults += 1;
+                corrupted_fresh.push(id);
+            }
         }
 
         let outcomes = self.train_participants(
@@ -417,6 +461,7 @@ impl ReferenceCoordinator {
             let outcome = outcome?;
             losses.push(outcome.mean_loss);
             if *is_fresh {
+                self.accounting.aggregate(*task_time);
                 feedback_completed.push((*id, outcome.stat_util, *task_time));
                 fresh_updates.push(UpdateEntry {
                     learner: *id,
@@ -424,8 +469,14 @@ impl ReferenceCoordinator {
                     origin_round: round,
                 });
             } else {
+                let mut deliver_at = now + task_time;
+                if let Some(d) = faults.delays(*id, round) {
+                    // fault injection: upload delayed in transit
+                    rec.faults += 1;
+                    deliver_at += d;
+                }
                 self.pending.push(
-                    now + task_time,
+                    deliver_at,
                     PendingUpdate {
                         learner: *id,
                         delta: Some(outcome.delta),
@@ -441,6 +492,10 @@ impl ReferenceCoordinator {
         // ---- collect stale deliveries that landed during this round -------
         let mut stale_updates: Vec<UpdateEntry> = Vec::new();
         for p in self.pending.due(round_end) {
+            if faults.duplicates(p.item.learner, p.item.origin_round) {
+                // fault injection: duplicate delivery, deduped by the server
+                rec.faults += 1;
+            }
             let tau = round - p.item.origin_round;
             let within = self
                 .cfg
@@ -449,6 +504,7 @@ impl ReferenceCoordinator {
                 .unwrap_or(true);
             if self.cfg.use_saa && within {
                 if let Some(delta) = p.item.delta {
+                    self.accounting.aggregate(p.item.duration);
                     feedback_completed.push((
                         p.item.learner,
                         p.item.stat_util,
@@ -470,7 +526,7 @@ impl ReferenceCoordinator {
 
         rec.fresh_updates = fresh_updates.len();
         rec.stale_updates = stale_updates.len();
-        // The ONE sanctioned post-freeze edit (see module docs): the seed
+        // A sanctioned post-freeze edit (see module docs): the seed
         // emitted f64::NAN here for nothing-trained rounds, which the JSON
         // writer rendered as invalid `NaN`. Both engines now record None
         // (-> JSON null), changed together so byte-equivalence still pins
@@ -499,7 +555,8 @@ impl ReferenceCoordinator {
         for (id, _, _) in &feedback_completed {
             self.cooldown_until[*id] = round + 1 + self.cfg.cooldown_rounds;
         }
-        let missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
+        let mut missed: Vec<usize> = straggler_ids.iter().map(|&(id, _)| id).collect();
+        missed.extend(corrupted_fresh);
         self.selector.feedback(&RoundFeedback {
             round,
             completed: &feedback_completed,
@@ -586,6 +643,17 @@ impl ReferenceCoordinator {
     /// Test-set evaluation: (mean loss, top-1 accuracy).
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         evaluate_params(self.exec.as_ref(), &self.test, &self.global)
+    }
+
+    /// Terminal resource buckets `(spent, aggregated, wasted)` — mirrors
+    /// [`super::Coordinator::accounting_totals`] so the fuzz harness can
+    /// check the accounting identity on both engines.
+    pub fn accounting_totals(&self) -> (f64, f64, f64) {
+        (
+            self.accounting.cum_resource_secs,
+            self.accounting.cum_aggregated_secs,
+            self.accounting.cum_waste_secs,
+        )
     }
 
     /// This learner's personal forecaster, trained at first touch on (two

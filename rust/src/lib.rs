@@ -38,5 +38,6 @@ pub mod aggregation;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod scenario;
 pub mod sweep;
 pub mod figures;

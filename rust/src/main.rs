@@ -10,6 +10,11 @@
 //!                 -> BENCH_population.json) and --suite selection
 //!                 (per-selector indexed vs materializing selection cost
 //!                 -> BENCH_selection.json)
+//!   scenario      list the registered scenario presets (run with
+//!                 `relay run --scenario <name>`)
+//!   fuzz          differential fuzz runner: random scenario+seed tuples ->
+//!                 engine-vs-reference + workers-1-vs-N + accounting/JSON
+//!                 invariants; failures shrink into tests/corpus/
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
 //!   validate      check artifacts + backends and exit
@@ -23,6 +28,7 @@ use relay::coordinator::run_experiment;
 use relay::data::partition::PartitionScheme;
 use relay::figures::{self, runner::FigureOpts};
 use relay::runtime::{self, Backend};
+use relay::scenario::faults::FaultConfig;
 use relay::util::cli::Args;
 
 fn main() {
@@ -64,9 +70,11 @@ fn real_main() -> Result<()> {
         Some("trace-stats") => figures::run("14", &figure_opts(&args)?),
         Some("forecast-eval") => figures::run("forecast", &figure_opts(&args)?),
         Some("bench") => cmd_bench(&args),
+        Some("scenario") => cmd_scenario(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some("validate") => cmd_validate(&args),
         Some(other) => Err(anyhow!(
-            "unknown command '{other}' (run|sweep|figure|bench|trace-stats|forecast-eval|validate)"
+            "unknown command '{other}' (run|sweep|figure|bench|scenario|fuzz|trace-stats|forecast-eval|validate)"
         )),
         None => {
             print_help();
@@ -76,7 +84,11 @@ fn real_main() -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let mut cfg: ExpConfig = if let Some(path) = args.str_opt("config") {
+    let mut cfg: ExpConfig = if let Some(name) = args.str_opt("scenario") {
+        relay::scenario::by_name(name)
+            .ok_or_else(|| anyhow!("unknown scenario '{name}' (list them with `relay scenario`)"))?
+            .cfg
+    } else if let Some(path) = args.str_opt("config") {
         ExpConfig::load(path)?
     } else {
         preset(&args.str_or("benchmark", "speech"))?
@@ -136,6 +148,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 ))
             }
         }
+    }
+    if let Some(spec) = args.str_opt("faults") {
+        cfg.faults = FaultConfig::parse_spec(spec)?;
     }
     if cfg.label.is_empty() {
         cfg.label = format!("{}-{}", cfg.selector, cfg.partition.label());
@@ -215,6 +230,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for p in args.list_or("partitions", "iid") {
         partitions
             .push(PartitionScheme::parse(&p).ok_or_else(|| anyhow!("bad partition '{p}'"))?);
+    }
+    if let Some(spec) = args.str_opt("faults") {
+        base.faults = FaultConfig::parse_spec(spec)?;
     }
     let n_seeds = args.usize_or("seeds", 3).max(1);
     let seeds: Vec<u64> = (0..n_seeds as u64).map(|s| base.seed + s * 1000).collect();
@@ -555,6 +573,81 @@ fn cmd_bench_selection(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `relay scenario`: list the registered scenario presets.
+fn cmd_scenario(_args: &Args) -> Result<()> {
+    println!("{:<18} {:<34} {}", "name", "cell", "summary");
+    for p in relay::scenario::all() {
+        let avail = match p.cfg.avail {
+            AvailMode::AllAvail => "all",
+            AvailMode::DynAvail => "dyn",
+        };
+        let mut cell = format!(
+            "{}-{}-{}-{} n={}",
+            p.cfg.selector,
+            p.cfg.mode.label(),
+            avail,
+            p.cfg.partition.label(),
+            p.cfg.total_learners
+        );
+        if p.cfg.faults.is_active() {
+            cell = format!("{cell} +{}", p.cfg.faults.label());
+        }
+        println!("{:<18} {:<34} {}", p.name, cell, p.summary);
+    }
+    println!("\nrun one with: relay run --scenario <name> [--learners N] [--rounds N] ...");
+    Ok(())
+}
+
+/// `relay fuzz`: the differential fuzz runner (see `scenario::fuzz`).
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use relay::scenario::fuzz::{run_fuzz, FuzzOpts};
+    // resolve the corpus dir at runtime (a compile-time manifest path would
+    // bake the build machine's tree into shipped binaries): workspace root,
+    // crate root, or a local fallback
+    let corpus_default = if std::path::Path::new("rust/tests/corpus").is_dir() {
+        "rust/tests/corpus"
+    } else if std::path::Path::new("tests/corpus").is_dir() {
+        "tests/corpus"
+    } else {
+        "fuzz-corpus"
+    };
+    let opts = FuzzOpts {
+        iters: args.usize_or("iters", 100),
+        seed: args.u64_or("seed", 0x5EED),
+        smoke: args.bool("smoke"),
+        corpus_dir: std::path::PathBuf::from(args.str_or("corpus", corpus_default)),
+        sabotage: args.bool("sabotage"),
+        max_failures: args.usize_or("max-failures", 5),
+        verbose: args.bool("verbose"),
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_fuzz(&opts)?;
+    println!(
+        "fuzz: {} scenario+seed tuples checked in {:.1}s, {} failure(s)",
+        out.iters,
+        t0.elapsed().as_secs_f64(),
+        out.failures.len()
+    );
+    for f in &out.failures {
+        println!("  iter {:>4}: {}", f.iter, f.failure);
+        if let Some(p) = &f.corpus_path {
+            println!("    shrunk repro: {}", p.display());
+        }
+    }
+    if out.failures.is_empty() {
+        Ok(())
+    } else if opts.sabotage {
+        println!("(sabotage mode: the planted invariant only — not a real bug)");
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "{} invariant violation(s) found — shrunk repros persisted to {}",
+            out.failures.len(),
+            opts.corpus_dir.display()
+        ))
+    }
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -571,14 +664,17 @@ fn print_help() {
         "relay — RELAY: resource-efficient federated learning (paper reproduction)
 
 USAGE:
-  relay run   [--benchmark speech|cifar|openimage|nlp] [--selector random|oort|priority|safa|relay]
+  relay run   [--benchmark speech|cifar|openimage|nlp] [--scenario NAME] [--selector random|oort|priority|safa|relay]
               [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
               [--avail all|dyn] [--deadline SECS] [--buffer-k K [--max-staleness T]]
+              [--faults flap=P,crash=P,delay=P,delay-secs=S,corrupt=P,dup=P,seed=N]
               [--backend pjrt|native] [--config cfg.json] [--out r.json]
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
-              [--report results/sweep.json] [--quiet]
+              [--faults spec] [--report results/sweep.json] [--quiet]
+  relay scenario                (list the registered scenario presets)
+  relay fuzz  [--iters 100] [--seed N] [--smoke] [--corpus DIR] [--max-failures 5] [--sabotage] [--verbose]
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
   relay bench [--suite population|selection|all] [--populations 100000,1000000]
               [--merges 50] [--participants 100] [--selections 200] [--workers N]

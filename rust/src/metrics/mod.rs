@@ -25,6 +25,9 @@ pub struct RoundRecord {
     pub stale_updates: usize,
     pub dropouts: usize,
     pub discarded: usize,
+    /// Injected fault events observed this round (flaps, crashes, corrupted
+    /// or duplicate deliveries, transit delays); 0 on fault-free runs.
+    pub faults: usize,
     /// Resource-seconds consumed this round (compute + comm of everyone).
     pub resource_secs: f64,
     pub cum_resource_secs: f64,
@@ -181,6 +184,7 @@ impl ExperimentResult {
                         ("stale", num(r.stale_updates as f64)),
                         ("dropouts", num(r.dropouts as f64)),
                         ("discarded", num(r.discarded as f64)),
+                        ("faults", num(r.faults as f64)),
                         ("resource_secs", num(r.resource_secs)),
                         ("cum_resource_secs", num(r.cum_resource_secs)),
                         ("cum_waste_secs", num(r.cum_waste_secs)),

@@ -1,0 +1,348 @@
+//! Deterministic fault injection: seed-derived perturbations of the round
+//! life-cycle, threaded through both round engines (and the frozen
+//! reference, so the differential suite pins the fault paths too).
+//!
+//! Every decision is a **pure function** of `(fault_seed, fault kind,
+//! learner, round)` — no RNG stream is consumed — so faults fire at the
+//! same points regardless of worker count, engine, or event interleaving,
+//! and an all-zero [`FaultConfig`] (the default) is bit-for-bit the
+//! pre-fault behavior. The modeled faults, each accounted exactly like the
+//! failure mode it perturbs (nothing leaks out of the
+//! `spent == aggregated + wasted + in-flight` identity):
+//!
+//! * **flap** — a selected learner vanishes between selection and
+//!   configuration (Bonawitz et al.'s phase-2 drop-offs): the task never
+//!   starts, the slot is lost, no device time is spent;
+//! * **crash** — a learner that would have completed dies mid-task at a
+//!   seed-derived fraction of its duration: partial spend, all wasted,
+//!   accounted like a trace dropout;
+//! * **delay** — a finished upload is held in transit for extra seconds:
+//!   the update arrives late and may die to the round window or the
+//!   staleness bound;
+//! * **corrupt** — the update arrives mangled and server-side validation
+//!   rejects it: full spend, all wasted, the model never sees the delta;
+//! * **duplicate** — an upload is received twice and the copy is deduped:
+//!   no accounting impact, but the rejection path is exercised and counted.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::splitmix64;
+
+// Fault-kind salts for the decision hash (distinct per decision stream).
+const KIND_FLAP: u64 = 1;
+const KIND_CRASH: u64 = 2;
+const KIND_CRASH_FRAC: u64 = 3;
+const KIND_DELAY: u64 = 4;
+const KIND_DELAY_AMT: u64 = 5;
+const KIND_CORRUPT: u64 = 6;
+const KIND_DUPLICATE: u64 = 7;
+
+/// Fault-injection knobs (all probabilities per selected-learner-per-round;
+/// the default is all-off). Carried by `ExpConfig` and serialized with it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// P(a selected learner never starts: check-in flap before
+    /// configuration).
+    pub flap: f64,
+    /// P(a learner that would have completed crashes mid-task).
+    pub crash: f64,
+    /// P(a finished upload is delayed in transit).
+    pub delay: f64,
+    /// Mean extra upload delay in seconds when `delay` fires (the actual
+    /// delay is seed-derived in `[0.5, 1.5] * delay_secs`).
+    pub delay_secs: f64,
+    /// P(an update arrives corrupted and is rejected by validation).
+    pub corrupt: f64,
+    /// P(an accepted delivery is received twice; the copy is deduped).
+    pub duplicate: f64,
+    /// Seed of the fault stream, independent of the experiment seed so the
+    /// same fault pattern can be replayed across scenario axes.
+    pub fault_seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            flap: 0.0,
+            crash: 0.0,
+            delay: 0.0,
+            delay_secs: 120.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+            fault_seed: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault class can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.flap > 0.0
+            || self.crash > 0.0
+            || self.delay > 0.0
+            || self.corrupt > 0.0
+            || self.duplicate > 0.0
+    }
+
+    /// Uniform-[0,1) decision value for one `(kind, learner, round)` cell:
+    /// two chained splitmix64 rounds over the xor-folded coordinates.
+    fn u01(&self, kind: u64, learner: usize, round: usize) -> f64 {
+        let mut s = self.fault_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ kind.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ (learner as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+            ^ (round as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let a = splitmix64(&mut s);
+        let b = splitmix64(&mut s);
+        ((a ^ b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Check-in flap: the selected learner never starts its task.
+    pub fn flaps(&self, learner: usize, round: usize) -> bool {
+        self.flap > 0.0 && self.u01(KIND_FLAP, learner, round) < self.flap
+    }
+
+    /// Mid-task crash: `Some(fraction)` of the task duration completed
+    /// before the crash (in `[0.05, 0.95]`, never a zero-length task).
+    pub fn crashes(&self, learner: usize, round: usize) -> Option<f64> {
+        if self.crash > 0.0 && self.u01(KIND_CRASH, learner, round) < self.crash {
+            Some(0.05 + 0.9 * self.u01(KIND_CRASH_FRAC, learner, round))
+        } else {
+            None
+        }
+    }
+
+    /// In-transit upload delay: `Some(extra seconds)` when it fires.
+    pub fn delays(&self, learner: usize, round: usize) -> Option<f64> {
+        if self.delay > 0.0 && self.u01(KIND_DELAY, learner, round) < self.delay {
+            Some(self.delay_secs * (0.5 + self.u01(KIND_DELAY_AMT, learner, round)))
+        } else {
+            None
+        }
+    }
+
+    /// Corrupted update: rejected by server validation on delivery.
+    pub fn corrupts(&self, learner: usize, round: usize) -> bool {
+        self.corrupt > 0.0 && self.u01(KIND_CORRUPT, learner, round) < self.corrupt
+    }
+
+    /// Duplicate delivery: the server receives (and dedupes) a second copy.
+    pub fn duplicates(&self, learner: usize, round: usize) -> bool {
+        self.duplicate > 0.0 && self.u01(KIND_DUPLICATE, learner, round) < self.duplicate
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("flap", self.flap),
+            ("crash", self.crash),
+            ("delay", self.delay),
+            ("corrupt", self.corrupt),
+            ("duplicate", self.duplicate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) || !rate.is_finite() {
+                return Err(anyhow!("fault rate '{name}' must be in [0,1], got {rate}"));
+            }
+        }
+        if !self.delay_secs.is_finite() || self.delay_secs < 0.0 {
+            return Err(anyhow!(
+                "fault delay_secs must be finite and >= 0, got {}",
+                self.delay_secs
+            ));
+        }
+        if self.fault_seed > (1u64 << 53) {
+            // the seed round-trips through a JSON f64; beyond 2^53 that
+            // silently corrupts it and replayed corpus entries would fire
+            // different faults than the run that persisted them
+            return Err(anyhow!(
+                "fault_seed must fit in 53 bits for exact JSON round-trips, got {}",
+                self.fault_seed
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compact axis label for sweep cells / reports, e.g.
+    /// `flap0.1+crash0.25`. Empty when inactive.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.flap > 0.0 {
+            parts.push(format!("flap{}", self.flap));
+        }
+        if self.crash > 0.0 {
+            parts.push(format!("crash{}", self.crash));
+        }
+        if self.delay > 0.0 {
+            parts.push(format!("delay{}", self.delay));
+        }
+        if self.corrupt > 0.0 {
+            parts.push(format!("corrupt{}", self.corrupt));
+        }
+        if self.duplicate > 0.0 {
+            parts.push(format!("dup{}", self.duplicate));
+        }
+        parts.join("+")
+    }
+
+    /// Parse a CLI spec like `flap=0.1,crash=0.2,delay=0.3,delay-secs=300,
+    /// corrupt=0.05,dup=0.1,seed=7`.
+    pub fn parse_spec(spec: &str) -> Result<FaultConfig> {
+        let mut f = FaultConfig::default();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--faults entries are key=value, got '{part}'"))?;
+            match k {
+                "flap" => f.flap = v.parse()?,
+                "crash" => f.crash = v.parse()?,
+                "delay" => f.delay = v.parse()?,
+                "delay-secs" | "delay_secs" => f.delay_secs = v.parse()?,
+                "corrupt" => f.corrupt = v.parse()?,
+                "dup" | "duplicate" => f.duplicate = v.parse()?,
+                "seed" => f.fault_seed = v.parse()?,
+                other => return Err(anyhow!("unknown fault knob '{other}'")),
+            }
+        }
+        f.validate()?;
+        Ok(f)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("flap", num(self.flap)),
+            ("crash", num(self.crash)),
+            ("delay", num(self.delay)),
+            ("delay_secs", num(self.delay_secs)),
+            ("corrupt", num(self.corrupt)),
+            ("duplicate", num(self.duplicate)),
+            ("fault_seed", num(self.fault_seed as f64)),
+        ])
+    }
+
+    /// Lenient load: missing keys fall back to the defaults, so configs
+    /// written before the fault layer existed keep loading unchanged.
+    pub fn from_json(j: &Json) -> FaultConfig {
+        let d = FaultConfig::default();
+        let gf = |k: &str, dflt: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(dflt);
+        FaultConfig {
+            flap: gf("flap", d.flap),
+            crash: gf("crash", d.crash),
+            delay: gf("delay", d.delay),
+            delay_secs: gf("delay_secs", d.delay_secs),
+            corrupt: gf("corrupt", d.corrupt),
+            duplicate: gf("duplicate", d.duplicate),
+            fault_seed: gf("fault_seed", d.fault_seed as f64) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inactive_and_never_fires() {
+        let f = FaultConfig::default();
+        assert!(!f.is_active());
+        for learner in 0..50 {
+            for round in 0..20 {
+                assert!(!f.flaps(learner, round));
+                assert!(f.crashes(learner, round).is_none());
+                assert!(f.delays(learner, round).is_none());
+                assert!(!f.corrupts(learner, round));
+                assert!(!f.duplicates(learner, round));
+            }
+        }
+        assert_eq!(f.label(), "");
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_calibrated() {
+        let f = FaultConfig {
+            flap: 0.3,
+            crash: 0.5,
+            corrupt: 0.1,
+            fault_seed: 42,
+            ..Default::default()
+        };
+        let g = f; // same knobs => same decisions
+        let mut flaps = 0usize;
+        let mut crashes = 0usize;
+        let mut corrupts = 0usize;
+        let n = 20_000usize;
+        for i in 0..n {
+            let (learner, round) = (i % 500, i / 500);
+            assert_eq!(f.flaps(learner, round), g.flaps(learner, round));
+            assert_eq!(f.crashes(learner, round), g.crashes(learner, round));
+            flaps += usize::from(f.flaps(learner, round));
+            if let Some(frac) = f.crashes(learner, round) {
+                crashes += 1;
+                assert!((0.05..=0.95).contains(&frac));
+            }
+            corrupts += usize::from(f.corrupts(learner, round));
+        }
+        let rate = |c: usize| c as f64 / n as f64;
+        assert!((rate(flaps) - 0.3).abs() < 0.02, "flap rate {}", rate(flaps));
+        assert!((rate(crashes) - 0.5).abs() < 0.02, "crash rate {}", rate(crashes));
+        assert!((rate(corrupts) - 0.1).abs() < 0.02, "corrupt rate {}", rate(corrupts));
+    }
+
+    #[test]
+    fn different_seeds_decide_differently() {
+        let a = FaultConfig { crash: 0.5, fault_seed: 1, ..Default::default() };
+        let b = FaultConfig { crash: 0.5, fault_seed: 2, ..Default::default() };
+        let diff = (0..2000)
+            .filter(|&i| a.crashes(i, 0).is_some() != b.crashes(i, 0).is_some())
+            .count();
+        assert!(diff > 200, "seeds should decorrelate decisions, diff={diff}");
+    }
+
+    #[test]
+    fn delay_scales_with_delay_secs() {
+        let f = FaultConfig {
+            delay: 1.0,
+            delay_secs: 100.0,
+            fault_seed: 3,
+            ..Default::default()
+        };
+        for i in 0..500 {
+            let d = f.delays(i, 1).expect("delay=1.0 always fires");
+            assert!((50.0..=150.0).contains(&d), "delay {d} outside [0.5,1.5]*100");
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_labels() {
+        let f = FaultConfig::parse_spec(
+            "flap=0.1,crash=0.25,delay=0.5,delay-secs=300,corrupt=0.05,dup=0.2,seed=9",
+        )
+        .unwrap();
+        assert_eq!(f.flap, 0.1);
+        assert_eq!(f.crash, 0.25);
+        assert_eq!(f.delay_secs, 300.0);
+        assert_eq!(f.duplicate, 0.2);
+        assert_eq!(f.fault_seed, 9);
+        assert_eq!(f.label(), "flap0.1+crash0.25+delay0.5+corrupt0.05+dup0.2");
+        assert!(FaultConfig::parse_spec("bogus=1").is_err());
+        assert!(FaultConfig::parse_spec("flap=1.5").is_err());
+        assert!(FaultConfig::parse_spec("flap").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_lenient_defaults() {
+        let f = FaultConfig {
+            flap: 0.125,
+            crash: 0.5,
+            delay: 0.25,
+            delay_secs: 64.0,
+            corrupt: 0.0625,
+            duplicate: 0.75,
+            fault_seed: 123,
+        };
+        let j = Json::parse(&f.to_json().to_string()).unwrap();
+        assert_eq!(FaultConfig::from_json(&j), f);
+        // configs without a faults object load as all-off
+        let empty = Json::parse("{}").unwrap();
+        assert_eq!(FaultConfig::from_json(&empty), FaultConfig::default());
+    }
+}

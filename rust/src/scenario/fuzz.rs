@@ -1,0 +1,569 @@
+//! The differential fuzz harness (`relay fuzz`): sample random
+//! scenario+seed tuples from the whole config space (axes × fault mixes),
+//! run each through a battery of engine invariants, and **shrink** any
+//! failing tuple to a minimal config persisted into a replayable regression
+//! corpus under `rust/tests/corpus/` (re-run by `tests/fuzz_corpus.rs` on
+//! every push).
+//!
+//! Checks per sampled case:
+//!
+//! * **JSON validity** — the `ExperimentResult` serializes to parseable
+//!   JSON with no non-finite values (the class of bug the seed's
+//!   `train_loss: NaN` belonged to);
+//! * **structural invariants** — one record per round/merge, monotone
+//!   cumulative accounting, waste ≤ spent, `failed ⇔ nothing aggregated`,
+//!   async concurrency within `[0, target]`, async-only fields null on
+//!   sync records;
+//! * **accounting identity** — `spent == aggregated + wasted` once the
+//!   run's final sweep has retired all in-flight work (both engines track
+//!   the aggregated bucket now, so the identity closes for sync *and*
+//!   async cells, fault-injected or not);
+//! * **worker invariance** — byte-identical output at `workers = 1` vs `8`;
+//! * **differential** — for the round-synchronous modes, byte-identical
+//!   output vs the frozen pre-refactor reference engine.
+//!
+//! Shrinking is greedy: a fixed list of simplifying transformations
+//! (zero a fault rate, drop an axis to its simplest value, halve a size)
+//! is applied repeatedly, keeping a transformation only when the failure
+//! still reproduces, until no transformation makes the config smaller —
+//! the persisted repro is locally minimal by construction.
+//!
+//! `--sabotage` plants a fake invariant ("no stale update is ever
+//! aggregated") so the find → shrink → corpus pipeline can be exercised
+//! and tested end-to-end without a real engine bug.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{AvailMode, ExpConfig, RoundMode};
+use crate::coordinator::{run_experiment, run_reference_experiment, Coordinator};
+use crate::data::partition::PartitionScheme;
+use crate::metrics::ExperimentResult;
+use crate::runtime::{builtin_variant, Executor, NativeExecutor};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+use super::faults::FaultConfig;
+
+/// Relative tolerance for float accounting comparisons (sums of the same
+/// terms in different orders).
+const REL_EPS: f64 = 1e-6;
+
+/// Fuzz-run knobs (CLI: `relay fuzz`).
+pub struct FuzzOpts {
+    /// Scenario+seed tuples to sample.
+    pub iters: usize,
+    /// Root seed of the tuple stream (each iter replays from `seed`+iter).
+    pub seed: u64,
+    /// Smaller populations/rounds for CI smoke runs.
+    pub smoke: bool,
+    /// Where shrunk repros are persisted.
+    pub corpus_dir: PathBuf,
+    /// Plant a fake invariant violation to demo the shrink pipeline.
+    pub sabotage: bool,
+    /// Stop after this many failures.
+    pub max_failures: usize,
+    /// Per-iteration progress lines.
+    pub verbose: bool,
+}
+
+/// One found-and-shrunk failure.
+pub struct FuzzFailure {
+    pub iter: usize,
+    pub failure: String,
+    pub shrunk: ExpConfig,
+    pub corpus_path: Option<PathBuf>,
+}
+
+/// The harvest of one fuzz run.
+pub struct FuzzOutcome {
+    /// Iterations actually executed (< `opts.iters` when the run stopped
+    /// early at `max_failures`).
+    pub iters: usize,
+    pub failures: Vec<FuzzFailure>,
+}
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// Draw one random scenario config from the full axis × fault space.
+/// Sizes are kept tiny (`smoke` even tinier) so a case costs milliseconds.
+pub fn sample_config(rng: &mut Rng, smoke: bool) -> ExpConfig {
+    let selectors = ["random", "oort", "priority", "safa"];
+    let partitions = ["iid", "fedscale", "label-balanced", "label-uniform", "label-zipf"];
+    let (max_learners, max_rounds) = if smoke { (24, 4) } else { (64, 7) };
+    let mut cfg = ExpConfig {
+        variant: "tiny".into(),
+        lr: 0.1,
+        ..Default::default()
+    };
+    cfg.total_learners = rng.range(4, max_learners + 1);
+    cfg.rounds = rng.range(2, max_rounds + 1);
+    cfg.target_participants = rng.range(1, (cfg.total_learners / 2).max(2));
+    cfg.mean_samples = rng.range(4, 10);
+    cfg.test_per_class = 2;
+    cfg.eval_every = rng.range(2, 4);
+    cfg.cooldown_rounds = rng.below(3);
+    cfg.min_round_duration = if rng.bool(0.7) { 0.0 } else { 30.0 };
+    cfg.selector = selectors[rng.below(selectors.len())].into();
+    cfg.partition =
+        PartitionScheme::parse(partitions[rng.below(partitions.len())]).expect("known scheme");
+    cfg.avail = if rng.bool(0.5) { AvailMode::AllAvail } else { AvailMode::DynAvail };
+    cfg.use_saa = rng.bool(0.6);
+    cfg.staleness_threshold = if rng.bool(0.5) { Some(rng.below(5)) } else { None };
+    cfg.apt = rng.bool(0.3);
+    cfg.safa_target_ratio = 0.1 + 0.2 * rng.f64();
+    cfg.mode = match rng.below(3) {
+        0 => RoundMode::OverCommit { factor: 1.0 + rng.f64() },
+        1 => RoundMode::Deadline { deadline: 1.0 + 60.0 * rng.f64() },
+        _ => RoundMode::Async {
+            buffer_k: rng.range(1, 6),
+            max_staleness: if rng.bool(0.5) { Some(rng.below(6)) } else { None },
+        },
+    };
+    // SAFA+O's two-pass oracle protocol, on the sync modes that define it —
+    // without this the plan-transfer path would sit outside the fuzzed space
+    cfg.oracle = cfg.selector == "safa"
+        && !matches!(cfg.mode, RoundMode::Async { .. })
+        && rng.bool(0.2);
+    cfg.seed = rng.next_u64() % 100_000;
+    if rng.bool(0.65) {
+        let mut f = FaultConfig { fault_seed: rng.next_u64() % 100_000, ..Default::default() };
+        if rng.bool(0.4) {
+            f.flap = 0.5 * rng.f64();
+        }
+        if rng.bool(0.4) {
+            f.crash = 0.5 * rng.f64();
+        }
+        if rng.bool(0.4) {
+            f.delay = 0.5 * rng.f64();
+            f.delay_secs = 30.0 + 300.0 * rng.f64();
+        }
+        if rng.bool(0.4) {
+            f.corrupt = 0.5 * rng.f64();
+        }
+        if rng.bool(0.4) {
+            f.duplicate = 0.5 * rng.f64();
+        }
+        cfg.faults = f;
+    }
+    cfg.label = format!("fuzz-{:08x}", rng.next_u64() & 0xFFFF_FFFF);
+    cfg
+}
+
+/// Run one config at the given worker count; `(result, terminal buckets)`.
+/// Oracle configs route through the two-pass protocol (no totals).
+fn run_engine(
+    cfg: &ExpConfig,
+    workers: usize,
+) -> Result<(ExperimentResult, Option<(f64, f64, f64)>), String> {
+    let mut c = cfg.clone();
+    c.workers = workers;
+    if c.oracle {
+        let r = run_experiment(c, exec()).map_err(|e| format!("engine run failed: {e:#}"))?;
+        Ok((r, None))
+    } else {
+        let mut coord = Coordinator::new(c, exec())
+            .map_err(|e| format!("engine construct failed: {e:#}"))?;
+        let r = coord.run().map_err(|e| format!("engine run failed: {e:#}"))?;
+        let totals = coord.accounting_totals();
+        Ok((r, Some(totals)))
+    }
+}
+
+/// Structural invariants over one result log.
+fn check_result(cfg: &ExpConfig, r: &ExperimentResult) -> Result<(), String> {
+    if r.rounds.len() != cfg.rounds {
+        return Err(format!(
+            "round count {} != cfg.rounds {}",
+            r.rounds.len(),
+            cfg.rounds
+        ));
+    }
+    let is_async = matches!(cfg.mode, RoundMode::Async { .. });
+    let mut prev_res = 0.0f64;
+    let mut prev_waste = 0.0f64;
+    let mut prev_time = 0.0f64;
+    for rec in &r.rounds {
+        let i = rec.round;
+        let tol = REL_EPS * rec.cum_resource_secs.max(1.0);
+        if rec.cum_resource_secs < prev_res - tol {
+            return Err(format!("round {i}: cum_resource_secs decreased"));
+        }
+        if rec.cum_waste_secs < prev_waste - tol {
+            return Err(format!("round {i}: cum_waste_secs decreased"));
+        }
+        if rec.sim_time < prev_time - 1e-9 {
+            return Err(format!("round {i}: sim_time went backwards"));
+        }
+        if rec.cum_waste_secs > rec.cum_resource_secs + tol {
+            return Err(format!(
+                "round {i}: wasted {} > spent {}",
+                rec.cum_waste_secs, rec.cum_resource_secs
+            ));
+        }
+        if rec.failed != (rec.fresh_updates + rec.stale_updates == 0) {
+            return Err(format!(
+                "round {i}: failed={} but fresh+stale={}",
+                rec.failed,
+                rec.fresh_updates + rec.stale_updates
+            ));
+        }
+        if let Some(l) = rec.train_loss {
+            if !l.is_finite() {
+                return Err(format!("round {i}: non-finite train_loss"));
+            }
+        }
+        if let Some(a) = rec.test_accuracy {
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("round {i}: accuracy {a} outside [0,1]"));
+            }
+        }
+        if is_async {
+            let Some(conc) = rec.mean_concurrency else {
+                return Err(format!("round {i}: async record missing mean_concurrency"));
+            };
+            if !(-1e-9..=cfg.target_participants as f64 + 1e-9).contains(&conc) {
+                return Err(format!("round {i}: concurrency {conc} outside [0, target]"));
+            }
+            if rec.in_flight_secs.unwrap_or(0.0) < -tol {
+                return Err(format!("round {i}: negative in-flight seconds"));
+            }
+            if rec.kernel_events.is_none() {
+                return Err(format!("round {i}: async record missing kernel_events"));
+            }
+        } else if rec.mean_concurrency.is_some()
+            || rec.cum_aggregated_secs.is_some()
+            || rec.in_flight_secs.is_some()
+            || rec.kernel_events.is_some()
+        {
+            return Err(format!("round {i}: async-only field set on a sync record"));
+        }
+        prev_res = rec.cum_resource_secs;
+        prev_waste = rec.cum_waste_secs;
+        prev_time = rec.sim_time;
+    }
+    if is_async {
+        if let Some(last) = r.rounds.last() {
+            // record-level closure (not the totals the engine hands us
+            // directly): the final record's own buckets must account for
+            // every spent second — this fires if the end-of-run sweep is
+            // ever lost, even though run_async also zeroes in_flight_secs
+            let agg = last.cum_aggregated_secs.unwrap_or(0.0);
+            let inflight = last.in_flight_secs.unwrap_or(0.0);
+            let closed = agg + last.cum_waste_secs + inflight;
+            if (last.cum_resource_secs - closed).abs()
+                > REL_EPS * last.cum_resource_secs.max(1.0)
+            {
+                return Err(format!(
+                    "final record identity broken: spent {} != aggregated {agg} + wasted {} \
+                     + in-flight {inflight}",
+                    last.cum_resource_secs, last.cum_waste_secs
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
+    cfg.validate().map_err(|e| format!("validate: {e:#}"))?;
+    let (r1, totals) = run_engine(cfg, 1)?;
+    let j1 = r1.to_json().to_string();
+    Json::parse(&j1).map_err(|e| format!("output is not valid JSON: {e}"))?;
+    if j1.contains("NaN") || j1.contains(":inf") || j1.contains(":-inf") {
+        return Err("non-finite value leaked into output JSON".into());
+    }
+    check_result(cfg, &r1)?;
+    if let Some((spent, agg, wasted)) = totals {
+        if (spent - (agg + wasted)).abs() > REL_EPS * spent.max(1.0) {
+            return Err(format!(
+                "accounting identity broken: spent {spent} != aggregated {agg} + wasted {wasted}"
+            ));
+        }
+    }
+    let (r8, _) = run_engine(cfg, 8)?;
+    if r8.to_json().to_string() != j1 {
+        return Err("workers-1-vs-8 outputs diverged (byte-determinism broken)".into());
+    }
+    if !matches!(cfg.mode, RoundMode::Async { .. }) {
+        let mut c = cfg.clone();
+        c.workers = 1;
+        let rr = run_reference_experiment(c, exec())
+            .map_err(|e| format!("reference run failed: {e:#}"))?;
+        if rr.to_json().to_string() != j1 {
+            return Err("kernel engine diverged from the frozen reference".into());
+        }
+    }
+    Ok(())
+}
+
+/// The real invariant battery: `None` = passed, `Some(why)` = failed.
+pub fn check_case(cfg: &ExpConfig) -> Option<String> {
+    run_checks(cfg).err()
+}
+
+/// The planted fake invariant ("no stale update is ever aggregated") used
+/// to demo and test the find → shrink → corpus pipeline.
+pub fn sabotage_check(cfg: &ExpConfig) -> Option<String> {
+    let (r, _) = match run_engine(cfg, 1) {
+        Ok(v) => v,
+        Err(e) => return Some(e),
+    };
+    let stale: usize = r.rounds.iter().map(|x| x.stale_updates).sum();
+    if stale > 0 {
+        Some(format!(
+            "[sabotage] planted invariant violated: {stale} stale updates were aggregated"
+        ))
+    } else {
+        None
+    }
+}
+
+/// The simplifying transformations the shrinker tries, most-drastic first.
+/// Each is idempotent and moves one knob toward its simplest value, so the
+/// greedy loop terminates at a locally-minimal config.
+pub fn shrink_transforms() -> Vec<Box<dyn Fn(&ExpConfig) -> ExpConfig>> {
+    fn with(f: impl Fn(&mut ExpConfig) + 'static) -> Box<dyn Fn(&ExpConfig) -> ExpConfig> {
+        Box::new(move |c| {
+            let mut c = c.clone();
+            f(&mut c);
+            c
+        })
+    }
+    vec![
+        with(|c| c.faults = FaultConfig::default()),
+        with(|c| c.faults.flap = 0.0),
+        with(|c| c.faults.crash = 0.0),
+        with(|c| c.faults.delay = 0.0),
+        with(|c| c.faults.corrupt = 0.0),
+        with(|c| c.faults.duplicate = 0.0),
+        with(|c| c.avail = AvailMode::AllAvail),
+        with(|c| c.partition = PartitionScheme::UniformIid),
+        with(|c| c.selector = "random".into()),
+        with(|c| c.apt = false),
+        with(|c| c.oracle = false),
+        with(|c| {
+            c.use_saa = false;
+            c.staleness_threshold = None;
+        }),
+        with(|c| c.staleness_threshold = None),
+        with(|c| c.mode = RoundMode::OverCommit { factor: 1.3 }),
+        with(|c| c.total_learners = (c.total_learners / 2).max(2)),
+        with(|c| c.total_learners = c.total_learners.saturating_sub(1).max(2)),
+        with(|c| c.rounds = (c.rounds / 2).max(1)),
+        with(|c| c.rounds = c.rounds.saturating_sub(1).max(1)),
+        with(|c| c.target_participants = (c.target_participants / 2).max(1)),
+        with(|c| c.mean_samples = 4),
+        with(|c| c.cooldown_rounds = 0),
+        with(|c| c.min_round_duration = 0.0),
+        with(|c| c.test_per_class = 2),
+        with(|c| c.eval_every = c.rounds.max(1)),
+    ]
+}
+
+/// Greedy shrink: keep applying simplifying transformations while the
+/// failure still reproduces; stop at a config no transformation can reduce.
+pub fn shrink(
+    cfg: &ExpConfig,
+    fails: &mut dyn FnMut(&ExpConfig) -> Option<String>,
+) -> ExpConfig {
+    let transforms = shrink_transforms();
+    let mut cur = cfg.clone();
+    loop {
+        let mut progressed = false;
+        for t in &transforms {
+            let cand = t(&cur);
+            if cand.to_json().to_string() == cur.to_json().to_string() {
+                continue; // no-op at this config
+            }
+            if cand.validate().is_err() {
+                continue;
+            }
+            if fails(&cand).is_some() {
+                cur = cand;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+/// Persist one shrunk repro; the file name is a stable hash of the config,
+/// so re-finding the same minimum overwrites rather than duplicates.
+pub fn write_corpus_entry(dir: &Path, cfg: &ExpConfig, failure: &str) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let cfg_json = cfg.to_json();
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+    for b in cfg_json.to_string().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    let path = dir.join(format!("shrunk-{h:016x}.json"));
+    let entry = obj(vec![
+        ("format", Json::Str("relay-fuzz-corpus-v1".into())),
+        ("failure", Json::Str(failure.into())),
+        ("config", cfg_json),
+    ]);
+    std::fs::write(&path, entry.to_string())?;
+    Ok(path)
+}
+
+/// Load every corpus entry under `dir` (sorted by path for determinism).
+pub fn corpus_entries(dir: &Path) -> Result<Vec<(PathBuf, ExpConfig, String)>> {
+    let mut out = Vec::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // no corpus yet
+    };
+    let mut paths: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", p.display()))?;
+        let cfg_json = j
+            .get("config")
+            .ok_or_else(|| anyhow!("{}: missing 'config'", p.display()))?;
+        let cfg = ExpConfig::from_json(cfg_json)
+            .map_err(|e| anyhow!("{}: {e:#}", p.display()))?;
+        let failure = j.get("failure").and_then(|f| f.as_str()).unwrap_or("").to_string();
+        out.push((p, cfg, failure));
+    }
+    Ok(out)
+}
+
+/// The fuzz driver: sample, check, shrink, persist.
+pub fn run_fuzz(opts: &FuzzOpts) -> Result<FuzzOutcome> {
+    let root = Rng::new(opts.seed);
+    let mut failures = Vec::new();
+    let mut executed = 0usize;
+    // sabotage repros are demos of the pipeline, not regressions — keep
+    // them out of the committed corpus (the README promises as much)
+    let corpus_dir = if opts.sabotage {
+        std::env::temp_dir().join(format!("relay-fuzz-sabotage-{}", std::process::id()))
+    } else {
+        opts.corpus_dir.clone()
+    };
+    for iter in 0..opts.iters {
+        executed = iter + 1;
+        let mut rng = root.stream(iter as u64);
+        let cfg = sample_config(&mut rng, opts.smoke);
+        let mut fails = |c: &ExpConfig| {
+            if opts.sabotage {
+                sabotage_check(c)
+            } else {
+                check_case(c)
+            }
+        };
+        let Some(failure) = fails(&cfg) else {
+            if opts.verbose {
+                eprintln!("[fuzz] iter {iter}: ok ({})", cfg.label);
+            }
+            continue;
+        };
+        eprintln!("[fuzz] iter {iter}: FAILED: {failure}");
+        let shrunk = shrink(&cfg, &mut fails);
+        let final_failure = fails(&shrunk).unwrap_or(failure);
+        eprintln!(
+            "[fuzz]   shrunk: {} learners x {} rounds, selector={}, mode={}, faults=[{}]",
+            shrunk.total_learners,
+            shrunk.rounds,
+            shrunk.selector,
+            shrunk.mode.label(),
+            shrunk.faults.label()
+        );
+        let corpus_path = match write_corpus_entry(&corpus_dir, &shrunk, &final_failure) {
+            Ok(p) => {
+                eprintln!("[fuzz]   repro persisted: {}", p.display());
+                Some(p)
+            }
+            Err(e) => {
+                eprintln!("[fuzz]   corpus write failed: {e:#}");
+                None
+            }
+        };
+        failures.push(FuzzFailure { iter, failure: final_failure, shrunk, corpus_path });
+        if failures.len() >= opts.max_failures {
+            break;
+        }
+    }
+    Ok(FuzzOutcome { iters: executed, failures })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_configs_always_validate() {
+        let root = Rng::new(0xF022);
+        for case in 0..200 {
+            let mut rng = root.stream(case);
+            let cfg = sample_config(&mut rng, case % 2 == 0);
+            cfg.validate().unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn corpus_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("relay-fuzz-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = sample_config(&mut Rng::new(7), true);
+        cfg.label = "roundtrip".into();
+        let path = write_corpus_entry(&dir, &cfg, "test failure").unwrap();
+        assert!(path.exists());
+        let entries = corpus_entries(&dir).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].1.to_json().to_string(), cfg.to_json().to_string());
+        assert_eq!(entries[0].2, "test failure");
+        // same config re-persisted lands on the same file (no duplicates)
+        let path2 = write_corpus_entry(&dir, &cfg, "test failure").unwrap();
+        assert_eq!(path, path2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_corpus_dir_is_empty_not_an_error() {
+        let entries =
+            corpus_entries(Path::new("/nonexistent/relay-corpus-xyz")).unwrap();
+        assert!(entries.is_empty());
+    }
+
+    #[test]
+    fn shrink_reaches_a_local_minimum() {
+        // a config-shape-only predicate (no engine runs): "fails" whenever
+        // SAA is on — the shrinker must zero everything else and keep SAA
+        let mut cfg = sample_config(&mut Rng::new(42), true);
+        cfg.use_saa = true;
+        cfg.faults.crash = 0.4;
+        let mut fails =
+            |c: &ExpConfig| if c.use_saa { Some("saa on".to_string()) } else { None };
+        let shrunk = shrink(&cfg, &mut fails);
+        assert!(shrunk.use_saa, "the failing knob must survive shrinking");
+        assert_eq!(shrunk.total_learners, 2);
+        assert_eq!(shrunk.rounds, 1);
+        assert_eq!(shrunk.target_participants, 1);
+        assert!(!shrunk.faults.is_active(), "irrelevant faults must be zeroed");
+        assert_eq!(shrunk.selector, "random");
+        assert_eq!(shrunk.avail, AvailMode::AllAvail);
+        // local minimality: every transformation is either a no-op here,
+        // invalid, or makes the failure disappear
+        for t in shrink_transforms() {
+            let cand = t(&shrunk);
+            if cand.to_json().to_string() != shrunk.to_json().to_string()
+                && cand.validate().is_ok()
+            {
+                assert!(fails(&cand).is_none(), "shrunk config is not locally minimal");
+            }
+        }
+    }
+}

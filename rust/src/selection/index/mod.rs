@@ -12,17 +12,20 @@
 //! * top-k extraction (score-descending, id-ascending ties) — O(k log n)
 //! * rank / level queries (`count_lt`, `level_len`, `nth_in_level`) —
 //!   O(S log n) for S shards
-//! * weighted sampling proportional to score — O(S + log n)
+//! * weighted sampling proportional to score — O(L · S log n) for L
+//!   distinct positive score levels (the bucketed probability/utility
+//!   trees this index serves keep L small)
 //!
-//! Every ranking query is defined over the *global* `(score, id)` order,
-//! and treap shapes are a pure function of the member set (priorities
-//! derive from the id), so results are byte-identical for any shard count
-//! and for any maintenance history — rebuilt-from-scratch and
-//! hook-maintained indices answer identically
-//! (`tests/selection_index_props.rs` locks both in). The one exception is
-//! [`ScoreIndex::weighted_sample`], whose specific draw resolves against
-//! the shard-major prefix order: the distribution is layout-invariant, the
-//! drawn element is not.
+//! Every query — weighted sampling included — is defined over the *global*
+//! `(score, id)` order, and treap shapes are a pure function of the member
+//! set (priorities derive from the id), so results are **byte-identical
+//! for any shard count** and for any maintenance history —
+//! rebuilt-from-scratch and hook-maintained indices answer identically
+//! (`tests/selection_index_props.rs` locks both in).
+//! [`ScoreIndex::weighted_sample`] resolves its draw with a level walk
+//! over that global order (ROADMAP follow-up: the original shard-major
+//! prefix walk was distribution-invariant but not byte-invariant across
+//! shard layouts, which blocked engine paths from relying on it).
 //!
 //! Ordering uses `total_cmp`, a *total* order: a non-finite score that
 //! leaks in degrades ranking quality but can never panic a comparator,
@@ -248,29 +251,45 @@ impl ScoreIndex {
 
     /// Draw one id with probability proportional to its score (requires
     /// non-negative scores; returns None on empty/zero-mass indices).
-    /// Consumes exactly one `rng.f64()` draw, resolved against the
-    /// shard-major `(score, id)` prefix order — each entry's mass is its
-    /// score regardless of position, so the *distribution* is independent
-    /// of the shard layout even though a specific draw is not.
+    /// Consumes exactly one `rng.f64()` draw.
+    ///
+    /// **Level walk**: both the total mass and the draw resolve against the
+    /// global ascending `(score, id)` order — level by level, the mass of a
+    /// level being `score * level_len` and the hit position within it
+    /// `u / score` — so the drawn element is **byte-identical across shard
+    /// layouts**, like every other query (the original shard-major prefix
+    /// walk was only distribution-invariant). Zero, negative, and NaN
+    /// scores carry no mass and are never drawn. O(L · S log n) for L
+    /// distinct positive levels.
     pub fn weighted_sample(&self, rng: &mut Rng) -> Option<usize> {
-        let total = self.total_score();
+        // one walk in ascending level order collects (score, len); the
+        // total accumulates in that same order, so both the mass and the
+        // draw below are pure functions of the member set
+        let mut levels: Vec<(f64, usize)> = Vec::new();
+        let mut total = 0.0f64;
+        let mut bound: Option<f64> = None;
+        while let Some(p) = self.min_score_gt(bound) {
+            if p > 0.0 {
+                let len = self.level_len(p);
+                total += p * len as f64;
+                levels.push((p, len));
+            }
+            bound = Some(p);
+        }
         if !(total > 0.0) {
             return None;
         }
         let mut u = rng.f64() * total;
-        let mut last_nonempty: Option<&Treap> = None;
-        for sh in &self.shards {
-            let s = sh.total_sum();
-            if s > 0.0 {
-                if u < s {
-                    return Some(sh.sample_at(u));
-                }
-                last_nonempty = Some(sh);
+        for &(p, len) in &levels {
+            let mass = p * len as f64;
+            if u < mass {
+                let i = ((u / p) as usize).min(len - 1);
+                return Some(self.nth_in_level(p, i));
             }
-            u -= s;
+            u -= mass;
         }
         // float round-off pushed u past the end: clamp to the last entry
-        last_nonempty.map(|sh| sh.sample_at(sh.total_sum() * 0.999_999_999))
+        levels.last().map(|&(p, len)| self.nth_in_level(p, len - 1))
     }
 
     /// Global rank of `id` in `(score, id)` order, if present.
@@ -425,6 +444,36 @@ mod tests {
         // empty / zero-mass
         let empty = ScoreIndex::new(4);
         assert_eq!(empty.weighted_sample(&mut rng), None);
+    }
+
+    #[test]
+    fn weighted_sample_is_byte_identical_across_shard_layouts() {
+        // the level-walk draw must land on the same id for the same RNG
+        // state regardless of how ids are sharded (ROADMAP follow-up)
+        let entries: Vec<(usize, f64)> =
+            (0..150).map(|i| (i, ((i * 11) % 6) as f64 * 0.5)).collect();
+        let build = |shards: usize| {
+            let mut idx = ScoreIndex::with_shards(150, shards);
+            for &(id, s) in &entries {
+                idx.insert(id, s);
+            }
+            idx
+        };
+        let a = build(1);
+        for shards in [2usize, 5, 11] {
+            let b = build(shards);
+            for seed in 0..40u64 {
+                let mut ra = Rng::new(seed);
+                let mut rb = Rng::new(seed);
+                assert_eq!(
+                    a.weighted_sample(&mut ra),
+                    b.weighted_sample(&mut rb),
+                    "{shards} shards, seed {seed}: draw diverged"
+                );
+                // exactly one RNG draw consumed on both sides
+                assert_eq!(ra.next_u64(), rb.next_u64(), "{shards} shards: rng diverged");
+            }
+        }
     }
 
     #[test]

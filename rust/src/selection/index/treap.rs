@@ -1,6 +1,8 @@
 //! One shard of the samplable score index: an arena-backed treap ordered by
 //! `(score, id)` under `f64::total_cmp`, with subtree counts (order
-//! statistics) and subtree score sums (weighted sampling).
+//! statistics) and subtree score sums (score-mass totals; the weighted
+//! sampler itself walks levels of the global order, see
+//! [`super::ScoreIndex::weighted_sample`]).
 //!
 //! Node priorities are derived from the learner id alone (splitmix64), so
 //! the tree *shape* — and therefore every query result — is a pure function
@@ -260,27 +262,6 @@ impl Treap {
     /// Total score mass of this shard.
     pub(super) fn total_sum(&self) -> f64 {
         self.sum(self.root)
-    }
-
-    /// The entry id at cumulative score offset `u` within this shard's
-    /// in-order prefix-sum (requires `0 <= u < total_sum()` and
-    /// non-negative keys for meaningful results).
-    pub(super) fn sample_at(&self, mut u: f64) -> usize {
-        let mut t = self.root;
-        loop {
-            debug_assert!(t != NIL, "sample_at beyond total_sum");
-            let ls = self.sum(self.nodes[t].left);
-            if u < ls && self.nodes[t].left != NIL {
-                t = self.nodes[t].left;
-                continue;
-            }
-            u -= ls;
-            if u < self.nodes[t].key || self.nodes[t].right == NIL {
-                return self.nodes[t].id;
-            }
-            u -= self.nodes[t].key;
-            t = self.nodes[t].right;
-        }
     }
 
     /// Visit the ids of every entry with key exactly `key` (total-order

@@ -76,12 +76,18 @@ impl GridSpec {
             for mode in &self.modes {
                 for avail in &self.avails {
                     for part in &self.partitions {
-                        let label = format!(
+                        let mut label = format!(
                             "{sel}-{}-{}-{}",
                             mode_label(mode),
                             avail_label(*avail),
                             part.label()
                         );
+                        // fault-injected grids carry the fault mix in the
+                        // cell key, so faulty and clean sweeps never collide
+                        // in a report
+                        if self.base.faults.is_active() {
+                            label = format!("{label}-{}", self.base.faults.label());
+                        }
                         let mut runs = Vec::with_capacity(self.seeds.len());
                         for &seed in &self.seeds {
                             let mut c = self.base.clone();
@@ -385,6 +391,24 @@ mod tests {
         assert_eq!(cells[0].mode, "async4s8");
         assert_eq!(cells[1].mode, "async10");
         assert!(cells[0].label.contains("async4s8"), "{}", cells[0].label);
+    }
+
+    #[test]
+    fn fault_active_grids_label_their_cells() {
+        use crate::scenario::faults::FaultConfig;
+        let mut b = base();
+        b.faults = FaultConfig { flap: 0.1, crash: 0.25, fault_seed: 3, ..Default::default() };
+        let spec = GridSpec::new(b);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 1);
+        assert!(
+            cells[0].label.ends_with("-flap0.1+crash0.25"),
+            "fault mix missing from cell label: {}",
+            cells[0].label
+        );
+        // and a clean grid stays exactly as before
+        let clean = GridSpec::new(base()).expand();
+        assert_eq!(clean[0].label, "random-oc1.3-dyn-iid");
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Golden `ExperimentResult` baselines for a small selector × round-mode
+//! cell matrix, pinning post-PR4 selection trajectories against silent
+//! drift (PR 4 deliberately re-normalized IPS tie-breaking with no goldens
+//! committed to witness it; this suite closes that gap).
+//!
+//! Workflow:
+//!
+//! * a committed golden under `tests/golden/` is compared byte-for-byte;
+//! * a *missing* golden is bootstrapped (written and reported) on first
+//!   run, so a fresh checkout self-pins from its first `cargo test` — the
+//!   written files are meant to be committed;
+//! * `RELAY_WRITE_GOLDEN=1 cargo test --test golden_baselines` force-
+//!   rewrites after an intentional behavioral change (review the diff!).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::run_experiment;
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Straggler-rich DynAvail base so the trajectories exercise selection,
+/// staleness, and churn — the paths most likely to drift silently.
+fn cell_cfg(selector: &str, mode: RoundMode) -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 14,
+        rounds: 5,
+        target_participants: 4,
+        mode,
+        avail: AvailMode::DynAvail,
+        selector: selector.into(),
+        use_saa: true,
+        staleness_threshold: Some(3),
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn selector_mode_matrix_matches_goldens() {
+    let force_write = std::env::var("RELAY_WRITE_GOLDEN").is_ok();
+    let modes = [
+        ("oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ];
+    for selector in ["random", "oort", "priority", "safa"] {
+        for (mode_name, mode) in modes.iter() {
+            let label = format!("traj-{selector}-{mode_name}");
+            let mut cfg = cell_cfg(selector, *mode);
+            cfg.label = label.clone();
+            let result = run_experiment(cfg, exec())
+                .unwrap_or_else(|e| panic!("cell '{label}' failed: {e:#}"));
+            let bytes = result.to_json().to_string();
+            let path = golden_dir().join(format!("{label}.json"));
+            if force_write || !path.exists() {
+                std::fs::create_dir_all(golden_dir()).unwrap();
+                match std::fs::write(&path, &bytes) {
+                    Ok(()) => {
+                        if !force_write {
+                            eprintln!(
+                                "[golden] bootstrapped {} — commit it to pin this trajectory",
+                                path.display()
+                            );
+                        }
+                    }
+                    Err(e) => eprintln!("[golden] cannot write {}: {e}", path.display()),
+                }
+            } else {
+                let golden = std::fs::read_to_string(&path).unwrap();
+                assert_eq!(
+                    golden, bytes,
+                    "cell '{label}': trajectory drifted from the committed golden {path:?} \
+                     (if intentional, regenerate with RELAY_WRITE_GOLDEN=1)"
+                );
+            }
+        }
+    }
+}
+
+/// The golden bytes must themselves be valid, finite JSON — a golden that
+/// pins a serialization bug would pin the bug.
+#[test]
+fn golden_cells_serialize_to_valid_json() {
+    let cfg = cell_cfg("priority", RoundMode::Deadline { deadline: 2.0 });
+    let r = run_experiment(cfg, exec()).unwrap();
+    let s = r.to_json().to_string();
+    relay::util::json::Json::parse(&s).expect("golden cell output must parse");
+    assert!(!s.contains("NaN"), "non-finite value leaked: {s}");
+}

@@ -20,6 +20,7 @@ use relay::aggregation::scaling::ScalingRule;
 use relay::config::{AvailMode, ExpConfig, RoundMode};
 use relay::coordinator::{run_experiment, run_reference_experiment};
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::scenario::faults::FaultConfig;
 
 fn exec() -> Arc<dyn Executor> {
     Arc::new(NativeExecutor::new(builtin_variant("tiny")))
@@ -137,6 +138,50 @@ fn unbounded_staleness_matches_reference() {
     cfg.rounds = 8;
     cfg.label = "unbounded-oc-all".into();
     check_cell("unbounded-oc-all", cfg);
+}
+
+/// Fault-injected cells: the deterministic fault model (flap / crash /
+/// delay / corrupt / duplicate) is threaded through both engines as a
+/// sanctioned joint edit — every fault must burn and account identically,
+/// byte for byte, across OC/DL × AllAvail/DynAvail.
+#[test]
+fn fault_injected_cells_match_reference() {
+    let crashy = FaultConfig {
+        flap: 0.2,
+        crash: 0.4,
+        fault_seed: 7,
+        ..Default::default()
+    };
+    let lossy = FaultConfig {
+        corrupt: 0.35,
+        duplicate: 0.3,
+        delay: 0.4,
+        delay_secs: 5.0,
+        fault_seed: 11,
+        ..Default::default()
+    };
+    for (fname, faults, selector) in
+        [("crashy", crashy, "oort"), ("lossy", lossy, "priority")]
+    {
+        for (mode_name, mode) in [
+            ("oc1.3", RoundMode::OverCommit { factor: 1.3 }),
+            ("dl2", RoundMode::Deadline { deadline: 2.0 }),
+        ] {
+            for (avail_name, avail) in [
+                ("all", AvailMode::AllAvail),
+                ("dyn", AvailMode::DynAvail),
+            ] {
+                let mut cfg = tiny_base();
+                cfg.selector = selector.into();
+                cfg.mode = mode;
+                cfg.avail = avail;
+                cfg.faults = faults;
+                let label = format!("faults-{fname}-{mode_name}-{avail_name}");
+                cfg.label = label.clone();
+                check_cell(&label, cfg);
+            }
+        }
+    }
 }
 
 /// SAFA+O runs the two-pass oracle protocol on both engines: the probe

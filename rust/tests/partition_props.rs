@@ -1,0 +1,197 @@
+//! Distributional test coverage for `data::partition` (paper §5.1): the
+//! three partition families must actually produce the statistical shapes
+//! the paper's experiments assume — D1 near-uniform label marginals, D2
+//! long-tail sample counts with near-IID label coverage, D3 hard
+//! labels-per-learner limits with the configured within-learner skew —
+//! deterministically per seed, with a stable parse/label round-trip.
+
+use relay::data::partition::{
+    label_coverage, LabelSkew, LearnerShard, Partitioner, PartitionScheme,
+};
+use relay::util::stats;
+
+const CLASSES: usize = 20;
+const LEARNERS: usize = 400;
+const MEAN_SAMPLES: usize = 60;
+
+fn assign(scheme: PartitionScheme, seed: u64) -> Vec<LearnerShard> {
+    Partitioner::new(scheme, CLASSES, MEAN_SAMPLES).assign(LEARNERS, seed)
+}
+
+/// Aggregate per-label sample share across the whole population.
+fn label_marginal(shards: &[LearnerShard]) -> Vec<f64> {
+    let mut counts = vec![0usize; CLASSES];
+    let mut total = 0usize;
+    for s in shards {
+        for &l in &s.labels {
+            counts[l as usize] += 1;
+            total += 1;
+        }
+    }
+    counts.into_iter().map(|c| c as f64 / total.max(1) as f64).collect()
+}
+
+#[test]
+fn iid_label_marginal_is_near_uniform() {
+    let marginal = label_marginal(&assign(PartitionScheme::UniformIid, 11));
+    let uniform = 1.0 / CLASSES as f64;
+    for (label, share) in marginal.iter().enumerate() {
+        assert!(
+            (0.6 * uniform..=1.6 * uniform).contains(share),
+            "label {label}: share {share} too far from uniform {uniform}"
+        );
+    }
+}
+
+#[test]
+fn iid_sample_counts_are_tight_around_the_mean() {
+    let shards = assign(PartitionScheme::UniformIid, 12);
+    let counts: Vec<f64> = shards.iter().map(|s| s.len() as f64).collect();
+    let mean = stats::mean(&counts);
+    assert!(
+        (mean - MEAN_SAMPLES as f64).abs() < 0.15 * MEAN_SAMPLES as f64,
+        "mean count {mean} should track mean_samples {MEAN_SAMPLES}"
+    );
+    // the ±20% jitter bounds every shard
+    for c in &counts {
+        assert!(
+            (0.75 * MEAN_SAMPLES as f64..=1.25 * MEAN_SAMPLES as f64).contains(c),
+            "count {c} outside the jitter band"
+        );
+    }
+}
+
+#[test]
+fn fedscale_counts_are_long_tailed_but_labels_near_iid() {
+    let shards = assign(PartitionScheme::FedScale, 13);
+    let counts: Vec<f64> = shards.iter().map(|s| s.len() as f64).collect();
+    let p50 = stats::percentile(&counts, 50.0);
+    let p90 = stats::percentile(&counts, 90.0);
+    assert!(p90 > 2.0 * p50, "long tail expected: p50={p50} p90={p90}");
+    // §E.1: most labels appear on >= 40% of learners
+    let cov = label_coverage(&shards, CLASSES);
+    let frac_covered = cov.iter().filter(|&&c| c >= 0.4).count() as f64 / CLASSES as f64;
+    assert!(frac_covered > 0.8, "near-IID coverage expected, got {frac_covered}");
+    // and no label disappears from the aggregate marginal
+    for (label, share) in label_marginal(&shards).iter().enumerate() {
+        assert!(*share > 0.01, "label {label} nearly absent: share {share}");
+    }
+}
+
+#[test]
+fn label_limited_respects_the_per_learner_label_budget() {
+    for skew in [LabelSkew::Balanced, LabelSkew::Uniform, LabelSkew::Zipf] {
+        let shards = assign(PartitionScheme::LabelLimited { labels: 3, skew }, 14);
+        for (i, s) in shards.iter().enumerate() {
+            let mut distinct: Vec<u16> = s.labels.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(
+                distinct.len() <= 3,
+                "learner {i}: {} distinct labels with a budget of 3 ({skew:?})",
+                distinct.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn label_limited_default_budget_tracks_num_classes() {
+    // labels: 0 resolves to max(2, classes/10) inside the partitioner
+    let want = (CLASSES / 10).max(2);
+    let shards = assign(
+        PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Balanced },
+        15,
+    );
+    let mut saw_full_budget = false;
+    for s in &shards {
+        let mut distinct: Vec<u16> = s.labels.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() <= want);
+        if distinct.len() == want {
+            saw_full_budget = true;
+        }
+    }
+    assert!(saw_full_budget, "no learner used the full default budget of {want}");
+}
+
+#[test]
+fn label_limited_skews_shape_within_learner_distributions() {
+    // L1 balanced: per-learner label counts differ by at most one
+    let balanced =
+        assign(PartitionScheme::LabelLimited { labels: 4, skew: LabelSkew::Balanced }, 16);
+    for s in balanced.iter().take(50) {
+        let mut counts = std::collections::HashMap::new();
+        for &l in &s.labels {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        let min = *counts.values().min().unwrap();
+        assert!(max - min <= 1, "balanced skew must be balanced: {max} vs {min}");
+    }
+    // L3 zipf(1.95): the top label dominates each learner's shard
+    let zipf = assign(PartitionScheme::LabelLimited { labels: 4, skew: LabelSkew::Zipf }, 17);
+    let mut top_share = 0.0;
+    for s in &zipf {
+        let mut counts = std::collections::HashMap::new();
+        for &l in &s.labels {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        top_share += *counts.values().max().unwrap() as f64 / s.labels.len() as f64;
+    }
+    top_share /= zipf.len() as f64;
+    assert!(top_share > 0.55, "zipf(1.95) top-label share only {top_share}");
+    // and zipf is visibly more skewed than uniform
+    let uniform = assign(PartitionScheme::LabelLimited { labels: 4, skew: LabelSkew::Uniform }, 17);
+    let mut uniform_top = 0.0;
+    for s in &uniform {
+        let mut counts = std::collections::HashMap::new();
+        for &l in &s.labels {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        uniform_top += *counts.values().max().unwrap() as f64 / s.labels.len() as f64;
+    }
+    uniform_top /= uniform.len() as f64;
+    assert!(
+        top_share > uniform_top + 0.1,
+        "zipf ({top_share}) should dominate uniform ({uniform_top})"
+    );
+}
+
+#[test]
+fn assignment_is_deterministic_per_seed_and_varies_across_seeds() {
+    for scheme in [
+        PartitionScheme::UniformIid,
+        PartitionScheme::FedScale,
+        PartitionScheme::LabelLimited { labels: 3, skew: LabelSkew::Zipf },
+    ] {
+        let a = assign(scheme, 21);
+        let b = assign(scheme, 21);
+        assert_eq!(
+            a.iter().map(|s| &s.labels).collect::<Vec<_>>(),
+            b.iter().map(|s| &s.labels).collect::<Vec<_>>(),
+            "{scheme:?}: same seed must reproduce byte-identically"
+        );
+        let c = assign(scheme, 22);
+        assert_ne!(
+            a.iter().map(|s| &s.labels).collect::<Vec<_>>(),
+            c.iter().map(|s| &s.labels).collect::<Vec<_>>(),
+            "{scheme:?}: different seeds must differ"
+        );
+    }
+}
+
+#[test]
+fn parse_label_roundtrip_is_stable() {
+    for name in ["iid", "fedscale", "label-balanced", "label-uniform", "label-zipf"] {
+        let scheme = PartitionScheme::parse(name)
+            .unwrap_or_else(|| panic!("'{name}' must parse"));
+        assert_eq!(scheme.label(), name, "round-trip broke for '{name}'");
+    }
+    assert!(PartitionScheme::parse("bogus").is_none());
+    assert!(PartitionScheme::parse("").is_none());
+    // the label ignores the (non-serialized) labels count, by design
+    let named = PartitionScheme::LabelLimited { labels: 7, skew: LabelSkew::Uniform };
+    assert_eq!(named.label(), "label-uniform");
+}

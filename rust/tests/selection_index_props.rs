@@ -94,34 +94,150 @@ fn score_index_matches_sorted_vec_model() {
             }
         }
 
-        // weighted sampling: exact replay of the shard-major prefix walk
-        let shard_size = n.div_ceil(num_shards).max(1);
-        let mut shard_major = sorted.clone();
-        shard_major.sort_by(|a, b| {
-            (a.0 / shard_size)
-                .cmp(&(b.0 / shard_size))
-                .then(a.1.total_cmp(&b.1))
-                .then(a.0.cmp(&b.0))
-        });
-        let total: f64 = shard_major.iter().map(|e| e.1).sum();
+        // weighted sampling: exact replay of the level walk over the global
+        // ascending (score, id) order — the draw is a pure function of the
+        // member set, independent of the shard layout
+        let mut levels: Vec<(f64, Vec<usize>)> = Vec::new();
+        for &(id, s) in &sorted {
+            if let Some(last) = levels.last_mut() {
+                if last.0 == s {
+                    last.1.push(id);
+                    continue;
+                }
+            }
+            levels.push((s, vec![id]));
+        }
+        let total: f64 = {
+            let mut acc = 0.0f64;
+            for (p, ids) in &levels {
+                if *p > 0.0 {
+                    acc += *p * ids.len() as f64;
+                }
+            }
+            acc
+        };
         for _ in 0..3 {
             let seed = rng.next_u64();
             let got = idx.weighted_sample(&mut Rng::new(seed));
             let want = if total > 0.0 {
                 let mut u = Rng::new(seed).f64() * total;
                 let mut pick = None;
-                for &(id, s) in &shard_major {
-                    if u < s {
-                        pick = Some(id);
+                for (p, ids) in &levels {
+                    if !(*p > 0.0) {
+                        continue;
+                    }
+                    let mass = *p * ids.len() as f64;
+                    if u < mass {
+                        pick = Some(ids[((u / *p) as usize).min(ids.len() - 1)]);
                         break;
                     }
-                    u -= s;
+                    u -= mass;
                 }
-                pick.or_else(|| shard_major.iter().rev().find(|e| e.1 > 0.0).map(|e| e.0))
+                pick.or_else(|| {
+                    levels
+                        .iter()
+                        .rev()
+                        .find(|(p, _)| *p > 0.0)
+                        .map(|(_, ids)| *ids.last().unwrap())
+                })
             } else {
                 None
             };
             prop_assert(got == want, format!("weighted_sample diverged (seed {seed})"))?;
+            // and the 1-shard twin of the same member set draws the same id
+            let mut single = ScoreIndex::with_shards(n, 1);
+            for &(id, s) in &sorted {
+                single.insert(id, s);
+            }
+            prop_assert(
+                single.weighted_sample(&mut Rng::new(seed)) == got,
+                format!("weighted_sample layout-variant (seed {seed}, {num_shards} shards)"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The resolved ROADMAP follow-up, as a standalone property: the specific
+/// weighted draw (not just its distribution) is byte-identical across shard
+/// layouts, with identical RNG consumption.
+#[test]
+fn weighted_sample_is_shard_layout_invariant() {
+    prop_check(30, 0x77AD, |rng| {
+        let n = rng.range(1, 300);
+        let mut entries: Vec<(usize, f64)> = Vec::new();
+        for id in 0..n {
+            if rng.bool(0.6) {
+                entries.push((id, rng.below(7) as f64 * 0.25));
+            }
+        }
+        let build = |shards: usize| {
+            let mut idx = ScoreIndex::with_shards(n, shards);
+            for &(id, s) in &entries {
+                idx.insert(id, s);
+            }
+            idx
+        };
+        let a = build(1);
+        let b = build(rng.range(2, 12));
+        for _ in 0..5 {
+            let seed = rng.next_u64();
+            let mut ra = Rng::new(seed);
+            let mut rb = Rng::new(seed);
+            prop_assert(
+                a.weighted_sample(&mut ra) == b.weighted_sample(&mut rb),
+                format!("draw diverged across layouts (seed {seed})"),
+            )?;
+            prop_assert(
+                ra.next_u64() == rb.next_u64(),
+                "rng consumption diverged across layouts",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The priority selector's hour-bucket **delta-rebuild** (only learners
+/// whose bin value changed are re-keyed) must be indistinguishable from a
+/// from-scratch rebuild: same picks, same RNG draws, at every step of a
+/// churning, time-advancing run that crosses many probe buckets.
+#[test]
+fn priority_bucket_delta_rebuild_matches_full_rebuild() {
+    prop_check(10, 0xDE17A, |rng| {
+        let n = rng.range(5, 80);
+        let probes = GridProbes;
+        let mut set = CandidateSet::new(n);
+        let mut eligible = vec![false; n];
+        let mut maintained = by_name("priority").unwrap();
+        let mut now = 0.0f64;
+        for step in 0..20 {
+            now += rng.uniform(0.0, 7200.0); // frequent hour-bucket moves
+            for _ in 0..rng.range(0, 6) {
+                let id = rng.below(n);
+                if eligible[id] {
+                    eligible[id] = false;
+                    set.remove(id);
+                    maintained.on_ineligible(id);
+                } else {
+                    eligible[id] = true;
+                    set.insert(id);
+                    maintained.on_eligible(id);
+                }
+            }
+            let target = rng.range(0, n + 2);
+            let seed = rng.next_u64();
+            let pool = SelectPool { set: &set, probes: &probes, mu: 80.0 };
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let a = maintained
+                .select_from(&pool, step, now, target, &mut r1)
+                .expect("priority is indexed");
+            let mut fresh = by_name("priority").unwrap();
+            let b = fresh
+                .select_from(&pool, step, now, target, &mut r2)
+                .expect("priority is indexed");
+            prop_assert(a == b, format!("step {step}: delta-rebuild diverged"))?;
+            prop_assert(r1.next_u64() == r2.next_u64(), "rng state diverged")?;
         }
         Ok(())
     });
@@ -131,10 +247,14 @@ fn score_index_matches_sorted_vec_model() {
 fn score_index_ranking_is_shard_count_invariant() {
     prop_check(30, 0x5AAD, |rng| {
         let n = rng.range(1, 250);
-        let entries: Vec<(usize, f64)> = (0..n)
-            .filter(|_| rng.bool(0.5))
-            .map(|id| (id, rng.below(6) as f64 * 0.25))
-            .collect();
+        // sequential draws: a filter/map closure pair sharing the rng would
+        // be two simultaneous mutable borrows (E0499)
+        let mut entries: Vec<(usize, f64)> = Vec::new();
+        for id in 0..n {
+            if rng.bool(0.5) {
+                entries.push((id, rng.below(6) as f64 * 0.25));
+            }
+        }
         let build = |shards: usize| {
             let mut idx = ScoreIndex::with_shards(n, shards);
             for &(id, s) in &entries {

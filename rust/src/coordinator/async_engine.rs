@@ -58,6 +58,8 @@ use anyhow::{anyhow, Result};
 use crate::aggregation::saa::{merge_buffer, UpdateEntry};
 use crate::config::RoundMode;
 use crate::metrics::{ExperimentResult, RoundRecord};
+use crate::runlog::RunEvent;
+use crate::scenario::faults::FaultKind;
 use crate::selection::{SelectPool, SelectionCtx};
 use crate::sim::EventClass;
 
@@ -137,6 +139,8 @@ impl Coordinator {
             st.events += 1;
             st.conc_area += st.in_flight as f64 * (now - st.conc_last_t);
             st.conc_last_t = now;
+            let class = ev.class.code();
+            self.runlog.emit(|| RunEvent::KernelPop { at: now, class });
             match ev.payload {
                 EngineEvent::CheckIn => {
                     let spawned = self.async_fill(&mut st)?;
@@ -167,6 +171,8 @@ impl Coordinator {
                     st.in_flight_secs -= d.spent;
                     st.dropouts += 1;
                     self.accounting.waste(d.spent);
+                    let (learner, spent) = (d.learner as u64, d.spent);
+                    self.runlog.emit(|| RunEvent::AsyncDropout { learner, spent });
                     // free again; still eligible iff its session hasn't
                     // actually ended yet (the index decides)
                     self.population
@@ -196,12 +202,17 @@ impl Coordinator {
                 self.kernel.schedule(now, EventClass::CheckIn, EngineEvent::CheckIn);
             }
         }
-        // still-running tasks and unmerged buffer entries never made it in
+        // still-running tasks and unmerged buffer entries never made it in.
+        // Logged before the waste call: replay mirrors the in-flight
+        // arithmetic op for op and cross-checks this value bit-for-bit.
+        let leftover = st.in_flight_secs;
+        self.runlog.emit(|| RunEvent::SweepLeftover { secs: leftover });
         self.accounting.waste(st.in_flight_secs);
         if let Some(last) = result.rounds.last_mut() {
             last.cum_waste_secs = self.accounting.cum_waste_secs;
             last.in_flight_secs = Some(0.0);
         }
+        self.runlog.emit(|| RunEvent::RunEnd);
         Ok(())
     }
 
@@ -218,6 +229,10 @@ impl Coordinator {
         // bring the eligible set up to (version, now): availability flips
         // from the index, cooldown/busy-bucket expiries from merges/burns
         self.population.sync_to(st.version, now, self.selector.as_mut());
+        if self.runlog.enabled() {
+            let count = self.population.eligible_set().len() as u64;
+            self.runlog.emit(|| RunEvent::Eligibility { count });
+        }
         let need = target - st.in_flight;
         let sampled = {
             let pool = SelectPool {
@@ -270,6 +285,12 @@ impl Coordinator {
                 st.selected += 1;
                 st.dropouts += 1;
                 st.faults += 1;
+                let (learner, ver) = (id as u64, st.version as u64);
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Flap.code(),
+                    learner,
+                    round: ver,
+                });
                 continue;
             }
             let n_samples = self.shards[id].len();
@@ -302,6 +323,12 @@ impl Coordinator {
                     st.faults += 1;
                     dropped = Some(frac * t);
                     crashed = true;
+                    let (learner, ver) = (id as u64, st.version as u64);
+                    self.runlog.emit(|| RunEvent::FaultDecision {
+                        kind: FaultKind::Crash.code(),
+                        learner,
+                        round: ver,
+                    });
                 }
             }
             plans.push((id, t, dropped, crashed));
@@ -340,6 +367,12 @@ impl Coordinator {
                         EventClass::Departure,
                         EngineEvent::Dropout(AsyncDrop { learner: id, spent: dt, crashed }),
                     );
+                    let learner = id as u64;
+                    self.runlog.emit(|| RunEvent::AsyncSpawn {
+                        learner,
+                        duration: t,
+                        dropped_after: Some(dt),
+                    });
                 }
                 None => {
                     // fault injection: in-transit delay pushes the arrival
@@ -348,6 +381,12 @@ impl Coordinator {
                     let deliver = match faults.delays(id, st.version) {
                         Some(d) => {
                             st.faults += 1;
+                            let (learner, ver) = (id as u64, st.version as u64);
+                            self.runlog.emit(|| RunEvent::FaultDecision {
+                                kind: FaultKind::Delay.code(),
+                                learner,
+                                round: ver,
+                            });
                             now + t + d
                         }
                         None => now + t,
@@ -357,6 +396,12 @@ impl Coordinator {
                         // validation on arrival; no SGD was run, the empty
                         // delta is never read
                         st.faults += 1;
+                        let (learner, ver) = (id as u64, st.version as u64);
+                        self.runlog.emit(|| RunEvent::FaultDecision {
+                            kind: FaultKind::Corrupt.code(),
+                            learner,
+                            round: ver,
+                        });
                         AsyncTask {
                             learner: id,
                             delta: Vec::new(),
@@ -386,6 +431,12 @@ impl Coordinator {
                         EventClass::Delivery,
                         EngineEvent::Arrival(task),
                     );
+                    let learner = id as u64;
+                    self.runlog.emit(|| RunEvent::AsyncSpawn {
+                        learner,
+                        duration: t,
+                        dropped_after: None,
+                    });
                 }
             }
             st.in_flight += 1;
@@ -404,7 +455,29 @@ impl Coordinator {
         result: &mut ExperimentResult,
     ) -> Result<()> {
         let id = task.learner;
-        if self.cfg.faults.corrupts(id, task.origin_version) {
+        let corrupt = self.cfg.faults.corrupts(id, task.origin_version);
+        if self.runlog.enabled() {
+            let (learner, origin_version) = (id as u64, task.origin_version as u64);
+            let (duration, mean_loss) = (task.duration, task.mean_loss);
+            // a duplicate decision is logged before its delivery: the
+            // delivery that fills the buffer must be immediately followed by
+            // the MergeCommit in the event stream (replay enforces this)
+            if !corrupt && self.cfg.faults.duplicates(id, task.origin_version) {
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Duplicate.code(),
+                    learner,
+                    round: origin_version,
+                });
+            }
+            self.runlog.emit(|| RunEvent::AsyncDelivery {
+                learner,
+                origin_version,
+                duration,
+                mean_loss,
+                corrupt,
+            });
+        }
+        if corrupt {
             // fault injection: server-side validation rejects the corrupted
             // update — missed feedback, no completion credit, and a
             // quarantine cooldown: the (learner, version)-keyed corrupt
@@ -499,8 +572,13 @@ impl Coordinator {
         let mut rec = self.async_record(st, end, failed, fresh, stale, train_loss);
         st.version += 1;
         // evaluation cadence mirrors the sync engine (version == round + 1)
-        if st.version % self.cfg.eval_every == 0 || st.version == self.cfg.rounds {
-            let (loss, acc) = self.evaluate()?;
+        let eval = if st.version % self.cfg.eval_every == 0 || st.version == self.cfg.rounds {
+            Some(self.evaluate()?)
+        } else {
+            None
+        };
+        self.runlog.emit(|| RunEvent::MergeCommit { eval });
+        if let Some((loss, acc)) = eval {
             rec.test_loss = Some(loss);
             rec.test_accuracy = Some(acc);
         }
@@ -529,6 +607,7 @@ impl Coordinator {
         st.conc_last_t = end;
         self.kernel.advance_to(end);
         self.apt.observe_round(dur);
+        self.runlog.emit(|| RunEvent::AsyncBurn { end });
         let rec = self.async_record(st, end, true, 0, 0, None);
         result.rounds.push(rec);
         st.version += 1;

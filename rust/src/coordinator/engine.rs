@@ -31,7 +31,11 @@ use crate::data::synth::{Dataset, TestSet};
 use crate::learners::ProfilePool;
 use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
 use crate::population::{Population, Registry};
+use crate::runlog::{
+    LogSink, RunEvent, RunLogger, FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED,
+};
 use crate::runtime::Executor;
+use crate::scenario::faults::FaultKind;
 use crate::selection::apt::AdaptiveTarget;
 use crate::selection::{RoundFeedback, SelectPool, SelectionCtx, Selector};
 use crate::sim::{Availability, EventClass, EventKernel};
@@ -123,6 +127,9 @@ pub struct Coordinator {
     pub(crate) oracle_plan: Option<std::collections::HashSet<(usize, usize)>>,
     /// Recorded by every run: which straggler updates got aggregated.
     pub(crate) aggregated_stale: std::collections::HashSet<(usize, usize)>,
+    /// Event-sourced run log hook (disabled by default — a disabled logger
+    /// never constructs an event, so unlogged runs stay byte-identical).
+    pub(crate) runlog: RunLogger,
 }
 
 impl Coordinator {
@@ -202,7 +209,14 @@ impl Coordinator {
             cfg,
             oracle_plan: None,
             aggregated_stale: std::collections::HashSet::new(),
+            runlog: RunLogger::disabled(),
         })
+    }
+
+    /// Attach a run logger; every kernel event the engines process is then
+    /// appended to its sink. Call before [`Coordinator::run`].
+    pub fn set_runlog(&mut self, logger: RunLogger) {
+        self.runlog = logger;
     }
 
     /// Run the configured experiment; returns the full result log. OC/DL
@@ -214,6 +228,32 @@ impl Coordinator {
             perplexity_metric: self.exec.variant().perplexity,
             ..Default::default()
         };
+        if self.runlog.enabled() {
+            let (mode, buffer_k, max_staleness) = match self.cfg.mode {
+                RoundMode::OverCommit { .. } => (0u8, 0u64, None),
+                RoundMode::Deadline { .. } => (1u8, 0u64, None),
+                RoundMode::Async { buffer_k, max_staleness } => {
+                    (2u8, buffer_k as u64, max_staleness.map(|v| v as u64))
+                }
+            };
+            let label = result.label.clone();
+            let perplexity = result.perplexity_metric;
+            let rounds = self.cfg.rounds as u64;
+            let eval_every = self.cfg.eval_every as u64;
+            let use_saa = self.cfg.use_saa;
+            let staleness_threshold = self.cfg.staleness_threshold.map(|v| v as u64);
+            self.runlog.emit(move || RunEvent::RunStart {
+                label,
+                perplexity,
+                mode,
+                buffer_k,
+                max_staleness,
+                rounds,
+                eval_every,
+                use_saa,
+                staleness_threshold,
+            });
+        }
         if matches!(self.cfg.mode, RoundMode::Async { .. }) {
             self.run_async(&mut result)?;
             return Ok(result);
@@ -231,10 +271,15 @@ impl Coordinator {
                 _ => 0.0,
             })
             .sum();
+        // Logged before the waste call: the replay oracle re-derives waste
+        // from this very value (heap iteration order is unspecified, so the
+        // sum is not reproducible op-for-op from the event stream alone).
+        self.runlog.emit(|| RunEvent::SweepLeftover { secs: leftover });
         self.accounting.waste(leftover);
         if let Some(last) = result.rounds.last_mut() {
             last.cum_waste_secs = self.accounting.cum_waste_secs;
         }
+        self.runlog.emit(|| RunEvent::RunEnd);
         Ok(result)
     }
 
@@ -246,6 +291,8 @@ impl Coordinator {
         let now = self.kernel.now();
         let mu = self.apt.mu();
         let mut rec = RoundRecord { round, ..Default::default() };
+        let round_u = round as u64;
+        self.runlog.emit(|| RunEvent::RoundStart { round: round_u, now });
 
         // ---- selection window: check-in + availability probe ------------
         // Incremental: availability flips from the index, cooldown/busy
@@ -253,6 +300,10 @@ impl Coordinator {
         // equals the old full scan's id list element-for-element, and every
         // set transition is forwarded to the selector's index hooks.
         self.population.sync_to(round, now, self.selector.as_mut());
+        if self.runlog.enabled() {
+            let count = self.population.eligible_set().len() as u64;
+            self.runlog.emit(|| RunEvent::Eligibility { count });
+        }
 
         // ---- target adjustment (APT) + overcommit ------------------------
         let mut target = self.cfg.target_participants;
@@ -309,6 +360,10 @@ impl Coordinator {
             }
         };
         rec.selected = selected.len();
+        for &id in &selected {
+            let learner = id as u64;
+            self.runlog.emit(|| RunEvent::Selected { learner });
+        }
 
         if selected.is_empty() {
             // Nothing checked in: burn a round slot (paper: round aborted).
@@ -321,6 +376,7 @@ impl Coordinator {
             rec.cum_resource_secs = self.accounting.cum_resource_secs;
             rec.cum_waste_secs = self.accounting.cum_waste_secs;
             rec.unique_participants = self.accounting.unique_participants();
+            self.runlog.emit(|| RunEvent::RoundEnd { round_duration: dur });
             return Ok(rec);
         }
 
@@ -336,6 +392,12 @@ impl Coordinator {
                 // starts (no device time spent, the slot is simply lost)
                 rec.dropouts += 1;
                 rec.faults += 1;
+                let learner = id as u64;
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Flap.code(),
+                    learner,
+                    round: round_u,
+                });
                 continue;
             }
             let n_samples = self.shards[id].len();
@@ -366,6 +428,12 @@ impl Coordinator {
                     // like a trace dropout at the crash point
                     rec.faults += 1;
                     dropped = Some(frac * t);
+                    let learner = id as u64;
+                    self.runlog.emit(|| RunEvent::FaultDecision {
+                        kind: FaultKind::Crash.code(),
+                        learner,
+                        round: round_u,
+                    });
                 }
             }
             tasks.push((id, t, dropped));
@@ -377,7 +445,7 @@ impl Coordinator {
             .filter(|(_, _, d)| d.is_none())
             .map(|(_, t, _)| *t)
             .collect();
-        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        completions.sort_by(|a, b| a.total_cmp(b));
         let round_duration = match self.cfg.mode {
             RoundMode::Deadline { deadline } => {
                 if self.cfg.selector == "safa" {
@@ -432,6 +500,8 @@ impl Coordinator {
                     self.accounting.waste(dt);
                     rec.dropouts += 1;
                     self.population.mark_busy(id, now + dt, self.selector.as_mut());
+                    let learner = id as u64;
+                    self.runlog.emit(|| RunEvent::TaskDropout { learner, spent: dt });
                 }
                 None if t <= round_duration => {
                     fresh_ids.push((id, t));
@@ -501,6 +571,7 @@ impl Coordinator {
             }
             self.accounting.spend(id, t);
             self.population.mark_busy(id, now + t, self.selector.as_mut());
+            let learner = id as u64;
             if faults.corrupts(id, round) {
                 // fault injection: corrupted straggler update — validation
                 // rejects it on delivery, so the spend is pure waste and
@@ -508,6 +579,16 @@ impl Coordinator {
                 self.accounting.waste(t);
                 rec.discarded += 1;
                 rec.faults += 1;
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Corrupt.code(),
+                    learner,
+                    round: round_u,
+                });
+                self.runlog.emit(|| RunEvent::StragglerSpend {
+                    learner,
+                    duration: t,
+                    fate: FATE_CORRUPT,
+                });
                 continue;
             }
             if doomed(t) {
@@ -516,21 +597,39 @@ impl Coordinator {
                 // actual SGD — the model never sees this update.
                 self.accounting.waste(t);
                 rec.discarded += 1;
+                self.runlog.emit(|| RunEvent::StragglerSpend {
+                    learner,
+                    duration: t,
+                    fate: FATE_DOOMED,
+                });
                 continue;
             }
+            self.runlog.emit(|| RunEvent::StragglerSpend {
+                learner,
+                duration: t,
+                fate: FATE_TRAINED,
+            });
             train_ids.push((id, t, false));
         }
         for &(id, t) in &fresh_ids {
             self.accounting.spend(id, t);
             self.population.mark_busy(id, now + t, self.selector.as_mut());
-            if faults.corrupts(id, round) {
+            let learner = id as u64;
+            let corrupt = faults.corrupts(id, round);
+            if corrupt {
                 // fault injection: corrupted fresh update — rejected at
                 // delivery, full spend wasted
                 self.accounting.waste(t);
                 rec.discarded += 1;
                 rec.faults += 1;
                 corrupted_fresh.push(id);
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Corrupt.code(),
+                    learner,
+                    round: round_u,
+                });
             }
+            self.runlog.emit(|| RunEvent::FreshSpend { learner, duration: t, corrupt });
         }
 
         let outcomes = self.train_participants(
@@ -544,6 +643,16 @@ impl Coordinator {
         for ((id, task_time, is_fresh), outcome) in train_ids.iter().zip(outcomes) {
             let outcome = outcome?;
             losses.push(outcome.mean_loss);
+            if self.runlog.enabled() {
+                let (learner, mean_loss) = (*id as u64, outcome.mean_loss);
+                let (duration, fresh) = (*task_time, *is_fresh);
+                self.runlog.emit(|| RunEvent::Trained {
+                    learner,
+                    mean_loss,
+                    duration,
+                    fresh,
+                });
+            }
             if *is_fresh {
                 self.accounting.aggregate(*task_time);
                 feedback_completed.push((*id, outcome.stat_util, *task_time));
@@ -562,6 +671,12 @@ impl Coordinator {
                     // round. The async engine delays every completion.)
                     rec.faults += 1;
                     deliver_at += d;
+                    let learner = *id as u64;
+                    self.runlog.emit(|| RunEvent::FaultDecision {
+                        kind: FaultKind::Delay.code(),
+                        learner,
+                        round: round_u,
+                    });
                 }
                 self.kernel.schedule(
                     deliver_at,
@@ -584,11 +699,19 @@ impl Coordinator {
             let EngineEvent::StaleDelivery(p) = ev.payload else {
                 unreachable!("sync rounds schedule only stale deliveries");
             };
+            let (learner, origin_round, duration) =
+                (p.learner as u64, p.origin_round as u64, p.duration);
             if faults.duplicates(p.learner, p.origin_round) {
                 // fault injection: the upload arrived twice; the server
                 // dedupes the second copy (no accounting impact)
                 rec.faults += 1;
+                self.runlog.emit(|| RunEvent::FaultDecision {
+                    kind: FaultKind::Duplicate.code(),
+                    learner,
+                    round: origin_round,
+                });
             }
+            self.runlog.emit(|| RunEvent::StaleDelivery { learner, origin_round, duration });
             let tau = round - p.origin_round;
             let within = self
                 .cfg
@@ -659,6 +782,7 @@ impl Coordinator {
             let (loss, acc) = self.evaluate()?;
             rec.test_loss = Some(loss);
             rec.test_accuracy = Some(acc);
+            self.runlog.emit(|| RunEvent::EvalDone { loss, acc });
         }
 
         rec.round_duration = round_duration;
@@ -666,6 +790,7 @@ impl Coordinator {
         rec.cum_resource_secs = self.accounting.cum_resource_secs;
         rec.cum_waste_secs = self.accounting.cum_waste_secs;
         rec.unique_participants = self.accounting.unique_participants();
+        self.runlog.emit(|| RunEvent::RoundEnd { round_duration });
         Ok(rec)
     }
 
@@ -830,6 +955,35 @@ pub fn run_experiment(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Experim
         return coord.run();
     }
     Coordinator::new(cfg, exec)?.run()
+}
+
+/// [`run_experiment`], but with every kernel event the engines process
+/// appended to `sink` as an event-sourced run log (`runlog` module). The
+/// returned result is byte-identical to [`run_experiment`] on the same
+/// config — logging observes the run, it never perturbs it — and the log
+/// alone is enough for [`crate::runlog::replay`] to re-derive it. Oracle
+/// (SAFA+O) configs log only the accounted second pass.
+pub fn run_experiment_logged(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    sink: Box<dyn LogSink>,
+) -> Result<ExperimentResult> {
+    let mut coord = if cfg.oracle {
+        let mut probe_cfg = cfg.clone();
+        probe_cfg.oracle = false;
+        let mut probe = Coordinator::new(probe_cfg, Arc::clone(&exec))?;
+        probe.run()?;
+        let plan = probe.aggregated_stale;
+        let mut coord = Coordinator::new(cfg, exec)?;
+        coord.oracle_plan = Some(plan);
+        coord
+    } else {
+        Coordinator::new(cfg, exec)?
+    };
+    coord.set_runlog(RunLogger::new(sink));
+    let result = coord.run()?;
+    coord.runlog.finish()?;
+    Ok(result)
 }
 
 /// [`run_experiment`], but with every trace and forecaster materialized at

@@ -11,5 +11,7 @@ pub mod reference;
 
 mod async_engine;
 
-pub use engine::{run_experiment, run_experiment_eager, Coordinator};
+pub use engine::{
+    run_experiment, run_experiment_eager, run_experiment_logged, Coordinator,
+};
 pub use reference::{run_reference_experiment, ReferenceCoordinator};

@@ -297,7 +297,7 @@ impl ReferenceCoordinator {
             .filter(|(_, _, d)| d.is_none())
             .map(|(_, t, _)| *t)
             .collect();
-        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        completions.sort_by(|a, b| a.total_cmp(b));
         let round_duration = match self.cfg.mode {
             RoundMode::Deadline { deadline } => {
                 if self.cfg.selector == "safa" {

@@ -55,10 +55,10 @@ pub fn fig5(_opts: &FigureOpts) -> Result<()> {
                 cands.sort_by(|&x, &y| {
                     let rx = windows[x].1 .1 - t0;
                     let ry = windows[y].1 .1 - t0;
-                    rx.partial_cmp(&ry).unwrap()
+                    rx.total_cmp(&ry)
                 });
             } else {
-                cands.sort_by(|&x, &y| speeds[x].partial_cmp(&speeds[y]).unwrap());
+                cands.sort_by(|&x, &y| speeds[x].total_cmp(&speeds[y]));
             }
             let picked: Vec<String> = cands.iter().take(3).map(|i| format!("L{i}")).collect();
             let stale: Vec<String> = cands

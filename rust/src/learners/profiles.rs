@@ -117,10 +117,7 @@ impl ProfilePool {
         if frac > 0.0 {
             let mut order: Vec<usize> = (0..n).collect();
             order.sort_by(|&a, &b| {
-                profiles[a]
-                    .sec_per_sample
-                    .partial_cmp(&profiles[b].sec_per_sample)
-                    .unwrap()
+                profiles[a].sec_per_sample.total_cmp(&profiles[b].sec_per_sample)
             });
             let k = ((n as f64) * frac).round() as usize;
             for &i in order.iter().take(k) {
@@ -227,7 +224,7 @@ mod tests {
         // and the changed ones are the fastest of the base population
         let mut base_sorted: Vec<f64> =
             base.profiles.iter().map(|p| p.sec_per_sample).collect();
-        base_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        base_sorted.sort_by(|a, b| a.total_cmp(b));
         let threshold = base_sorted[99];
         for (a, b) in base.profiles.iter().zip(&fast.profiles) {
             if a.sec_per_sample != b.sec_per_sample {

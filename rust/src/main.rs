@@ -15,6 +15,10 @@
 //!   fuzz          differential fuzz runner: random scenario+seed tuples ->
 //!                 engine-vs-reference + workers-1-vs-N + accounting/JSON
 //!                 invariants; failures shrink into tests/corpus/
+//!   replay <arg>  re-derive an ExperimentResult from an event-sourced run
+//!                 log (a --runlog directory), or — given a config / fuzz
+//!                 corpus entry — run the engine with logging and check the
+//!                 replay oracle reproduces the result byte-for-byte
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
 //!   validate      check artifacts + backends and exit
@@ -72,9 +76,10 @@ fn real_main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("fuzz") => cmd_fuzz(&args),
+        Some("replay") => cmd_replay(&args),
         Some("validate") => cmd_validate(&args),
         Some(other) => Err(anyhow!(
-            "unknown command '{other}' (run|sweep|figure|bench|scenario|fuzz|trace-stats|forecast-eval|validate)"
+            "unknown command '{other}' (run|sweep|figure|bench|scenario|fuzz|replay|trace-stats|forecast-eval|validate)"
         )),
         None => {
             print_help();
@@ -167,7 +172,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             runtime::builtin_variant(&cfg.variant),
         )),
     };
-    let result = run_experiment(cfg, exec)?;
+    let result = if let Some(dir) = args.str_opt("runlog") {
+        let sink = relay::runlog::DirSink::create(dir)?;
+        relay::coordinator::run_experiment_logged(cfg, exec, Box::new(sink))?
+    } else {
+        run_experiment(cfg, exec)?
+    };
     for r in &result.rounds {
         if let Some(acc) = r.test_accuracy {
             println!(
@@ -648,6 +658,66 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
     }
 }
 
+/// `relay replay`: the replay oracle. Given a `--runlog` directory, decode
+/// its segments and re-derive the `ExperimentResult` from the event stream
+/// alone (no engine involved). Given a JSON config or a fuzz corpus entry,
+/// run the engine with an in-memory log and check the replayed result is
+/// byte-identical to the engine's — a one-shot differential check.
+fn cmd_replay(args: &Args) -> Result<()> {
+    use relay::runlog::{decode_segments, read_dir_segments, replay, MemSink};
+
+    let target = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: relay replay <log-dir | config.json> [--out r.json]"))?;
+    let path = std::path::Path::new(target);
+    if path.is_dir() {
+        let segments = read_dir_segments(path)?;
+        let (events, stats) = decode_segments(&segments);
+        println!("decoded {} event(s) from {} segment(s)", stats.frames, stats.segments);
+        if !stats.clean {
+            return Err(anyhow!(
+                "run log is corrupt, refusing to replay a partial stream: {}",
+                stats.note.unwrap_or_default()
+            ));
+        }
+        let result = replay(&events)?;
+        println!("{}", result.summary());
+        if let Some(out) = args.str_opt("out") {
+            std::fs::write(out, result.to_json().to_string())?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)?;
+    let json = relay::util::json::Json::parse(&text)?;
+    // a fuzz corpus entry wraps the config under "config"; a bare config is
+    // the object itself
+    let cfg_json = json.get("config").unwrap_or(&json);
+    let cfg = relay::config::ExpConfig::from_json(cfg_json)?;
+    cfg.validate()?;
+    let exec: Arc<dyn runtime::Executor> = Arc::new(runtime::NativeExecutor::new(
+        runtime::builtin_variant(&cfg.variant),
+    ));
+    let sink = MemSink::default();
+    let result = relay::coordinator::run_experiment_logged(cfg, exec, Box::new(sink.clone()))?;
+    let engine_bytes = result.to_json().to_string();
+    let (events, stats) = decode_segments(&sink.segments());
+    if !stats.clean {
+        return Err(anyhow!("run log did not decode cleanly: {}", stats.note.unwrap_or_default()));
+    }
+    let replayed = replay(&events)?;
+    if replayed.to_json().to_string() == engine_bytes {
+        println!(
+            "PASS: replay of {} event(s) is byte-identical to the engine result",
+            events.len()
+        );
+        Ok(())
+    } else {
+        Err(anyhow!("FAIL: replay diverged from the engine result"))
+    }
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -668,13 +738,16 @@ USAGE:
               [--learners N] [--rounds N] [--participants N] [--partition iid|fedscale|label-*]
               [--avail all|dyn] [--deadline SECS] [--buffer-k K [--max-staleness T]]
               [--faults flap=P,crash=P,delay=P,delay-secs=S,corrupt=P,dup=P,seed=N]
-              [--backend pjrt|native] [--config cfg.json] [--out r.json]
+              [--backend pjrt|native] [--config cfg.json] [--out r.json] [--runlog DIR]
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
               [--faults spec] [--report results/sweep.json] [--quiet]
   relay scenario                (list the registered scenario presets)
   relay fuzz  [--iters 100] [--seed N] [--smoke] [--corpus DIR] [--max-failures 5] [--sabotage] [--verbose]
+  relay replay <log-dir | config.json | corpus-entry.json> [--out r.json]
+              (log dir: re-derive the result from events alone; config/corpus
+               entry: run the engine with logging + byte-compare the replay)
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
   relay bench [--suite population|selection|all] [--populations 100000,1000000]
               [--merges 50] [--participants 100] [--selections 200] [--workers N]

@@ -1,0 +1,972 @@
+//! Event-sourced run log: a compact, crash-safe append log of every kernel
+//! event the engines process (check-ins, completions, stale deliveries,
+//! merges, fault decisions, eligibility counts), plus the [`replay`] engine
+//! that re-derives a full `ExperimentResult` from the log alone.
+//!
+//! Design constraints, in order:
+//!
+//! * **zero-cost when disabled** — every engine emit site goes through
+//!   [`RunLogger::emit`] with a closure, so a disabled logger never
+//!   constructs an event and the golden/equivalence suites stay
+//!   byte-identical with logging off;
+//! * **crash-safe** — frames are individually length-prefixed and CRC'd,
+//!   and segments rotate every [`SEGMENT_EVENTS`] events, so a torn tail
+//!   loses at most the last partial frame and decoding always returns a
+//!   clean prefix (never panics on garbage);
+//! * **bit-exact** — `f64` payloads travel as raw IEEE bits, so a replay
+//!   re-derives byte-identical JSON, not merely approximately-equal totals.
+//!
+//! Wire format: each segment is `MAGIC` (8 bytes) followed by frames of
+//! `varint(payload_len) ++ payload ++ crc32_le(payload)`. Payloads are a
+//! one-byte event tag followed by LEB128 varints (`u64`), raw-bit `f64`s,
+//! single-byte bools, and presence-byte-prefixed options.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+pub mod replay;
+
+use std::fs;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+pub use replay::replay;
+
+/// Segment header magic (format version 1).
+pub const MAGIC: &[u8; 8] = b"RLOG0001";
+
+/// Events per segment before the logger rotates to a fresh one.
+pub const SEGMENT_EVENTS: u64 = 8192;
+
+// Straggler fates (`RunEvent::StragglerSpend::fate`).
+/// The straggler's update was scheduled for stale delivery.
+pub const FATE_TRAINED: u8 = 0;
+/// The straggler's update was corrupted and discarded on the spot.
+pub const FATE_CORRUPT: u8 = 1;
+/// SAA pre-screening judged the update too stale to ever aggregate.
+pub const FATE_DOOMED: u8 = 2;
+
+/// One logged engine event. Variants mirror the engines' accounting call
+/// sites one-to-one — the replay reducers in [`replay`] re-derive the full
+/// per-round records from these alone, so every field that feeds a
+/// `RoundRecord` travels in the event that witnesses it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunEvent {
+    /// Run header: everything replay needs from the config.
+    /// `mode` is 0 = over-commit, 1 = deadline, 2 = async (buffered).
+    RunStart {
+        label: String,
+        perplexity: bool,
+        mode: u8,
+        buffer_k: u64,
+        max_staleness: Option<u64>,
+        rounds: u64,
+        eval_every: u64,
+        use_saa: bool,
+        staleness_threshold: Option<u64>,
+    },
+    /// Sync: a round opens at virtual time `now`.
+    RoundStart { round: u64, now: f64 },
+    /// Eligible-population size after the availability sync (audit only;
+    /// replay ignores it).
+    Eligibility { count: u64 },
+    /// Sync: one learner entered the selected set.
+    Selected { learner: u64 },
+    /// A fault decision fired (`kind` is a `FaultKind` code).
+    FaultDecision { kind: u8, learner: u64, round: u64 },
+    /// Sync: a selected learner dropped mid-task after `spent` seconds.
+    TaskDropout { learner: u64, spent: f64 },
+    /// Sync: a straggler's device time was spent; `fate` is `FATE_*`.
+    StragglerSpend { learner: u64, duration: f64, fate: u8 },
+    /// Sync: an in-window participant's device time was spent.
+    FreshSpend { learner: u64, duration: f64, corrupt: bool },
+    /// Sync: a local training outcome was routed (fresh aggregate or
+    /// scheduled stale delivery).
+    Trained { learner: u64, mean_loss: f64, duration: f64, fresh: bool },
+    /// Sync: a stale update from `origin_round` was popped this round.
+    StaleDelivery { learner: u64, origin_round: u64, duration: f64 },
+    /// Sync: the round evaluated the global model.
+    EvalDone { loss: f64, acc: f64 },
+    /// Sync: the round closed (both the normal and the aborted path).
+    RoundEnd { round_duration: f64 },
+    /// Async: the kernel popped an event at time `at`
+    /// (`class` is an `EventClass` code).
+    KernelPop { at: f64, class: u8 },
+    /// Async: a task was spawned; `dropped_after` is the crash point when
+    /// the learner will die mid-task instead of delivering.
+    AsyncSpawn { learner: u64, duration: f64, dropped_after: Option<f64> },
+    /// Async: a mid-task departure arrived at the server.
+    AsyncDropout { learner: u64, spent: f64 },
+    /// Async: a task completion arrived at the server.
+    AsyncDelivery {
+        learner: u64,
+        origin_version: u64,
+        duration: f64,
+        mean_loss: f64,
+        corrupt: bool,
+    },
+    /// Async: the buffer reached K and committed a merge; `eval` carries
+    /// the (loss, accuracy) pair when the new version evaluated.
+    MergeCommit { eval: Option<(f64, f64)> },
+    /// Async: a starved interval burned to `end` as a failed version.
+    AsyncBurn { end: f64 },
+    /// Work still outstanding at run end, swept to waste (the engine's
+    /// computed value, logged so replay reproduces it bit-exactly).
+    SweepLeftover { secs: f64 },
+    /// The run finished cleanly.
+    RunEnd,
+}
+
+// ---------------------------------------------------------------- codec --
+
+fn put_u64v(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(u8::from(v));
+}
+
+fn put_opt_u64(buf: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            buf.push(1);
+            put_u64v(buf, x);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn put_opt_f64(buf: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            buf.push(1);
+            put_f64(buf, x);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64v(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little reader over one frame payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let b = *self
+            .buf
+            .get(self.pos)
+            .ok_or_else(|| anyhow!("truncated payload at byte {}", self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn u64v(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 64 || (shift == 63 && b > 1) {
+                bail!("varint overflows u64");
+            }
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let end = self.pos + 8;
+        let bytes = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| anyhow!("truncated f64 at byte {}", self.pos))?;
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(bytes);
+        self.pos = end;
+        Ok(f64::from_bits(u64::from_le_bytes(raw)))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64v()?)),
+            b => bail!("invalid option byte {b}"),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            b => bail!("invalid option byte {b}"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u64v()? as usize;
+        let end = self.pos + len;
+        let bytes = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| anyhow!("truncated string at byte {}", self.pos))?;
+        let s = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow!("invalid utf-8 in string: {e}"))?
+            .to_string();
+        self.pos = end;
+        Ok(s)
+    }
+}
+
+/// Serialize one event into `buf` (tag byte + payload, no framing).
+pub fn encode_event(ev: &RunEvent, buf: &mut Vec<u8>) {
+    match ev {
+        RunEvent::RunStart {
+            label,
+            perplexity,
+            mode,
+            buffer_k,
+            max_staleness,
+            rounds,
+            eval_every,
+            use_saa,
+            staleness_threshold,
+        } => {
+            buf.push(0);
+            put_str(buf, label);
+            put_bool(buf, *perplexity);
+            buf.push(*mode);
+            put_u64v(buf, *buffer_k);
+            put_opt_u64(buf, *max_staleness);
+            put_u64v(buf, *rounds);
+            put_u64v(buf, *eval_every);
+            put_bool(buf, *use_saa);
+            put_opt_u64(buf, *staleness_threshold);
+        }
+        RunEvent::RoundStart { round, now } => {
+            buf.push(1);
+            put_u64v(buf, *round);
+            put_f64(buf, *now);
+        }
+        RunEvent::Eligibility { count } => {
+            buf.push(2);
+            put_u64v(buf, *count);
+        }
+        RunEvent::Selected { learner } => {
+            buf.push(3);
+            put_u64v(buf, *learner);
+        }
+        RunEvent::FaultDecision { kind, learner, round } => {
+            buf.push(4);
+            buf.push(*kind);
+            put_u64v(buf, *learner);
+            put_u64v(buf, *round);
+        }
+        RunEvent::TaskDropout { learner, spent } => {
+            buf.push(5);
+            put_u64v(buf, *learner);
+            put_f64(buf, *spent);
+        }
+        RunEvent::StragglerSpend { learner, duration, fate } => {
+            buf.push(6);
+            put_u64v(buf, *learner);
+            put_f64(buf, *duration);
+            buf.push(*fate);
+        }
+        RunEvent::FreshSpend { learner, duration, corrupt } => {
+            buf.push(7);
+            put_u64v(buf, *learner);
+            put_f64(buf, *duration);
+            put_bool(buf, *corrupt);
+        }
+        RunEvent::Trained { learner, mean_loss, duration, fresh } => {
+            buf.push(8);
+            put_u64v(buf, *learner);
+            put_f64(buf, *mean_loss);
+            put_f64(buf, *duration);
+            put_bool(buf, *fresh);
+        }
+        RunEvent::StaleDelivery { learner, origin_round, duration } => {
+            buf.push(9);
+            put_u64v(buf, *learner);
+            put_u64v(buf, *origin_round);
+            put_f64(buf, *duration);
+        }
+        RunEvent::EvalDone { loss, acc } => {
+            buf.push(10);
+            put_f64(buf, *loss);
+            put_f64(buf, *acc);
+        }
+        RunEvent::RoundEnd { round_duration } => {
+            buf.push(11);
+            put_f64(buf, *round_duration);
+        }
+        RunEvent::KernelPop { at, class } => {
+            buf.push(12);
+            put_f64(buf, *at);
+            buf.push(*class);
+        }
+        RunEvent::AsyncSpawn { learner, duration, dropped_after } => {
+            buf.push(13);
+            put_u64v(buf, *learner);
+            put_f64(buf, *duration);
+            put_opt_f64(buf, *dropped_after);
+        }
+        RunEvent::AsyncDropout { learner, spent } => {
+            buf.push(14);
+            put_u64v(buf, *learner);
+            put_f64(buf, *spent);
+        }
+        RunEvent::AsyncDelivery {
+            learner,
+            origin_version,
+            duration,
+            mean_loss,
+            corrupt,
+        } => {
+            buf.push(15);
+            put_u64v(buf, *learner);
+            put_u64v(buf, *origin_version);
+            put_f64(buf, *duration);
+            put_f64(buf, *mean_loss);
+            put_bool(buf, *corrupt);
+        }
+        RunEvent::MergeCommit { eval } => {
+            buf.push(16);
+            match eval {
+                Some((loss, acc)) => {
+                    buf.push(1);
+                    put_f64(buf, *loss);
+                    put_f64(buf, *acc);
+                }
+                None => buf.push(0),
+            }
+        }
+        RunEvent::AsyncBurn { end } => {
+            buf.push(17);
+            put_f64(buf, *end);
+        }
+        RunEvent::SweepLeftover { secs } => {
+            buf.push(18);
+            put_f64(buf, *secs);
+        }
+        RunEvent::RunEnd => buf.push(19),
+    }
+}
+
+/// Deserialize one event from a frame payload; the payload must be
+/// consumed exactly (trailing bytes are a format error).
+pub fn decode_event(payload: &[u8]) -> Result<RunEvent> {
+    let mut r = Reader::new(payload);
+    let tag = r.u8()?;
+    let ev = match tag {
+        0 => RunEvent::RunStart {
+            label: r.string()?,
+            perplexity: r.bool()?,
+            mode: r.u8()?,
+            buffer_k: r.u64v()?,
+            max_staleness: r.opt_u64()?,
+            rounds: r.u64v()?,
+            eval_every: r.u64v()?,
+            use_saa: r.bool()?,
+            staleness_threshold: r.opt_u64()?,
+        },
+        1 => RunEvent::RoundStart { round: r.u64v()?, now: r.f64()? },
+        2 => RunEvent::Eligibility { count: r.u64v()? },
+        3 => RunEvent::Selected { learner: r.u64v()? },
+        4 => RunEvent::FaultDecision {
+            kind: r.u8()?,
+            learner: r.u64v()?,
+            round: r.u64v()?,
+        },
+        5 => RunEvent::TaskDropout { learner: r.u64v()?, spent: r.f64()? },
+        6 => RunEvent::StragglerSpend {
+            learner: r.u64v()?,
+            duration: r.f64()?,
+            fate: r.u8()?,
+        },
+        7 => RunEvent::FreshSpend {
+            learner: r.u64v()?,
+            duration: r.f64()?,
+            corrupt: r.bool()?,
+        },
+        8 => RunEvent::Trained {
+            learner: r.u64v()?,
+            mean_loss: r.f64()?,
+            duration: r.f64()?,
+            fresh: r.bool()?,
+        },
+        9 => RunEvent::StaleDelivery {
+            learner: r.u64v()?,
+            origin_round: r.u64v()?,
+            duration: r.f64()?,
+        },
+        10 => RunEvent::EvalDone { loss: r.f64()?, acc: r.f64()? },
+        11 => RunEvent::RoundEnd { round_duration: r.f64()? },
+        12 => RunEvent::KernelPop { at: r.f64()?, class: r.u8()? },
+        13 => RunEvent::AsyncSpawn {
+            learner: r.u64v()?,
+            duration: r.f64()?,
+            dropped_after: r.opt_f64()?,
+        },
+        14 => RunEvent::AsyncDropout { learner: r.u64v()?, spent: r.f64()? },
+        15 => RunEvent::AsyncDelivery {
+            learner: r.u64v()?,
+            origin_version: r.u64v()?,
+            duration: r.f64()?,
+            mean_loss: r.f64()?,
+            corrupt: r.bool()?,
+        },
+        16 => RunEvent::MergeCommit {
+            eval: match r.u8()? {
+                0 => None,
+                1 => Some((r.f64()?, r.f64()?)),
+                b => bail!("invalid option byte {b}"),
+            },
+        },
+        17 => RunEvent::AsyncBurn { end: r.f64()? },
+        18 => RunEvent::SweepLeftover { secs: r.f64()? },
+        19 => RunEvent::RunEnd,
+        t => bail!("unknown event tag {t}"),
+    };
+    if !r.done() {
+        bail!("{} trailing bytes after event tag {tag}", payload.len() - r.pos());
+    }
+    Ok(ev)
+}
+
+/// Bitwise CRC-32 (IEEE 802.3 polynomial, reflected). Slow but dependency-
+/// free; log framing is nowhere near the simulator's hot path.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Frame one event: `varint(len) ++ payload ++ crc32_le(payload)`.
+pub fn encode_frame(ev: &RunEvent) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(32);
+    encode_event(ev, &mut payload);
+    let mut frame = Vec::with_capacity(payload.len() + 8);
+    put_u64v(&mut frame, payload.len() as u64);
+    frame.extend_from_slice(&payload);
+    frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+    frame
+}
+
+/// What [`decode_segments`] found. `clean == false` means decoding stopped
+/// early (truncation, CRC mismatch, parse error) and the returned events
+/// are the clean prefix; `note` says where and why.
+#[derive(Clone, Debug)]
+pub struct DecodeStats {
+    /// Segments whose magic checked out.
+    pub segments: usize,
+    /// Frames decoded successfully.
+    pub frames: usize,
+    pub clean: bool,
+    pub note: Option<String>,
+}
+
+/// Decode an ordered list of segment byte-buffers into events. Never
+/// panics: any corruption stops decoding and returns the clean prefix with
+/// a diagnostic in [`DecodeStats::note`].
+pub fn decode_segments(segments: &[Vec<u8>]) -> (Vec<RunEvent>, DecodeStats) {
+    let mut events = Vec::new();
+    let mut stats = DecodeStats { segments: 0, frames: 0, clean: true, note: None };
+    'segments: for (si, seg) in segments.iter().enumerate() {
+        if seg.len() < MAGIC.len() || &seg[..MAGIC.len()] != MAGIC {
+            stats.clean = false;
+            stats.note = Some(format!("segment {si}: bad or missing magic"));
+            break;
+        }
+        stats.segments += 1;
+        let mut pos = MAGIC.len();
+        while pos < seg.len() {
+            let mut r = Reader::new(&seg[pos..]);
+            let len = match r.u64v() {
+                Ok(l) => l as usize,
+                Err(_) => {
+                    stats.clean = false;
+                    stats.note =
+                        Some(format!("segment {si}: truncated frame header at {pos}"));
+                    break 'segments;
+                }
+            };
+            let header = r.pos();
+            let Some(end) = pos
+                .checked_add(header)
+                .and_then(|p| p.checked_add(len))
+                .and_then(|p| p.checked_add(4))
+            else {
+                stats.clean = false;
+                stats.note = Some(format!("segment {si}: frame length overflow at {pos}"));
+                break 'segments;
+            };
+            if end > seg.len() {
+                stats.clean = false;
+                stats.note = Some(format!("segment {si}: truncated frame at {pos}"));
+                break 'segments;
+            }
+            let payload = &seg[pos + header..end - 4];
+            let crc = &seg[end - 4..end];
+            let stored = u32::from_le_bytes([crc[0], crc[1], crc[2], crc[3]]);
+            if crc32(payload) != stored {
+                stats.clean = false;
+                stats.note = Some(format!("segment {si}: CRC mismatch at {pos}"));
+                break 'segments;
+            }
+            match decode_event(payload) {
+                Ok(ev) => {
+                    events.push(ev);
+                    stats.frames += 1;
+                }
+                Err(e) => {
+                    stats.clean = false;
+                    stats.note = Some(format!("segment {si}: bad frame at {pos}: {e}"));
+                    break 'segments;
+                }
+            }
+            pos = end;
+        }
+    }
+    (events, stats)
+}
+
+// ---------------------------------------------------------------- sinks --
+
+/// Where encoded frames go. `Send` so a boxed sink doesn't strip the
+/// coordinator of its auto-traits.
+pub trait LogSink: Send {
+    /// Append one encoded frame to the current segment.
+    fn write(&mut self, frame: &[u8]) -> io::Result<()>;
+    /// Close the current segment and open the next.
+    fn rotate(&mut self) -> io::Result<()>;
+    /// Flush and close everything.
+    fn finish(&mut self) -> io::Result<()>;
+}
+
+/// On-disk sink: one `seg-NNNNN.rlog` file per segment under a directory.
+pub struct DirSink {
+    dir: PathBuf,
+    idx: usize,
+    writer: Option<BufWriter<fs::File>>,
+}
+
+impl DirSink {
+    pub fn create(dir: impl Into<PathBuf>) -> io::Result<DirSink> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let mut sink = DirSink { dir, idx: 0, writer: None };
+        sink.open_segment()?;
+        Ok(sink)
+    }
+
+    fn open_segment(&mut self) -> io::Result<()> {
+        let path = self.dir.join(format!("seg-{:05}.rlog", self.idx));
+        let mut w = BufWriter::new(fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        self.writer = Some(w);
+        Ok(())
+    }
+}
+
+impl LogSink for DirSink {
+    fn write(&mut self, frame: &[u8]) -> io::Result<()> {
+        match self.writer.as_mut() {
+            Some(w) => w.write_all(frame),
+            None => Err(io::Error::other("run log sink already finished")),
+        }
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        if let Some(mut w) = self.writer.take() {
+            w.flush()?;
+        }
+        self.idx += 1;
+        self.open_segment()
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if let Some(mut w) = self.writer.take() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// In-memory sink for tests and the fuzzer's replay oracle. Cloning shares
+/// the underlying segments, so a caller can keep a handle while the boxed
+/// sink lives inside the coordinator.
+#[derive(Clone)]
+pub struct MemSink {
+    segments: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl MemSink {
+    pub fn new() -> MemSink {
+        MemSink { segments: Arc::new(Mutex::new(vec![MAGIC.to_vec()])) }
+    }
+
+    /// Snapshot of the segments written so far.
+    pub fn segments(&self) -> Vec<Vec<u8>> {
+        self.segments
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .clone()
+    }
+}
+
+impl Default for MemSink {
+    fn default() -> Self {
+        MemSink::new()
+    }
+}
+
+impl LogSink for MemSink {
+    fn write(&mut self, frame: &[u8]) -> io::Result<()> {
+        let mut segs = self
+            .segments
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        match segs.last_mut() {
+            Some(seg) => {
+                seg.extend_from_slice(frame);
+                Ok(())
+            }
+            None => Err(io::Error::other("memory sink has no open segment")),
+        }
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        self.segments
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .push(MAGIC.to_vec());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Read a [`DirSink`] directory back as ordered segment buffers.
+pub fn read_dir_segments(dir: &Path) -> Result<Vec<Vec<u8>>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)
+        .map_err(|e| anyhow!("cannot read run log dir {}: {e}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("seg-") && name.ends_with(".rlog") {
+            paths.push(entry.path());
+        }
+    }
+    if paths.is_empty() {
+        bail!("no seg-*.rlog segments under {}", dir.display());
+    }
+    paths.sort();
+    paths
+        .iter()
+        .map(|p| fs::read(p).map_err(|e| anyhow!("cannot read {}: {e}", p.display())))
+        .collect()
+}
+
+// --------------------------------------------------------------- logger --
+
+/// The hook the engines call. Disabled by default: `emit` takes a closure
+/// so a disabled logger never even constructs the event. The first sink
+/// error poisons the logger (subsequent emits are dropped) and surfaces
+/// from [`RunLogger::finish`], keeping the engine's hot path infallible.
+pub struct RunLogger {
+    sink: Option<Box<dyn LogSink>>,
+    events: u64,
+    error: Option<String>,
+}
+
+impl RunLogger {
+    /// The zero-cost no-op logger.
+    pub fn disabled() -> RunLogger {
+        RunLogger { sink: None, events: 0, error: None }
+    }
+
+    pub fn new(sink: Box<dyn LogSink>) -> RunLogger {
+        RunLogger { sink: Some(sink), events: 0, error: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some() && self.error.is_none()
+    }
+
+    /// Events written so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Log one event. The closure only runs when the logger is live.
+    #[inline]
+    pub fn emit<F: FnOnce() -> RunEvent>(&mut self, make: F) {
+        if self.error.is_some() {
+            return;
+        }
+        let Some(sink) = self.sink.as_mut() else { return };
+        if self.events > 0 && self.events % SEGMENT_EVENTS == 0 {
+            if let Err(e) = sink.rotate() {
+                self.error = Some(format!("run log rotate failed: {e}"));
+                return;
+            }
+        }
+        let frame = encode_frame(&make());
+        match sink.write(&frame) {
+            Ok(()) => self.events += 1,
+            Err(e) => self.error = Some(format!("run log write failed: {e}")),
+        }
+    }
+
+    /// Flush and close, reporting the first deferred sink error if any.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(e) = self.error.take() {
+            self.sink = None;
+            return Err(anyhow!(e));
+        }
+        if let Some(mut sink) = self.sink.take() {
+            sink.finish().map_err(|e| anyhow!("run log close failed: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RunStart {
+                label: "smoke".into(),
+                perplexity: false,
+                mode: 2,
+                buffer_k: 3,
+                max_staleness: Some(4),
+                rounds: 5,
+                eval_every: 2,
+                use_saa: true,
+                staleness_threshold: None,
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Eligibility { count: 14 },
+            RunEvent::Selected { learner: 3 },
+            RunEvent::FaultDecision { kind: 4, learner: 9, round: 1 },
+            RunEvent::TaskDropout { learner: 1, spent: 12.5 },
+            RunEvent::StragglerSpend { learner: 2, duration: 90.25, fate: FATE_DOOMED },
+            RunEvent::FreshSpend { learner: 3, duration: 33.0, corrupt: true },
+            RunEvent::Trained { learner: 3, mean_loss: 1.75, duration: 33.0, fresh: true },
+            RunEvent::StaleDelivery { learner: 2, origin_round: 0, duration: 90.25 },
+            RunEvent::EvalDone { loss: 2.5, acc: 0.125 },
+            RunEvent::RoundEnd { round_duration: 120.0 },
+            RunEvent::KernelPop { at: 7.5, class: 0 },
+            RunEvent::AsyncSpawn { learner: 5, duration: 40.0, dropped_after: Some(8.0) },
+            RunEvent::AsyncDropout { learner: 5, spent: 8.0 },
+            RunEvent::AsyncDelivery {
+                learner: 6,
+                origin_version: 2,
+                duration: 41.5,
+                mean_loss: 0.5,
+                corrupt: false,
+            },
+            RunEvent::MergeCommit { eval: Some((1.0, 0.5)) },
+            RunEvent::MergeCommit { eval: None },
+            RunEvent::AsyncBurn { end: 99.0 },
+            RunEvent::SweepLeftover { secs: 17.25 },
+            RunEvent::RunEnd,
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for ev in sample_events() {
+            let mut payload = Vec::new();
+            encode_event(&ev, &mut payload);
+            assert_eq!(decode_event(&payload).unwrap(), ev, "{ev:?}");
+        }
+    }
+
+    #[test]
+    fn f64_bits_survive_exactly() {
+        for v in [0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -7.25] {
+            let ev = RunEvent::SweepLeftover { secs: v };
+            let mut payload = Vec::new();
+            encode_event(&ev, &mut payload);
+            let RunEvent::SweepLeftover { secs } = decode_event(&payload).unwrap() else {
+                panic!("wrong variant");
+            };
+            assert_eq!(secs.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // the classic IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut payload = Vec::new();
+        encode_event(&RunEvent::RunEnd, &mut payload);
+        payload.push(0);
+        assert!(decode_event(&payload).is_err());
+    }
+
+    #[test]
+    fn mem_sink_logs_and_decodes() {
+        let sink = MemSink::new();
+        let mut logger = RunLogger::new(Box::new(sink.clone()));
+        assert!(logger.enabled());
+        let events = sample_events();
+        for ev in &events {
+            let ev = ev.clone();
+            logger.emit(move || ev);
+        }
+        logger.finish().unwrap();
+        let (decoded, stats) = decode_segments(&sink.segments());
+        assert!(stats.clean, "{:?}", stats.note);
+        assert_eq!(decoded, events);
+        assert_eq!(stats.frames, events.len());
+    }
+
+    #[test]
+    fn disabled_logger_never_runs_the_closure() {
+        let mut logger = RunLogger::disabled();
+        assert!(!logger.enabled());
+        logger.emit(|| panic!("closure must not run when disabled"));
+        assert_eq!(logger.events(), 0);
+        logger.finish().unwrap();
+    }
+
+    #[test]
+    fn logger_rotates_segments() {
+        let sink = MemSink::new();
+        let mut logger = RunLogger::new(Box::new(sink.clone()));
+        for _ in 0..(SEGMENT_EVENTS + 1) {
+            logger.emit(|| RunEvent::RunEnd);
+        }
+        logger.finish().unwrap();
+        let segs = sink.segments();
+        assert_eq!(segs.len(), 2, "one rotation after {SEGMENT_EVENTS} events");
+        let (decoded, stats) = decode_segments(&segs);
+        assert!(stats.clean);
+        assert_eq!(decoded.len(), (SEGMENT_EVENTS + 1) as usize);
+        assert_eq!(stats.segments, 2);
+    }
+
+    #[test]
+    fn truncated_tail_yields_clean_prefix() {
+        let sink = MemSink::new();
+        let mut logger = RunLogger::new(Box::new(sink.clone()));
+        for ev in sample_events() {
+            logger.emit(move || ev);
+        }
+        logger.finish().unwrap();
+        let mut segs = sink.segments();
+        let seg = &mut segs[0];
+        seg.truncate(seg.len() - 3);
+        let (decoded, stats) = decode_segments(&segs);
+        assert!(!stats.clean);
+        assert_eq!(decoded.len(), sample_events().len() - 1);
+        assert!(stats.note.unwrap().contains("truncated"));
+    }
+
+    #[test]
+    fn corrupt_byte_yields_clean_prefix() {
+        let sink = MemSink::new();
+        let mut logger = RunLogger::new(Box::new(sink.clone()));
+        for ev in sample_events() {
+            logger.emit(move || ev);
+        }
+        logger.finish().unwrap();
+        let mut segs = sink.segments();
+        let mid = segs[0].len() / 2;
+        segs[0][mid] ^= 0xFF;
+        let (decoded, stats) = decode_segments(&segs);
+        assert!(!stats.clean);
+        assert!(decoded.len() < sample_events().len());
+    }
+
+    #[test]
+    fn bad_magic_decodes_nothing() {
+        let (decoded, stats) = decode_segments(&[b"NOTALOG!".to_vec()]);
+        assert!(decoded.is_empty());
+        assert!(!stats.clean);
+    }
+
+    #[test]
+    fn dir_sink_round_trips_through_disk() {
+        let dir =
+            std::env::temp_dir().join(format!("relay-runlog-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let sink = DirSink::create(&dir).unwrap();
+        let mut logger = RunLogger::new(Box::new(sink));
+        let events = sample_events();
+        for ev in &events {
+            let ev = ev.clone();
+            logger.emit(move || ev);
+        }
+        logger.finish().unwrap();
+        let segs = read_dir_segments(&dir).unwrap();
+        let (decoded, stats) = decode_segments(&segs);
+        assert!(stats.clean, "{:?}", stats.note);
+        assert_eq!(decoded, events);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,771 @@
+//! Replay: re-derive a full `ExperimentResult` from a run log alone.
+//!
+//! This is deliberately a *second, independent* implementation of the
+//! engines' bookkeeping — a pair of event reducers (one round-synchronous,
+//! one buffered-async) that rebuild every round record, accounting total,
+//! and fault counter from the logged event stream, sharing no code with
+//! `coordinator/`. The fuzzer compares the replayed result byte-for-byte
+//! against the engine's JSON, which turns every logged run into its own
+//! oracle — including the async regime, which the frozen sync reference
+//! cannot cross-check.
+//!
+//! Replay is strict: an event arriving in a state the engines could never
+//! produce (a delivery with nothing in flight, a merge without a full
+//! buffer, an eval on a non-eval round) is an error, not a best-effort
+//! guess — those are exactly the divergences the oracle exists to catch.
+//! All f64 arithmetic mirrors the engines' operation order exactly, so the
+//! derived JSON matches bit-for-bit, not just within epsilon.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::{ExperimentResult, RoundRecord};
+use crate::scenario::faults::FaultKind;
+
+use super::{RunEvent, FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED};
+
+/// Relative tolerance for the order-insensitive cross-checks (the sync
+/// leftover sweep sums the heap in unspecified order, so only an
+/// epsilon-level check is meaningful there; everything else is bit-exact).
+const REL_EPS: f64 = 1e-6;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_EPS * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Everything the reducers need from the `RunStart` header.
+struct Header {
+    buffer_k: usize,
+    max_staleness: Option<u64>,
+    rounds: u64,
+    eval_every: u64,
+    use_saa: bool,
+    staleness_threshold: Option<u64>,
+}
+
+/// Rebuild the full experiment result from a decoded event stream.
+pub fn replay(events: &[RunEvent]) -> Result<ExperimentResult> {
+    let first = events.first().ok_or_else(|| anyhow!("replay: empty run log"))?;
+    let RunEvent::RunStart {
+        label,
+        perplexity,
+        mode,
+        buffer_k,
+        max_staleness,
+        rounds,
+        eval_every,
+        use_saa,
+        staleness_threshold,
+    } = first
+    else {
+        bail!("replay: log must open with RunStart, got {first:?}");
+    };
+    if *eval_every == 0 {
+        bail!("replay: eval_every must be >= 1");
+    }
+    let hdr = Header {
+        buffer_k: *buffer_k as usize,
+        max_staleness: *max_staleness,
+        rounds: *rounds,
+        eval_every: *eval_every,
+        use_saa: *use_saa,
+        staleness_threshold: *staleness_threshold,
+    };
+    let records = match mode {
+        0 | 1 => replay_sync(&hdr, &events[1..])?,
+        2 => replay_async(&hdr, &events[1..])?,
+        m => bail!("replay: unknown mode code {m}"),
+    };
+    Ok(ExperimentResult {
+        label: label.clone(),
+        rounds: records,
+        perplexity_metric: *perplexity,
+    })
+}
+
+// ----------------------------------------------------- sync (OC/DL) ------
+
+/// In-progress round state for the synchronous reducer.
+#[derive(Default)]
+struct SyncRound {
+    round: u64,
+    now: f64,
+    selected: usize,
+    dropouts: usize,
+    discarded: usize,
+    faults: usize,
+    fresh: usize,
+    stale: usize,
+    loss_sum: f64,
+    loss_n: usize,
+    eval: Option<(f64, f64)>,
+}
+
+fn open_round<'a>(cur: &'a mut Option<SyncRound>, i: usize) -> Result<&'a mut SyncRound> {
+    cur.as_mut()
+        .ok_or_else(|| anyhow!("replay: event {i} arrived outside any round"))
+}
+
+fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
+    let mut recs: Vec<RoundRecord> = Vec::new();
+    let mut cur: Option<SyncRound> = None;
+    let mut spent = 0.0f64;
+    let mut wasted = 0.0f64;
+    let mut aggregated = 0.0f64;
+    let mut unique: HashSet<u64> = HashSet::new();
+    // stale updates in flight: (learner, origin round) -> device-seconds
+    let mut outstanding: HashMap<(u64, u64), f64> = HashMap::new();
+    let mut swept = false;
+    let mut ended = false;
+    for (i, ev) in events.iter().enumerate() {
+        if ended {
+            bail!("replay: event {i} after RunEnd: {ev:?}");
+        }
+        match ev {
+            RunEvent::RoundStart { round, now } => {
+                if cur.is_some() {
+                    bail!("replay: RoundStart at event {i} inside an open round");
+                }
+                if *round != recs.len() as u64 {
+                    bail!(
+                        "replay: RoundStart for round {round} at event {i}, expected {}",
+                        recs.len()
+                    );
+                }
+                cur = Some(SyncRound { round: *round, now: *now, ..Default::default() });
+            }
+            RunEvent::Eligibility { .. } => {}
+            RunEvent::Selected { .. } => {
+                open_round(&mut cur, i)?.selected += 1;
+            }
+            RunEvent::FaultDecision { kind, .. } => {
+                let c = open_round(&mut cur, i)?;
+                c.faults += 1;
+                // a flap is the one fault the sync engine also counts as a
+                // dropout (the task never starts, so no TaskDropout event
+                // will follow)
+                if FaultKind::from_code(*kind) == Some(FaultKind::Flap) {
+                    c.dropouts += 1;
+                }
+            }
+            RunEvent::TaskDropout { learner, spent: sp } => {
+                let c = open_round(&mut cur, i)?;
+                spent += sp;
+                unique.insert(*learner);
+                wasted += sp;
+                c.dropouts += 1;
+            }
+            RunEvent::StragglerSpend { learner, duration, fate } => {
+                let c = open_round(&mut cur, i)?;
+                spent += duration;
+                unique.insert(*learner);
+                match *fate {
+                    FATE_TRAINED => {}
+                    FATE_CORRUPT | FATE_DOOMED => {
+                        wasted += duration;
+                        c.discarded += 1;
+                    }
+                    f => bail!("replay: unknown straggler fate {f} at event {i}"),
+                }
+            }
+            RunEvent::FreshSpend { learner, duration, corrupt } => {
+                let c = open_round(&mut cur, i)?;
+                spent += duration;
+                unique.insert(*learner);
+                if *corrupt {
+                    wasted += duration;
+                    c.discarded += 1;
+                }
+            }
+            RunEvent::Trained { learner, mean_loss, duration, fresh } => {
+                let c = open_round(&mut cur, i)?;
+                c.loss_sum += mean_loss;
+                c.loss_n += 1;
+                if *fresh {
+                    aggregated += duration;
+                    c.fresh += 1;
+                } else if outstanding.insert((*learner, c.round), *duration).is_some() {
+                    bail!(
+                        "replay: learner {learner} already has an update in \
+                         flight from round {} (event {i})",
+                        c.round
+                    );
+                }
+            }
+            RunEvent::StaleDelivery { learner, origin_round, duration } => {
+                let c = open_round(&mut cur, i)?;
+                let dur = outstanding.remove(&(*learner, *origin_round)).ok_or_else(|| {
+                    anyhow!(
+                        "replay: stale delivery at event {i} for learner {learner} \
+                         round {origin_round} with nothing in flight"
+                    )
+                })?;
+                if dur.to_bits() != duration.to_bits() {
+                    bail!(
+                        "replay: stale delivery duration {duration} disagrees with \
+                         the spawned {dur} (event {i})"
+                    );
+                }
+                if *origin_round > c.round {
+                    bail!("replay: stale delivery from the future at event {i}");
+                }
+                let tau = c.round - origin_round;
+                let within =
+                    hdr.staleness_threshold.map(|th| tau <= th).unwrap_or(true);
+                if hdr.use_saa && within {
+                    aggregated += duration;
+                    c.stale += 1;
+                } else {
+                    wasted += duration;
+                    c.discarded += 1;
+                }
+            }
+            RunEvent::EvalDone { loss, acc } => {
+                let c = open_round(&mut cur, i)?;
+                if c.eval.is_some() {
+                    bail!("replay: second EvalDone in round {} (event {i})", c.round);
+                }
+                c.eval = Some((*loss, *acc));
+            }
+            RunEvent::RoundEnd { round_duration } => {
+                let c = cur
+                    .take()
+                    .ok_or_else(|| anyhow!("replay: RoundEnd at event {i} with no round"))?;
+                let expected_eval = c.selected > 0
+                    && ((c.round + 1) % hdr.eval_every == 0 || c.round + 1 == hdr.rounds);
+                if expected_eval != c.eval.is_some() {
+                    bail!(
+                        "replay: round {} eval mismatch (expected {expected_eval}, \
+                         logged {})",
+                        c.round,
+                        c.eval.is_some()
+                    );
+                }
+                recs.push(RoundRecord {
+                    round: c.round as usize,
+                    sim_time: c.now + round_duration,
+                    round_duration: *round_duration,
+                    selected: c.selected,
+                    fresh_updates: c.fresh,
+                    stale_updates: c.stale,
+                    dropouts: c.dropouts,
+                    discarded: c.discarded,
+                    faults: c.faults,
+                    cum_resource_secs: spent,
+                    cum_waste_secs: wasted,
+                    unique_participants: unique.len(),
+                    failed: c.fresh == 0 && c.stale == 0,
+                    train_loss: (c.loss_n > 0).then(|| c.loss_sum / c.loss_n as f64),
+                    test_accuracy: c.eval.map(|(_, a)| a),
+                    test_loss: c.eval.map(|(l, _)| l),
+                    ..Default::default()
+                });
+            }
+            RunEvent::SweepLeftover { secs } => {
+                if cur.is_some() {
+                    bail!("replay: SweepLeftover at event {i} inside an open round");
+                }
+                if swept {
+                    bail!("replay: second SweepLeftover at event {i}");
+                }
+                // the engine sums its heap in unspecified order, so only an
+                // epsilon cross-check is possible; the *logged* value is
+                // what feeds the byte-exact waste total
+                let pending: f64 = outstanding.values().sum();
+                if !close(*secs, pending) {
+                    bail!(
+                        "replay: leftover sweep {secs} disagrees with the {pending} \
+                         still outstanding (event {i})"
+                    );
+                }
+                wasted += secs;
+                if let Some(last) = recs.last_mut() {
+                    last.cum_waste_secs = wasted;
+                }
+                outstanding.clear();
+                swept = true;
+            }
+            RunEvent::RunEnd => {
+                if cur.is_some() {
+                    bail!("replay: RunEnd at event {i} inside an open round");
+                }
+                if !swept {
+                    bail!("replay: RunEnd at event {i} without a leftover sweep");
+                }
+                if recs.len() as u64 != hdr.rounds {
+                    bail!(
+                        "replay: log ended after {} rounds, header promised {}",
+                        recs.len(),
+                        hdr.rounds
+                    );
+                }
+                if !close(spent, aggregated + wasted) {
+                    bail!(
+                        "replay: accounting identity broken: spent {spent} != \
+                         aggregated {aggregated} + wasted {wasted}"
+                    );
+                }
+                ended = true;
+            }
+            other => bail!("replay: async-only event {other:?} in a sync log (event {i})"),
+        }
+    }
+    if !ended {
+        bail!("replay: log ends without RunEnd ({} events)", events.len());
+    }
+    Ok(recs)
+}
+
+// ------------------------------------------------- async (buffered) ------
+
+fn replay_async(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
+    let mut recs: Vec<RoundRecord> = Vec::new();
+    let mut version: u64 = 0;
+    let mut in_flight: usize = 0;
+    let mut in_flight_secs = 0.0f64;
+    // buffered unmerged updates: (origin version, device-seconds, mean loss)
+    let mut buffer: Vec<(u64, f64, f64)> = Vec::new();
+    // per-merge-interval counters
+    let mut selected = 0usize;
+    let mut dropouts = 0usize;
+    let mut discarded = 0usize;
+    let mut faults = 0usize;
+    let mut events_n = 0usize;
+    let mut interval_start = 0.0f64;
+    let mut conc_area = 0.0f64;
+    let mut conc_last_t = 0.0f64;
+    let mut expect_merge = false;
+    // run-wide accounting
+    let mut spent = 0.0f64;
+    let mut wasted = 0.0f64;
+    let mut aggregated = 0.0f64;
+    let mut unique: HashSet<u64> = HashSet::new();
+    let mut swept = false;
+    let mut ended = false;
+    for (i, ev) in events.iter().enumerate() {
+        if ended {
+            bail!("replay: event {i} after RunEnd: {ev:?}");
+        }
+        if expect_merge && !matches!(ev, RunEvent::MergeCommit { .. }) {
+            bail!(
+                "replay: buffer reached K but event {i} is {ev:?}, not a MergeCommit"
+            );
+        }
+        match ev {
+            RunEvent::KernelPop { at, class: _ } => {
+                events_n += 1;
+                conc_area += in_flight as f64 * (at - conc_last_t);
+                conc_last_t = *at;
+            }
+            RunEvent::Eligibility { .. } => {}
+            RunEvent::FaultDecision { kind, .. } => {
+                faults += 1;
+                // the async engine counts a flapped learner as selected and
+                // dropped at decision time (no task ever spawns for it)
+                if FaultKind::from_code(*kind) == Some(FaultKind::Flap) {
+                    selected += 1;
+                    dropouts += 1;
+                }
+            }
+            RunEvent::AsyncSpawn { learner, duration, dropped_after } => {
+                let secs = dropped_after.unwrap_or(*duration);
+                spent += secs;
+                unique.insert(*learner);
+                in_flight_secs += secs;
+                in_flight += 1;
+                selected += 1;
+            }
+            RunEvent::AsyncDropout { learner: _, spent: sp } => {
+                in_flight = in_flight
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("replay: dropout at event {i} with nothing in flight"))?;
+                in_flight_secs -= sp;
+                dropouts += 1;
+                wasted += sp;
+            }
+            RunEvent::AsyncDelivery {
+                learner: _,
+                origin_version,
+                duration,
+                mean_loss,
+                corrupt,
+            } => {
+                in_flight = in_flight.checked_sub(1).ok_or_else(|| {
+                    anyhow!("replay: delivery at event {i} with nothing in flight")
+                })?;
+                if *corrupt {
+                    wasted += duration;
+                    in_flight_secs -= duration;
+                    discarded += 1;
+                } else {
+                    if *origin_version > version {
+                        bail!("replay: delivery from future version at event {i}");
+                    }
+                    let tau = version - origin_version;
+                    let within = hdr.max_staleness.map(|m| tau <= m).unwrap_or(true);
+                    if within {
+                        buffer.push((*origin_version, *duration, *mean_loss));
+                        if buffer.len() >= hdr.buffer_k {
+                            expect_merge = true;
+                        }
+                    } else {
+                        wasted += duration;
+                        in_flight_secs -= duration;
+                        discarded += 1;
+                    }
+                }
+            }
+            RunEvent::MergeCommit { eval } => {
+                if !expect_merge {
+                    bail!("replay: MergeCommit at event {i} without a full buffer");
+                }
+                expect_merge = false;
+                let end = conc_last_t;
+                let entries = std::mem::take(&mut buffer);
+                // the engine re-checks staleness against the *current*
+                // version at merge time (versions may have advanced since
+                // an update was buffered... they cannot here, since merges
+                // fire the moment the buffer fills, but the engine guards
+                // it and so does replay)
+                let mut kept: Vec<(u64, f64, f64)> = Vec::new();
+                for (origin, duration, mean_loss) in entries {
+                    let tau = version - origin;
+                    let within = hdr.max_staleness.map(|m| tau <= m).unwrap_or(true);
+                    if within {
+                        kept.push((origin, duration, mean_loss));
+                    } else {
+                        wasted += duration;
+                        in_flight_secs -= duration;
+                        discarded += 1;
+                    }
+                }
+                let fresh = kept.iter().filter(|(o, _, _)| *o == version).count();
+                let stale = kept.len() - fresh;
+                let failed = kept.is_empty();
+                let train_loss = (!kept.is_empty())
+                    .then(|| kept.iter().map(|(_, _, l)| *l).sum::<f64>() / kept.len() as f64);
+                for (_, duration, _) in &kept {
+                    aggregated += duration;
+                    in_flight_secs -= duration;
+                }
+                let interval = end - interval_start;
+                let mean_conc =
+                    if interval > 0.0 { conc_area / interval } else { in_flight as f64 };
+                let mut rec = RoundRecord {
+                    round: version as usize,
+                    sim_time: end,
+                    round_duration: interval,
+                    selected,
+                    fresh_updates: fresh,
+                    stale_updates: stale,
+                    dropouts,
+                    discarded,
+                    faults,
+                    cum_resource_secs: spent,
+                    cum_waste_secs: wasted,
+                    unique_participants: unique.len(),
+                    failed,
+                    train_loss,
+                    mean_concurrency: Some(mean_conc),
+                    cum_aggregated_secs: Some(aggregated),
+                    in_flight_secs: Some(in_flight_secs),
+                    kernel_events: Some(events_n),
+                    ..Default::default()
+                };
+                version += 1;
+                let expected_eval =
+                    version % hdr.eval_every == 0 || version == hdr.rounds;
+                if expected_eval != eval.is_some() {
+                    bail!(
+                        "replay: version {version} eval mismatch (expected \
+                         {expected_eval}, logged {})",
+                        eval.is_some()
+                    );
+                }
+                if let Some((loss, acc)) = eval {
+                    rec.test_loss = Some(*loss);
+                    rec.test_accuracy = Some(*acc);
+                }
+                recs.push(rec);
+                selected = 0;
+                dropouts = 0;
+                discarded = 0;
+                faults = 0;
+                events_n = 0;
+                interval_start = end;
+                conc_area = 0.0;
+                conc_last_t = end;
+            }
+            RunEvent::AsyncBurn { end } => {
+                // a starved interval: nothing in flight, so the engine jumps
+                // the clock without integrating concurrency area
+                conc_last_t = *end;
+                let interval = end - interval_start;
+                let mean_conc =
+                    if interval > 0.0 { conc_area / interval } else { in_flight as f64 };
+                recs.push(RoundRecord {
+                    round: version as usize,
+                    sim_time: *end,
+                    round_duration: interval,
+                    selected,
+                    dropouts,
+                    discarded,
+                    faults,
+                    cum_resource_secs: spent,
+                    cum_waste_secs: wasted,
+                    unique_participants: unique.len(),
+                    failed: true,
+                    mean_concurrency: Some(mean_conc),
+                    cum_aggregated_secs: Some(aggregated),
+                    in_flight_secs: Some(in_flight_secs),
+                    kernel_events: Some(events_n),
+                    ..Default::default()
+                });
+                version += 1;
+                selected = 0;
+                dropouts = 0;
+                discarded = 0;
+                faults = 0;
+                events_n = 0;
+                interval_start = *end;
+                conc_area = 0.0;
+            }
+            RunEvent::SweepLeftover { secs } => {
+                if swept {
+                    bail!("replay: second SweepLeftover at event {i}");
+                }
+                if version != hdr.rounds {
+                    bail!(
+                        "replay: leftover sweep at version {version}, expected {}",
+                        hdr.rounds
+                    );
+                }
+                // replay mirrors the engine's in-flight arithmetic op for
+                // op, so this one is bit-exact — any difference is a real
+                // divergence
+                if secs.to_bits() != in_flight_secs.to_bits() {
+                    bail!(
+                        "replay: leftover sweep {secs} != replayed in-flight \
+                         {in_flight_secs} (event {i})"
+                    );
+                }
+                wasted += secs;
+                if let Some(last) = recs.last_mut() {
+                    last.cum_waste_secs = wasted;
+                    last.in_flight_secs = Some(0.0);
+                }
+                swept = true;
+            }
+            RunEvent::RunEnd => {
+                if !swept {
+                    bail!("replay: RunEnd at event {i} without a leftover sweep");
+                }
+                if recs.len() as u64 != hdr.rounds {
+                    bail!(
+                        "replay: log ended after {} versions, header promised {}",
+                        recs.len(),
+                        hdr.rounds
+                    );
+                }
+                if !close(spent, aggregated + wasted) {
+                    bail!(
+                        "replay: accounting identity broken: spent {spent} != \
+                         aggregated {aggregated} + wasted {wasted}"
+                    );
+                }
+                ended = true;
+            }
+            other => bail!("replay: sync-only event {other:?} in an async log (event {i})"),
+        }
+    }
+    if !ended {
+        bail!("replay: log ends without RunEnd ({} events)", events.len());
+    }
+    Ok(recs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sync_header() -> RunEvent {
+        RunEvent::RunStart {
+            label: "sync".into(),
+            perplexity: false,
+            mode: 0,
+            buffer_k: 0,
+            max_staleness: None,
+            rounds: 1,
+            eval_every: 1,
+            use_saa: true,
+            staleness_threshold: Some(2),
+        }
+    }
+
+    #[test]
+    fn sync_round_rebuilds_records_and_accounting() {
+        let log = vec![
+            sync_header(),
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Eligibility { count: 5 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::Selected { learner: 2 },
+            RunEvent::FreshSpend { learner: 1, duration: 10.0, corrupt: false },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 10.0, fresh: true },
+            RunEvent::StragglerSpend { learner: 2, duration: 20.0, fate: FATE_TRAINED },
+            RunEvent::Trained { learner: 2, mean_loss: 0.7, duration: 20.0, fresh: false },
+            RunEvent::EvalDone { loss: 1.0, acc: 0.25 },
+            RunEvent::RoundEnd { round_duration: 12.0 },
+            RunEvent::SweepLeftover { secs: 20.0 },
+            RunEvent::RunEnd,
+        ];
+        let result = replay(&log).unwrap();
+        assert_eq!(result.label, "sync");
+        assert_eq!(result.rounds.len(), 1);
+        let r = &result.rounds[0];
+        assert_eq!(r.selected, 2);
+        assert_eq!(r.fresh_updates, 1);
+        assert_eq!(r.stale_updates, 0);
+        assert_eq!(r.sim_time, 12.0);
+        assert_eq!(r.cum_resource_secs, 30.0);
+        assert_eq!(r.cum_waste_secs, 20.0, "leftover sweep lands on the last round");
+        assert_eq!(r.unique_participants, 2);
+        assert_eq!(r.train_loss, Some(0.6));
+        assert_eq!(r.test_accuracy, Some(0.25));
+        assert!(!r.failed);
+    }
+
+    #[test]
+    fn sync_stale_delivery_aggregates_within_threshold() {
+        let log = vec![
+            RunEvent::RunStart {
+                label: "sync".into(),
+                perplexity: false,
+                mode: 1,
+                buffer_k: 0,
+                max_staleness: None,
+                rounds: 2,
+                eval_every: 5,
+                use_saa: true,
+                staleness_threshold: Some(2),
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::StragglerSpend { learner: 1, duration: 8.0, fate: FATE_TRAINED },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 8.0, fresh: false },
+            RunEvent::RoundEnd { round_duration: 4.0 },
+            RunEvent::RoundStart { round: 1, now: 4.0 },
+            RunEvent::Selected { learner: 2 },
+            RunEvent::FreshSpend { learner: 2, duration: 3.0, corrupt: false },
+            RunEvent::Trained { learner: 2, mean_loss: 0.4, duration: 3.0, fresh: true },
+            RunEvent::StaleDelivery { learner: 1, origin_round: 0, duration: 8.0 },
+            RunEvent::EvalDone { loss: 2.0, acc: 0.5 },
+            RunEvent::RoundEnd { round_duration: 5.0 },
+            RunEvent::SweepLeftover { secs: 0.0 },
+            RunEvent::RunEnd,
+        ];
+        let result = replay(&log).unwrap();
+        assert!(result.rounds[0].failed, "round 0 merged nothing fresh");
+        let r1 = &result.rounds[1];
+        assert_eq!(r1.stale_updates, 1);
+        assert_eq!(r1.sim_time, 9.0);
+        assert_eq!(r1.cum_resource_secs, 11.0);
+        assert_eq!(r1.cum_waste_secs, 0.0);
+    }
+
+    #[test]
+    fn async_merge_rebuilds_concurrency_and_buffers() {
+        let log = vec![
+            RunEvent::RunStart {
+                label: "async".into(),
+                perplexity: false,
+                mode: 2,
+                buffer_k: 1,
+                max_staleness: None,
+                rounds: 1,
+                eval_every: 1,
+                use_saa: false,
+                staleness_threshold: None,
+            },
+            RunEvent::KernelPop { at: 0.0, class: 3 },
+            RunEvent::AsyncSpawn { learner: 1, duration: 10.0, dropped_after: None },
+            RunEvent::KernelPop { at: 10.0, class: 0 },
+            RunEvent::AsyncDelivery {
+                learner: 1,
+                origin_version: 0,
+                duration: 10.0,
+                mean_loss: 0.5,
+                corrupt: false,
+            },
+            RunEvent::MergeCommit { eval: Some((1.0, 0.25)) },
+            RunEvent::SweepLeftover { secs: 0.0 },
+            RunEvent::RunEnd,
+        ];
+        let result = replay(&log).unwrap();
+        assert_eq!(result.rounds.len(), 1);
+        let r = &result.rounds[0];
+        assert_eq!(r.selected, 1);
+        assert_eq!(r.fresh_updates, 1);
+        assert_eq!(r.sim_time, 10.0);
+        assert_eq!(r.mean_concurrency, Some(1.0));
+        assert_eq!(r.kernel_events, Some(2));
+        assert_eq!(r.cum_aggregated_secs, Some(10.0));
+        assert_eq!(r.in_flight_secs, Some(0.0));
+        assert_eq!(r.test_accuracy, Some(0.25));
+    }
+
+    #[test]
+    fn rejects_logs_without_header_or_end() {
+        assert!(replay(&[]).is_err());
+        assert!(replay(&[RunEvent::RunEnd]).is_err());
+        let unterminated = vec![sync_header(), RunEvent::RoundStart { round: 0, now: 0.0 }];
+        assert!(replay(&unterminated).is_err());
+    }
+
+    #[test]
+    fn rejects_delivery_with_nothing_in_flight() {
+        let log = vec![
+            RunEvent::RunStart {
+                label: "async".into(),
+                perplexity: false,
+                mode: 2,
+                buffer_k: 2,
+                max_staleness: None,
+                rounds: 1,
+                eval_every: 1,
+                use_saa: false,
+                staleness_threshold: None,
+            },
+            RunEvent::AsyncDelivery {
+                learner: 1,
+                origin_version: 0,
+                duration: 10.0,
+                mean_loss: 0.5,
+                corrupt: false,
+            },
+        ];
+        let err = replay(&log).unwrap_err().to_string();
+        assert!(err.contains("nothing in flight"), "{err}");
+    }
+
+    #[test]
+    fn rejects_merge_without_full_buffer() {
+        let log = vec![
+            RunEvent::RunStart {
+                label: "async".into(),
+                perplexity: false,
+                mode: 2,
+                buffer_k: 3,
+                max_staleness: None,
+                rounds: 1,
+                eval_every: 1,
+                use_saa: false,
+                staleness_threshold: None,
+            },
+            RunEvent::MergeCommit { eval: None },
+        ];
+        let err = replay(&log).unwrap_err().to_string();
+        assert!(err.contains("without a full buffer"), "{err}");
+    }
+}

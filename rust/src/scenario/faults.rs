@@ -38,6 +38,40 @@ const KIND_DELAY_AMT: u64 = 5;
 const KIND_CORRUPT: u64 = 6;
 const KIND_DUPLICATE: u64 = 7;
 
+/// Fault classes, as recorded in the run log's `FaultDecision` events
+/// (stable wire codes — the replay oracle matches on them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Flap,
+    Crash,
+    Delay,
+    Corrupt,
+    Duplicate,
+}
+
+impl FaultKind {
+    pub fn code(self) -> u8 {
+        match self {
+            FaultKind::Flap => 0,
+            FaultKind::Crash => 1,
+            FaultKind::Delay => 2,
+            FaultKind::Corrupt => 3,
+            FaultKind::Duplicate => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<FaultKind> {
+        match code {
+            0 => Some(FaultKind::Flap),
+            1 => Some(FaultKind::Crash),
+            2 => Some(FaultKind::Delay),
+            3 => Some(FaultKind::Corrupt),
+            4 => Some(FaultKind::Duplicate),
+            _ => None,
+        }
+    }
+}
+
 /// Fault-injection knobs (all probabilities per selected-learner-per-round;
 /// the default is all-off). Carried by `ExpConfig` and serialized with it.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -38,9 +38,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::{AvailMode, ExpConfig, RoundMode};
-use crate::coordinator::{run_experiment, run_reference_experiment, Coordinator};
+use crate::coordinator::{
+    run_experiment, run_experiment_logged, run_reference_experiment, Coordinator,
+};
 use crate::data::partition::PartitionScheme;
 use crate::metrics::ExperimentResult;
+use crate::runlog::{decode_segments, replay, MemSink};
 use crate::runtime::{builtin_variant, Executor, NativeExecutor};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -288,6 +291,27 @@ fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
     let (r8, _) = run_engine(cfg, 8)?;
     if r8.to_json().to_string() != j1 {
         return Err("workers-1-vs-8 outputs diverged (byte-determinism broken)".into());
+    }
+    // engine-vs-replay differential: a logged run must stay byte-identical
+    // to the unlogged run (logging only observes), its log must decode
+    // cleanly, and the replay oracle must re-derive the exact same JSON
+    // from the events alone. Unlike the frozen sync reference below, this
+    // oracle also covers the async regime.
+    let sink = MemSink::default();
+    let mut lc = cfg.clone();
+    lc.workers = 1;
+    let logged = run_experiment_logged(lc, exec(), Box::new(sink.clone()))
+        .map_err(|e| format!("logged run failed: {e:#}"))?;
+    if logged.to_json().to_string() != j1 {
+        return Err("enabling the run log perturbed the result bytes".into());
+    }
+    let (events, stats) = decode_segments(&sink.segments());
+    if !stats.clean {
+        return Err(format!("run log did not decode cleanly: {}", stats.note.unwrap_or_default()));
+    }
+    let replayed = replay(&events).map_err(|e| format!("run log replay failed: {e:#}"))?;
+    if replayed.to_json().to_string() != j1 {
+        return Err("replay oracle diverged from the engine output".into());
     }
     if !matches!(cfg.mode, RoundMode::Async { .. }) {
         let mut c = cfg.clone();

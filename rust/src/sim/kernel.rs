@@ -44,6 +44,24 @@ pub enum EventClass {
     Availability = 4,
 }
 
+impl EventClass {
+    /// Stable wire code for the run log.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(code: u8) -> Option<EventClass> {
+        match code {
+            0 => Some(EventClass::Delivery),
+            1 => Some(EventClass::Departure),
+            2 => Some(EventClass::Eval),
+            3 => Some(EventClass::CheckIn),
+            4 => Some(EventClass::Availability),
+            _ => None,
+        }
+    }
+}
+
 /// One scheduled event, as returned by [`EventKernel::pop_next`]/`pop_due`.
 #[derive(Clone, Debug)]
 pub struct Scheduled<P> {
@@ -126,19 +144,26 @@ impl<P> EventKernel<P> {
     /// round-synchronous drivers sweep a whole round window at once).
     pub fn pop_due(&mut self, t: f64) -> Vec<Scheduled<P>> {
         let mut out = Vec::new();
-        while let Some(top) = self.heap.peek() {
-            if top.at <= t {
-                out.push(self.heap.pop().unwrap());
-            } else {
-                break;
+        loop {
+            match self.heap.peek() {
+                Some(top) if top.at <= t => {
+                    if let Some(ev) = self.heap.pop() {
+                        out.push(ev);
+                    }
+                }
+                _ => break,
             }
         }
         out
     }
 
     /// Advance the clock without popping (round-synchronous drivers).
+    ///
+    /// Panics on `t < now` in all build profiles: a backwards clock would
+    /// let `schedule`/`pop_due` boundary semantics diverge between the
+    /// engine and the replay oracle, which both assume monotone time.
     pub fn advance_to(&mut self, t: f64) {
-        debug_assert!(t >= self.now, "time cannot go backwards");
+        assert!(t >= self.now, "time cannot go backwards");
         if t > self.now {
             self.now = t;
         }
@@ -218,6 +243,42 @@ mod tests {
         k.schedule(5.0, EventClass::Delivery, ());
         k.pop_next();
         k.schedule(1.0, EventClass::Delivery, ());
+    }
+
+    #[test]
+    fn schedule_at_drain_boundary_delivers_exactly_once() {
+        // Regression: an event scheduled exactly at the drain time `t`
+        // *after* a partial drain of that instant must still be delivered
+        // by the next sweep — once — and never re-delivered.
+        let mut k = EventKernel::default();
+        k.schedule(5.0, EventClass::Delivery, 1);
+        let first = k.pop_due(5.0);
+        assert_eq!(first.len(), 1);
+        k.schedule(5.0, EventClass::Delivery, 2);
+        let second = k.pop_due(5.0);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].payload, 2);
+        assert!(k.pop_due(5.0).is_empty(), "no re-delivery");
+    }
+
+    #[test]
+    fn advance_then_schedule_at_now_pops() {
+        // Scheduling exactly at `now` is legal (schedule uses `>=`) and the
+        // event must pop immediately, leaving the clock where it was.
+        let mut k = EventKernel::default();
+        k.advance_to(3.0);
+        k.schedule(3.0, EventClass::CheckIn, 7);
+        let ev = k.pop_next().unwrap();
+        assert_eq!((ev.at, ev.payload), (3.0, 7));
+        assert_eq!(k.now(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "time cannot go backwards")]
+    fn advance_backwards_panics() {
+        let mut k: EventKernel<()> = EventKernel::default();
+        k.advance_to(2.0);
+        k.advance_to(1.0);
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //! *training math is real* (AOT HLO through PJRT) while *time* is simulated:
 //! completion times come from device profiles, availability from traces.
 
+// The replay oracle re-derives results from the kernel's event stream, so
+// a panic here is a replay divergence waiting to happen: fallible paths
+// must return errors, not unwrap.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod kernel;
 
 pub use kernel::{EventClass, EventKernel, Scheduled};

@@ -124,7 +124,7 @@ fn learner_sessions(root: &Rng, learner: usize, config: &TraceConfig) -> Vec<(f6
         t = end + gap.max(30.0);
     }
     // sort + merge overlaps (nightly block vs random sessions)
-    s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    s.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut merged: Vec<(f64, f64)> = Vec::with_capacity(s.len());
     for (a, b) in s {
         match merged.last_mut() {

@@ -58,7 +58,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult 
         }
         times.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     BenchResult {
         name: name.to_string(),

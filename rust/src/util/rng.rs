@@ -194,7 +194,7 @@ impl ZipfSampler {
         let u = rng.f64();
         match self
             .cdf
-            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+            .binary_search_by(|c| c.total_cmp(&u))
         {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),

@@ -30,7 +30,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -44,7 +44,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Empirical CDF evaluated at `points`: fraction of xs <= point.
 pub fn ecdf(xs: &[f64], points: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     points
         .iter()
         .map(|p| {
@@ -150,7 +150,7 @@ pub fn kmeans_1d(xs: &[f64], k: usize, iters: usize, seed: u64) -> (Vec<f64>, Ve
                 .iter()
                 .enumerate()
                 .min_by(|(_, a), (_, b)| {
-                    (x - *a).abs().partial_cmp(&(x - *b).abs()).unwrap()
+                    (x - *a).abs().total_cmp(&(x - *b).abs())
                 })
                 .map(|(j, _)| j)
                 .unwrap();
@@ -169,7 +169,7 @@ pub fn kmeans_1d(xs: &[f64], k: usize, iters: usize, seed: u64) -> (Vec<f64>, Ve
     }
     // sort centroids and remap assignments
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    order.sort_by(|&a, &b| centroids[a].total_cmp(&centroids[b]));
     let mut rank = vec![0usize; k];
     for (r, &j) in order.iter().enumerate() {
         rank[j] = r;

@@ -1,0 +1,162 @@
+//! Audit of `Accounting` under the `duplicate` fault.
+//!
+//! A duplicate delivery is deduped by the server: it increments the fault
+//! counter and nothing else — no resource is spent twice, no update is
+//! aggregated twice. Fault decisions are stateless (seed-derived per
+//! (kind, learner, round)), so toggling the duplicate rate must leave every
+//! other field of the trajectory bitwise unchanged. These tests pin both
+//! properties plus the terminal-bucket accounting identity
+//! `spent == aggregated + wasted` (in-flight is swept to waste at run end)
+//! under duplicate-heavy configs in all three engines.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment_logged, Coordinator};
+use relay::runlog::{decode_segments, replay, MemSink};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::scenario::faults::FaultConfig;
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+fn modes() -> [(&'static str, RoundMode); 3] {
+    [
+        ("oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ]
+}
+
+/// Straggler-rich DynAvail cell (mirrors the golden-baseline matrix) so
+/// stale deliveries — the sync duplicate site — actually occur.
+fn dup_cfg(mode: RoundMode, duplicate: f64, seed: u64) -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 14,
+        rounds: 6,
+        target_participants: 4,
+        mode,
+        avail: AvailMode::DynAvail,
+        selector: "random".into(),
+        use_saa: true,
+        staleness_threshold: Some(3),
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        seed,
+        faults: FaultConfig { duplicate, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// spent == aggregated + wasted after the run-end sweep, duplicate-heavy,
+/// all three engines, several seeds.
+#[test]
+fn duplicate_heavy_accounting_identity_holds() {
+    for (name, mode) in modes() {
+        for seed in [1u64, 7, 42] {
+            let cfg = dup_cfg(mode, 0.9, seed);
+            let mut coord = Coordinator::new(cfg, exec())
+                .unwrap_or_else(|e| panic!("{name}/seed{seed}: construct failed: {e:#}"));
+            coord.run().unwrap_or_else(|e| panic!("{name}/seed{seed}: run failed: {e:#}"));
+            let (spent, agg, wasted) = coord.accounting_totals();
+            assert!(
+                (spent - (agg + wasted)).abs() <= 1e-6 * spent.max(1.0),
+                "{name}/seed{seed}: accounting identity broken under duplicates: \
+                 spent {spent} != aggregated {agg} + wasted {wasted}"
+            );
+        }
+    }
+}
+
+/// Duplicates only count faults: the trajectory with duplicate=0.9 must be
+/// bitwise identical to the duplicate-free one in every field except
+/// `faults` — and across the matrix the fault counter must actually move
+/// (the audit would be vacuous if no duplicate ever fired).
+#[test]
+fn duplicates_touch_only_the_fault_counter() {
+    let mut dup_faults = 0usize;
+    let mut clean_faults = 0usize;
+    let mut delivered = 0usize;
+    for (name, mode) in modes() {
+        for seed in [1u64, 7, 42] {
+            let run = |duplicate: f64| {
+                let mut coord = Coordinator::new(dup_cfg(mode, duplicate, seed), exec())
+                    .unwrap_or_else(|e| panic!("{name}/seed{seed}: construct failed: {e:#}"));
+                coord.run().unwrap_or_else(|e| panic!("{name}/seed{seed}: run failed: {e:#}"))
+            };
+            let (heavy, clean) = (run(0.9), run(0.0));
+            assert_eq!(heavy.rounds.len(), clean.rounds.len());
+            for (a, b) in heavy.rounds.iter().zip(clean.rounds.iter()) {
+                let at = format!("{name}/seed{seed} round {}", a.round);
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{at}: sim_time");
+                assert_eq!(
+                    a.round_duration.to_bits(),
+                    b.round_duration.to_bits(),
+                    "{at}: round_duration"
+                );
+                assert_eq!(a.selected, b.selected, "{at}: selected");
+                assert_eq!(a.fresh_updates, b.fresh_updates, "{at}: fresh_updates");
+                assert_eq!(a.stale_updates, b.stale_updates, "{at}: stale_updates");
+                assert_eq!(a.dropouts, b.dropouts, "{at}: dropouts");
+                assert_eq!(a.discarded, b.discarded, "{at}: discarded");
+                assert_eq!(
+                    a.cum_resource_secs.to_bits(),
+                    b.cum_resource_secs.to_bits(),
+                    "{at}: cum_resource_secs"
+                );
+                assert_eq!(
+                    a.cum_waste_secs.to_bits(),
+                    b.cum_waste_secs.to_bits(),
+                    "{at}: cum_waste_secs"
+                );
+                assert_eq!(
+                    a.train_loss.map(f64::to_bits),
+                    b.train_loss.map(f64::to_bits),
+                    "{at}: train_loss"
+                );
+                assert_eq!(
+                    a.test_accuracy.map(f64::to_bits),
+                    b.test_accuracy.map(f64::to_bits),
+                    "{at}: test_accuracy"
+                );
+                assert!(a.faults >= b.faults, "{at}: duplicate run lost faults");
+                dup_faults += a.faults;
+                clean_faults += b.faults;
+                delivered += a.fresh_updates + a.stale_updates;
+            }
+        }
+    }
+    assert!(delivered > 0, "matrix produced no deliveries at all — vacuous audit");
+    assert!(
+        dup_faults > clean_faults,
+        "duplicate=0.9 never fired across the whole matrix \
+         ({dup_faults} vs {clean_faults} faults over {delivered} deliveries)"
+    );
+}
+
+/// The replay oracle must survive duplicate-heavy streams too: the logged
+/// FaultDecision events must reconstruct the same fault counters.
+#[test]
+fn duplicate_heavy_replay_is_byte_identical() {
+    for (name, mode) in modes() {
+        let cfg = dup_cfg(mode, 0.9, 7);
+        let sink = MemSink::default();
+        let result = run_experiment_logged(cfg, exec(), Box::new(sink.clone()))
+            .unwrap_or_else(|e| panic!("{name}: logged run failed: {e:#}"));
+        let (events, stats) = decode_segments(&sink.segments());
+        assert!(stats.clean, "{name}: log did not decode cleanly: {:?}", stats.note);
+        let replayed = replay(&events).unwrap_or_else(|e| panic!("{name}: replay failed: {e:#}"));
+        assert_eq!(
+            replayed.to_json().to_string(),
+            result.to_json().to_string(),
+            "{name}: replay diverged under duplicate-heavy faults"
+        );
+    }
+}

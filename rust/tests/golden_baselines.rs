@@ -16,7 +16,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use relay::config::{AvailMode, ExpConfig, RoundMode};
-use relay::coordinator::run_experiment;
+use relay::coordinator::{run_experiment, run_experiment_logged};
+use relay::runlog::{decode_segments, replay, MemSink};
 use relay::runtime::{builtin_variant, Executor, NativeExecutor};
 
 fn exec() -> Arc<dyn Executor> {
@@ -63,9 +64,33 @@ fn selector_mode_matrix_matches_goldens() {
             let label = format!("traj-{selector}-{mode_name}");
             let mut cfg = cell_cfg(selector, *mode);
             cfg.label = label.clone();
-            let result = run_experiment(cfg, exec())
+            let result = run_experiment(cfg.clone(), exec())
                 .unwrap_or_else(|e| panic!("cell '{label}' failed: {e:#}"));
             let bytes = result.to_json().to_string();
+            // replay oracle: a logged run of the same cell must leave the
+            // result bytes untouched, decode cleanly, and re-derive the
+            // identical JSON from the event stream alone
+            let sink = MemSink::default();
+            let logged = run_experiment_logged(cfg, exec(), Box::new(sink.clone()))
+                .unwrap_or_else(|e| panic!("cell '{label}' logged run failed: {e:#}"));
+            assert_eq!(
+                logged.to_json().to_string(),
+                bytes,
+                "cell '{label}': enabling the run log perturbed the result"
+            );
+            let (events, stats) = decode_segments(&sink.segments());
+            assert!(
+                stats.clean,
+                "cell '{label}': run log did not decode cleanly: {:?}",
+                stats.note
+            );
+            let replayed = replay(&events)
+                .unwrap_or_else(|e| panic!("cell '{label}' replay failed: {e:#}"));
+            assert_eq!(
+                replayed.to_json().to_string(),
+                bytes,
+                "cell '{label}': replay oracle diverged from the engine"
+            );
             let path = golden_dir().join(format!("{label}.json"));
             if force_write || !path.exists() {
                 std::fs::create_dir_all(golden_dir()).unwrap();

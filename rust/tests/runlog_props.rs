@@ -1,0 +1,201 @@
+//! Randomized round-trip and robustness properties of the run-log codec.
+//!
+//! * encode → decode over random event streams is the identity (including
+//!   across segment-rotation boundaries);
+//! * a truncated or bit-flipped log never panics the decoder: it yields an
+//!   exact prefix of the original stream, flagged not-clean when the damage
+//!   is inside a frame.
+
+use relay::runlog::{decode_segments, LogSink, MemSink, RunEvent, RunLogger, SEGMENT_EVENTS};
+use relay::util::rng::Rng;
+
+fn random_event(rng: &mut Rng) -> RunEvent {
+    let f = |rng: &mut Rng| rng.uniform(-1e6, 1e6);
+    let u = |rng: &mut Rng| rng.below(1 << 20) as u64;
+    match rng.below(20) {
+        0 => RunEvent::RunStart {
+            label: format!("run-{}", rng.below(1000)),
+            perplexity: rng.bool(0.5),
+            mode: rng.below(3) as u8,
+            buffer_k: u(rng),
+            max_staleness: if rng.bool(0.5) { Some(u(rng)) } else { None },
+            rounds: u(rng),
+            eval_every: 1 + u(rng),
+            use_saa: rng.bool(0.5),
+            staleness_threshold: if rng.bool(0.5) { Some(u(rng)) } else { None },
+        },
+        1 => RunEvent::RoundStart { round: u(rng), now: f(rng) },
+        2 => RunEvent::Eligibility { count: u(rng) },
+        3 => RunEvent::Selected { learner: u(rng) },
+        4 => RunEvent::FaultDecision {
+            kind: rng.below(5) as u8,
+            learner: u(rng),
+            round: u(rng),
+        },
+        5 => RunEvent::TaskDropout { learner: u(rng), spent: f(rng) },
+        6 => RunEvent::StragglerSpend {
+            learner: u(rng),
+            duration: f(rng),
+            fate: rng.below(3) as u8,
+        },
+        7 => RunEvent::FreshSpend {
+            learner: u(rng),
+            duration: f(rng),
+            corrupt: rng.bool(0.5),
+        },
+        8 => RunEvent::Trained {
+            learner: u(rng),
+            mean_loss: f(rng),
+            duration: f(rng),
+            fresh: rng.bool(0.5),
+        },
+        9 => RunEvent::StaleDelivery {
+            learner: u(rng),
+            origin_round: u(rng),
+            duration: f(rng),
+        },
+        10 => RunEvent::EvalDone { loss: f(rng), acc: rng.f64() },
+        11 => RunEvent::RoundEnd { round_duration: f(rng) },
+        12 => RunEvent::KernelPop { at: f(rng), class: rng.below(5) as u8 },
+        13 => RunEvent::AsyncSpawn {
+            learner: u(rng),
+            duration: f(rng),
+            dropped_after: if rng.bool(0.5) { Some(f(rng)) } else { None },
+        },
+        14 => RunEvent::AsyncDropout { learner: u(rng), spent: f(rng) },
+        15 => RunEvent::AsyncDelivery {
+            learner: u(rng),
+            origin_version: u(rng),
+            duration: f(rng),
+            mean_loss: f(rng),
+            corrupt: rng.bool(0.5),
+        },
+        16 => RunEvent::MergeCommit {
+            eval: if rng.bool(0.5) { Some((f(rng), rng.f64())) } else { None },
+        },
+        17 => RunEvent::AsyncBurn { end: f(rng) },
+        18 => RunEvent::SweepLeftover { secs: f(rng) },
+        _ => RunEvent::RunEnd,
+    }
+}
+
+/// Log `events` through the real logger/sink pair; returns the segments.
+fn log_to_segments(events: &[RunEvent]) -> Vec<Vec<u8>> {
+    let sink = MemSink::default();
+    let mut logger = RunLogger::new(Box::new(sink.clone()));
+    for ev in events {
+        logger.emit(|| ev.clone());
+    }
+    logger.finish().expect("memory sink never fails");
+    sink.segments()
+}
+
+fn is_prefix(decoded: &[RunEvent], original: &[RunEvent]) -> bool {
+    decoded.len() <= original.len()
+        && decoded.iter().zip(original.iter()).all(|(a, b)| a == b)
+}
+
+#[test]
+fn random_streams_round_trip_bit_exactly() {
+    let mut rng = Rng::new(0xC0DEC);
+    for trial in 0..20 {
+        let n = rng.range(1, 400);
+        let events: Vec<RunEvent> = (0..n).map(|_| random_event(&mut rng)).collect();
+        let segments = log_to_segments(&events);
+        let (decoded, stats) = decode_segments(&segments);
+        assert!(stats.clean, "trial {trial}: clean stream flagged: {:?}", stats.note);
+        assert_eq!(stats.frames, n, "trial {trial}: frame count");
+        assert_eq!(decoded, events, "trial {trial}: round trip not identity");
+    }
+}
+
+#[test]
+fn rotation_boundary_round_trips_across_segments() {
+    let mut rng = Rng::new(0x5E6);
+    // enough events to force at least one rotation, landing just past the
+    // boundary so the second segment is small
+    let n = SEGMENT_EVENTS as usize + 17;
+    let events: Vec<RunEvent> = (0..n).map(|_| random_event(&mut rng)).collect();
+    let segments = log_to_segments(&events);
+    assert_eq!(segments.len(), 2, "one rotation expected at {SEGMENT_EVENTS} events");
+    let (decoded, stats) = decode_segments(&segments);
+    assert!(stats.clean, "rotated stream flagged: {:?}", stats.note);
+    assert_eq!(stats.segments, 2);
+    assert_eq!(decoded, events);
+}
+
+#[test]
+fn truncated_logs_decode_to_a_clean_prefix_without_panicking() {
+    let mut rng = Rng::new(0x7121C);
+    let events: Vec<RunEvent> = (0..200).map(|_| random_event(&mut rng)).collect();
+    let full = log_to_segments(&events);
+    assert_eq!(full.len(), 1);
+    for _ in 0..100 {
+        let cut = rng.below(full[0].len());
+        let segments = vec![full[0][..cut].to_vec()];
+        let (decoded, _stats) = decode_segments(&segments);
+        assert!(
+            is_prefix(&decoded, &events),
+            "truncation at byte {cut} produced a non-prefix ({} events)",
+            decoded.len()
+        );
+    }
+    // cutting at the very start kills even the magic header
+    let (decoded, stats) = decode_segments(&[Vec::new()]);
+    assert!(decoded.is_empty());
+    assert!(!stats.clean);
+}
+
+#[test]
+fn bit_flips_are_detected_and_yield_a_prefix() {
+    let mut rng = Rng::new(0xF11B);
+    let events: Vec<RunEvent> = (0..200).map(|_| random_event(&mut rng)).collect();
+    let full = log_to_segments(&events);
+    for _ in 0..100 {
+        let mut seg = full[0].clone();
+        let byte = rng.below(seg.len());
+        seg[byte] ^= 1 << rng.below(8);
+        let (decoded, stats) = decode_segments(&[seg]);
+        assert!(
+            !stats.clean,
+            "single-bit flip at byte {byte} went undetected ({} events)",
+            decoded.len()
+        );
+        assert!(
+            is_prefix(&decoded, &events),
+            "flip at byte {byte} produced a non-prefix"
+        );
+    }
+}
+
+/// The logger's error-poisoning contract: the first sink failure mutes all
+/// later emits and surfaces exactly once, from `finish`.
+#[test]
+fn sink_errors_poison_the_logger_and_surface_from_finish() {
+    struct FailingSink {
+        writes_before_failure: usize,
+    }
+    impl LogSink for FailingSink {
+        fn write(&mut self, _frame: &[u8]) -> std::io::Result<()> {
+            if self.writes_before_failure == 0 {
+                return Err(std::io::Error::other("disk full"));
+            }
+            self.writes_before_failure -= 1;
+            Ok(())
+        }
+        fn rotate(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+        fn finish(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let mut logger = RunLogger::new(Box::new(FailingSink { writes_before_failure: 2 }));
+    for _ in 0..10 {
+        logger.emit(|| RunEvent::RunEnd);
+    }
+    assert_eq!(logger.events(), 2, "only pre-failure writes count");
+    assert!(!logger.enabled(), "first failure must poison the logger");
+    let err = logger.finish().expect_err("the deferred error must surface");
+    assert!(err.to_string().contains("disk full"), "unexpected error: {err:#}");
+}

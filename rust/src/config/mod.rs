@@ -97,6 +97,12 @@ pub struct ExpConfig {
     pub seed: u64,
     /// Worker threads for the per-participant training loop.
     pub workers: usize,
+    /// Width of the intra-round training pool (the per-participant local-SGD
+    /// fan-out). 0 = inherit `workers`; 1 = strictly serial; N = N lanes.
+    /// Results are byte-identical at any width — outcomes are committed in a
+    /// fixed reduction order, never completion order (the fuzz harness and
+    /// `tests/train_parallel_props.rs` pin this).
+    pub train_workers: usize,
     /// Deterministic fault injection (all-off by default); see
     /// [`crate::scenario::faults`].
     pub faults: FaultConfig,
@@ -131,7 +137,8 @@ impl Default for ExpConfig {
             eval_every: 5,
             test_per_class: 20,
             seed: 1,
-            workers: 0, // 0 = auto
+            workers: 0,       // 0 = auto
+            train_workers: 0, // 0 = inherit `workers`
             faults: FaultConfig::default(),
         }
     }
@@ -257,6 +264,7 @@ impl ExpConfig {
             ("test_per_class", num(self.test_per_class as f64)),
             ("seed", num(self.seed as f64)),
             ("workers", num(self.workers as f64)),
+            ("train_workers", num(self.train_workers as f64)),
             ("faults", self.faults.to_json()),
         ])
     }
@@ -320,6 +328,7 @@ impl ExpConfig {
             test_per_class: gu("test_per_class", d.test_per_class),
             seed: gf("seed", d.seed as f64) as u64,
             workers: gu("workers", d.workers),
+            train_workers: gu("train_workers", d.train_workers),
             faults: j.get("faults").map(FaultConfig::from_json).unwrap_or_default(),
         };
         cfg.validate()?;
@@ -400,6 +409,7 @@ mod tests {
         c.partition = PartitionScheme::LabelLimited { labels: 0, skew: LabelSkew::Zipf };
         c.hardware = HardwareScenario::Hs3;
         c.oracle = true;
+        c.train_workers = 5;
         c.faults = FaultConfig {
             flap: 0.125,
             crash: 0.25,
@@ -418,6 +428,17 @@ mod tests {
         assert!(c2.oracle);
         assert_eq!(c2.selector, "priority");
         assert_eq!(c2.faults, c.faults);
+        assert_eq!(c2.train_workers, 5);
+    }
+
+    #[test]
+    fn configs_without_train_workers_key_inherit_workers() {
+        // pre-train-pool config files (no "train_workers" key) load as 0 =
+        // inherit `workers`, which is the pre-PR behavior bit-for-bit
+        let parsed = Json::parse(r#"{"mode": "oc", "workers": 3}"#).unwrap();
+        let c = ExpConfig::from_json(&parsed).unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.train_workers, 0);
     }
 
     #[test]

@@ -63,7 +63,9 @@ use crate::scenario::faults::FaultKind;
 use crate::selection::{SelectPool, SelectionCtx};
 use crate::sim::EventClass;
 
-use super::engine::{AsyncDrop, AsyncTask, Coordinator, EngineEvent};
+use super::engine::{
+    AsyncDrop, AsyncTask, BufferedUpdate, Coordinator, EngineEvent, TaskPayload,
+};
 
 /// Mutable state of one async run, threaded through the event handlers.
 struct AsyncState {
@@ -77,8 +79,8 @@ struct AsyncState {
     /// Device-seconds spent but not yet aggregated or wasted (running tasks
     /// plus buffered, unmerged updates).
     in_flight_secs: f64,
-    /// Arrived updates awaiting the next merge.
-    buffer: Vec<AsyncTask>,
+    /// Arrived (and resolved) updates awaiting the next merge.
+    buffer: Vec<BufferedUpdate>,
     // ---- per-version (inter-merge interval) statistics -------------------
     selected: usize,
     dropouts: usize,
@@ -333,19 +335,23 @@ impl Coordinator {
             }
             plans.push((id, t, dropped, crashed));
         }
-        // train NOW against the current global model: the async regime's
-        // defining property is that this snapshot ages (by whole model
-        // versions) while the device computes. All of this fill's tasks
-        // share one snapshot, so they train on the worker pool together
-        // (results come back in job order — determinism is unaffected).
-        // Corrupted tasks skip the real SGD: validation rejects them on
-        // arrival, so the model never sees their delta.
+        // Train against a snapshot of the current global model: the async
+        // regime's defining property is that this snapshot ages (by whole
+        // model versions) while the device computes. The global only
+        // mutates at merges, so the snapshot equals what inline training
+        // would see. Jobs are *submitted* to the persistent train pool now
+        // but their outcomes are only *committed* when each task's Arrival
+        // event pops — a fixed, kernel-ordered reduction order — so results
+        // are byte-identical at any pool width while training overlaps
+        // event scheduling and later fills. Corrupted tasks skip the real
+        // SGD: validation rejects them on arrival, so the model never sees
+        // their delta.
         let train_ids: Vec<usize> = plans
             .iter()
             .filter(|&&(id, _, d, _)| d.is_none() && !faults.corrupts(id, st.version))
             .map(|&(id, _, _, _)| id)
             .collect();
-        let mut outcomes = self.train_participants(&train_ids)?.into_iter();
+        let mut tickets = self.submit_training(&train_ids).into_iter();
         let mut spawned = 0usize;
         for (id, t, dropped, crashed) in plans {
             match dropped {
@@ -404,21 +410,16 @@ impl Coordinator {
                         });
                         AsyncTask {
                             learner: id,
-                            delta: Vec::new(),
-                            mean_loss: 0.0,
-                            stat_util: 0.0,
+                            payload: TaskPayload::Corrupt,
                             origin_version: st.version,
                             duration: t,
                         }
                     } else {
-                        let outcome = outcomes
-                            .next()
-                            .expect("one training outcome per trained plan")?;
                         AsyncTask {
                             learner: id,
-                            delta: outcome.delta,
-                            mean_loss: outcome.mean_loss,
-                            stat_util: outcome.stat_util,
+                            payload: TaskPayload::Pending(
+                                tickets.next().expect("one training ticket per trained plan"),
+                            ),
                             origin_version: st.version,
                             duration: t,
                         }
@@ -454,24 +455,33 @@ impl Coordinator {
         st: &mut AsyncState,
         result: &mut ExperimentResult,
     ) -> Result<()> {
-        let id = task.learner;
-        let corrupt = self.cfg.faults.corrupts(id, task.origin_version);
+        let AsyncTask { learner: id, payload, origin_version, duration } = task;
+        // Commit point: the training ticket is waited on HERE, as the
+        // arrival event is processed — deterministic kernel order, never
+        // worker completion order. A corrupt task never ran SGD; its empty
+        // delta is rejected below without the model ever seeing it.
+        let (corrupt, delta, mean_loss, stat_util) = match payload {
+            TaskPayload::Corrupt => (true, Vec::new(), 0.0, 0.0),
+            TaskPayload::Pending(t) => {
+                let o = t.wait()?;
+                (false, o.delta, o.mean_loss, o.stat_util)
+            }
+        };
         if self.runlog.enabled() {
-            let (learner, origin_version) = (id as u64, task.origin_version as u64);
-            let (duration, mean_loss) = (task.duration, task.mean_loss);
+            let (learner, origin_v) = (id as u64, origin_version as u64);
             // a duplicate decision is logged before its delivery: the
             // delivery that fills the buffer must be immediately followed by
             // the MergeCommit in the event stream (replay enforces this)
-            if !corrupt && self.cfg.faults.duplicates(id, task.origin_version) {
+            if !corrupt && self.cfg.faults.duplicates(id, origin_version) {
                 self.runlog.emit(|| RunEvent::FaultDecision {
                     kind: FaultKind::Duplicate.code(),
                     learner,
-                    round: origin_version,
+                    round: origin_v,
                 });
             }
             self.runlog.emit(|| RunEvent::AsyncDelivery {
                 learner,
-                origin_version,
+                origin_version: origin_v,
                 duration,
                 mean_loss,
                 corrupt,
@@ -489,15 +499,15 @@ impl Coordinator {
                 self.selector.as_mut(),
             );
             self.selector.on_departure(st.version, id, self.apt.mu());
-            self.async_discard(st, task.duration);
+            self.async_discard(st, duration);
             return Ok(());
         }
-        if self.cfg.faults.duplicates(id, task.origin_version) {
+        if self.cfg.faults.duplicates(id, origin_version) {
             // fault injection: the delivery arrived twice; the server
             // dedupes the copy at no cost
             st.faults += 1;
         }
-        let tau = st.version - task.origin_version;
+        let tau = st.version - origin_version;
         let within = st.max_staleness.map(|th| tau <= th).unwrap_or(true);
         if !within {
             // beyond the staleness bound on arrival: discarded outright.
@@ -505,17 +515,17 @@ impl Coordinator {
             // (Oort dampening), no completion credit, no cooldown — so the
             // staleness bound doesn't end up *rewarding* the stalest devices
             self.selector.on_departure(st.version, id, self.apt.mu());
-            self.async_discard(st, task.duration);
+            self.async_discard(st, duration);
             return Ok(());
         }
         self.selector
-            .on_arrival(st.version, (id, task.stat_util, task.duration), self.apt.mu());
+            .on_arrival(st.version, (id, stat_util, duration), self.apt.mu());
         self.population.begin_cooldown(
             id,
             st.version + 1 + self.cfg.cooldown_rounds,
             self.selector.as_mut(),
         );
-        st.buffer.push(task);
+        st.buffer.push(BufferedUpdate { learner: id, delta, mean_loss, origin_version, duration });
         if st.buffer.len() >= st.buffer_k {
             self.async_merge(st, result)?;
         }
@@ -533,7 +543,7 @@ impl Coordinator {
         let entries = std::mem::take(&mut st.buffer);
         // re-check staleness at merge time: burned (failed) slots may have
         // advanced the version while an entry sat in the buffer
-        let mut keep: Vec<AsyncTask> = Vec::new();
+        let mut keep: Vec<BufferedUpdate> = Vec::new();
         for e in entries {
             let tau = st.version - e.origin_version;
             if st.max_staleness.map(|th| tau <= th).unwrap_or(true) {

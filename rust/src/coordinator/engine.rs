@@ -58,16 +58,38 @@ pub(crate) struct PendingUpdate {
     pub(crate) duration: f64,
 }
 
-/// An async-regime task in flight: trained at spawn time against the then-
-/// current global model, delivered when the device finishes.
+/// An async-regime task in flight: its local SGD is *submitted* to the
+/// train pool at spawn time against a snapshot of the then-current global
+/// model (the model only mutates at merges, so the snapshot equals what
+/// inline training would have seen), and *committed* when the arrival event
+/// pops — kernel order, a fixed reduction order independent of worker
+/// completion order, so results are byte-identical at any pool width.
 pub(crate) struct AsyncTask {
     pub(crate) learner: usize,
-    pub(crate) delta: Vec<f32>,
-    pub(crate) mean_loss: f64,
-    pub(crate) stat_util: f64,
+    pub(crate) payload: TaskPayload,
     /// Server model version the task trained against (staleness base).
     pub(crate) origin_version: usize,
     /// Full task duration in device-seconds.
+    pub(crate) duration: f64,
+}
+
+/// What an async task carries between spawn and arrival.
+pub(crate) enum TaskPayload {
+    /// Fault injection: corrupted at source — no SGD was submitted;
+    /// server-side validation rejects the update on arrival.
+    Corrupt,
+    /// The training outcome in flight on the train pool (already resolved
+    /// inline when the pool width is 1 — the serial path).
+    Pending(threadpool::Ticket<Result<LocalOutcome>>),
+}
+
+/// A resolved update sitting in the async merge buffer (the task's ticket
+/// has been waited on; the delta is concrete).
+pub(crate) struct BufferedUpdate {
+    pub(crate) learner: usize,
+    pub(crate) delta: Vec<f32>,
+    pub(crate) mean_loss: f64,
+    pub(crate) origin_version: usize,
     pub(crate) duration: f64,
 }
 
@@ -106,8 +128,13 @@ pub(crate) struct LocalOutcome {
 pub struct Coordinator {
     pub cfg: ExpConfig,
     pub(crate) exec: Arc<dyn Executor>,
-    pub(crate) dataset: Dataset,
-    pub(crate) shards: Vec<LearnerShard>,
+    pub(crate) dataset: Arc<Dataset>,
+    pub(crate) shards: Arc<Vec<LearnerShard>>,
+    /// Persistent intra-round training pool (width from
+    /// `cfg.train_workers`, falling back to `cfg.workers`). Jobs are
+    /// submitted as the round discovers them; outcomes are committed in a
+    /// fixed reduction order, so results are byte-identical at any width.
+    pub(crate) train_pool: threadpool::TrainPool,
     /// The population substrate: who exists (sharded registry), who is
     /// available (incremental availability index), who is selectable
     /// (candidate set) — replaces the per-engine O(total_learners) scans.
@@ -130,6 +157,19 @@ pub struct Coordinator {
     /// Event-sourced run log hook (disabled by default — a disabled logger
     /// never constructs an event, so unlogged runs stay byte-identical).
     pub(crate) runlog: RunLogger,
+}
+
+/// Width of the intra-round training pool for `cfg`: `train_workers` if
+/// set, else `workers` (the pre-existing knob), else a capped autodetect.
+/// The resolved width never changes results — only wall-clock.
+fn resolve_train_workers(cfg: &ExpConfig) -> usize {
+    if cfg.train_workers != 0 {
+        cfg.train_workers
+    } else if cfg.workers != 0 {
+        cfg.workers
+    } else {
+        threadpool::default_workers().min(8)
+    }
 }
 
 impl Coordinator {
@@ -192,6 +232,7 @@ impl Coordinator {
             model_bytes,
             build_workers,
         );
+        let train_pool = threadpool::TrainPool::new(resolve_train_workers(&cfg));
         Ok(Coordinator {
             accounting: Accounting::default(),
             rng: rng.stream(0xC0),
@@ -201,8 +242,9 @@ impl Coordinator {
             apt,
             global,
             kernel: EventKernel::default(),
-            dataset,
-            shards,
+            dataset: Arc::new(dataset),
+            shards: Arc::new(shards),
+            train_pool,
             test,
             model_bytes,
             exec,
@@ -794,36 +836,61 @@ impl Coordinator {
         Ok(rec)
     }
 
-    /// Execute real local SGD for each participant (parallel over learners).
-    pub(crate) fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
-        let workers = if self.cfg.workers == 0 {
-            threadpool::default_workers().min(8)
-        } else {
-            self.cfg.workers
-        };
-        let global = &self.global;
-        let exec = &self.exec;
-        let dataset = &self.dataset;
-        let cfg = &self.cfg;
-        let shards = &self.shards;
-        let jobs: Vec<_> = ids
-            .iter()
+    /// Submit local-SGD jobs for `ids` to the training pool and return one
+    /// ticket per learner, in `ids` order. Each job trains against a
+    /// snapshot of the *current* global model — callers must only commit
+    /// (wait on) tickets at points where the global has not advanced past
+    /// that snapshot for the learner in question, which both engines
+    /// guarantee: the sync path merges after the whole batch, and the async
+    /// path only mutates the global at buffered merges *after* the arrival
+    /// that waits on the ticket.
+    pub(crate) fn submit_training(
+        &self,
+        ids: &[usize],
+    ) -> Vec<threadpool::Ticket<Result<LocalOutcome>>> {
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let global = Arc::new(self.global.clone());
+        ids.iter()
             .map(|&id| {
-                move || -> Result<LocalOutcome> {
+                let exec = Arc::clone(&self.exec);
+                let dataset = Arc::clone(&self.dataset);
+                let shards = Arc::clone(&self.shards);
+                let global = Arc::clone(&global);
+                let (lr, epochs, seed) = (self.cfg.lr, self.cfg.local_epochs, self.cfg.seed);
+                self.train_pool.submit(move || {
                     local_train(
                         exec.as_ref(),
-                        dataset,
+                        &dataset,
                         &shards[id],
                         id,
-                        global,
-                        cfg.lr,
-                        cfg.local_epochs,
-                        cfg.seed,
+                        &global,
+                        lr,
+                        epochs,
+                        seed,
                     )
-                }
+                })
             })
-            .collect();
-        Ok(threadpool::run_parallel(workers, jobs))
+            .collect()
+    }
+
+    /// Execute real local SGD for each participant (concurrent over
+    /// learners; outcomes committed in `ids` order regardless of completion
+    /// order, so results are byte-identical at any pool width).
+    pub(crate) fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
+        Ok(self
+            .submit_training(ids)
+            .into_iter()
+            .map(|t| t.wait())
+            .collect())
+    }
+
+    /// Build the availability index up front (idempotent — it is exactly the
+    /// first `sync_to` a run performs). The train bench calls this so the
+    /// timed window measures training fan-out, not the one-off index build.
+    pub fn warm(&mut self) {
+        self.population.sync_to(0, 0.0, self.selector.as_mut());
     }
 
     /// Test-set evaluation: (mean loss, top-1 accuracy).

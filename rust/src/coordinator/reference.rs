@@ -49,7 +49,6 @@ use crate::selection::{Candidate, RoundFeedback, SelectionCtx, Selector};
 use crate::sim::{Availability, Clock, DeliveryQueue};
 use crate::trace::{LazyTraceSet, TraceConfig};
 use crate::util::rng::Rng;
-use crate::util::threadpool;
 
 use super::engine::{evaluate_params, local_train, LocalOutcome};
 
@@ -608,36 +607,26 @@ impl ReferenceCoordinator {
         out
     }
 
-    /// Execute real local SGD for each participant (parallel over learners).
+    /// Execute real local SGD for each participant — **strictly serial**,
+    /// in ascending `ids` order. The reference engine is the oracle the
+    /// pooled path must match byte-for-byte, so it deliberately keeps the
+    /// simplest possible execution order with no pool in the loop.
     fn train_participants(&self, ids: &[usize]) -> Result<Vec<Result<LocalOutcome>>> {
-        let workers = if self.cfg.workers == 0 {
-            threadpool::default_workers().min(8)
-        } else {
-            self.cfg.workers
-        };
-        let global = &self.global;
-        let exec = &self.exec;
-        let dataset = &self.dataset;
-        let cfg = &self.cfg;
-        let shards = &self.shards;
-        let jobs: Vec<_> = ids
+        Ok(ids
             .iter()
             .map(|&id| {
-                move || -> Result<LocalOutcome> {
-                    local_train(
-                        exec.as_ref(),
-                        dataset,
-                        &shards[id],
-                        id,
-                        global,
-                        cfg.lr,
-                        cfg.local_epochs,
-                        cfg.seed,
-                    )
-                }
+                local_train(
+                    self.exec.as_ref(),
+                    &self.dataset,
+                    &self.shards[id],
+                    id,
+                    &self.global,
+                    self.cfg.lr,
+                    self.cfg.local_epochs,
+                    self.cfg.seed,
+                )
             })
-            .collect();
-        Ok(threadpool::run_parallel(workers, jobs))
+            .collect())
     }
 
     /// Test-set evaluation: (mean loss, top-1 accuracy).

@@ -7,9 +7,11 @@
 //!   figure <id>   regenerate a paper figure/table (2..21, t1, t2, forecast, all)
 //!   bench         population-scale benchmarks: --suite population
 //!                 (construct + select + async merges at 100k/1M learners
-//!                 -> BENCH_population.json) and --suite selection
+//!                 -> BENCH_population.json), --suite selection
 //!                 (per-selector indexed vs materializing selection cost
-//!                 -> BENCH_selection.json)
+//!                 -> BENCH_selection.json), and --suite train (intra-round
+//!                 training-pool width 1-vs-8 wall-clock with byte-identity
+//!                 asserted -> BENCH_train.json, gated in CI via --gate)
 //!   scenario      list the registered scenario presets (run with
 //!                 `relay run --scenario <name>`)
 //!   fuzz          differential fuzz runner: random scenario+seed tuples ->
@@ -110,6 +112,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.rounds = args.usize_or("rounds", cfg.rounds);
     cfg.target_participants = args.usize_or("participants", cfg.target_participants);
     cfg.seed = args.u64_or("seed", cfg.seed);
+    // width of the intra-round training pool; results are byte-identical at
+    // any width (0 = inherit --workers / autodetect, 1 = strictly serial)
+    cfg.train_workers = args.usize_or("train-workers", cfg.train_workers);
     if let Some(p) = args.str_opt("partition") {
         cfg.partition = PartitionScheme::parse(p).ok_or_else(|| anyhow!("bad --partition"))?;
     }
@@ -282,18 +287,24 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// buffered-async cell (`BENCH_population.json`); `--suite selection`
 /// measures per-selector per-selection cost on the indexed vs the
 /// materializing path at 100k/1M pools, appending a run to
-/// `BENCH_selection.json`; `--suite all` runs both. Per-event /
-/// per-selection cost staying flat as the population grows 10x is the
-/// acceptance signal for the sub-linear selection pipeline.
+/// `BENCH_selection.json`; `--suite train` measures intra-round training
+/// wall-clock at pool widths 1 vs 8 on a mega-async-shaped cell (byte-
+/// identity asserted, run appended to `BENCH_train.json`, `--gate` fails
+/// on regression vs the last committed point); `--suite all` runs all
+/// three. Per-event / per-selection cost staying flat as the population
+/// grows 10x is the acceptance signal for the sub-linear selection
+/// pipeline; the workers-8 speedup is the signal for the train pool.
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.str_or("suite", "population").as_str() {
         "population" => cmd_bench_population(args),
         "selection" => cmd_bench_selection(args),
+        "train" => cmd_bench_train(args),
         "all" => {
             cmd_bench_population(args)?;
-            cmd_bench_selection(args)
+            cmd_bench_selection(args)?;
+            cmd_bench_train(args)
         }
-        other => Err(anyhow!("--suite must be population|selection|all, got '{other}'")),
+        other => Err(anyhow!("--suite must be population|selection|train|all, got '{other}'")),
     }
 }
 
@@ -583,6 +594,156 @@ fn cmd_bench_selection(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The intra-round training benchmark: one mega-async-shaped cell (speech
+/// variant, so real SGD dominates the wall-clock) run twice — train pool
+/// width 1 (the serial path) vs 8 — at each `--populations` size. The two
+/// results must be **byte-identical** (the pool's fixed reduction order);
+/// the workers-8 speedup is the payoff metric. Appends one run to
+/// `--train-out` (default BENCH_train.json) so the trajectory accumulates
+/// across commits; `--gate` fails on a >25% regression of the
+/// cores-normalized speedup vs the last committed run for the same
+/// population, and on an absolute floor (speedup < 1.5 with >= 4 cores).
+fn cmd_bench_train(args: &Args) -> Result<()> {
+    use relay::config::RoundMode;
+    use relay::coordinator::Coordinator;
+    use relay::util::json::{arr, num, obj, Json};
+    use std::time::Instant;
+
+    let mut populations = Vec::new();
+    for p in args.list_or("populations", "1000000") {
+        let n: usize = p
+            .parse()
+            .map_err(|_| anyhow!("--populations expects integers, got '{p}'"))?;
+        if n == 0 {
+            return Err(anyhow!("--populations entries must be >= 1"));
+        }
+        populations.push(n);
+    }
+    let merges = args.usize_or("merges", 5);
+    let target = args.usize_or("participants", 50);
+    let buffer_k = args.usize_or("buffer-k", 10);
+    let out = args.str_or("train-out", "BENCH_train.json");
+    let gate = args.bool("gate");
+    let cores = relay::util::threadpool::default_workers();
+
+    // the committed trajectory this run gates against (read before append)
+    let prev = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let prev_runs: Vec<Json> = prev
+        .as_ref()
+        .and_then(|j| j.get("runs"))
+        .and_then(|r| r.as_arr())
+        .map(|r| r.to_vec())
+        .unwrap_or_default();
+    // last committed (speedup, cores) for a population, scanning newest-first
+    let last_point = |population: usize| -> Option<(f64, f64)> {
+        prev_runs.iter().rev().find_map(|run| {
+            let run_cores = run.get("cores").and_then(|c| c.as_f64())?;
+            run.get("cells").and_then(|c| c.as_arr())?.iter().find_map(|cell| {
+                if cell.get("population").and_then(|p| p.as_usize()) != Some(population) {
+                    return None;
+                }
+                cell.get("speedup").and_then(|s| s.as_f64()).map(|s| (s, run_cores))
+            })
+        })
+    };
+
+    let mut cells = Vec::new();
+    let mut gate_errors: Vec<String> = Vec::new();
+    for &n in &populations {
+        println!("== train pool @ population {n} ==");
+        let cfg = relay::config::ExpConfig {
+            variant: "speech".into(),
+            total_learners: n,
+            rounds: merges,
+            target_participants: target,
+            mode: RoundMode::Async { buffer_k, max_staleness: None },
+            avail: relay::config::AvailMode::DynAvail,
+            selector: "random".into(),
+            mean_samples: 40,
+            test_per_class: 2,
+            eval_every: 1_000_000,
+            cooldown_rounds: 1,
+            lr: 0.05,
+            ..Default::default()
+        };
+        let timed = |train_workers: usize| -> Result<(String, f64)> {
+            let mut cfg = cfg.clone();
+            cfg.train_workers = train_workers;
+            let exec: Arc<dyn runtime::Executor> = Arc::new(runtime::NativeExecutor::new(
+                runtime::builtin_variant("speech"),
+            ));
+            let mut coord = Coordinator::new(cfg, exec)?;
+            // pay the one-off availability-index build outside the timed
+            // window: this suite measures the training fan-out, not the
+            // index build the population suite already tracks
+            coord.warm();
+            let t0 = Instant::now();
+            let result = coord.run()?;
+            Ok((result.to_json().to_string(), t0.elapsed().as_secs_f64()))
+        };
+        let (json1, secs1) = timed(1)?;
+        let (json8, secs8) = timed(8)?;
+        if json1 != json8 {
+            return Err(anyhow!(
+                "train pool broke determinism: workers-8 result differs from workers-1 \
+                 at population {n}"
+            ));
+        }
+        let speedup = secs1 / secs8.max(1e-9);
+        println!(
+            "  {merges} merges: workers-1 {secs1:.3}s, workers-8 {secs8:.3}s \
+             ({speedup:.2}x, {cores} cores, byte-identical)"
+        );
+        if gate {
+            // normalize by the parallelism actually available so a point
+            // recorded on a big machine doesn't fail the gate on a small CI
+            // runner: ideal speedup is min(8, cores) on both sides
+            let norm = speedup / (cores as f64).min(8.0);
+            if let Some((prev_speedup, prev_cores)) = last_point(n) {
+                let prev_norm = prev_speedup / prev_cores.min(8.0);
+                if norm < 0.75 * prev_norm {
+                    gate_errors.push(format!(
+                        "population {n}: normalized speedup {norm:.3} regressed >25% vs \
+                         the last committed point {prev_norm:.3}"
+                    ));
+                }
+            }
+            if cores >= 4 && speedup < 1.5 {
+                gate_errors.push(format!(
+                    "population {n}: speedup {speedup:.2}x below the 1.5x floor on \
+                     {cores} cores"
+                ));
+            }
+        }
+        cells.push(obj(vec![
+            ("population", num(n as f64)),
+            ("variant", Json::Str("speech".into())),
+            ("merges", num(merges as f64)),
+            ("target_participants", num(target as f64)),
+            ("buffer_k", num(buffer_k as f64)),
+            ("secs_workers1", num(secs1)),
+            ("secs_workers8", num(secs8)),
+            ("speedup", num(speedup)),
+            ("byte_identical", Json::Bool(true)),
+        ]));
+    }
+
+    let mut runs = prev_runs;
+    runs.push(obj(vec![("cores", num(cores as f64)), ("cells", arr(cells))]));
+    let report = obj(vec![
+        ("format", Json::Str("relay-bench-train-v1".into())),
+        ("runs", arr(runs)),
+    ]);
+    std::fs::write(&out, report.to_string())?;
+    println!("appended run to {out}");
+    if let Some(err) = gate_errors.first() {
+        return Err(anyhow!("train bench gate failed: {err}"));
+    }
+    Ok(())
+}
+
 /// `relay scenario`: list the registered scenario presets.
 fn cmd_scenario(_args: &Args) -> Result<()> {
     println!("{:<18} {:<34} {}", "name", "cell", "summary");
@@ -739,6 +900,8 @@ USAGE:
               [--avail all|dyn] [--deadline SECS] [--buffer-k K [--max-staleness T]]
               [--faults flap=P,crash=P,delay=P,delay-secs=S,corrupt=P,dup=P,seed=N]
               [--backend pjrt|native] [--config cfg.json] [--out r.json] [--runlog DIR]
+              [--train-workers N]   (intra-round training pool width; results
+               are byte-identical at any width — 1 = strictly serial)
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
@@ -749,9 +912,12 @@ USAGE:
               (log dir: re-derive the result from events alone; config/corpus
                entry: run the engine with logging + byte-compare the replay)
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
-  relay bench [--suite population|selection|all] [--populations 100000,1000000]
+  relay bench [--suite population|selection|train|all] [--populations 100000,1000000]
               [--merges 50] [--participants 100] [--selections 200] [--workers N]
               [--out BENCH_population.json] [--selection-out BENCH_selection.json]
+              [--train-out BENCH_train.json] [--buffer-k K] [--gate]
+              (train suite: pool width 1-vs-8 wall-clock + byte-identity on a
+               mega-async cell; --gate fails on >25% speedup regression)
   relay trace-stats | forecast-eval | validate
 
 Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to

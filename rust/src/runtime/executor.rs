@@ -177,7 +177,7 @@ impl PjrtExecutor {
     }
 
     fn count(&self, name: &'static str) {
-        *self.calls.lock().unwrap().entry(name).or_insert(0) += 1;
+        *self.calls.lock().expect("call-count mutex poisoned").entry(name).or_insert(0) += 1;
     }
 
     fn run(

@@ -3,6 +3,10 @@
 //! the PJRT CPU client from the coordinator's round path. Also provides a
 //! pure-rust [`native::NativeExecutor`] mirror used as fallback/cross-check.
 
+// the model-math hot path: a stray unwrap here panics mid-round, so force
+// every failure through Result (or an expect that documents the invariant)
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod executor;
 pub mod manifest;
 pub mod native;

@@ -38,7 +38,7 @@ impl NativeExecutor {
             off += di * do_;
             let bias = &params[off..off + do_];
             off += do_;
-            let h = hs.last().unwrap();
+            let h = hs.last().expect("hs starts with the input activation");
             let mut z = vec![0f32; b * do_];
             matmul_acc(h, w, &mut z, b, di, do_);
             for r in 0..b {
@@ -88,9 +88,98 @@ impl NativeExecutor {
     }
 }
 
+/// Tile edge (f32 elements) for the blocked kernels below — the same block
+/// shape the Pallas grid uses in `python/compile/kernels/matmul.py` (one
+/// (i, j) output tile per program, revisited across the kk grid axis), sized
+/// so an output tile plus its operand strips stay L1-resident.
+const TILE: usize = 64;
+
 /// out[b][n] += x[b][k] * w[k][n] — row-major, f32 accumulate (matches the
 /// Pallas kernel's preferred_element_type=f32).
+///
+/// Blocked over output columns, mirroring the Pallas (i, j, kk) grid: each
+/// j-tile of an output row is revisited across the full ascending-k strip.
+/// **Bitwise-stable**: for every output element the adds happen in the same
+/// ascending-k order, with the same `xv == 0.0` skip set, as the retained
+/// scalar reference — pinned bit-for-bit by the tests below.
 fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    for r in 0..b {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (jb, otile) in orow.chunks_mut(TILE).enumerate() {
+            let j0 = jb * TILE;
+            let jw = otile.len();
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wtile = &w[kk * n + j0..kk * n + j0 + jw];
+                for (o, &wv) in otile.iter_mut().zip(wtile) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// out[k][n] += x^T[k][b] * g[b][n] for dW.
+///
+/// Blocked over (k, n) output tiles; the batch (reduction) axis stays the
+/// outermost loop *inside* each tile, so every output element accumulates
+/// in the same ascending-r order (and `xv == 0.0` skip set) as the scalar
+/// reference — bitwise-identical at any tile size.
+fn matmul_at_b(x: &[f32], g: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    for k0 in (0..k).step_by(TILE) {
+        let k1 = (k0 + TILE).min(k);
+        for j0 in (0..n).step_by(TILE) {
+            let j1 = (j0 + TILE).min(n);
+            for r in 0..b {
+                let xrow = &x[r * k..(r + 1) * k];
+                let grow = &g[r * n + j0..r * n + j1];
+                for kk in k0..k1 {
+                    let xv = xrow[kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let otile = &mut out[kk * n + j0..kk * n + j1];
+                    for (o, &gv) in otile.iter_mut().zip(grow) {
+                        *o += xv * gv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// out[b][k] += g[b][n] * w^T[n][k] for dh.
+///
+/// Blocked over w row-strips (reused across the whole batch while hot).
+/// The n (reduction) loop is deliberately **not** tiled: each output element
+/// is one local f32 accumulator chain over ascending j, and splitting it
+/// would change the rounding — the chain is kept whole so the result stays
+/// bitwise-identical to the scalar reference.
+fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    for k0 in (0..k).step_by(TILE) {
+        let k1 = (k0 + TILE).min(k);
+        for r in 0..b {
+            let grow = &g[r * n..(r + 1) * n];
+            let orow = &mut out[r * k..(r + 1) * k];
+            for kk in k0..k1 {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut acc = 0f32;
+                for (&gv, &wv) in grow.iter().zip(wrow) {
+                    acc += gv * wv;
+                }
+                orow[kk] += acc;
+            }
+        }
+    }
+}
+
+/// Retained scalar reference for [`matmul_acc`] — the pre-tiling kernel,
+/// kept verbatim as the bitwise oracle for the property tests.
+#[cfg(test)]
+fn matmul_acc_scalar(x: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
     // i-k-j loop order: streams w rows, vectorizes the inner j loop.
     for r in 0..b {
         let xrow = &x[r * k..(r + 1) * k];
@@ -107,8 +196,9 @@ fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usiz
     }
 }
 
-/// out[k][n] += x^T[k][b] * g[b][n] for dW.
-fn matmul_at_b(x: &[f32], g: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+/// Retained scalar reference for [`matmul_at_b`] (bitwise oracle).
+#[cfg(test)]
+fn matmul_at_b_scalar(x: &[f32], g: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
     for r in 0..b {
         let xrow = &x[r * k..(r + 1) * k];
         let grow = &g[r * n..(r + 1) * n];
@@ -125,8 +215,9 @@ fn matmul_at_b(x: &[f32], g: &[f32], out: &mut [f32], b: usize, k: usize, n: usi
     }
 }
 
-/// out[b][k] += g[b][n] * w^T[n][k] for dh.
-fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+/// Retained scalar reference for [`matmul_b_wt`] (bitwise oracle).
+#[cfg(test)]
+fn matmul_b_wt_scalar(g: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
     for r in 0..b {
         let grow = &g[r * n..(r + 1) * n];
         let orow = &mut out[r * k..(r + 1) * k];
@@ -174,7 +265,7 @@ impl Executor for NativeExecutor {
         let b = v.batch;
         let shapes = v.layer_shapes();
         let (zs, hs) = self.forward(params, x);
-        let logits = hs.last().unwrap();
+        let logits = hs.last().expect("forward always pushes the logits");
         let (probs, nll, argmax) = self.softmax_stats(logits, y);
 
         let denom: f32 = mask.iter().sum::<f32>().max(1.0);
@@ -240,7 +331,7 @@ impl Executor for NativeExecutor {
 
     fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
         let (_, hs) = self.forward(params, x);
-        let logits = hs.last().unwrap();
+        let logits = hs.last().expect("forward always pushes the logits");
         let (_, nll, argmax) = self.softmax_stats(logits, y);
         let sum_loss: f32 = nll.iter().zip(mask).map(|(l, m)| l * m).sum();
         let correct: f32 = argmax
@@ -382,6 +473,72 @@ mod tests {
         let o2 = e.train_step(&p, &x, &y, &mask, 0.05).unwrap();
         assert_eq!(o1.loss, o2.loss);
         assert_eq!(o1.params, o2.params);
+    }
+
+    /// Random matrix with exact zeros sprinkled in, exercising the kernels'
+    /// `xv == 0.0` skip paths the way post-ReLU activations do.
+    fn mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| if rng.bool(0.2) { 0.0 } else { rng.normal() as f32 })
+            .collect()
+    }
+
+    fn assert_bits_eq(tiled: &[f32], scalar: &[f32], kernel: &str, dims: (usize, usize, usize)) {
+        for (i, (t, s)) in tiled.iter().zip(scalar).enumerate() {
+            assert_eq!(
+                t.to_bits(),
+                s.to_bits(),
+                "{kernel} {dims:?}: element {i} diverged (tiled {t} vs scalar {s})"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_matmuls_bitwise_equal_the_scalar_reference() {
+        // ragged tail blocks, degenerate dims of 1, exact-TILE edges, and
+        // sizes past one tile — every (b, k, n) must match bit-for-bit
+        let interesting = [1usize, 2, 3, 5, 63, 64, 65, 100, 127, 128, 129];
+        let mut rng = Rng::new(0x7E57_714E);
+        let mut cases: Vec<(usize, usize, usize)> = Vec::new();
+        for &b in &[1usize, 4, 20] {
+            for &k in &interesting {
+                for &n in &interesting {
+                    cases.push((b, k, n));
+                }
+            }
+        }
+        for _ in 0..40 {
+            cases.push((
+                1 + rng.below(24),
+                1 + rng.below(150),
+                1 + rng.below(150),
+            ));
+        }
+        for (b, k, n) in cases {
+            let x = mat(&mut rng, b * k);
+            let w = mat(&mut rng, k * n);
+            let g = mat(&mut rng, b * n);
+            // accumulate into a shared random base: += kernels must agree on
+            // pre-existing content too, not just on zeroed outputs
+            let base_bn = mat(&mut rng, b * n);
+            let base_kn = mat(&mut rng, k * n);
+            let base_bk = mat(&mut rng, b * k);
+
+            let (mut t, mut s) = (base_bn.clone(), base_bn.clone());
+            matmul_acc(&x, &w, &mut t, b, k, n);
+            matmul_acc_scalar(&x, &w, &mut s, b, k, n);
+            assert_bits_eq(&t, &s, "matmul_acc", (b, k, n));
+
+            let (mut t, mut s) = (base_kn.clone(), base_kn.clone());
+            matmul_at_b(&x, &g, &mut t, b, k, n);
+            matmul_at_b_scalar(&x, &g, &mut s, b, k, n);
+            assert_bits_eq(&t, &s, "matmul_at_b", (b, k, n));
+
+            let (mut t, mut s) = (base_bk.clone(), base_bk.clone());
+            matmul_b_wt(&g, &w, &mut t, b, k, n);
+            matmul_b_wt_scalar(&g, &w, &mut s, b, k, n);
+            assert_bits_eq(&t, &s, "matmul_b_wt", (b, k, n));
+        }
     }
 
     #[test]

@@ -157,14 +157,17 @@ pub fn sample_config(rng: &mut Rng, smoke: bool) -> ExpConfig {
     cfg
 }
 
-/// Run one config at the given worker count; `(result, terminal buckets)`.
-/// Oracle configs route through the two-pass protocol (no totals).
+/// Run one config at the given sweep- and training-worker counts;
+/// `(result, terminal buckets)`. Oracle configs route through the two-pass
+/// protocol (no totals).
 fn run_engine(
     cfg: &ExpConfig,
     workers: usize,
+    train_workers: usize,
 ) -> Result<(ExperimentResult, Option<(f64, f64, f64)>), String> {
     let mut c = cfg.clone();
     c.workers = workers;
+    c.train_workers = train_workers;
     if c.oracle {
         let r = run_experiment(c, exec()).map_err(|e| format!("engine run failed: {e:#}"))?;
         Ok((r, None))
@@ -274,7 +277,7 @@ fn check_result(cfg: &ExpConfig, r: &ExperimentResult) -> Result<(), String> {
 
 fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
     cfg.validate().map_err(|e| format!("validate: {e:#}"))?;
-    let (r1, totals) = run_engine(cfg, 1)?;
+    let (r1, totals) = run_engine(cfg, 1, 1)?;
     let j1 = r1.to_json().to_string();
     Json::parse(&j1).map_err(|e| format!("output is not valid JSON: {e}"))?;
     if j1.contains("NaN") || j1.contains(":inf") || j1.contains(":-inf") {
@@ -288,9 +291,21 @@ fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
             ));
         }
     }
-    let (r8, _) = run_engine(cfg, 8)?;
+    let (r8, _) = run_engine(cfg, 8, 1)?;
     if r8.to_json().to_string() != j1 {
         return Err("workers-1-vs-8 outputs diverged (byte-determinism broken)".into());
+    }
+    // train-worker axis: fanning local SGD across the training pool must
+    // never perturb the bytes, at any width, including the combined case
+    // where both pools are wide.
+    for (w, tw) in [(1usize, 2usize), (1, 8), (8, 8)] {
+        let (rt, _) = run_engine(cfg, w, tw)?;
+        if rt.to_json().to_string() != j1 {
+            return Err(format!(
+                "train-workers-1-vs-{tw} (workers {w}) outputs diverged \
+                 (training pool broke byte-determinism)"
+            ));
+        }
     }
     // engine-vs-replay differential: a logged run must stay byte-identical
     // to the unlogged run (logging only observes), its log must decode
@@ -300,6 +315,7 @@ fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
     let sink = MemSink::default();
     let mut lc = cfg.clone();
     lc.workers = 1;
+    lc.train_workers = 1;
     let logged = run_experiment_logged(lc, exec(), Box::new(sink.clone()))
         .map_err(|e| format!("logged run failed: {e:#}"))?;
     if logged.to_json().to_string() != j1 {
@@ -333,7 +349,7 @@ pub fn check_case(cfg: &ExpConfig) -> Option<String> {
 /// The planted fake invariant ("no stale update is ever aggregated") used
 /// to demo and test the find → shrink → corpus pipeline.
 pub fn sabotage_check(cfg: &ExpConfig) -> Option<String> {
-    let (r, _) = match run_engine(cfg, 1) {
+    let (r, _) = match run_engine(cfg, 1, 1) {
         Ok(v) => v,
         Err(e) => return Some(e),
     };

@@ -246,6 +246,7 @@ pub fn run_many(
         .map(|(mut cfg, exec)| {
             if concurrent {
                 cfg.workers = 1;
+                cfg.train_workers = 1;
             }
             let label = if cfg.label.is_empty() {
                 cfg.selector.clone()

@@ -1,8 +1,25 @@
-//! Scoped worker-pool substrate (tokio is unavailable offline; the
-//! coordinator is round-synchronous so a work-stealing-free pool suffices).
-//! Used to execute the per-participant local-training closures of one round
-//! in parallel, mirroring the paper's time-multiplexed simulated learners.
+//! Worker-pool substrate (tokio is unavailable offline; the coordinator is
+//! event-driven so a work-stealing-free pool suffices). Two primitives:
+//!
+//! * [`run_parallel`] — the scoped batch pool: run a vector of closures and
+//!   return their results **in job order** regardless of completion order.
+//!   Used for experiment-level fan-out (sweep cells, availability-index
+//!   builds) where the whole batch is known up front.
+//! * [`TrainPool`] + [`Ticket`] — the persistent intra-round training pool:
+//!   jobs are submitted one at a time as the simulation discovers them
+//!   (e.g. per-arrival refills in the buffered-async regime) and each
+//!   returns a ticket. Workers complete in any order; callers **commit
+//!   outcomes in the order they wait on tickets** — a fixed reduction order
+//!   pinned by tests, so every `ExperimentResult` stays byte-identical at
+//!   any worker count. A width of 1 runs jobs inline at submit time, which
+//!   is exactly the pre-pool serial path.
+//!
+//! Panic discipline: a panicking job is caught on the worker, carried
+//! through the ticket, and **re-thrown at `Ticket::wait`** — the round that
+//! submitted it fails loudly instead of deadlocking on a result that will
+//! never arrive, and the pool itself stays serviceable for other jobs.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -57,6 +74,127 @@ pub fn default_workers() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A handle to one submitted job's eventual result. Waiting is the commit
+/// point: callers decide the reduction order by the order of their `wait`
+/// calls, never by completion order.
+pub struct Ticket<T> {
+    inner: TicketInner<T>,
+}
+
+enum TicketInner<T> {
+    /// Width-1 (serial) pools run the job inline at submit time.
+    Ready(T),
+    /// The job is (or was) on the pool; the worker sends the outcome here.
+    Pending(mpsc::Receiver<thread::Result<T>>),
+}
+
+impl<T> Ticket<T> {
+    /// Block until the job finishes and return its result. Re-throws the
+    /// job's panic if it had one; panics (loudly, not a deadlock) if the
+    /// worker died without reporting.
+    pub fn wait(self) -> T {
+        match self.inner {
+            TicketInner::Ready(v) => v,
+            TicketInner::Pending(rx) => match rx.recv() {
+                Ok(Ok(v)) => v,
+                Ok(Err(panic)) => resume_unwind(panic),
+                Err(_) => panic!("train pool worker died without reporting a result"),
+            },
+        }
+    }
+}
+
+/// Persistent training pool: `workers` threads pulling submitted jobs in
+/// FIFO order. See the module docs for the determinism and panic contracts.
+pub struct TrainPool {
+    /// `None` = width 1: submit runs the job inline (the serial path).
+    inner: Option<PoolInner>,
+    workers: usize,
+}
+
+struct PoolInner {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl TrainPool {
+    /// A pool of `workers.max(1)` lanes; 1 means fully inline/serial.
+    pub fn new(workers: usize) -> TrainPool {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return TrainPool { inner: None, workers };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    // hold the lock only for the dequeue, not the job
+                    let job = match rx.lock() {
+                        Ok(rx) => rx.recv(),
+                        // a sibling worker panicked *outside* catch_unwind
+                        // (can't happen for submitted jobs, but don't spin)
+                        Err(_) => return,
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return, // pool dropped: drain and exit
+                    }
+                })
+            })
+            .collect();
+        TrainPool { inner: Some(PoolInner { tx: Some(tx), handles }), workers }
+    }
+
+    /// Pool width (1 = inline).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit one job; returns the ticket its result arrives on. Jobs are
+    /// dispatched in submission order. Panics inside `f` are delivered at
+    /// `Ticket::wait`, not here (inline pools propagate them here, which is
+    /// where the serial path would have panicked anyway).
+    pub fn submit<T, F>(&self, f: F) -> Ticket<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        match &self.inner {
+            None => Ticket { inner: TicketInner::Ready(f()) },
+            Some(pool) => {
+                let (tx, rx) = mpsc::sync_channel::<thread::Result<T>>(1);
+                let job: Job = Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(f));
+                    // the ticket may have been dropped (e.g. a discarded
+                    // async update); the outcome is simply unobserved
+                    let _ = tx.send(out);
+                });
+                pool.tx
+                    .as_ref()
+                    .expect("train pool sender lives until drop")
+                    .send(job)
+                    .expect("train pool workers exited early");
+                Ticket { inner: TicketInner::Pending(rx) }
+            }
+        }
+    }
+}
+
+impl Drop for TrainPool {
+    fn drop(&mut self) {
+        if let Some(pool) = &mut self.inner {
+            drop(pool.tx.take()); // close the queue; workers drain and exit
+            for h in pool.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +218,86 @@ mod tests {
     fn empty_jobs() {
         let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
         assert!(run_parallel(4, jobs).is_empty());
+    }
+
+    #[test]
+    fn pool_commits_in_wait_order_despite_adversarial_sleeps() {
+        // later-submitted jobs finish *first* (reverse-sorted sleeps); the
+        // committed order must still be the ticket/wait order
+        let pool = TrainPool::new(8);
+        let tickets: Vec<_> = (0..16u64)
+            .map(|i| {
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(2 * (16 - i)));
+                    i * 3
+                })
+            })
+            .collect();
+        let out: Vec<u64> = tickets.into_iter().map(|t| t.wait()).collect();
+        assert_eq!(out, (0..16u64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_width_one_runs_inline() {
+        let pool = TrainPool::new(1);
+        let here = std::thread::current().id();
+        let t = pool.submit(move || std::thread::current().id() == here);
+        assert!(t.wait(), "width-1 pool must run on the submitting thread");
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(TrainPool::new(0).workers(), 1, "0 clamps to inline");
+    }
+
+    #[test]
+    fn pool_overlaps_submitted_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = TrainPool::new(4);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let tickets: Vec<_> = (0..12)
+            .map(|_| {
+                let live = Arc::clone(&live);
+                let peak = Arc::clone(&peak);
+                pool.submit(move || {
+                    let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(l, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for t in tickets {
+            t.wait();
+        }
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn panicking_job_poisons_its_ticket_not_the_pool() {
+        let pool = TrainPool::new(2);
+        let bad = pool.submit(|| -> u32 { panic!("boom in worker") });
+        let good = pool.submit(|| 7u32);
+        // the panic is delivered at wait (loud), and only on that ticket
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| bad.wait()))
+            .expect_err("panicking job must re-throw at wait");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom in worker"), "panic payload lost: {msg:?}");
+        // no deadlock, and the pool still services later jobs
+        assert_eq!(good.wait(), 7);
+        assert_eq!(pool.submit(|| 9u32).wait(), 9);
+    }
+
+    #[test]
+    fn dropped_tickets_do_not_wedge_the_pool() {
+        let pool = TrainPool::new(2);
+        for i in 0..8 {
+            let _ = pool.submit(move || i); // ticket dropped immediately
+        }
+        assert_eq!(pool.submit(|| 42).wait(), 42);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! PR 7 battery: the intra-round training pool must be invisible in the
+//! results. Every cell — sync OC/DL, buffered-async, fault-injected
+//! presets — must produce byte-identical `ExperimentResult` JSON at any
+//! `train_workers` width, match the frozen serial reference engine where
+//! it applies, and keep the run log replay oracle exact. A sleep-injecting
+//! executor additionally forces adversarial out-of-order completion
+//! through a real engine cell to pin the fixed reduction order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_experiment_logged, run_reference_experiment};
+use relay::runlog::{decode_segments, replay, MemSink};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor, TrainOut, VariantInfo};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// Straggler-rich DynAvail base (mirrors the golden-baseline cells): small
+/// enough to run each width in well under a second, rich enough to hit
+/// selection, staleness, and churn.
+fn cell_cfg(selector: &str, mode: RoundMode) -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 14,
+        rounds: 5,
+        target_participants: 4,
+        mode,
+        avail: AvailMode::DynAvail,
+        selector: selector.into(),
+        use_saa: true,
+        staleness_threshold: Some(3),
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        ..Default::default()
+    }
+}
+
+/// Run `cfg` at the given training-pool width (sweep workers pinned to 1).
+fn run_at_width(cfg: &ExpConfig, train_workers: usize, ex: Arc<dyn Executor>) -> String {
+    let mut c = cfg.clone();
+    c.workers = 1;
+    c.train_workers = train_workers;
+    run_experiment(c, ex)
+        .unwrap_or_else(|e| panic!("cell '{}' @ width {train_workers} failed: {e:#}", cfg.label))
+        .to_json()
+        .to_string()
+}
+
+/// Sync and async cells across every round mode: widths 1/2/8 must agree
+/// byte-for-byte, and the sync cells must also equal the frozen serial
+/// reference engine (the pre-parallelism oracle).
+#[test]
+fn cells_are_byte_identical_across_train_worker_widths() {
+    let modes = [
+        ("oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ];
+    for selector in ["random", "oort", "safa"] {
+        for (mode_name, mode) in modes.iter() {
+            let mut cfg = cell_cfg(selector, *mode);
+            cfg.label = format!("tp-{selector}-{mode_name}");
+            let serial = run_at_width(&cfg, 1, exec());
+            for width in [2usize, 8] {
+                assert_eq!(
+                    run_at_width(&cfg, width, exec()),
+                    serial,
+                    "cell '{}': train_workers {width} diverged from serial",
+                    cfg.label
+                );
+            }
+            if !matches!(mode, RoundMode::Async { .. }) {
+                let mut rc = cfg.clone();
+                rc.workers = 1;
+                rc.train_workers = 8;
+                let reference = run_reference_experiment(rc, exec())
+                    .unwrap_or_else(|e| panic!("reference '{}' failed: {e:#}", cfg.label));
+                assert_eq!(
+                    reference.to_json().to_string(),
+                    serial,
+                    "cell '{}': frozen serial reference diverged from the pooled engine",
+                    cfg.label
+                );
+            }
+        }
+    }
+}
+
+/// Fault-injected scenario presets (crashes, corruption, transit delays,
+/// duplicates — sync and async) shrunk to test scale: the training pool
+/// must stay invisible even on the failure paths.
+#[test]
+fn fault_injected_presets_are_byte_identical_across_widths() {
+    for name in ["crash-storm", "stale-storm", "byzantine-lite"] {
+        let preset = relay::scenario::by_name(name)
+            .unwrap_or_else(|| panic!("preset '{name}' not registered"));
+        let mut cfg = preset.cfg;
+        cfg.total_learners = 24;
+        cfg.rounds = 6;
+        cfg.eval_every = 3;
+        let serial = run_at_width(&cfg, 1, exec());
+        for width in [2usize, 8] {
+            assert_eq!(
+                run_at_width(&cfg, width, exec()),
+                serial,
+                "preset '{name}': train_workers {width} diverged from serial"
+            );
+        }
+    }
+}
+
+/// A logged run at width 8 must leave the bytes untouched, decode cleanly,
+/// and replay to the exact serial JSON — i.e. the pool perturbs neither the
+/// result nor the event stream it is derived from.
+#[test]
+fn runlog_replay_is_byte_identical_at_width_eight() {
+    let mut cfg = cell_cfg("priority", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) });
+    cfg.label = "tp-runlog-async".into();
+    let serial = run_at_width(&cfg, 1, exec());
+
+    let mut lc = cfg.clone();
+    lc.workers = 1;
+    lc.train_workers = 8;
+    let sink = MemSink::default();
+    let logged = run_experiment_logged(lc, exec(), Box::new(sink.clone()))
+        .expect("logged width-8 run failed");
+    assert_eq!(
+        logged.to_json().to_string(),
+        serial,
+        "enabling the run log at width 8 perturbed the result bytes"
+    );
+    let (events, stats) = decode_segments(&sink.segments());
+    assert!(stats.clean, "width-8 run log did not decode cleanly: {:?}", stats.note);
+    let replayed = replay(&events).expect("width-8 replay failed");
+    assert_eq!(
+        replayed.to_json().to_string(),
+        serial,
+        "width-8 replay oracle diverged from the serial engine output"
+    );
+}
+
+/// Executor wrapper that delegates all math untouched but sleeps a varying,
+/// call-indexed amount inside `train_step` — so pool workers finish out of
+/// submission order on purpose.
+struct SleepyExec {
+    inner: NativeExecutor,
+    calls: AtomicUsize,
+}
+
+impl SleepyExec {
+    fn new() -> SleepyExec {
+        SleepyExec {
+            inner: NativeExecutor::new(builtin_variant("tiny")),
+            calls: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Executor for SleepyExec {
+    fn variant(&self) -> &VariantInfo {
+        self.inner.variant()
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        self.inner.init_params(seed)
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<TrainOut> {
+        // pseudo-random 0..4.4ms stagger keyed on global call order: early
+        // submissions routinely outlive later ones, inverting completion
+        // order inside the pool.
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_micros(((n * 97 + 13) % 23) as u64 * 200));
+        self.inner.train_step(params, x, y, mask, lr)
+    }
+
+    fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
+        self.inner.eval_batch(params, x, y, mask)
+    }
+
+    fn agg_combine(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        self.inner.agg_combine(updates, weights)
+    }
+
+    fn agg_dev(&self, fresh: &[f32], stale: &[&[f32]]) -> Result<Vec<f32>> {
+        self.inner.agg_dev(fresh, stale)
+    }
+}
+
+/// Adversarial completion order through a real engine cell: with workers
+/// sleeping call-indexed amounts, a width-8 pool completes jobs in a
+/// scrambled order — the committed outcomes (and hence the bytes) must not
+/// notice.
+#[test]
+fn adversarial_completion_order_cannot_reorder_commits() {
+    for (label, mode) in [
+        ("tp-sleepy-oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("tp-sleepy-async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ] {
+        let mut cfg = cell_cfg("oort", mode);
+        cfg.label = label.into();
+        let serial = run_at_width(&cfg, 1, exec());
+        let sleepy = Arc::new(SleepyExec::new());
+        let scrambled = run_at_width(&cfg, 8, Arc::clone(&sleepy) as Arc<dyn Executor>);
+        assert!(
+            sleepy.calls.load(Ordering::Relaxed) > 0,
+            "cell '{label}': sleepy executor was never exercised"
+        );
+        assert_eq!(
+            scrambled, serial,
+            "cell '{label}': adversarial completion order leaked into the result bytes"
+        );
+    }
+}

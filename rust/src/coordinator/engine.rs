@@ -32,7 +32,7 @@ use crate::learners::ProfilePool;
 use crate::metrics::{Accounting, ExperimentResult, RoundRecord};
 use crate::population::{Population, Registry};
 use crate::runlog::{
-    LogSink, RunEvent, RunLogger, FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED,
+    EventObserver, LogSink, RunEvent, RunLogger, FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED,
 };
 use crate::runtime::Executor;
 use crate::scenario::faults::FaultKind;
@@ -1035,6 +1035,31 @@ pub fn run_experiment_logged(
     exec: Arc<dyn Executor>,
     sink: Box<dyn LogSink>,
 ) -> Result<ExperimentResult> {
+    run_experiment_instrumented(cfg, exec, RunLogger::new(sink))
+}
+
+/// [`run_experiment`], but with every kernel event fed to an in-process
+/// [`EventObserver`] (the live-telemetry hook) — no disk or memory log.
+/// Same non-perturbation guarantee as [`run_experiment_logged`]: the
+/// result is byte-identical to the unobserved run.
+pub fn run_experiment_observed(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    observer: Box<dyn EventObserver>,
+) -> Result<ExperimentResult> {
+    run_experiment_instrumented(cfg, exec, RunLogger::observing(observer))
+}
+
+/// The general form behind [`run_experiment_logged`] /
+/// [`run_experiment_observed`]: run with an arbitrary pre-built
+/// [`RunLogger`] (sink, observer, or both). Oracle (SAFA+O) configs run
+/// the unaccounted probe pass with the logger detached, so the stream
+/// witnesses only the accounted second pass.
+pub fn run_experiment_instrumented(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    logger: RunLogger,
+) -> Result<ExperimentResult> {
     let mut coord = if cfg.oracle {
         let mut probe_cfg = cfg.clone();
         probe_cfg.oracle = false;
@@ -1047,7 +1072,7 @@ pub fn run_experiment_logged(
     } else {
         Coordinator::new(cfg, exec)?
     };
-    coord.set_runlog(RunLogger::new(sink));
+    coord.set_runlog(logger);
     let result = coord.run()?;
     coord.runlog.finish()?;
     Ok(result)

@@ -12,6 +12,7 @@ pub mod reference;
 mod async_engine;
 
 pub use engine::{
-    run_experiment, run_experiment_eager, run_experiment_logged, Coordinator,
+    run_experiment, run_experiment_eager, run_experiment_instrumented, run_experiment_logged,
+    run_experiment_observed, Coordinator,
 };
 pub use reference::{run_reference_experiment, ReferenceCoordinator};

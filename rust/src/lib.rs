@@ -41,4 +41,5 @@ pub mod coordinator;
 pub mod runlog;
 pub mod scenario;
 pub mod sweep;
+pub mod telemetry;
 pub mod figures;

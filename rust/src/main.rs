@@ -21,6 +21,11 @@
 //!                 log (a --runlog directory), or — given a config / fuzz
 //!                 corpus entry — run the engine with logging and check the
 //!                 replay oracle reproduces the result byte-for-byte
+//!   watch <dir>   live observability: tail a --runlog directory while it's
+//!                 being written, streaming a plain-terminal dashboard
+//!                 (default), JSONL snapshots (--jsonl), or a one-shot
+//!                 render (--once); --out exports the final result, which
+//!                 byte-matches `relay replay <dir> --out`
 //!   trace-stats   availability-trace statistics (Fig. 14 numbers)
 //!   forecast-eval availability-prediction quality (5.2)
 //!   validate      check artifacts + backends and exit
@@ -79,9 +84,10 @@ fn real_main() -> Result<()> {
         Some("scenario") => cmd_scenario(&args),
         Some("fuzz") => cmd_fuzz(&args),
         Some("replay") => cmd_replay(&args),
+        Some("watch") => cmd_watch(&args),
         Some("validate") => cmd_validate(&args),
         Some(other) => Err(anyhow!(
-            "unknown command '{other}' (run|sweep|figure|bench|scenario|fuzz|replay|trace-stats|forecast-eval|validate)"
+            "unknown command '{other}' (run|sweep|figure|bench|scenario|fuzz|replay|watch|trace-stats|forecast-eval|validate)"
         )),
         None => {
             print_help();
@@ -177,9 +183,56 @@ fn cmd_run(args: &Args) -> Result<()> {
             runtime::builtin_variant(&cfg.variant),
         )),
     };
-    let result = if let Some(dir) = args.str_opt("runlog") {
-        let sink = relay::runlog::DirSink::create(dir)?;
-        relay::coordinator::run_experiment_logged(cfg, exec, Box::new(sink))?
+    let sink: Option<Box<dyn relay::runlog::LogSink>> = match args.str_opt("runlog") {
+        Some(dir) => Some(Box::new(relay::runlog::DirSink::create(dir)?)),
+        None => None,
+    };
+    let result = if args.bool("live") {
+        // opt-in live telemetry: the run feeds an in-process observer and a
+        // side thread prints one status line per interval to stderr. The
+        // result path is untouched — byte-identical to the same run without
+        // --live (tests/telemetry_props.rs pins this).
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let shared = relay::telemetry::SharedStream::new();
+        let logger = match sink {
+            Some(sink) => {
+                relay::runlog::RunLogger::new(sink).with_observer(shared.observer())
+            }
+            None => relay::runlog::RunLogger::observing(shared.observer()),
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let ticker = {
+            let stop = Arc::clone(&stop);
+            let shared = shared.clone();
+            let interval = args.u64_or("interval-ms", 1000).max(1);
+            std::thread::spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_millis(interval));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let line = shared.with(|s| {
+                    let lv = s.live();
+                    let acc = s.reducer().records().iter().rev().find_map(|r| r.test_accuracy);
+                    format!(
+                        "[live] rounds {:>4}/{}  sim {:.0}s  spent {:.0}s  wasted {:.0}s  acc {}",
+                        lv.rounds_done,
+                        lv.rounds_total,
+                        lv.sim_time,
+                        lv.spent,
+                        lv.wasted,
+                        acc.map(|a| format!("{:.1}%", 100.0 * a))
+                            .unwrap_or_else(|| "-".into()),
+                    )
+                });
+                eprintln!("{line}");
+            })
+        };
+        let r = relay::coordinator::run_experiment_instrumented(cfg, exec, logger);
+        stop.store(true, Ordering::Relaxed);
+        let _ = ticker.join();
+        r?
+    } else if let Some(sink) = sink {
+        relay::coordinator::run_experiment_logged(cfg, exec, sink)?
     } else {
         run_experiment(cfg, exec)?
     };
@@ -709,6 +762,14 @@ fn cmd_bench_train(args: &Args) -> Result<()> {
                          the last committed point {prev_norm:.3}"
                     ));
                 }
+            } else {
+                // a freshly seeded trajectory has no committed point yet:
+                // the relative check passes vacuously (this run becomes the
+                // baseline); only the absolute floor below still applies
+                println!(
+                    "  gate: no committed baseline for population {n} yet — \
+                     relative check skipped, this run becomes the baseline"
+                );
             }
             if cores >= 4 && speedup < 1.5 {
                 gate_errors.push(format!(
@@ -731,7 +792,16 @@ fn cmd_bench_train(args: &Args) -> Result<()> {
     }
 
     let mut runs = prev_runs;
-    runs.push(obj(vec![("cores", num(cores as f64)), ("cells", arr(cells))]));
+    // stamp each appended point with the environment that measured it, so
+    // future gates can tell a code regression from a machine change
+    let git = relay::util::bench::git_describe()
+        .map(Json::Str)
+        .unwrap_or(Json::Null);
+    runs.push(obj(vec![
+        ("cores", num(cores as f64)),
+        ("git", git),
+        ("cells", arr(cells)),
+    ]));
     let report = obj(vec![
         ("format", Json::Str("relay-bench-train-v1".into())),
         ("runs", arr(runs)),
@@ -879,6 +949,46 @@ fn cmd_replay(args: &Args) -> Result<()> {
     }
 }
 
+/// `relay watch`: live observability over a `--runlog` directory. Tails
+/// segments as the writer appends (never blocking it), derives metrics
+/// through the same reducer `relay replay` uses, and renders a dashboard,
+/// JSONL snapshots, or a one-shot summary. `--out` exports the final
+/// `ExperimentResult`, byte-identical to `relay replay <dir> --out`.
+fn cmd_watch(args: &Args) -> Result<()> {
+    use relay::telemetry::{watch_dir, WatchOpts};
+    use std::io::IsTerminal;
+
+    let target = args.positional.first().ok_or_else(|| {
+        anyhow!(
+            "usage: relay watch <log-dir> [--once | --follow] [--jsonl] \
+             [--interval-ms 500] [--max-polls N] [--out r.json]"
+        )
+    })?;
+    let once = args.bool("once");
+    let jsonl = args.bool("jsonl");
+    let opts = WatchOpts {
+        once,
+        jsonl,
+        interval_ms: args.u64_or("interval-ms", 500),
+        // only repaint in place on a real terminal; piped output stays an
+        // append-only record
+        clear_screen: !once && !jsonl && std::io::stdout().is_terminal(),
+        max_polls: args
+            .str_opt("max-polls")
+            .map(|s| s.parse::<u64>())
+            .transpose()
+            .map_err(|_| anyhow!("--max-polls expects an integer"))?,
+    };
+    let mut stdout = std::io::stdout();
+    let stream = watch_dir(std::path::Path::new(target), &opts, &mut stdout)?;
+    if let Some(out) = args.str_opt("out") {
+        let result = stream.result()?;
+        std::fs::write(out, result.to_json().to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let manifest = runtime::Manifest::load(&dir)?;
@@ -900,6 +1010,8 @@ USAGE:
               [--avail all|dyn] [--deadline SECS] [--buffer-k K [--max-staleness T]]
               [--faults flap=P,crash=P,delay=P,delay-secs=S,corrupt=P,dup=P,seed=N]
               [--backend pjrt|native] [--config cfg.json] [--out r.json] [--runlog DIR]
+              [--live [--interval-ms 1000]]   (stream one telemetry status line
+               per interval to stderr; the result is byte-identical either way)
               [--train-workers N]   (intra-round training pool width; results
                are byte-identical at any width — 1 = strictly serial)
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
@@ -911,6 +1023,11 @@ USAGE:
   relay replay <log-dir | config.json | corpus-entry.json> [--out r.json]
               (log dir: re-derive the result from events alone; config/corpus
                entry: run the engine with logging + byte-compare the replay)
+  relay watch <log-dir> [--once | --follow] [--jsonl] [--interval-ms 500]
+              [--max-polls N] [--out r.json]
+              (tail a --runlog directory live: dashboard by default, --jsonl
+               for machine-readable snapshots, --once for scripted/CI use;
+               --out byte-matches `relay replay <log-dir> --out`)
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
   relay bench [--suite population|selection|train|all] [--populations 100000,1000000]
               [--merges 50] [--participants 100] [--selections 200] [--workers N]

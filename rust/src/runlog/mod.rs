@@ -24,6 +24,7 @@
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod replay;
+pub mod tail;
 
 use std::fs;
 use std::io::{self, BufWriter, Write};
@@ -33,6 +34,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 pub use replay::replay;
+pub use tail::{DirTailer, TailStats};
 
 /// Segment header magic (format version 1).
 pub const MAGIC: &[u8; 8] = b"RLOG0001";
@@ -724,12 +726,22 @@ pub fn read_dir_segments(dir: &Path) -> Result<Vec<Vec<u8>>> {
 
 // --------------------------------------------------------------- logger --
 
+/// An in-process consumer of the live event stream (the telemetry layer's
+/// hook). Observers see each event by reference after it is durably handed
+/// to the sink; they cannot fail and cannot perturb the run — the same
+/// zero-cost-when-absent discipline as the sink itself.
+pub trait EventObserver: Send {
+    fn observe(&mut self, ev: &RunEvent);
+}
+
 /// The hook the engines call. Disabled by default: `emit` takes a closure
-/// so a disabled logger never even constructs the event. The first sink
-/// error poisons the logger (subsequent emits are dropped) and surfaces
-/// from [`RunLogger::finish`], keeping the engine's hot path infallible.
+/// so a disabled logger never even constructs the event — an event is built
+/// only when a sink or an observer is attached. The first sink error
+/// poisons the logger (subsequent emits are dropped) and surfaces from
+/// [`RunLogger::finish`], keeping the engine's hot path infallible.
 pub struct RunLogger {
     sink: Option<Box<dyn LogSink>>,
+    observer: Option<Box<dyn EventObserver>>,
     events: u64,
     error: Option<String>,
 }
@@ -737,15 +749,26 @@ pub struct RunLogger {
 impl RunLogger {
     /// The zero-cost no-op logger.
     pub fn disabled() -> RunLogger {
-        RunLogger { sink: None, events: 0, error: None }
+        RunLogger { sink: None, observer: None, events: 0, error: None }
     }
 
     pub fn new(sink: Box<dyn LogSink>) -> RunLogger {
-        RunLogger { sink: Some(sink), events: 0, error: None }
+        RunLogger { sink: Some(sink), observer: None, events: 0, error: None }
+    }
+
+    /// A logger that only feeds an in-process observer (no disk/memory log).
+    pub fn observing(observer: Box<dyn EventObserver>) -> RunLogger {
+        RunLogger { sink: None, observer: Some(observer), events: 0, error: None }
+    }
+
+    /// Attach an observer alongside whatever sink is already configured.
+    pub fn with_observer(mut self, observer: Box<dyn EventObserver>) -> RunLogger {
+        self.observer = Some(observer);
+        self
     }
 
     pub fn enabled(&self) -> bool {
-        self.sink.is_some() && self.error.is_none()
+        (self.sink.is_some() || self.observer.is_some()) && self.error.is_none()
     }
 
     /// Events written so far.
@@ -759,18 +782,27 @@ impl RunLogger {
         if self.error.is_some() {
             return;
         }
-        let Some(sink) = self.sink.as_mut() else { return };
-        if self.events > 0 && self.events % SEGMENT_EVENTS == 0 {
-            if let Err(e) = sink.rotate() {
-                self.error = Some(format!("run log rotate failed: {e}"));
+        if self.sink.is_none() && self.observer.is_none() {
+            return;
+        }
+        let ev = make();
+        if let Some(sink) = self.sink.as_mut() {
+            if self.events > 0 && self.events % SEGMENT_EVENTS == 0 {
+                if let Err(e) = sink.rotate() {
+                    self.error = Some(format!("run log rotate failed: {e}"));
+                    return;
+                }
+            }
+            let frame = encode_frame(&ev);
+            if let Err(e) = sink.write(&frame) {
+                self.error = Some(format!("run log write failed: {e}"));
                 return;
             }
         }
-        let frame = encode_frame(&make());
-        match sink.write(&frame) {
-            Ok(()) => self.events += 1,
-            Err(e) => self.error = Some(format!("run log write failed: {e}")),
+        if let Some(obs) = self.observer.as_mut() {
+            obs.observe(&ev);
         }
+        self.events += 1;
     }
 
     /// Flush and close, reporting the first deferred sink error if any.
@@ -883,6 +915,46 @@ mod tests {
         assert!(stats.clean, "{:?}", stats.note);
         assert_eq!(decoded, events);
         assert_eq!(stats.frames, events.len());
+    }
+
+    #[test]
+    fn observer_sees_every_event_in_order() {
+        struct Collect(Arc<Mutex<Vec<RunEvent>>>);
+        impl EventObserver for Collect {
+            fn observe(&mut self, ev: &RunEvent) {
+                self.0
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .push(ev.clone());
+            }
+        }
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = MemSink::new();
+        let mut logger =
+            RunLogger::new(Box::new(sink.clone())).with_observer(Box::new(Collect(seen.clone())));
+        assert!(logger.enabled());
+        let events = sample_events();
+        for ev in &events {
+            let ev = ev.clone();
+            logger.emit(move || ev);
+        }
+        logger.finish().unwrap();
+        let observed = seen.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).clone();
+        assert_eq!(observed, events, "observer sees the same stream the sink wrote");
+        let (decoded, stats) = decode_segments(&sink.segments());
+        assert!(stats.clean);
+        assert_eq!(decoded, events, "attaching an observer does not perturb the log");
+        // observer-only logger counts events but writes nothing
+        let seen2 = Arc::new(Mutex::new(Vec::new()));
+        let mut solo = RunLogger::observing(Box::new(Collect(seen2.clone())));
+        assert!(solo.enabled());
+        solo.emit(|| RunEvent::RunEnd);
+        assert_eq!(solo.events(), 1);
+        solo.finish().unwrap();
+        assert_eq!(
+            seen2.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).len(),
+            1
+        );
     }
 
     #[test]

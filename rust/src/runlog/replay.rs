@@ -9,6 +9,12 @@
 //! oracle — including the async regime, which the frozen sync reference
 //! cannot cross-check.
 //!
+//! The reducers are *incremental*: [`RunReducer`] consumes one event at a
+//! time, so the same code drives both the batch [`replay`] oracle and the
+//! live telemetry watcher (`telemetry/`) tailing a log mid-run. Whatever
+//! the watcher's final snapshot derives is therefore the replay result by
+//! construction, not by a parallel reimplementation.
+//!
 //! Replay is strict: an event arriving in a state the engines could never
 //! produce (a delivery with nothing in flight, a merge without a full
 //! buffer, an eval on a non-eval round) is an error, not a best-effort
@@ -35,53 +41,256 @@ fn close(a: f64, b: f64) -> bool {
 }
 
 /// Everything the reducers need from the `RunStart` header.
-struct Header {
-    buffer_k: usize,
-    max_staleness: Option<u64>,
-    rounds: u64,
-    eval_every: u64,
-    use_saa: bool,
-    staleness_threshold: Option<u64>,
+#[derive(Clone, Debug)]
+pub struct Header {
+    pub mode: u8,
+    pub buffer_k: usize,
+    pub max_staleness: Option<u64>,
+    pub rounds: u64,
+    pub eval_every: u64,
+    pub use_saa: bool,
+    pub staleness_threshold: Option<u64>,
 }
 
 /// Rebuild the full experiment result from a decoded event stream.
 pub fn replay(events: &[RunEvent]) -> Result<ExperimentResult> {
-    let first = events.first().ok_or_else(|| anyhow!("replay: empty run log"))?;
-    let RunEvent::RunStart {
-        label,
-        perplexity,
-        mode,
-        buffer_k,
-        max_staleness,
-        rounds,
-        eval_every,
-        use_saa,
-        staleness_threshold,
-    } = first
-    else {
-        bail!("replay: log must open with RunStart, got {first:?}");
-    };
-    if *eval_every == 0 {
-        bail!("replay: eval_every must be >= 1");
+    let mut reducer = RunReducer::new();
+    for ev in events {
+        reducer.step(ev)?;
     }
-    let hdr = Header {
-        buffer_k: *buffer_k as usize,
-        max_staleness: *max_staleness,
-        rounds: *rounds,
-        eval_every: *eval_every,
-        use_saa: *use_saa,
-        staleness_threshold: *staleness_threshold,
-    };
-    let records = match mode {
-        0 | 1 => replay_sync(&hdr, &events[1..])?,
-        2 => replay_async(&hdr, &events[1..])?,
-        m => bail!("replay: unknown mode code {m}"),
-    };
-    Ok(ExperimentResult {
-        label: label.clone(),
-        rounds: records,
-        perplexity_metric: *perplexity,
-    })
+    reducer.result()
+}
+
+/// A point-in-time view of the reducer for live dashboards. Everything here
+/// is derived from logged (simulated) quantities — no wall clock.
+#[derive(Clone, Debug, Default)]
+pub struct LiveStats {
+    /// Completed round/version records so far.
+    pub rounds_done: usize,
+    /// Rounds the header promised.
+    pub rounds_total: u64,
+    /// Device-seconds spent / aggregated / wasted so far.
+    pub spent: f64,
+    pub aggregated: f64,
+    pub wasted: f64,
+    /// Device-seconds currently tied up in undelivered updates (sync: the
+    /// outstanding stale heap; async: tasks in flight).
+    pub in_flight_secs: f64,
+    /// Undelivered update count (sync stale heap / async in-flight tasks).
+    pub outstanding: usize,
+    /// Async: updates buffered toward the next merge.
+    pub buffer_fill: usize,
+    pub unique_participants: usize,
+    /// Latest simulated clock the reducer has witnessed.
+    pub sim_time: f64,
+    /// The open round (sync) or current version (async), if any.
+    pub current_round: Option<u64>,
+    /// `RunEnd` has been consumed.
+    pub complete: bool,
+}
+
+enum State {
+    /// Waiting for the `RunStart` header.
+    Start,
+    Sync { hdr: Header, st: SyncState },
+    Async { hdr: Header, st: AsyncState },
+}
+
+/// Incremental event reducer: feed events one at a time with [`step`], pull
+/// the finished result with [`result`] once `RunEnd` arrived. [`replay`] is
+/// exactly `step` over the whole log — the telemetry watcher shares this
+/// type, which is what makes its final snapshot provably replay-identical.
+///
+/// [`step`]: RunReducer::step
+/// [`result`]: RunReducer::result
+pub struct RunReducer {
+    label: String,
+    perplexity: bool,
+    state: State,
+    /// Events consumed so far (diagnostics only).
+    seen: usize,
+}
+
+impl Default for RunReducer {
+    fn default() -> Self {
+        RunReducer::new()
+    }
+}
+
+impl RunReducer {
+    pub fn new() -> RunReducer {
+        RunReducer {
+            label: String::new(),
+            perplexity: false,
+            state: State::Start,
+            seen: 0,
+        }
+    }
+
+    /// Consume one event. The first error poisons nothing — the caller
+    /// decides whether to stop — but reducer state after an error is
+    /// unspecified, so live consumers should stop reducing.
+    pub fn step(&mut self, ev: &RunEvent) -> Result<()> {
+        let i = self.seen;
+        self.seen += 1;
+        match &mut self.state {
+            State::Start => {
+                let RunEvent::RunStart {
+                    label,
+                    perplexity,
+                    mode,
+                    buffer_k,
+                    max_staleness,
+                    rounds,
+                    eval_every,
+                    use_saa,
+                    staleness_threshold,
+                } = ev
+                else {
+                    bail!("replay: log must open with RunStart, got {ev:?}");
+                };
+                if *eval_every == 0 {
+                    bail!("replay: eval_every must be >= 1");
+                }
+                let hdr = Header {
+                    mode: *mode,
+                    buffer_k: *buffer_k as usize,
+                    max_staleness: *max_staleness,
+                    rounds: *rounds,
+                    eval_every: *eval_every,
+                    use_saa: *use_saa,
+                    staleness_threshold: *staleness_threshold,
+                };
+                self.label = label.clone();
+                self.perplexity = *perplexity;
+                self.state = match mode {
+                    0 | 1 => State::Sync { hdr, st: SyncState::default() },
+                    2 => State::Async { hdr, st: AsyncState::default() },
+                    m => bail!("replay: unknown mode code {m}"),
+                };
+                Ok(())
+            }
+            State::Sync { hdr, st } => st.step(hdr, ev, i),
+            State::Async { hdr, st } => st.step(hdr, ev, i),
+        }
+    }
+
+    /// Header fields, once `RunStart` has been consumed.
+    pub fn header(&self) -> Option<&Header> {
+        match &self.state {
+            State::Start => None,
+            State::Sync { hdr, .. } | State::Async { hdr, .. } => Some(hdr),
+        }
+    }
+
+    /// Run label from the header (empty before `RunStart`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// `RunEnd` has been consumed cleanly.
+    pub fn ended(&self) -> bool {
+        match &self.state {
+            State::Start => false,
+            State::Sync { st, .. } => st.ended,
+            State::Async { st, .. } => st.ended,
+        }
+    }
+
+    /// Completed round records so far (grows as the stream is consumed).
+    pub fn records(&self) -> &[RoundRecord] {
+        match &self.state {
+            State::Start => &[],
+            State::Sync { st, .. } => &st.recs,
+            State::Async { st, .. } => &st.recs,
+        }
+    }
+
+    /// Total device-seconds wasted so far (O(1); telemetry uses the delta
+    /// across a step to attribute waste to its cause).
+    pub fn wasted(&self) -> f64 {
+        match &self.state {
+            State::Start => 0.0,
+            State::Sync { st, .. } => st.wasted,
+            State::Async { st, .. } => st.wasted,
+        }
+    }
+
+    /// The open round (sync) or current version (async).
+    pub fn current_round(&self) -> Option<u64> {
+        match &self.state {
+            State::Start => None,
+            State::Sync { st, .. } => st.cur.as_ref().map(|c| c.round),
+            State::Async { st, .. } => Some(st.version),
+        }
+    }
+
+    /// Point-in-time view for dashboards.
+    pub fn live(&self) -> LiveStats {
+        match &self.state {
+            State::Start => LiveStats::default(),
+            State::Sync { hdr, st } => LiveStats {
+                rounds_done: st.recs.len(),
+                rounds_total: hdr.rounds,
+                spent: st.spent,
+                aggregated: st.aggregated,
+                wasted: st.wasted,
+                in_flight_secs: st.outstanding_secs,
+                outstanding: st.outstanding.len(),
+                buffer_fill: 0,
+                unique_participants: st.unique.len(),
+                sim_time: st
+                    .cur
+                    .as_ref()
+                    .map(|c| c.now)
+                    .or_else(|| st.recs.last().map(|r| r.sim_time))
+                    .unwrap_or(0.0),
+                current_round: st.cur.as_ref().map(|c| c.round),
+                complete: st.ended,
+            },
+            State::Async { hdr, st } => LiveStats {
+                rounds_done: st.recs.len(),
+                rounds_total: hdr.rounds,
+                spent: st.spent,
+                aggregated: st.aggregated,
+                wasted: st.wasted,
+                in_flight_secs: st.in_flight_secs,
+                outstanding: st.in_flight,
+                buffer_fill: st.buffer.len(),
+                unique_participants: st.unique.len(),
+                sim_time: st.conc_last_t,
+                current_round: Some(st.version),
+                complete: st.ended,
+            },
+        }
+    }
+
+    /// The finished result. Errors until `RunEnd` has been consumed.
+    pub fn result(&self) -> Result<ExperimentResult> {
+        match &self.state {
+            State::Start => bail!("replay: empty run log"),
+            State::Sync { st, .. } => {
+                if !st.ended {
+                    bail!("replay: log ends without RunEnd ({} events)", self.seen);
+                }
+                Ok(ExperimentResult {
+                    label: self.label.clone(),
+                    rounds: st.recs.clone(),
+                    perplexity_metric: self.perplexity,
+                })
+            }
+            State::Async { st, .. } => {
+                if !st.ended {
+                    bail!("replay: log ends without RunEnd ({} events)", self.seen);
+                }
+                Ok(ExperimentResult {
+                    label: self.label.clone(),
+                    rounds: st.recs.clone(),
+                    perplexity_metric: self.perplexity,
+                })
+            }
+        }
+    }
 }
 
 // ----------------------------------------------------- sync (OC/DL) ------
@@ -107,40 +316,47 @@ fn open_round<'a>(cur: &'a mut Option<SyncRound>, i: usize) -> Result<&'a mut Sy
         .ok_or_else(|| anyhow!("replay: event {i} arrived outside any round"))
 }
 
-fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
-    let mut recs: Vec<RoundRecord> = Vec::new();
-    let mut cur: Option<SyncRound> = None;
-    let mut spent = 0.0f64;
-    let mut wasted = 0.0f64;
-    let mut aggregated = 0.0f64;
-    let mut unique: HashSet<u64> = HashSet::new();
-    // stale updates in flight: (learner, origin round) -> device-seconds
-    let mut outstanding: HashMap<(u64, u64), f64> = HashMap::new();
-    let mut swept = false;
-    let mut ended = false;
-    for (i, ev) in events.iter().enumerate() {
-        if ended {
+#[derive(Default)]
+struct SyncState {
+    recs: Vec<RoundRecord>,
+    cur: Option<SyncRound>,
+    spent: f64,
+    wasted: f64,
+    aggregated: f64,
+    unique: HashSet<u64>,
+    /// stale updates in flight: (learner, origin round) -> device-seconds
+    outstanding: HashMap<(u64, u64), f64>,
+    /// Running sum over `outstanding` for live dashboards only — never
+    /// feeds a record (the engine's own leftover value does, bit-exactly).
+    outstanding_secs: f64,
+    swept: bool,
+    ended: bool,
+}
+
+impl SyncState {
+    fn step(&mut self, hdr: &Header, ev: &RunEvent, i: usize) -> Result<()> {
+        if self.ended {
             bail!("replay: event {i} after RunEnd: {ev:?}");
         }
         match ev {
             RunEvent::RoundStart { round, now } => {
-                if cur.is_some() {
+                if self.cur.is_some() {
                     bail!("replay: RoundStart at event {i} inside an open round");
                 }
-                if *round != recs.len() as u64 {
+                if *round != self.recs.len() as u64 {
                     bail!(
                         "replay: RoundStart for round {round} at event {i}, expected {}",
-                        recs.len()
+                        self.recs.len()
                     );
                 }
-                cur = Some(SyncRound { round: *round, now: *now, ..Default::default() });
+                self.cur = Some(SyncRound { round: *round, now: *now, ..Default::default() });
             }
             RunEvent::Eligibility { .. } => {}
             RunEvent::Selected { .. } => {
-                open_round(&mut cur, i)?.selected += 1;
+                open_round(&mut self.cur, i)?.selected += 1;
             }
             RunEvent::FaultDecision { kind, .. } => {
-                let c = open_round(&mut cur, i)?;
+                let c = open_round(&mut self.cur, i)?;
                 c.faults += 1;
                 // a flap is the one fault the sync engine also counts as a
                 // dropout (the task never starts, so no TaskDropout event
@@ -150,57 +366,62 @@ fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                 }
             }
             RunEvent::TaskDropout { learner, spent: sp } => {
-                let c = open_round(&mut cur, i)?;
-                spent += sp;
-                unique.insert(*learner);
-                wasted += sp;
+                let c = open_round(&mut self.cur, i)?;
+                self.spent += sp;
+                self.unique.insert(*learner);
+                self.wasted += sp;
                 c.dropouts += 1;
             }
             RunEvent::StragglerSpend { learner, duration, fate } => {
-                let c = open_round(&mut cur, i)?;
-                spent += duration;
-                unique.insert(*learner);
+                let c = open_round(&mut self.cur, i)?;
+                self.spent += duration;
+                self.unique.insert(*learner);
                 match *fate {
                     FATE_TRAINED => {}
                     FATE_CORRUPT | FATE_DOOMED => {
-                        wasted += duration;
+                        self.wasted += duration;
                         c.discarded += 1;
                     }
                     f => bail!("replay: unknown straggler fate {f} at event {i}"),
                 }
             }
             RunEvent::FreshSpend { learner, duration, corrupt } => {
-                let c = open_round(&mut cur, i)?;
-                spent += duration;
-                unique.insert(*learner);
+                let c = open_round(&mut self.cur, i)?;
+                self.spent += duration;
+                self.unique.insert(*learner);
                 if *corrupt {
-                    wasted += duration;
+                    self.wasted += duration;
                     c.discarded += 1;
                 }
             }
             RunEvent::Trained { learner, mean_loss, duration, fresh } => {
-                let c = open_round(&mut cur, i)?;
+                let c = open_round(&mut self.cur, i)?;
                 c.loss_sum += mean_loss;
                 c.loss_n += 1;
                 if *fresh {
-                    aggregated += duration;
+                    self.aggregated += duration;
                     c.fresh += 1;
-                } else if outstanding.insert((*learner, c.round), *duration).is_some() {
-                    bail!(
-                        "replay: learner {learner} already has an update in \
-                         flight from round {} (event {i})",
-                        c.round
-                    );
+                } else {
+                    let round = c.round;
+                    if self.outstanding.insert((*learner, round), *duration).is_some() {
+                        bail!(
+                            "replay: learner {learner} already has an update in \
+                             flight from round {round} (event {i})"
+                        );
+                    }
+                    self.outstanding_secs += duration;
                 }
             }
             RunEvent::StaleDelivery { learner, origin_round, duration } => {
-                let c = open_round(&mut cur, i)?;
-                let dur = outstanding.remove(&(*learner, *origin_round)).ok_or_else(|| {
-                    anyhow!(
-                        "replay: stale delivery at event {i} for learner {learner} \
-                         round {origin_round} with nothing in flight"
-                    )
-                })?;
+                let c = open_round(&mut self.cur, i)?;
+                let dur =
+                    self.outstanding.remove(&(*learner, *origin_round)).ok_or_else(|| {
+                        anyhow!(
+                            "replay: stale delivery at event {i} for learner {learner} \
+                             round {origin_round} with nothing in flight"
+                        )
+                    })?;
+                self.outstanding_secs -= dur;
                 if dur.to_bits() != duration.to_bits() {
                     bail!(
                         "replay: stale delivery duration {duration} disagrees with \
@@ -211,25 +432,25 @@ fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                     bail!("replay: stale delivery from the future at event {i}");
                 }
                 let tau = c.round - origin_round;
-                let within =
-                    hdr.staleness_threshold.map(|th| tau <= th).unwrap_or(true);
+                let within = hdr.staleness_threshold.map(|th| tau <= th).unwrap_or(true);
                 if hdr.use_saa && within {
-                    aggregated += duration;
+                    self.aggregated += duration;
                     c.stale += 1;
                 } else {
-                    wasted += duration;
+                    self.wasted += duration;
                     c.discarded += 1;
                 }
             }
             RunEvent::EvalDone { loss, acc } => {
-                let c = open_round(&mut cur, i)?;
+                let c = open_round(&mut self.cur, i)?;
                 if c.eval.is_some() {
                     bail!("replay: second EvalDone in round {} (event {i})", c.round);
                 }
                 c.eval = Some((*loss, *acc));
             }
             RunEvent::RoundEnd { round_duration } => {
-                let c = cur
+                let c = self
+                    .cur
                     .take()
                     .ok_or_else(|| anyhow!("replay: RoundEnd at event {i} with no round"))?;
                 let expected_eval = c.selected > 0
@@ -242,7 +463,7 @@ fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                         c.eval.is_some()
                     );
                 }
-                recs.push(RoundRecord {
+                self.recs.push(RoundRecord {
                     round: c.round as usize,
                     sim_time: c.now + round_duration,
                     round_duration: *round_duration,
@@ -252,9 +473,9 @@ fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                     dropouts: c.dropouts,
                     discarded: c.discarded,
                     faults: c.faults,
-                    cum_resource_secs: spent,
-                    cum_waste_secs: wasted,
-                    unique_participants: unique.len(),
+                    cum_resource_secs: self.spent,
+                    cum_waste_secs: self.wasted,
+                    unique_participants: self.unique.len(),
                     failed: c.fresh == 0 && c.stale == 0,
                     train_loss: (c.loss_n > 0).then(|| c.loss_sum / c.loss_n as f64),
                     test_accuracy: c.eval.map(|(_, a)| a),
@@ -263,126 +484,129 @@ fn replay_sync(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                 });
             }
             RunEvent::SweepLeftover { secs } => {
-                if cur.is_some() {
+                if self.cur.is_some() {
                     bail!("replay: SweepLeftover at event {i} inside an open round");
                 }
-                if swept {
+                if self.swept {
                     bail!("replay: second SweepLeftover at event {i}");
                 }
                 // the engine sums its heap in unspecified order, so only an
                 // epsilon cross-check is possible; the *logged* value is
                 // what feeds the byte-exact waste total
-                let pending: f64 = outstanding.values().sum();
+                let pending: f64 = self.outstanding.values().sum();
                 if !close(*secs, pending) {
                     bail!(
                         "replay: leftover sweep {secs} disagrees with the {pending} \
                          still outstanding (event {i})"
                     );
                 }
-                wasted += secs;
-                if let Some(last) = recs.last_mut() {
-                    last.cum_waste_secs = wasted;
+                self.wasted += secs;
+                if let Some(last) = self.recs.last_mut() {
+                    last.cum_waste_secs = self.wasted;
                 }
-                outstanding.clear();
-                swept = true;
+                self.outstanding.clear();
+                self.outstanding_secs = 0.0;
+                self.swept = true;
             }
             RunEvent::RunEnd => {
-                if cur.is_some() {
+                if self.cur.is_some() {
                     bail!("replay: RunEnd at event {i} inside an open round");
                 }
-                if !swept {
+                if !self.swept {
                     bail!("replay: RunEnd at event {i} without a leftover sweep");
                 }
-                if recs.len() as u64 != hdr.rounds {
+                if self.recs.len() as u64 != hdr.rounds {
                     bail!(
                         "replay: log ended after {} rounds, header promised {}",
-                        recs.len(),
+                        self.recs.len(),
                         hdr.rounds
                     );
                 }
-                if !close(spent, aggregated + wasted) {
+                if !close(self.spent, self.aggregated + self.wasted) {
                     bail!(
-                        "replay: accounting identity broken: spent {spent} != \
-                         aggregated {aggregated} + wasted {wasted}"
+                        "replay: accounting identity broken: spent {} != \
+                         aggregated {} + wasted {}",
+                        self.spent,
+                        self.aggregated,
+                        self.wasted
                     );
                 }
-                ended = true;
+                self.ended = true;
             }
             other => bail!("replay: async-only event {other:?} in a sync log (event {i})"),
         }
+        Ok(())
     }
-    if !ended {
-        bail!("replay: log ends without RunEnd ({} events)", events.len());
-    }
-    Ok(recs)
 }
 
 // ------------------------------------------------- async (buffered) ------
 
-fn replay_async(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
-    let mut recs: Vec<RoundRecord> = Vec::new();
-    let mut version: u64 = 0;
-    let mut in_flight: usize = 0;
-    let mut in_flight_secs = 0.0f64;
-    // buffered unmerged updates: (origin version, device-seconds, mean loss)
-    let mut buffer: Vec<(u64, f64, f64)> = Vec::new();
+#[derive(Default)]
+struct AsyncState {
+    recs: Vec<RoundRecord>,
+    version: u64,
+    in_flight: usize,
+    in_flight_secs: f64,
+    /// buffered unmerged updates: (origin version, device-seconds, mean loss)
+    buffer: Vec<(u64, f64, f64)>,
     // per-merge-interval counters
-    let mut selected = 0usize;
-    let mut dropouts = 0usize;
-    let mut discarded = 0usize;
-    let mut faults = 0usize;
-    let mut events_n = 0usize;
-    let mut interval_start = 0.0f64;
-    let mut conc_area = 0.0f64;
-    let mut conc_last_t = 0.0f64;
-    let mut expect_merge = false;
+    selected: usize,
+    dropouts: usize,
+    discarded: usize,
+    faults: usize,
+    events_n: usize,
+    interval_start: f64,
+    conc_area: f64,
+    conc_last_t: f64,
+    expect_merge: bool,
     // run-wide accounting
-    let mut spent = 0.0f64;
-    let mut wasted = 0.0f64;
-    let mut aggregated = 0.0f64;
-    let mut unique: HashSet<u64> = HashSet::new();
-    let mut swept = false;
-    let mut ended = false;
-    for (i, ev) in events.iter().enumerate() {
-        if ended {
+    spent: f64,
+    wasted: f64,
+    aggregated: f64,
+    unique: HashSet<u64>,
+    swept: bool,
+    ended: bool,
+}
+
+impl AsyncState {
+    fn step(&mut self, hdr: &Header, ev: &RunEvent, i: usize) -> Result<()> {
+        if self.ended {
             bail!("replay: event {i} after RunEnd: {ev:?}");
         }
-        if expect_merge && !matches!(ev, RunEvent::MergeCommit { .. }) {
-            bail!(
-                "replay: buffer reached K but event {i} is {ev:?}, not a MergeCommit"
-            );
+        if self.expect_merge && !matches!(ev, RunEvent::MergeCommit { .. }) {
+            bail!("replay: buffer reached K but event {i} is {ev:?}, not a MergeCommit");
         }
         match ev {
             RunEvent::KernelPop { at, class: _ } => {
-                events_n += 1;
-                conc_area += in_flight as f64 * (at - conc_last_t);
-                conc_last_t = *at;
+                self.events_n += 1;
+                self.conc_area += self.in_flight as f64 * (at - self.conc_last_t);
+                self.conc_last_t = *at;
             }
             RunEvent::Eligibility { .. } => {}
             RunEvent::FaultDecision { kind, .. } => {
-                faults += 1;
+                self.faults += 1;
                 // the async engine counts a flapped learner as selected and
                 // dropped at decision time (no task ever spawns for it)
                 if FaultKind::from_code(*kind) == Some(FaultKind::Flap) {
-                    selected += 1;
-                    dropouts += 1;
+                    self.selected += 1;
+                    self.dropouts += 1;
                 }
             }
             RunEvent::AsyncSpawn { learner, duration, dropped_after } => {
                 let secs = dropped_after.unwrap_or(*duration);
-                spent += secs;
-                unique.insert(*learner);
-                in_flight_secs += secs;
-                in_flight += 1;
-                selected += 1;
+                self.spent += secs;
+                self.unique.insert(*learner);
+                self.in_flight_secs += secs;
+                self.in_flight += 1;
+                self.selected += 1;
             }
             RunEvent::AsyncDropout { learner: _, spent: sp } => {
-                in_flight = in_flight
-                    .checked_sub(1)
-                    .ok_or_else(|| anyhow!("replay: dropout at event {i} with nothing in flight"))?;
-                in_flight_secs -= sp;
-                dropouts += 1;
-                wasted += sp;
+                self.in_flight = self.in_flight.checked_sub(1).ok_or_else(|| {
+                    anyhow!("replay: dropout at event {i} with nothing in flight")
+                })?;
+                self.in_flight_secs -= sp;
+                self.dropouts += 1;
+                self.wasted += sp;
             }
             RunEvent::AsyncDelivery {
                 learner: _,
@@ -391,38 +615,38 @@ fn replay_async(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                 mean_loss,
                 corrupt,
             } => {
-                in_flight = in_flight.checked_sub(1).ok_or_else(|| {
+                self.in_flight = self.in_flight.checked_sub(1).ok_or_else(|| {
                     anyhow!("replay: delivery at event {i} with nothing in flight")
                 })?;
                 if *corrupt {
-                    wasted += duration;
-                    in_flight_secs -= duration;
-                    discarded += 1;
+                    self.wasted += duration;
+                    self.in_flight_secs -= duration;
+                    self.discarded += 1;
                 } else {
-                    if *origin_version > version {
+                    if *origin_version > self.version {
                         bail!("replay: delivery from future version at event {i}");
                     }
-                    let tau = version - origin_version;
+                    let tau = self.version - origin_version;
                     let within = hdr.max_staleness.map(|m| tau <= m).unwrap_or(true);
                     if within {
-                        buffer.push((*origin_version, *duration, *mean_loss));
-                        if buffer.len() >= hdr.buffer_k {
-                            expect_merge = true;
+                        self.buffer.push((*origin_version, *duration, *mean_loss));
+                        if self.buffer.len() >= hdr.buffer_k {
+                            self.expect_merge = true;
                         }
                     } else {
-                        wasted += duration;
-                        in_flight_secs -= duration;
-                        discarded += 1;
+                        self.wasted += duration;
+                        self.in_flight_secs -= duration;
+                        self.discarded += 1;
                     }
                 }
             }
             RunEvent::MergeCommit { eval } => {
-                if !expect_merge {
+                if !self.expect_merge {
                     bail!("replay: MergeCommit at event {i} without a full buffer");
                 }
-                expect_merge = false;
-                let end = conc_last_t;
-                let entries = std::mem::take(&mut buffer);
+                self.expect_merge = false;
+                let end = self.conc_last_t;
+                let entries = std::mem::take(&mut self.buffer);
                 // the engine re-checks staleness against the *current*
                 // version at merge time (versions may have advanced since
                 // an update was buffered... they cannot here, since merges
@@ -430,56 +654,60 @@ fn replay_async(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                 // it and so does replay)
                 let mut kept: Vec<(u64, f64, f64)> = Vec::new();
                 for (origin, duration, mean_loss) in entries {
-                    let tau = version - origin;
+                    let tau = self.version - origin;
                     let within = hdr.max_staleness.map(|m| tau <= m).unwrap_or(true);
                     if within {
                         kept.push((origin, duration, mean_loss));
                     } else {
-                        wasted += duration;
-                        in_flight_secs -= duration;
-                        discarded += 1;
+                        self.wasted += duration;
+                        self.in_flight_secs -= duration;
+                        self.discarded += 1;
                     }
                 }
-                let fresh = kept.iter().filter(|(o, _, _)| *o == version).count();
+                let fresh = kept.iter().filter(|(o, _, _)| *o == self.version).count();
                 let stale = kept.len() - fresh;
                 let failed = kept.is_empty();
                 let train_loss = (!kept.is_empty())
                     .then(|| kept.iter().map(|(_, _, l)| *l).sum::<f64>() / kept.len() as f64);
                 for (_, duration, _) in &kept {
-                    aggregated += duration;
-                    in_flight_secs -= duration;
+                    self.aggregated += duration;
+                    self.in_flight_secs -= duration;
                 }
-                let interval = end - interval_start;
-                let mean_conc =
-                    if interval > 0.0 { conc_area / interval } else { in_flight as f64 };
+                let interval = end - self.interval_start;
+                let mean_conc = if interval > 0.0 {
+                    self.conc_area / interval
+                } else {
+                    self.in_flight as f64
+                };
                 let mut rec = RoundRecord {
-                    round: version as usize,
+                    round: self.version as usize,
                     sim_time: end,
                     round_duration: interval,
-                    selected,
+                    selected: self.selected,
                     fresh_updates: fresh,
                     stale_updates: stale,
-                    dropouts,
-                    discarded,
-                    faults,
-                    cum_resource_secs: spent,
-                    cum_waste_secs: wasted,
-                    unique_participants: unique.len(),
+                    dropouts: self.dropouts,
+                    discarded: self.discarded,
+                    faults: self.faults,
+                    cum_resource_secs: self.spent,
+                    cum_waste_secs: self.wasted,
+                    unique_participants: self.unique.len(),
                     failed,
                     train_loss,
                     mean_concurrency: Some(mean_conc),
-                    cum_aggregated_secs: Some(aggregated),
-                    in_flight_secs: Some(in_flight_secs),
-                    kernel_events: Some(events_n),
+                    cum_aggregated_secs: Some(self.aggregated),
+                    in_flight_secs: Some(self.in_flight_secs),
+                    kernel_events: Some(self.events_n),
                     ..Default::default()
                 };
-                version += 1;
+                self.version += 1;
                 let expected_eval =
-                    version % hdr.eval_every == 0 || version == hdr.rounds;
+                    self.version % hdr.eval_every == 0 || self.version == hdr.rounds;
                 if expected_eval != eval.is_some() {
                     bail!(
-                        "replay: version {version} eval mismatch (expected \
+                        "replay: version {} eval mismatch (expected \
                          {expected_eval}, logged {})",
+                        self.version,
                         eval.is_some()
                     );
                 }
@@ -487,102 +715,107 @@ fn replay_async(hdr: &Header, events: &[RunEvent]) -> Result<Vec<RoundRecord>> {
                     rec.test_loss = Some(*loss);
                     rec.test_accuracy = Some(*acc);
                 }
-                recs.push(rec);
-                selected = 0;
-                dropouts = 0;
-                discarded = 0;
-                faults = 0;
-                events_n = 0;
-                interval_start = end;
-                conc_area = 0.0;
-                conc_last_t = end;
+                self.recs.push(rec);
+                self.selected = 0;
+                self.dropouts = 0;
+                self.discarded = 0;
+                self.faults = 0;
+                self.events_n = 0;
+                self.interval_start = end;
+                self.conc_area = 0.0;
+                self.conc_last_t = end;
             }
             RunEvent::AsyncBurn { end } => {
                 // a starved interval: nothing in flight, so the engine jumps
                 // the clock without integrating concurrency area
-                conc_last_t = *end;
-                let interval = end - interval_start;
-                let mean_conc =
-                    if interval > 0.0 { conc_area / interval } else { in_flight as f64 };
-                recs.push(RoundRecord {
-                    round: version as usize,
+                self.conc_last_t = *end;
+                let interval = end - self.interval_start;
+                let mean_conc = if interval > 0.0 {
+                    self.conc_area / interval
+                } else {
+                    self.in_flight as f64
+                };
+                self.recs.push(RoundRecord {
+                    round: self.version as usize,
                     sim_time: *end,
                     round_duration: interval,
-                    selected,
-                    dropouts,
-                    discarded,
-                    faults,
-                    cum_resource_secs: spent,
-                    cum_waste_secs: wasted,
-                    unique_participants: unique.len(),
+                    selected: self.selected,
+                    dropouts: self.dropouts,
+                    discarded: self.discarded,
+                    faults: self.faults,
+                    cum_resource_secs: self.spent,
+                    cum_waste_secs: self.wasted,
+                    unique_participants: self.unique.len(),
                     failed: true,
                     mean_concurrency: Some(mean_conc),
-                    cum_aggregated_secs: Some(aggregated),
-                    in_flight_secs: Some(in_flight_secs),
-                    kernel_events: Some(events_n),
+                    cum_aggregated_secs: Some(self.aggregated),
+                    in_flight_secs: Some(self.in_flight_secs),
+                    kernel_events: Some(self.events_n),
                     ..Default::default()
                 });
-                version += 1;
-                selected = 0;
-                dropouts = 0;
-                discarded = 0;
-                faults = 0;
-                events_n = 0;
-                interval_start = *end;
-                conc_area = 0.0;
+                self.version += 1;
+                self.selected = 0;
+                self.dropouts = 0;
+                self.discarded = 0;
+                self.faults = 0;
+                self.events_n = 0;
+                self.interval_start = *end;
+                self.conc_area = 0.0;
             }
             RunEvent::SweepLeftover { secs } => {
-                if swept {
+                if self.swept {
                     bail!("replay: second SweepLeftover at event {i}");
                 }
-                if version != hdr.rounds {
+                if self.version != hdr.rounds {
                     bail!(
-                        "replay: leftover sweep at version {version}, expected {}",
+                        "replay: leftover sweep at version {}, expected {}",
+                        self.version,
                         hdr.rounds
                     );
                 }
                 // replay mirrors the engine's in-flight arithmetic op for
                 // op, so this one is bit-exact — any difference is a real
                 // divergence
-                if secs.to_bits() != in_flight_secs.to_bits() {
+                if secs.to_bits() != self.in_flight_secs.to_bits() {
                     bail!(
                         "replay: leftover sweep {secs} != replayed in-flight \
-                         {in_flight_secs} (event {i})"
+                         {} (event {i})",
+                        self.in_flight_secs
                     );
                 }
-                wasted += secs;
-                if let Some(last) = recs.last_mut() {
-                    last.cum_waste_secs = wasted;
+                self.wasted += secs;
+                if let Some(last) = self.recs.last_mut() {
+                    last.cum_waste_secs = self.wasted;
                     last.in_flight_secs = Some(0.0);
                 }
-                swept = true;
+                self.swept = true;
             }
             RunEvent::RunEnd => {
-                if !swept {
+                if !self.swept {
                     bail!("replay: RunEnd at event {i} without a leftover sweep");
                 }
-                if recs.len() as u64 != hdr.rounds {
+                if self.recs.len() as u64 != hdr.rounds {
                     bail!(
                         "replay: log ended after {} versions, header promised {}",
-                        recs.len(),
+                        self.recs.len(),
                         hdr.rounds
                     );
                 }
-                if !close(spent, aggregated + wasted) {
+                if !close(self.spent, self.aggregated + self.wasted) {
                     bail!(
-                        "replay: accounting identity broken: spent {spent} != \
-                         aggregated {aggregated} + wasted {wasted}"
+                        "replay: accounting identity broken: spent {} != \
+                         aggregated {} + wasted {}",
+                        self.spent,
+                        self.aggregated,
+                        self.wasted
                     );
                 }
-                ended = true;
+                self.ended = true;
             }
             other => bail!("replay: sync-only event {other:?} in an async log (event {i})"),
         }
+        Ok(())
     }
-    if !ended {
-        bail!("replay: log ends without RunEnd ({} events)", events.len());
-    }
-    Ok(recs)
 }
 
 #[cfg(test)]
@@ -767,5 +1000,56 @@ mod tests {
         ];
         let err = replay(&log).unwrap_err().to_string();
         assert!(err.contains("without a full buffer"), "{err}");
+    }
+
+    #[test]
+    fn incremental_reducer_exposes_live_state_mid_stream() {
+        let log = vec![
+            sync_header(),
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::FreshSpend { learner: 1, duration: 10.0, corrupt: false },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 10.0, fresh: true },
+        ];
+        let mut red = RunReducer::new();
+        for ev in &log {
+            red.step(ev).unwrap();
+        }
+        assert!(!red.ended());
+        assert!(red.result().is_err(), "result before RunEnd must error");
+        let live = red.live();
+        assert_eq!(live.current_round, Some(0));
+        assert_eq!(live.spent, 10.0);
+        assert_eq!(live.aggregated, 10.0);
+        assert_eq!(live.unique_participants, 1);
+        assert_eq!(live.rounds_total, 1);
+        assert!(!live.complete);
+    }
+
+    #[test]
+    fn sync_outstanding_secs_tracks_the_stale_heap() {
+        let mut red = RunReducer::new();
+        for ev in [
+            RunEvent::RunStart {
+                label: "s".into(),
+                perplexity: false,
+                mode: 1,
+                buffer_k: 0,
+                max_staleness: None,
+                rounds: 2,
+                eval_every: 5,
+                use_saa: true,
+                staleness_threshold: Some(2),
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::StragglerSpend { learner: 1, duration: 8.0, fate: FATE_TRAINED },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 8.0, fresh: false },
+        ] {
+            red.step(&ev).unwrap();
+        }
+        let live = red.live();
+        assert_eq!(live.outstanding, 1);
+        assert_eq!(live.in_flight_secs, 8.0);
     }
 }

@@ -1,0 +1,406 @@
+//! Tailing decoder: incrementally consume runlog segments *while they are
+//! being written*, without ever blocking or perturbing the writer.
+//!
+//! The batch decoder ([`super::decode_segments`]) answers "what does this
+//! finished log say"; the tailer answers "what has the log said *so far*"
+//! and keeps answering as bytes arrive. The contract:
+//!
+//! * **exactly-once** — every CRC-valid frame is yielded exactly once
+//!   across any sequence of polls, no matter how the reads interleave with
+//!   the writer's appends;
+//! * **torn tails are not errors** — a partial frame at the end of the
+//!   *current* segment just means the writer hasn't finished it; the
+//!   cursor waits. Only a finalized segment (one whose successor already
+//!   exists — [`super::DirSink::rotate`] flushes a segment to disk before
+//!   creating the next) can be declared truncated or corrupt;
+//! * **corruption skips forward at rotation** — a corrupt region stops
+//!   decoding for the rest of that segment (frame boundaries are
+//!   unrecoverable mid-stream), and the tailer resumes at the next
+//!   segment's first frame, recording what it skipped in [`TailStats`].
+//!
+//! Reading a file that another process appends to is racy by nature; the
+//! one ordering fact the tailer leans on is that `rotate()` fully flushes
+//! segment N before creating `seg-(N+1)`, so observing the successor
+//! *before* reading segment N proves the bytes read are final.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::{crc32, decode_event, RunEvent, MAGIC};
+
+/// Upper bound on a single frame's payload length. Real frames are tens of
+/// bytes; anything past this is garbage masquerading as a length, and
+/// without the bound a corrupt varint could make the tailer wait forever
+/// for petabytes that will never arrive.
+pub const MAX_FRAME_BYTES: u64 = 1 << 20;
+
+/// What the tailer has seen so far, across all segments.
+#[derive(Clone, Debug, Default)]
+pub struct TailStats {
+    /// Segments fully consumed and left behind (their successor existed).
+    pub segments_finalized: usize,
+    /// Frames decoded and yielded.
+    pub frames: usize,
+    /// One note per finalized segment whose tail was truncated or corrupt
+    /// (decoding resumed at the next segment boundary).
+    pub skipped: Vec<String>,
+}
+
+enum FrameStep {
+    /// A complete, CRC-valid frame: the event and the bytes it consumed.
+    Event(RunEvent, usize),
+    /// Not enough bytes yet — the writer may still be appending.
+    Torn,
+    /// The bytes can never become a valid frame.
+    Corrupt(String),
+}
+
+/// Try to decode one frame from the front of `buf`. Distinguishes "not
+/// enough bytes yet" ([`FrameStep::Torn`]) from "can never be valid"
+/// ([`FrameStep::Corrupt`]) — the distinction the batch decoder never
+/// needs, and the whole reason this module exists.
+fn next_frame(buf: &[u8]) -> FrameStep {
+    let mut len = 0u64;
+    let mut shift = 0u32;
+    let mut header = 0usize;
+    loop {
+        let Some(&b) = buf.get(header) else {
+            return FrameStep::Torn;
+        };
+        header += 1;
+        if shift >= 64 || (shift == 63 && b > 1) {
+            return FrameStep::Corrupt("frame length varint overflows u64".into());
+        }
+        len |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+    }
+    if len > MAX_FRAME_BYTES {
+        return FrameStep::Corrupt(format!(
+            "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte bound"
+        ));
+    }
+    let len = len as usize;
+    let end = header + len + 4;
+    if buf.len() < end {
+        return FrameStep::Torn;
+    }
+    let payload = &buf[header..header + len];
+    let crc = &buf[header + len..end];
+    let stored = u32::from_le_bytes([crc[0], crc[1], crc[2], crc[3]]);
+    if crc32(payload) != stored {
+        return FrameStep::Corrupt("CRC mismatch".into());
+    }
+    match decode_event(payload) {
+        Ok(ev) => FrameStep::Event(ev, end),
+        Err(e) => FrameStep::Corrupt(format!("bad frame: {e}")),
+    }
+}
+
+/// Incremental clean-prefix decoder over one segment's byte stream. Feed it
+/// ever-longer snapshots of the same segment; it remembers how far it got
+/// and yields each frame exactly once.
+#[derive(Default)]
+pub struct SegmentCursor {
+    /// Bytes fully consumed (magic + whole frames).
+    pos: usize,
+    /// Set once decoding hit bytes that can never become a valid frame;
+    /// the cursor stays stuck there (recovery happens at segment rotation).
+    corrupt: Option<String>,
+}
+
+impl SegmentCursor {
+    pub fn new() -> SegmentCursor {
+        SegmentCursor::default()
+    }
+
+    /// Decode every newly-complete frame from `buf` (a fresh snapshot of
+    /// the whole segment, magic included) into `out`; returns how many
+    /// events were appended.
+    pub fn drain(&mut self, buf: &[u8], out: &mut Vec<RunEvent>) -> usize {
+        if self.corrupt.is_some() {
+            return 0;
+        }
+        if buf.len() < self.pos {
+            self.corrupt = Some(format!(
+                "segment shrank from {} to {} bytes",
+                self.pos,
+                buf.len()
+            ));
+            return 0;
+        }
+        if self.pos == 0 {
+            // the magic header may itself arrive torn
+            let have = buf.len().min(MAGIC.len());
+            if buf[..have] != MAGIC[..have] {
+                self.corrupt = Some("bad or missing magic".into());
+                return 0;
+            }
+            if buf.len() < MAGIC.len() {
+                return 0;
+            }
+            self.pos = MAGIC.len();
+        }
+        let mut appended = 0;
+        loop {
+            match next_frame(&buf[self.pos..]) {
+                FrameStep::Event(ev, used) => {
+                    out.push(ev);
+                    self.pos += used;
+                    appended += 1;
+                }
+                FrameStep::Torn => break,
+                FrameStep::Corrupt(why) => {
+                    self.corrupt = Some(format!("{why} at byte {}", self.pos));
+                    break;
+                }
+            }
+        }
+        appended
+    }
+
+    /// Bytes consumed so far (magic + whole frames).
+    pub fn consumed(&self) -> usize {
+        self.pos
+    }
+
+    /// Why the cursor is stuck, if it is.
+    pub fn corrupt(&self) -> Option<&str> {
+        self.corrupt.as_deref()
+    }
+
+    /// True when a `len`-byte snapshot was consumed completely — i.e. a
+    /// finalized segment of that size ends exactly on a frame boundary.
+    pub fn is_clean_at(&self, len: usize) -> bool {
+        self.corrupt.is_none() && self.pos == len
+    }
+}
+
+/// Tails a [`super::DirSink`] directory: repeated [`poll`] calls yield the
+/// newly-arrived events, following segment rotations, exactly once each.
+///
+/// [`poll`]: DirTailer::poll
+pub struct DirTailer {
+    dir: PathBuf,
+    idx: usize,
+    cursor: SegmentCursor,
+    stats: TailStats,
+}
+
+impl DirTailer {
+    /// Start tailing `dir` from the first segment. The directory (or the
+    /// first segment) need not exist yet — polls just return nothing until
+    /// it does.
+    pub fn open(dir: impl Into<PathBuf>) -> DirTailer {
+        DirTailer {
+            dir: dir.into(),
+            idx: 0,
+            cursor: SegmentCursor::new(),
+            stats: TailStats::default(),
+        }
+    }
+
+    fn seg_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(format!("seg-{idx:05}.rlog"))
+    }
+
+    /// The directory being tailed.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Index of the segment the cursor currently sits in.
+    pub fn segment_index(&self) -> usize {
+        self.idx
+    }
+
+    pub fn stats(&self) -> &TailStats {
+        &self.stats
+    }
+
+    /// Collect every event that has become decodable since the last poll.
+    /// Never blocks, never writes; an empty vec just means nothing new.
+    pub fn poll(&mut self) -> io::Result<Vec<RunEvent>> {
+        let mut out = Vec::new();
+        loop {
+            // Order matters: observe the successor BEFORE reading this
+            // segment. rotate() flushes seg-N to disk before creating
+            // seg-(N+1), so a successor seen *first* proves the bytes we
+            // are about to read are final. (The other order could pair a
+            // stale pre-flush read with a fresh successor sighting and
+            // wrongly declare a still-growing tail truncated.)
+            let has_next = self.seg_path(self.idx + 1).exists();
+            let buf = match fs::read(self.seg_path(self.idx)) {
+                Ok(b) => b,
+                Err(e) if e.kind() == io::ErrorKind::NotFound => break,
+                Err(e) => return Err(e),
+            };
+            let n = self.cursor.drain(&buf, &mut out);
+            self.stats.frames += n;
+            if !has_next {
+                break;
+            }
+            // finalized: record anything undecodable at its tail, move on
+            if let Some(why) = self.cursor.corrupt() {
+                self.stats.skipped.push(format!("segment {}: {why}", self.idx));
+            } else if !self.cursor.is_clean_at(buf.len()) {
+                self.stats.skipped.push(format!(
+                    "segment {}: truncated tail ({} of {} bytes)",
+                    self.idx,
+                    self.cursor.consumed(),
+                    buf.len()
+                ));
+            }
+            self.stats.segments_finalized += 1;
+            self.idx += 1;
+            self.cursor = SegmentCursor::new();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode_frame;
+    use super::*;
+
+    fn sample() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 7 },
+            RunEvent::Trained { learner: 7, mean_loss: 0.5, duration: 3.25, fresh: true },
+            RunEvent::RoundEnd { round_duration: 4.5 },
+        ]
+    }
+
+    fn segment_bytes(events: &[RunEvent]) -> Vec<u8> {
+        let mut buf = MAGIC.to_vec();
+        for ev in events {
+            buf.extend_from_slice(&encode_frame(ev));
+        }
+        buf
+    }
+
+    #[test]
+    fn byte_by_byte_feed_yields_each_event_exactly_once() {
+        let events = sample();
+        let full = segment_bytes(&events);
+        let mut cursor = SegmentCursor::new();
+        let mut got = Vec::new();
+        for n in 0..=full.len() {
+            cursor.drain(&full[..n], &mut got);
+        }
+        assert_eq!(got, events);
+        assert!(cursor.is_clean_at(full.len()));
+        // one more full drain yields nothing new
+        assert_eq!(cursor.drain(&full, &mut got), 0);
+        assert_eq!(got, events);
+    }
+
+    #[test]
+    fn torn_magic_waits_and_wrong_magic_is_corrupt() {
+        let mut cursor = SegmentCursor::new();
+        let mut out = Vec::new();
+        assert_eq!(cursor.drain(&MAGIC[..3], &mut out), 0);
+        assert!(cursor.corrupt().is_none(), "partial magic is torn, not corrupt");
+        let mut bad = MAGIC.to_vec();
+        bad[2] ^= 0xFF;
+        let mut cursor = SegmentCursor::new();
+        cursor.drain(&bad, &mut out);
+        assert!(cursor.corrupt().is_some());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn corrupt_byte_sticks_until_rotation() {
+        let events = sample();
+        let mut buf = segment_bytes(&events);
+        // flip a byte inside the second frame's payload
+        let first_len = MAGIC.len() + encode_frame(&events[0]).len();
+        buf[first_len + 2] ^= 0xFF;
+        let mut cursor = SegmentCursor::new();
+        let mut out = Vec::new();
+        cursor.drain(&buf, &mut out);
+        assert_eq!(out, &events[..1], "clean prefix only");
+        assert!(cursor.corrupt().is_some());
+        // more bytes never un-stick a corrupt cursor
+        buf.extend_from_slice(&encode_frame(&events[3]));
+        assert_eq!(cursor.drain(&buf, &mut out), 0);
+    }
+
+    #[test]
+    fn shrinking_segment_is_corrupt() {
+        let events = sample();
+        let full = segment_bytes(&events);
+        let mut cursor = SegmentCursor::new();
+        let mut out = Vec::new();
+        cursor.drain(&full, &mut out);
+        assert_eq!(cursor.drain(&full[..full.len() - 1], &mut out), 0);
+        assert!(cursor.corrupt().expect("shrink must stick").contains("shrank"));
+    }
+
+    #[test]
+    fn oversized_frame_length_is_corrupt_not_torn() {
+        let mut buf = MAGIC.to_vec();
+        // varint encoding of a huge length: would be "torn" forever if the
+        // tailer waited for the bytes to arrive
+        buf.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0x7F]);
+        let mut cursor = SegmentCursor::new();
+        let mut out = Vec::new();
+        cursor.drain(&buf, &mut out);
+        assert!(cursor.corrupt().expect("must be corrupt").contains("exceeds"));
+    }
+
+    #[test]
+    fn dir_tailer_follows_rotation_exactly_once() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-tail-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).expect("create tail test dir");
+        let events = sample();
+        let mut tailer = DirTailer::open(&dir);
+        assert!(tailer.poll().expect("poll empty dir").is_empty());
+        // seg 0 appears with two events
+        fs::write(dir.join("seg-00000.rlog"), segment_bytes(&events[..2]))
+            .expect("write seg 0");
+        assert_eq!(tailer.poll().expect("poll seg 0"), &events[..2]);
+        assert!(tailer.poll().expect("re-poll").is_empty());
+        // seg 0 grows, then rotates: seg 1 carries the rest
+        fs::write(dir.join("seg-00000.rlog"), segment_bytes(&events[..3]))
+            .expect("grow seg 0");
+        fs::write(dir.join("seg-00001.rlog"), segment_bytes(&events[3..]))
+            .expect("write seg 1");
+        let got = tailer.poll().expect("poll across rotation");
+        assert_eq!(got, &events[2..]);
+        assert_eq!(tailer.segment_index(), 1);
+        assert_eq!(tailer.stats().segments_finalized, 1);
+        assert_eq!(tailer.stats().frames, events.len());
+        assert!(tailer.stats().skipped.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_tailer_skips_corrupt_tail_at_rotation() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-tail-skip-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).expect("create tail test dir");
+        let events = sample();
+        let mut seg0 = segment_bytes(&events[..2]);
+        let first_len = MAGIC.len() + encode_frame(&events[0]).len();
+        seg0[first_len + 2] ^= 0xFF;
+        fs::write(dir.join("seg-00000.rlog"), &seg0).expect("write seg 0");
+        let mut tailer = DirTailer::open(&dir);
+        assert_eq!(tailer.poll().expect("poll corrupt seg"), &events[..1]);
+        // rotation finalizes seg 0; the tailer records the skip and resumes
+        fs::write(dir.join("seg-00001.rlog"), segment_bytes(&events[2..]))
+            .expect("write seg 1");
+        assert_eq!(tailer.poll().expect("poll past corruption"), &events[2..]);
+        assert_eq!(tailer.stats().skipped.len(), 1);
+        assert!(tailer.stats().skipped[0].contains("segment 0"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -19,7 +19,6 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -28,6 +27,7 @@ use crate::coordinator::run_experiment;
 use crate::data::partition::PartitionScheme;
 use crate::metrics::{CellSummary, ExperimentResult};
 use crate::runtime::Executor;
+use crate::telemetry::ProgressMeter;
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::threadpool;
 
@@ -240,7 +240,8 @@ pub fn run_many(
     let concurrent = workers.min(total.max(1)) > 1;
     let done = AtomicUsize::new(0);
     let done_ref = &done;
-    let t0 = Instant::now();
+    let meter = ProgressMeter::start("sweep", total);
+    let meter_ref = &meter;
     let jobs: Vec<_> = runs
         .into_iter()
         .map(|(mut cfg, exec)| {
@@ -258,15 +259,11 @@ pub fn run_many(
                     .with_context(|| format!("sweep run '{label}' failed"));
                 let k = done_ref.fetch_add(1, Ordering::SeqCst) + 1;
                 if progress {
-                    let elapsed = t0.elapsed().as_secs_f64();
-                    let eta = elapsed / k as f64 * (total - k) as f64;
                     match &r {
-                        Ok(res) => eprintln!(
-                            "[sweep] {k:>4}/{total} {} ({elapsed:.1}s elapsed, eta {eta:.0}s)",
-                            res.summary()
-                        ),
+                        Ok(res) => eprintln!("{}", meter_ref.line_at(k, &res.summary())),
                         Err(e) => eprintln!(
-                            "[sweep] {k:>4}/{total} {label} FAILED: {e:#} ({elapsed:.1}s elapsed)"
+                            "{}",
+                            meter_ref.stalled_at(k, &format!("{label} FAILED: {e:#}"))
                         ),
                     }
                 }
@@ -295,12 +292,16 @@ pub fn run_grid_results(
         }
     }
     if opts.progress {
+        let meter = ProgressMeter::start("sweep", flat.len());
         eprintln!(
-            "[sweep] {}: {} cells x {} seeds = {} runs",
-            spec.label,
-            cells.len(),
-            spec.seeds.len(),
-            flat.len()
+            "{}",
+            meter.banner(&format!(
+                "{}: {} cells x {} seeds = {} runs",
+                spec.label,
+                cells.len(),
+                spec.seeds.len(),
+                flat.len()
+            ))
         );
     }
     let results = run_many(flat, opts.workers, opts.progress)?;

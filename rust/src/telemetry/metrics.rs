@@ -1,0 +1,212 @@
+//! Dependency-free metrics registry: counters, gauges, and fixed-bucket
+//! histograms with deterministic JSON export (BTreeMap ordering, so two
+//! identical streams always serialize identically).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Fixed-bucket histogram: `bounds` are ascending inclusive upper edges,
+/// with one extra overflow bucket past the last bound. Buckets are chosen
+/// at first observation and frozen — no rebinning, no allocation per
+/// observe.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        (n > 0).then(|| self.sum / n as f64)
+    }
+
+    /// The smallest bucket upper edge covering at least `q` of the mass
+    /// (`None` on an empty histogram; the overflow bucket reports `None`
+    /// too since it has no finite edge).
+    pub fn quantile_edge(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, n) in self.counts.iter().enumerate() {
+            seen += n;
+            if seen >= target.max(1) {
+                return self.bounds.get(i).copied();
+            }
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::with_capacity(self.counts.len());
+        for (i, n) in self.counts.iter().enumerate() {
+            let le = match self.bounds.get(i) {
+                Some(b) => num(*b),
+                None => s("+inf"),
+            };
+            buckets.push(obj(vec![("le", le), ("n", num(*n as f64))]));
+        }
+        obj(vec![
+            ("count", num(self.count() as f64)),
+            ("sum", num(self.sum)),
+            ("buckets", arr(buckets)),
+        ])
+    }
+}
+
+/// Named counters (monotone u64), gauges (last-write or accumulated f64),
+/// and histograms. Everything is created lazily on first touch so callers
+/// never pre-register.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn add_gauge(&mut self, name: &str, dv: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += dv;
+    }
+
+    /// Observe into a histogram, creating it with `bounds` on first touch.
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Iterate gauges whose name starts with `prefix` (waste-by-cause
+    /// rendering).
+    pub fn gauges_with_prefix<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, f64)> + 'a {
+        self.gauges
+            .iter()
+            .filter(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = obj(self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v as f64)))
+            .collect());
+        let gauges = obj(self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
+            .collect());
+        let histograms = obj(self
+            .histograms
+            .iter()
+            .map(|(k, h)| (k.as_str(), h.to_json()))
+            .collect());
+        obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[1.0, 2.0, 5.0]);
+        for v in [0.5, 1.0, 1.5, 4.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 107.0);
+        // 0.5 and 1.0 land in <=1, 1.5 in <=2, 4.0 in <=5, 100 overflows
+        let json = h.to_json().to_string();
+        assert!(json.contains("\"+inf\""), "{json}");
+        assert_eq!(h.quantile_edge(0.5), Some(2.0));
+        assert_eq!(h.quantile_edge(0.8), Some(5.0));
+        assert_eq!(h.quantile_edge(1.0), None, "max sits in the overflow bucket");
+    }
+
+    #[test]
+    fn registry_is_lazy_and_deterministic() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("b");
+        reg.inc("a");
+        reg.inc("a");
+        reg.set_gauge("g", 2.5);
+        reg.add_gauge("g", 0.5);
+        reg.observe("h", &[1.0], 0.5);
+        assert_eq!(reg.counter("a"), 2);
+        assert_eq!(reg.counter("missing"), 0);
+        assert_eq!(reg.gauge("g"), 3.0);
+        let j = reg.to_json().to_string();
+        // BTreeMap ordering: "a" serializes before "b"
+        assert!(j.find("\"a\"").expect("a") < j.find("\"b\"").expect("b"));
+        assert!(Json::parse(&j).is_ok(), "{j}");
+    }
+}

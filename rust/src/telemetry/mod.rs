@@ -1,0 +1,44 @@
+//! Live telemetry over the run log: streaming observability that never
+//! touches the result path.
+//!
+//! The run log (`runlog/`) already witnesses every accounting-relevant
+//! engine event. This module turns that stream into *live* metrics three
+//! ways, strictly layered so observing a run can never change it:
+//!
+//! * [`metrics`] — a dependency-free registry of counters, gauges, and
+//!   fixed-bucket histograms with deterministic JSON export;
+//! * [`stream`] — [`TelemetryStream`]: an incremental consumer that feeds
+//!   each event to the *same* [`runlog::replay::RunReducer`] the batch
+//!   replay oracle runs, plus a metrics layer on top (staleness
+//!   distribution, per-fault-kind waste attribution, round timings). Since
+//!   the reducer is shared code — not a parallel reimplementation — the
+//!   stream's final `ExperimentResult` is byte-identical to `relay replay`
+//!   by construction, and the golden-matrix test pins it;
+//! * [`watch`] — the `relay watch` surfaces: a polling loop over the
+//!   [`runlog::tail::DirTailer`] with a plain-terminal dashboard, JSONL
+//!   snapshot export for machines, and `--once` for CI;
+//! * [`progress`] — the wall-clock progress/ETA meter `sweep/` and the
+//!   watcher both report through.
+//!
+//! Wall-clock time appears **only** here (snapshot `wall_secs`, ETA
+//! lines): `ExperimentResult` stays purely simulated-time so runs remain
+//! byte-reproducible. The in-engine hook is an [`runlog::EventObserver`]
+//! behind the same closure discipline as the `RunLogger` sink — unobserved
+//! runs construct no events and stay byte-identical.
+//!
+//! [`runlog::replay::RunReducer`]: crate::runlog::replay::RunReducer
+//! [`runlog::tail::DirTailer`]: crate::runlog::tail::DirTailer
+//! [`runlog::EventObserver`]: crate::runlog::EventObserver
+//! [`TelemetryStream`]: stream::TelemetryStream
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+pub mod metrics;
+pub mod progress;
+pub mod stream;
+pub mod watch;
+
+pub use metrics::{Histogram, MetricsRegistry};
+pub use progress::ProgressMeter;
+pub use stream::{SharedStream, TelemetryStream};
+pub use watch::{watch_dir, WatchOpts};

@@ -1,0 +1,86 @@
+//! Wall-clock progress/ETA reporting — the one code path `sweep/` grids,
+//! single runs, and the watcher dashboard all report through.
+//!
+//! Deliberately immutable and `Sync`: `sweep/` borrows one meter from the
+//! stack into its scoped worker threads (alongside its completion
+//! counter), so formatting needs only `&self`.
+
+use std::time::Instant;
+
+/// Formats `[label] k/total detail (Xs elapsed, eta Ys)` lines against a
+/// fixed start instant.
+pub struct ProgressMeter {
+    label: String,
+    total: usize,
+    t0: Instant,
+}
+
+impl ProgressMeter {
+    /// Start the clock now.
+    pub fn start(label: &str, total: usize) -> ProgressMeter {
+        ProgressMeter { label: label.to_string(), total, t0: Instant::now() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Progress line for the `done`-th completion (1-based), with a
+    /// linear-extrapolation ETA over the remaining items.
+    pub fn line_at(&self, done: usize, detail: &str) -> String {
+        let elapsed = self.elapsed_secs();
+        let eta = if done == 0 {
+            0.0
+        } else {
+            elapsed / done as f64 * self.total.saturating_sub(done) as f64
+        };
+        format!(
+            "[{}] {done:>4}/{} {detail} ({elapsed:.1}s elapsed, eta {eta:.0}s)",
+            self.label, self.total
+        )
+    }
+
+    /// Failure/stall line: no ETA (extrapolating through a failure lies).
+    pub fn stalled_at(&self, done: usize, detail: &str) -> String {
+        let elapsed = self.elapsed_secs();
+        format!(
+            "[{}] {done:>4}/{} {detail} ({elapsed:.1}s elapsed)",
+            self.label, self.total
+        )
+    }
+
+    /// One-off banner under the same label, for headers like the grid
+    /// shape announcement.
+    pub fn banner(&self, detail: &str) -> String {
+        format!("[{}] {detail}", self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_carry_label_counts_and_eta() {
+        let meter = ProgressMeter::start("sweep", 8);
+        let line = meter.line_at(2, "cell-a acc=0.5");
+        assert!(line.starts_with("[sweep]"), "{line}");
+        assert!(line.contains("2/8"), "{line}");
+        assert!(line.contains("eta"), "{line}");
+        let stalled = meter.stalled_at(3, "cell-b FAILED");
+        assert!(stalled.contains("3/8"), "{stalled}");
+        assert!(!stalled.contains("eta"), "{stalled}");
+        assert_eq!(meter.banner("hello"), "[sweep] hello");
+    }
+
+    #[test]
+    fn zero_done_has_zero_eta() {
+        let meter = ProgressMeter::start("watch", 10);
+        let line = meter.line_at(0, "warming up");
+        assert!(line.contains("eta 0s"), "{line}");
+    }
+}

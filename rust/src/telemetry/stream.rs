@@ -1,0 +1,505 @@
+//! The streaming reducer: one event in, live metrics out.
+//!
+//! [`TelemetryStream`] wraps the *same* [`RunReducer`] that powers
+//! `runlog::replay` — the stream never re-implements any accounting, it
+//! only layers metrics on top (distributions, per-cause waste attribution,
+//! event-kind counters). Feeding a complete log through [`step`] and
+//! calling [`result`] therefore produces the byte-identical
+//! `ExperimentResult` that `replay()` would — tested against every
+//! golden-matrix cell.
+//!
+//! Waste attribution works by observing the reducer's cumulative `wasted`
+//! total across each step: whatever one event added is charged to that
+//! event's cause (crash, dropout, corrupt, doomed, stale-discard,
+//! leftover). The deltas telescope, so the per-cause gauges always sum to
+//! the reducer's total — no thresholds or staleness rules are duplicated
+//! here.
+//!
+//! [`step`]: TelemetryStream::step
+//! [`result`]: TelemetryStream::result
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::ExperimentResult;
+use crate::runlog::replay::{LiveStats, RunReducer};
+use crate::runlog::{EventObserver, RunEvent, FATE_DOOMED};
+use crate::scenario::faults::FaultKind;
+use crate::util::json::{num, obj, s, Json};
+
+use super::metrics::MetricsRegistry;
+
+/// Staleness (rounds/versions behind) bucket edges.
+pub const STALENESS_BUCKETS: &[f64] =
+    &[0.0, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0];
+
+/// Per-task device-seconds bucket edges.
+pub const TASK_SECS_BUCKETS: &[f64] =
+    &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 2000.0];
+
+/// Per-round simulated-duration bucket edges.
+pub const ROUND_SECS_BUCKETS: &[f64] =
+    &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 5000.0];
+
+/// Per-round selection-size bucket edges.
+pub const SELECTED_BUCKETS: &[f64] =
+    &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0];
+
+fn fault_counter_name(kind: u8) -> &'static str {
+    match FaultKind::from_code(kind) {
+        Some(FaultKind::Flap) => "faults.flap",
+        Some(FaultKind::Crash) => "faults.crash",
+        Some(FaultKind::Delay) => "faults.delay",
+        Some(FaultKind::Corrupt) => "faults.corrupt",
+        Some(FaultKind::Duplicate) => "faults.duplicate",
+        None => "faults.unknown",
+    }
+}
+
+/// Incremental telemetry over a run-log event stream. Infallible by
+/// design: a malformed stream records an `error` string and degrades to
+/// raw event counting (a live dashboard must keep rendering even when the
+/// log turns out broken; the strictness lives in [`result`]).
+///
+/// [`result`]: TelemetryStream::result
+pub struct TelemetryStream {
+    reducer: RunReducer,
+    registry: MetricsRegistry,
+    events: u64,
+    error: Option<String>,
+    /// Learners whose most recent fault decision was a crash — used to
+    /// attribute their eventual dropout's waste to `waste.crash`.
+    crash_flagged: HashSet<u64>,
+    started_wall: Option<Instant>,
+}
+
+impl Default for TelemetryStream {
+    fn default() -> Self {
+        TelemetryStream::new()
+    }
+}
+
+impl TelemetryStream {
+    pub fn new() -> TelemetryStream {
+        TelemetryStream {
+            reducer: RunReducer::new(),
+            registry: MetricsRegistry::new(),
+            events: 0,
+            error: None,
+            crash_flagged: HashSet::new(),
+            started_wall: None,
+        }
+    }
+
+    /// Consume one event: metrics first (they only read the pre-step
+    /// reducer), then the shared reducer itself.
+    pub fn step(&mut self, ev: &RunEvent) {
+        self.events += 1;
+        self.started_wall.get_or_insert_with(Instant::now);
+        self.observe_event(ev);
+        if self.error.is_some() {
+            return;
+        }
+        let wasted_before = self.reducer.wasted();
+        let recs_before = self.reducer.records().len();
+        if let Err(e) = self.reducer.step(ev) {
+            self.error = Some(format!("{e:#}"));
+            return;
+        }
+        let wasted_delta = self.reducer.wasted() - wasted_before;
+        if wasted_delta > 0.0 {
+            let cause = self.waste_cause(ev);
+            self.registry.add_gauge(cause, wasted_delta);
+        }
+        let new_recs: Vec<(f64, usize)> = self.reducer.records()[recs_before..]
+            .iter()
+            .map(|r| (r.round_duration, r.selected))
+            .collect();
+        for (dur, selected) in new_recs {
+            self.registry.observe("round_secs", ROUND_SECS_BUCKETS, dur);
+            self.registry
+                .observe("round_selected", SELECTED_BUCKETS, selected as f64);
+        }
+    }
+
+    /// Pre-step metrics: counters, distributions, fault bookkeeping. Uses
+    /// only the event and the reducer's *pre-step* state (e.g. the current
+    /// round for staleness), never its post-step state.
+    fn observe_event(&mut self, ev: &RunEvent) {
+        match ev {
+            RunEvent::Eligibility { count } => {
+                self.registry.set_gauge("eligible", *count as f64);
+            }
+            RunEvent::Selected { .. } => self.registry.inc("selected"),
+            RunEvent::FaultDecision { kind, learner, .. } => {
+                self.registry.inc(fault_counter_name(*kind));
+                if FaultKind::from_code(*kind) == Some(FaultKind::Crash) {
+                    self.crash_flagged.insert(*learner);
+                }
+            }
+            RunEvent::TaskDropout { spent, .. } => {
+                self.registry.inc("dropouts");
+                self.registry.observe("task_secs", TASK_SECS_BUCKETS, *spent);
+            }
+            RunEvent::StragglerSpend { duration, .. } => {
+                self.registry.observe("task_secs", TASK_SECS_BUCKETS, *duration);
+            }
+            RunEvent::FreshSpend { duration, .. } => {
+                self.registry.observe("task_secs", TASK_SECS_BUCKETS, *duration);
+            }
+            RunEvent::Trained { .. } => self.registry.inc("trained"),
+            RunEvent::StaleDelivery { origin_round, .. } => {
+                self.registry.inc("stale_deliveries");
+                if let Some(cur) = self.reducer.current_round() {
+                    let tau = cur.saturating_sub(*origin_round);
+                    self.registry
+                        .observe("staleness", STALENESS_BUCKETS, tau as f64);
+                }
+            }
+            RunEvent::EvalDone { .. } => self.registry.inc("evals"),
+            RunEvent::RoundEnd { .. } => self.registry.inc("rounds_closed"),
+            RunEvent::AsyncSpawn { duration, dropped_after, .. } => {
+                self.registry.inc("selected");
+                let secs = dropped_after.unwrap_or(*duration);
+                self.registry.observe("task_secs", TASK_SECS_BUCKETS, secs);
+            }
+            RunEvent::AsyncDropout { .. } => self.registry.inc("dropouts"),
+            RunEvent::AsyncDelivery { origin_version, corrupt, .. } => {
+                if !corrupt {
+                    self.registry.inc("trained");
+                    if let Some(version) = self.reducer.current_round() {
+                        let tau = version.saturating_sub(*origin_version);
+                        self.registry
+                            .observe("staleness", STALENESS_BUCKETS, tau as f64);
+                    }
+                }
+            }
+            RunEvent::MergeCommit { eval } => {
+                self.registry.inc("merges");
+                self.registry.inc("rounds_closed");
+                if eval.is_some() {
+                    self.registry.inc("evals");
+                }
+            }
+            RunEvent::AsyncBurn { .. } => {
+                self.registry.inc("burns");
+                self.registry.inc("rounds_closed");
+            }
+            RunEvent::RunStart { .. }
+            | RunEvent::RoundStart { .. }
+            | RunEvent::KernelPop { .. }
+            | RunEvent::SweepLeftover { .. }
+            | RunEvent::RunEnd => {}
+        }
+    }
+
+    /// Which per-cause gauge the waste one event produced belongs to.
+    fn waste_cause(&mut self, ev: &RunEvent) -> &'static str {
+        match ev {
+            RunEvent::TaskDropout { learner, .. } | RunEvent::AsyncDropout { learner, .. } => {
+                if self.crash_flagged.remove(learner) {
+                    "waste.crash"
+                } else {
+                    "waste.dropout"
+                }
+            }
+            RunEvent::StragglerSpend { fate, .. } => {
+                if *fate == FATE_DOOMED {
+                    "waste.doomed"
+                } else {
+                    "waste.corrupt"
+                }
+            }
+            RunEvent::FreshSpend { .. } => "waste.corrupt",
+            RunEvent::AsyncDelivery { corrupt, .. } => {
+                if *corrupt {
+                    "waste.corrupt"
+                } else {
+                    "waste.stale_discard"
+                }
+            }
+            RunEvent::StaleDelivery { .. } | RunEvent::MergeCommit { .. } => {
+                "waste.stale_discard"
+            }
+            RunEvent::SweepLeftover { .. } => "waste.leftover",
+            _ => "waste.other",
+        }
+    }
+
+    /// Events consumed so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The stream saw a clean `RunEnd`.
+    pub fn complete(&self) -> bool {
+        self.reducer.ended()
+    }
+
+    /// The first reduction error, if the stream turned out malformed.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    pub fn live(&self) -> LiveStats {
+        self.reducer.live()
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    pub fn reducer(&self) -> &RunReducer {
+        &self.reducer
+    }
+
+    /// Human-readable mode name from the header, once seen.
+    pub fn mode_name(&self) -> Option<&'static str> {
+        self.reducer.header().map(|h| match h.mode {
+            0 => "over-commit",
+            1 => "deadline",
+            _ => "async",
+        })
+    }
+
+    /// The final result — exactly what `runlog::replay` would derive,
+    /// because it *is* the shared reducer's result. Errors while the run
+    /// is still in flight or the stream was malformed.
+    pub fn result(&self) -> Result<ExperimentResult> {
+        if let Some(e) = &self.error {
+            bail!("telemetry stream is degraded: {e}");
+        }
+        self.reducer.result()
+    }
+
+    /// One machine-readable snapshot of everything the stream knows.
+    /// `wall_secs` is the only wall-clock quantity anywhere near the
+    /// result path, and it lives only here.
+    pub fn snapshot(&self) -> Json {
+        let live = self.live();
+        let wall = self
+            .started_wall
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        obj(vec![
+            ("format", s("relay-telemetry-v1")),
+            ("label", s(self.reducer.label())),
+            (
+                "mode",
+                self.mode_name().map(s).unwrap_or(Json::Null),
+            ),
+            ("events", num(self.events as f64)),
+            ("complete", Json::Bool(live.complete)),
+            ("rounds_done", num(live.rounds_done as f64)),
+            ("rounds_total", num(live.rounds_total as f64)),
+            ("sim_time", num(live.sim_time)),
+            ("wall_secs", num(wall)),
+            ("spent_secs", num(live.spent)),
+            ("aggregated_secs", num(live.aggregated)),
+            ("wasted_secs", num(live.wasted)),
+            ("in_flight_secs", num(live.in_flight_secs)),
+            ("outstanding", num(live.outstanding as f64)),
+            ("buffer_fill", num(live.buffer_fill as f64)),
+            ("unique_participants", num(live.unique_participants as f64)),
+            (
+                "error",
+                self.error.as_deref().map(s).unwrap_or(Json::Null),
+            ),
+            ("metrics", self.registry.to_json()),
+        ])
+    }
+}
+
+/// A cloneable, thread-safe handle over one [`TelemetryStream`] — the
+/// in-process live hook. Hand [`observer`] to a `RunLogger` and read
+/// snapshots from any other thread while the run executes.
+///
+/// [`observer`]: SharedStream::observer
+#[derive(Clone)]
+pub struct SharedStream(Arc<Mutex<TelemetryStream>>);
+
+impl Default for SharedStream {
+    fn default() -> Self {
+        SharedStream::new()
+    }
+}
+
+impl SharedStream {
+    pub fn new() -> SharedStream {
+        SharedStream(Arc::new(Mutex::new(TelemetryStream::new())))
+    }
+
+    /// Run `f` under the lock (poison-recovering: telemetry must never
+    /// take a run down with it).
+    pub fn with<T>(&self, f: impl FnOnce(&mut TelemetryStream) -> T) -> T {
+        let mut guard = self.0.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        f(&mut guard)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        self.with(|stream| stream.snapshot())
+    }
+
+    pub fn complete(&self) -> bool {
+        self.with(|stream| stream.complete())
+    }
+
+    /// An [`EventObserver`] feeding this stream, for
+    /// `RunLogger::observing` / `with_observer`.
+    pub fn observer(&self) -> Box<dyn EventObserver> {
+        Box::new(Forwarder(self.clone()))
+    }
+}
+
+struct Forwarder(SharedStream);
+
+impl EventObserver for Forwarder {
+    fn observe(&mut self, ev: &RunEvent) {
+        self.0.with(|stream| stream.step(ev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runlog::{replay, FATE_TRAINED};
+
+    fn sync_log() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RunStart {
+                label: "t".into(),
+                perplexity: false,
+                mode: 0,
+                buffer_k: 0,
+                max_staleness: None,
+                rounds: 1,
+                eval_every: 1,
+                use_saa: true,
+                staleness_threshold: Some(2),
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Eligibility { count: 5 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::Selected { learner: 2 },
+            RunEvent::FaultDecision { kind: 1, learner: 2, round: 0 },
+            RunEvent::TaskDropout { learner: 2, spent: 4.0 },
+            RunEvent::FreshSpend { learner: 1, duration: 10.0, corrupt: false },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 10.0, fresh: true },
+            RunEvent::EvalDone { loss: 1.0, acc: 0.25 },
+            RunEvent::RoundEnd { round_duration: 12.0 },
+            RunEvent::SweepLeftover { secs: 0.0 },
+            RunEvent::RunEnd,
+        ]
+    }
+
+    #[test]
+    fn stream_result_matches_batch_replay_exactly() {
+        let log = sync_log();
+        let mut stream = TelemetryStream::new();
+        for ev in &log {
+            stream.step(ev);
+        }
+        assert!(stream.complete());
+        assert!(stream.error().is_none());
+        let streamed = stream.result().expect("stream result");
+        let replayed = replay(&log).expect("batch replay");
+        assert_eq!(
+            streamed.to_json().to_string(),
+            replayed.to_json().to_string(),
+            "shared reducer must make the stream and batch replay identical"
+        );
+    }
+
+    #[test]
+    fn waste_gauges_sum_to_reducer_total_and_name_causes() {
+        let log = sync_log();
+        let mut stream = TelemetryStream::new();
+        for ev in &log {
+            stream.step(ev);
+        }
+        let total: f64 = stream
+            .registry()
+            .gauges_with_prefix("waste.")
+            .map(|(_, v)| v)
+            .sum();
+        let wasted = stream.live().wasted;
+        assert!(
+            (total - wasted).abs() <= 1e-9 * wasted.abs().max(1.0),
+            "per-cause waste {total} must sum to the reducer's {wasted}"
+        );
+        // learner 2 crashed: its dropout waste lands in waste.crash
+        assert_eq!(stream.registry().gauge("waste.crash"), 4.0);
+        assert_eq!(stream.registry().counter("faults.crash"), 1);
+        assert_eq!(stream.registry().counter("selected"), 2);
+        assert_eq!(stream.registry().counter("dropouts"), 1);
+    }
+
+    #[test]
+    fn malformed_stream_degrades_instead_of_panicking() {
+        let mut stream = TelemetryStream::new();
+        // log opens with a non-header event: reducer errors, stream keeps
+        // counting
+        stream.step(&RunEvent::RunEnd);
+        stream.step(&RunEvent::RunEnd);
+        assert_eq!(stream.events(), 2);
+        assert!(stream.error().is_some());
+        assert!(!stream.complete());
+        assert!(stream.result().is_err());
+        let snap = stream.snapshot().to_string();
+        assert!(Json::parse(&snap).is_ok(), "{snap}");
+        assert!(snap.contains("\"error\""));
+    }
+
+    #[test]
+    fn staleness_histogram_sees_delivery_tau() {
+        let log = vec![
+            RunEvent::RunStart {
+                label: "s".into(),
+                perplexity: false,
+                mode: 1,
+                buffer_k: 0,
+                max_staleness: None,
+                rounds: 2,
+                eval_every: 5,
+                use_saa: true,
+                staleness_threshold: Some(2),
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::StragglerSpend { learner: 1, duration: 8.0, fate: FATE_TRAINED },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 8.0, fresh: false },
+            RunEvent::RoundEnd { round_duration: 4.0 },
+            RunEvent::RoundStart { round: 1, now: 4.0 },
+            RunEvent::Selected { learner: 2 },
+            RunEvent::FreshSpend { learner: 2, duration: 3.0, corrupt: false },
+            RunEvent::Trained { learner: 2, mean_loss: 0.4, duration: 3.0, fresh: true },
+            RunEvent::StaleDelivery { learner: 1, origin_round: 0, duration: 8.0 },
+            RunEvent::RoundEnd { round_duration: 5.0 },
+            RunEvent::SweepLeftover { secs: 0.0 },
+            RunEvent::RunEnd,
+        ];
+        let mut stream = TelemetryStream::new();
+        for ev in &log {
+            stream.step(ev);
+        }
+        let hist = stream.registry().histogram("staleness").expect("staleness hist");
+        assert_eq!(hist.count(), 1);
+        assert_eq!(hist.sum(), 1.0, "delivered one round late");
+    }
+
+    #[test]
+    fn shared_stream_forwards_through_observer() {
+        let shared = SharedStream::new();
+        let mut observer = shared.observer();
+        for ev in &sync_log() {
+            observer.observe(ev);
+        }
+        assert!(shared.complete());
+        let result = shared.with(|s| s.result()).expect("shared result");
+        let replayed = replay(&sync_log()).expect("replay");
+        assert_eq!(result.to_json().to_string(), replayed.to_json().to_string());
+    }
+}

@@ -1,0 +1,339 @@
+//! `relay watch`: tail a run-log directory and surface live state.
+//!
+//! Three consumption modes over one loop:
+//!
+//! * **dashboard** (default) — re-render a plain-terminal summary each
+//!   poll interval until the run completes;
+//! * **`--jsonl`** — emit one machine-readable snapshot line whenever new
+//!   events arrive (and a final one at completion);
+//! * **`--once`** — poll a single time, render once, exit: the scripted /
+//!   CI mode, whose exported result must byte-match `relay replay`.
+//!
+//! The watcher only ever *reads* segment files; the writer never knows it
+//! exists.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runlog::tail::{DirTailer, TailStats};
+use crate::util::json::Json;
+
+use super::progress::ProgressMeter;
+use super::stream::TelemetryStream;
+
+/// Knobs for [`watch_dir`].
+pub struct WatchOpts {
+    /// Poll once and exit instead of following the log.
+    pub once: bool,
+    /// Emit JSONL snapshots instead of the dashboard.
+    pub jsonl: bool,
+    /// Sleep between polls when following.
+    pub interval_ms: u64,
+    /// Prefix each dashboard render with an ANSI clear (interactive
+    /// terminals only; piped output stays appendable).
+    pub clear_screen: bool,
+    /// Stop after this many polls even if the run never completes
+    /// (tests and bounded CI follows).
+    pub max_polls: Option<u64>,
+}
+
+impl Default for WatchOpts {
+    fn default() -> Self {
+        WatchOpts {
+            once: false,
+            jsonl: false,
+            interval_ms: 500,
+            clear_screen: false,
+            max_polls: None,
+        }
+    }
+}
+
+/// Tail `dir` until the run completes (or `once` / `max_polls` stops the
+/// loop), writing dashboards or JSONL snapshots to `out`. Returns the
+/// stream so callers can export the final result / snapshot.
+pub fn watch_dir(dir: &Path, opts: &WatchOpts, out: &mut dyn Write) -> Result<TelemetryStream> {
+    let mut tailer = DirTailer::open(dir);
+    let mut stream = TelemetryStream::new();
+    let mut meter: Option<ProgressMeter> = None;
+    let mut polls: u64 = 0;
+    loop {
+        let events = tailer.poll().with_context(|| {
+            format!("cannot tail run log under {}", dir.display())
+        })?;
+        for ev in &events {
+            stream.step(ev);
+        }
+        // the round-progress clock starts when the header announces the
+        // round count, not when the watcher was launched
+        if meter.is_none() {
+            let total = stream.live().rounds_total;
+            if total > 0 {
+                meter = Some(ProgressMeter::start("watch", total as usize));
+            }
+        }
+        polls += 1;
+        if opts.jsonl {
+            // snapshot on every poll that changed something, plus the
+            // first and last so consumers always see at least one line
+            if !events.is_empty() || polls == 1 || stream.complete() {
+                writeln!(out, "{}", stream.snapshot().to_string())?;
+            }
+        } else if !opts.once {
+            render(&stream, tailer.stats(), meter.as_ref(), opts.clear_screen, out)?;
+        }
+        if opts.once || stream.complete() {
+            break;
+        }
+        if let Some(max) = opts.max_polls {
+            if polls >= max {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(opts.interval_ms.max(1)));
+    }
+    if opts.once && !opts.jsonl {
+        render(&stream, tailer.stats(), meter.as_ref(), false, out)?;
+    }
+    Ok(stream)
+}
+
+fn pct(part: f64, whole: f64) -> f64 {
+    if whole > 0.0 {
+        100.0 * part / whole
+    } else {
+        0.0
+    }
+}
+
+/// One histogram summary line: count, mean, and coarse quantile edges.
+fn hist_line(stream: &TelemetryStream, name: &str) -> Option<String> {
+    let h = stream.registry().histogram(name)?;
+    let q = |q: f64| match h.quantile_edge(q) {
+        Some(edge) => format!("<={edge}"),
+        None => "overflow".to_string(),
+    };
+    Some(format!(
+        "  {name:<16} n={} mean={:.2} p50{} p90{} p99{}",
+        h.count(),
+        h.mean().unwrap_or(0.0),
+        q(0.5),
+        q(0.9),
+        q(0.99),
+    ))
+}
+
+/// Render the plain-text dashboard. Everything shown except `wall` is
+/// simulated time derived from the log.
+fn render(
+    stream: &TelemetryStream,
+    tail: &TailStats,
+    meter: Option<&ProgressMeter>,
+    clear: bool,
+    out: &mut dyn Write,
+) -> Result<()> {
+    if clear {
+        write!(out, "\x1b[2J\x1b[H")?;
+    }
+    let live = stream.live();
+    let reg = stream.registry();
+    let status = if stream.complete() {
+        "complete"
+    } else if stream.error().is_some() {
+        "DEGRADED"
+    } else if stream.events() == 0 {
+        "waiting for events"
+    } else {
+        "running"
+    };
+    writeln!(
+        out,
+        "watch: {} [{}] — {status}",
+        if stream.reducer().label().is_empty() {
+            "(no header yet)"
+        } else {
+            stream.reducer().label()
+        },
+        stream.mode_name().unwrap_or("?"),
+    )?;
+    writeln!(
+        out,
+        "  rounds {}/{}  sim_time {:.1}s  events {}  segments {}",
+        live.rounds_done,
+        live.rounds_total,
+        live.sim_time,
+        stream.events(),
+        tail.segments_finalized + 1,
+    )?;
+    writeln!(
+        out,
+        "  device-secs: spent {:.1} = aggregated {:.1} ({:.1}%) + wasted {:.1} ({:.1}%) + in-flight {:.1}",
+        live.spent,
+        live.aggregated,
+        pct(live.aggregated, live.spent),
+        live.wasted,
+        pct(live.wasted, live.spent),
+        live.in_flight_secs,
+    )?;
+    writeln!(
+        out,
+        "  participants {}  outstanding {}  buffer {}  eligible {:.0}",
+        live.unique_participants,
+        live.outstanding,
+        live.buffer_fill,
+        reg.gauge("eligible"),
+    )?;
+    let waste: Vec<String> = reg
+        .gauges_with_prefix("waste.")
+        .map(|(k, v)| format!("{}={v:.1}", k.trim_start_matches("waste.")))
+        .collect();
+    if !waste.is_empty() {
+        writeln!(out, "  waste by cause: {}", waste.join(" "))?;
+    }
+    let faults: Vec<String> = ["flap", "crash", "delay", "corrupt", "duplicate"]
+        .iter()
+        .filter_map(|k| {
+            let n = reg.counter(&format!("faults.{k}"));
+            (n > 0).then(|| format!("{k}={n}"))
+        })
+        .collect();
+    if !faults.is_empty() {
+        writeln!(out, "  faults: {}", faults.join(" "))?;
+    }
+    for name in ["staleness", "task_secs", "round_secs", "round_selected"] {
+        if let Some(line) = hist_line(stream, name) {
+            writeln!(out, "{line}")?;
+        }
+    }
+    if let Some(rec) = stream.reducer().records().last() {
+        if let (Some(loss), Some(acc)) = (rec.test_loss, rec.test_accuracy) {
+            writeln!(
+                out,
+                "  last eval (round {}): loss {loss:.4} acc {acc:.4}",
+                rec.round
+            )?;
+        }
+    }
+    for note in &tail.skipped {
+        writeln!(out, "  skipped: {note}")?;
+    }
+    if let Some(err) = stream.error() {
+        writeln!(out, "  stream error: {err}")?;
+    }
+    if let Some(meter) = meter {
+        if !stream.complete() && live.rounds_done > 0 {
+            writeln!(out, "{}", meter.line_at(live.rounds_done, "rounds"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse one JSONL snapshot line back (round-trip helper for tests and
+/// downstream tooling).
+pub fn parse_snapshot(line: &str) -> Result<Json> {
+    Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad snapshot line: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runlog::{DirSink, LogSink, RunEvent, RunLogger};
+
+    fn write_log(dir: &Path, events: &[RunEvent]) {
+        let sink = DirSink::create(dir).expect("create log dir");
+        let mut logger = RunLogger::new(Box::new(sink) as Box<dyn LogSink>);
+        for ev in events {
+            let ev = ev.clone();
+            logger.emit(move || ev);
+        }
+        logger.finish().expect("finish log");
+    }
+
+    fn tiny_log() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RunStart {
+                label: "w".into(),
+                perplexity: false,
+                mode: 0,
+                buffer_k: 0,
+                max_staleness: None,
+                rounds: 1,
+                eval_every: 1,
+                use_saa: true,
+                staleness_threshold: None,
+            },
+            RunEvent::RoundStart { round: 0, now: 0.0 },
+            RunEvent::Selected { learner: 1 },
+            RunEvent::FreshSpend { learner: 1, duration: 2.0, corrupt: false },
+            RunEvent::Trained { learner: 1, mean_loss: 0.5, duration: 2.0, fresh: true },
+            RunEvent::EvalDone { loss: 1.0, acc: 0.5 },
+            RunEvent::RoundEnd { round_duration: 3.0 },
+            RunEvent::SweepLeftover { secs: 0.0 },
+            RunEvent::RunEnd,
+        ]
+    }
+
+    #[test]
+    fn once_mode_renders_and_returns_complete_stream() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_log(&dir, &tiny_log());
+        let mut out = Vec::new();
+        let opts = WatchOpts { once: true, ..WatchOpts::default() };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("watch --once");
+        assert!(stream.complete());
+        let text = String::from_utf8(out).expect("utf8 dashboard");
+        assert!(text.contains("complete"), "{text}");
+        assert!(text.contains("device-secs"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_mode_emits_parseable_snapshots() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-jsonl-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_log(&dir, &tiny_log());
+        let mut out = Vec::new();
+        let opts = WatchOpts { jsonl: true, ..WatchOpts::default() };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("watch --jsonl");
+        assert!(stream.complete());
+        let text = String::from_utf8(out).expect("utf8 jsonl");
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty());
+        for line in &lines {
+            let snap = parse_snapshot(line).expect("snapshot parses");
+            assert_eq!(
+                snap.get("format").and_then(|f| f.as_str()),
+                Some("relay-telemetry-v1")
+            );
+        }
+        let last = parse_snapshot(lines.last().expect("last line")).expect("last snapshot");
+        assert_eq!(last.get("complete").and_then(|c| c.as_bool()), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incomplete_log_stops_at_max_polls() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-partial-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let events = tiny_log();
+        write_log(&dir, &events[..4]);
+        let mut out = Vec::new();
+        let opts = WatchOpts {
+            interval_ms: 1,
+            max_polls: Some(3),
+            ..WatchOpts::default()
+        };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("bounded follow");
+        assert!(!stream.complete());
+        assert_eq!(stream.events(), 4);
+        assert!(stream.result().is_err(), "mid-run result must error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

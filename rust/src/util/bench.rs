@@ -77,6 +77,22 @@ pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
     r
 }
 
+/// Best-effort `git describe --always --dirty` of the working tree, for
+/// stamping committed benchmark points with the revision they measured.
+/// `None` when git or a repo is unavailable (shipped binaries, tarballs).
+pub fn git_describe() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    let text = text.trim();
+    (!text.is_empty()).then(|| text.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +104,15 @@ mod tests {
         });
         assert!(r.median_ns > 0.8e6, "median {}", r.median_ns);
         assert!(r.iters >= 16);
+    }
+
+    #[test]
+    fn git_describe_is_clean_when_present() {
+        // environment-dependent: only shape-check what comes back
+        if let Some(desc) = git_describe() {
+            assert!(!desc.is_empty());
+            assert!(!desc.contains('\n'), "{desc:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Observability equivalence properties: the streaming watcher must be an
+//! *exact* alternative lens over a run, never a second implementation.
+//!
+//! * feeding a run's event log through `TelemetryStream` yields the
+//!   byte-identical `ExperimentResult` that batch `replay()` derives, for
+//!   every golden-matrix cell (sync OC/DL and async, all selectors);
+//! * running an experiment with the live observer attached produces a
+//!   result byte-identical to the same run without it;
+//! * `watch_dir --once` over an on-disk log exports the same bytes as the
+//!   replay oracle;
+//! * the per-cause waste gauges always sum to the reducer's waste total.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_experiment_logged, run_experiment_observed};
+use relay::runlog::{decode_segments, replay, DirSink, MemSink};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+use relay::telemetry::{watch_dir, SharedStream, TelemetryStream, WatchOpts};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// The same straggler-rich DynAvail cell the golden-baseline suite pins.
+fn cell_cfg(selector: &str, mode: RoundMode) -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 14,
+        rounds: 5,
+        target_participants: 4,
+        mode,
+        avail: AvailMode::DynAvail,
+        selector: selector.into(),
+        use_saa: true,
+        staleness_threshold: Some(3),
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        ..Default::default()
+    }
+}
+
+fn modes() -> Vec<(&'static str, RoundMode)> {
+    vec![
+        ("oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ]
+}
+
+#[test]
+fn watcher_snapshot_matches_replay_on_every_golden_matrix_cell() {
+    for selector in ["random", "oort", "priority", "safa"] {
+        for (mode_name, mode) in modes() {
+            let label = format!("telem-{selector}-{mode_name}");
+            let mut cfg = cell_cfg(selector, mode);
+            cfg.label = label.clone();
+            let sink = MemSink::default();
+            let engine = run_experiment_logged(cfg, exec(), Box::new(sink.clone()))
+                .unwrap_or_else(|e| panic!("cell '{label}' failed: {e:#}"));
+            let engine_bytes = engine.to_json().to_string();
+            let (events, stats) = decode_segments(&sink.segments());
+            assert!(stats.clean, "cell '{label}': dirty log: {:?}", stats.note);
+            let replayed_bytes = replay(&events)
+                .unwrap_or_else(|e| panic!("cell '{label}' replay failed: {e:#}"))
+                .to_json()
+                .to_string();
+            let mut stream = TelemetryStream::new();
+            for ev in &events {
+                stream.step(ev);
+            }
+            assert!(stream.complete(), "cell '{label}': stream missed RunEnd");
+            assert!(stream.error().is_none(), "cell '{label}': {:?}", stream.error());
+            let streamed_bytes = stream
+                .result()
+                .unwrap_or_else(|e| panic!("cell '{label}' stream result failed: {e:#}"))
+                .to_json()
+                .to_string();
+            assert_eq!(
+                streamed_bytes, replayed_bytes,
+                "cell '{label}': watcher final snapshot diverged from batch replay"
+            );
+            assert_eq!(
+                streamed_bytes, engine_bytes,
+                "cell '{label}': watcher final snapshot diverged from the engine"
+            );
+            // per-cause waste attribution telescopes to the reducer total
+            let causes: f64 = stream
+                .registry()
+                .gauges_with_prefix("waste.")
+                .map(|(_, v)| v)
+                .sum();
+            let wasted = stream.live().wasted;
+            assert!(
+                (causes - wasted).abs() <= 1e-9 * wasted.abs().max(1.0),
+                "cell '{label}': per-cause waste {causes} != reducer total {wasted}"
+            );
+        }
+    }
+}
+
+/// Attaching the in-process live observer must not perturb the result —
+/// the `--live` non-perturbation guarantee, sync and async.
+#[test]
+fn live_observer_leaves_results_byte_identical() {
+    for (mode_name, mode) in [
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ] {
+        let mut cfg = cell_cfg("priority", mode);
+        cfg.label = format!("live-{mode_name}");
+        let plain = run_experiment(cfg.clone(), exec())
+            .unwrap_or_else(|e| panic!("plain {mode_name} failed: {e:#}"));
+        let shared = SharedStream::new();
+        let observed = run_experiment_observed(cfg, exec(), shared.observer())
+            .unwrap_or_else(|e| panic!("observed {mode_name} failed: {e:#}"));
+        assert_eq!(
+            observed.to_json().to_string(),
+            plain.to_json().to_string(),
+            "{mode_name}: live observer perturbed the result"
+        );
+        assert!(shared.complete(), "{mode_name}: observer missed RunEnd");
+        let through_stream = shared
+            .with(|s| s.result())
+            .unwrap_or_else(|e| panic!("shared {mode_name} result failed: {e:#}"));
+        assert_eq!(
+            through_stream.to_json().to_string(),
+            plain.to_json().to_string(),
+            "{mode_name}: the observed stream's own result diverged"
+        );
+    }
+}
+
+/// `relay watch --once` over an on-disk log is the replay oracle in
+/// another coat: same reducer, same bytes.
+#[test]
+fn watch_dir_once_matches_replay_over_a_dir_sink_log() {
+    let dir: PathBuf = std::env::temp_dir().join(format!(
+        "relay-telemetry-watchdir-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = cell_cfg("safa", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) });
+    cfg.label = "watchdir".into();
+    let sink = DirSink::create(&dir).expect("create log dir");
+    let engine = run_experiment_logged(cfg, exec(), Box::new(sink)).expect("logged run");
+    let mut out = Vec::new();
+    let opts = WatchOpts { once: true, ..WatchOpts::default() };
+    let stream = watch_dir(&dir, &opts, &mut out).expect("watch --once");
+    assert!(stream.complete(), "one-shot watch must see the whole finished log");
+    let watched = stream.result().expect("watched result").to_json().to_string();
+    assert_eq!(
+        watched,
+        engine.to_json().to_string(),
+        "watch --once diverged from the engine result"
+    );
+    let dashboard = String::from_utf8(out).expect("utf8 dashboard");
+    assert!(dashboard.contains("complete"), "{dashboard}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

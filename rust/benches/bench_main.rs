@@ -365,6 +365,7 @@ fn bench_scale_path() {
         modes: vec![RoundMode::OverCommit { factor: 1.3 }],
         avails: vec![AvailMode::AllAvail],
         partitions: vec![PartitionScheme::UniformIid],
+        coord_shards: vec![0],
         seeds: vec![1, 1001],
         base: ExpConfig {
             variant: "tiny".into(),

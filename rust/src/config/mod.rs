@@ -103,6 +103,14 @@ pub struct ExpConfig {
     /// fixed reduction order, never completion order (the fuzz harness and
     /// `tests/train_parallel_props.rs` pin this).
     pub train_workers: usize,
+    /// Number of contiguous id-range coordinator shards the population
+    /// substrate (registry, availability index, eligible set, selection
+    /// indexes) is partitioned into. 0 = autodetect from the core count.
+    /// Results are byte-identical for any K — the shard count only governs
+    /// how much of the per-round advance+select work can run in parallel
+    /// (`tests/coord_shard_props.rs` and the fuzzer coord-shards axis pin
+    /// this).
+    pub coord_shards: usize,
     /// Deterministic fault injection (all-off by default); see
     /// [`crate::scenario::faults`].
     pub faults: FaultConfig,
@@ -139,6 +147,7 @@ impl Default for ExpConfig {
             seed: 1,
             workers: 0,       // 0 = auto
             train_workers: 0, // 0 = inherit `workers`
+            coord_shards: 0,  // 0 = autodetect
             faults: FaultConfig::default(),
         }
     }
@@ -265,6 +274,7 @@ impl ExpConfig {
             ("seed", num(self.seed as f64)),
             ("workers", num(self.workers as f64)),
             ("train_workers", num(self.train_workers as f64)),
+            ("coord_shards", num(self.coord_shards as f64)),
             ("faults", self.faults.to_json()),
         ])
     }
@@ -329,6 +339,7 @@ impl ExpConfig {
             seed: gf("seed", d.seed as f64) as u64,
             workers: gu("workers", d.workers),
             train_workers: gu("train_workers", d.train_workers),
+            coord_shards: gu("coord_shards", d.coord_shards),
             faults: j.get("faults").map(FaultConfig::from_json).unwrap_or_default(),
         };
         cfg.validate()?;
@@ -410,6 +421,7 @@ mod tests {
         c.hardware = HardwareScenario::Hs3;
         c.oracle = true;
         c.train_workers = 5;
+        c.coord_shards = 7;
         c.faults = FaultConfig {
             flap: 0.125,
             crash: 0.25,
@@ -429,6 +441,7 @@ mod tests {
         assert_eq!(c2.selector, "priority");
         assert_eq!(c2.faults, c.faults);
         assert_eq!(c2.train_workers, 5);
+        assert_eq!(c2.coord_shards, 7);
     }
 
     #[test]
@@ -439,6 +452,16 @@ mod tests {
         let c = ExpConfig::from_json(&parsed).unwrap();
         assert_eq!(c.workers, 3);
         assert_eq!(c.train_workers, 0);
+    }
+
+    #[test]
+    fn configs_without_coord_shards_key_autodetect() {
+        // pre-sharded-coordination config files (no "coord_shards" key)
+        // load as 0 = autodetect, which is byte-identical to any other K
+        // by the shard-invariance contract
+        let parsed = Json::parse(r#"{"mode": "oc", "workers": 3}"#).unwrap();
+        let c = ExpConfig::from_json(&parsed).unwrap();
+        assert_eq!(c.coord_shards, 0);
     }
 
     #[test]

@@ -172,6 +172,20 @@ fn resolve_train_workers(cfg: &ExpConfig) -> usize {
     }
 }
 
+/// Number of coordinator shards for `cfg`: `coord_shards` if set, else a
+/// capped autodetect from the core count. Every sharded structure
+/// (registry, availability kernels, eligible set, score indices) derives
+/// its layout from this one number, and results are byte-identical for
+/// any value (`tests/coord_shard_props.rs`) — only per-round wall-clock
+/// at large populations changes.
+pub(crate) fn resolve_coord_shards(cfg: &ExpConfig) -> usize {
+    if cfg.coord_shards != 0 {
+        cfg.coord_shards
+    } else {
+        threadpool::default_workers().min(8)
+    }
+}
+
 impl Coordinator {
     pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Coordinator> {
         cfg.validate()?;
@@ -225,7 +239,7 @@ impl Coordinator {
             cfg.workers
         };
         let population = Population::new(
-            Registry::eager(profiles, n_samples, crate::population::DEFAULT_SHARDS),
+            Registry::eager(profiles, n_samples, resolve_coord_shards(&cfg)),
             avail,
             cfg.avail,
             cfg.local_epochs,

@@ -9,9 +9,12 @@
 //!                 (construct + select + async merges at 100k/1M learners
 //!                 -> BENCH_population.json), --suite selection
 //!                 (per-selector indexed vs materializing selection cost
-//!                 -> BENCH_selection.json), and --suite train (intra-round
+//!                 -> BENCH_selection.json), --suite train (intra-round
 //!                 training-pool width 1-vs-8 wall-clock with byte-identity
-//!                 asserted -> BENCH_train.json, gated in CI via --gate)
+//!                 asserted -> BENCH_train.json, gated in CI via --gate),
+//!                 and --suite coord (steady-state sync_to + selection at
+//!                 K=1 vs K=cores coordinator shards, byte-identity
+//!                 asserted -> BENCH_coord.json, gated via --gate)
 //!   scenario      list the registered scenario presets (run with
 //!                 `relay run --scenario <name>`)
 //!   fuzz          differential fuzz runner: random scenario+seed tuples ->
@@ -121,6 +124,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     // width of the intra-round training pool; results are byte-identical at
     // any width (0 = inherit --workers / autodetect, 1 = strictly serial)
     cfg.train_workers = args.usize_or("train-workers", cfg.train_workers);
+    // coordinator shard count; results are byte-identical for any K
+    // (0 = autodetect from the core count, 1 = the flat path)
+    cfg.coord_shards = args.usize_or("coord-shards", cfg.coord_shards);
     if let Some(p) = args.str_opt("partition") {
         cfg.partition = PartitionScheme::parse(p).ok_or_else(|| anyhow!("bad --partition"))?;
     }
@@ -304,6 +310,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let n_seeds = args.usize_or("seeds", 3).max(1);
     let seeds: Vec<u64> = (0..n_seeds as u64).map(|s| base.seed + s * 1000).collect();
+    // coordination-perf axis: results are byte-identical for any K, so a
+    // multi-K sweep compares wall-clock, never accuracy
+    let mut coord_shards = Vec::new();
+    for k in args.list_or("coord-shards", &base.coord_shards.to_string()) {
+        coord_shards
+            .push(k.parse::<usize>().map_err(|_| anyhow!("bad --coord-shards entry '{k}'"))?);
+    }
 
     let spec = GridSpec {
         label: args.str_or("label", "sweep"),
@@ -311,6 +324,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         modes,
         avails,
         partitions,
+        coord_shards,
         seeds,
         base,
     };
@@ -343,21 +357,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// `BENCH_selection.json`; `--suite train` measures intra-round training
 /// wall-clock at pool widths 1 vs 8 on a mega-async-shaped cell (byte-
 /// identity asserted, run appended to `BENCH_train.json`, `--gate` fails
-/// on regression vs the last committed point); `--suite all` runs all
-/// three. Per-event / per-selection cost staying flat as the population
-/// grows 10x is the acceptance signal for the sub-linear selection
-/// pipeline; the workers-8 speedup is the signal for the train pool.
+/// on regression vs the last committed point); `--suite coord` measures
+/// the sharded coordination hot path (steady-state `sync_to` + selection
+/// at K=1 vs K=cores, byte-identity asserted, run appended to
+/// `BENCH_coord.json`, gated like train via `--gate`); `--suite all` runs
+/// all four. Per-event / per-selection cost staying flat as the
+/// population grows 10x is the acceptance signal for the sub-linear
+/// selection pipeline; the workers-8 / K-cores speedups are the signals
+/// for the train pool and the coordinator shards.
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.str_or("suite", "population").as_str() {
         "population" => cmd_bench_population(args),
         "selection" => cmd_bench_selection(args),
         "train" => cmd_bench_train(args),
+        "coord" => cmd_bench_coord(args),
         "all" => {
             cmd_bench_population(args)?;
             cmd_bench_selection(args)?;
-            cmd_bench_train(args)
+            cmd_bench_train(args)?;
+            cmd_bench_coord(args)
         }
-        other => Err(anyhow!("--suite must be population|selection|train|all, got '{other}'")),
+        other => {
+            Err(anyhow!("--suite must be population|selection|train|coord|all, got '{other}'"))
+        }
     }
 }
 
@@ -488,14 +510,36 @@ fn cmd_bench_population(args: &Args) -> Result<()> {
         ]));
     }
 
-    let report = obj(vec![
-        ("format", Json::Str("relay-bench-population-v1".into())),
+    // append this run so the file keeps a trajectory across commits,
+    // stamped with the environment that measured it (same metadata shape
+    // as the train suite)
+    let mut runs: Vec<Json> = match std::fs::read_to_string(&out) {
+        Ok(prev) => match Json::parse(&prev) {
+            Ok(j) => j
+                .get("runs")
+                .and_then(|r| r.as_arr())
+                .map(|r| r.to_vec())
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    let git = relay::util::bench::git_describe()
+        .map(Json::Str)
+        .unwrap_or(Json::Null);
+    runs.push(obj(vec![
+        ("cores", num(relay::util::threadpool::default_workers() as f64)),
+        ("git", git),
         ("merges", num(merges as f64)),
         ("target_participants", num(target as f64)),
         ("cells", arr(cells)),
+    ]));
+    let report = obj(vec![
+        ("format", Json::Str("relay-bench-population-v1".into())),
+        ("runs", arr(runs)),
     ]);
     std::fs::write(&out, report.to_string())?;
-    println!("wrote {out}");
+    println!("appended run to {out}");
     Ok(())
 }
 
@@ -624,8 +668,16 @@ fn cmd_bench_selection(args: &Args) -> Result<()> {
         ]));
     }
 
-    // append this run so the file keeps a trajectory across commits
-    let run = obj(vec![("cells", arr(cells))]);
+    // append this run so the file keeps a trajectory across commits,
+    // stamped like the train suite's points
+    let git = relay::util::bench::git_describe()
+        .map(Json::Str)
+        .unwrap_or(Json::Null);
+    let run = obj(vec![
+        ("cores", num(relay::util::threadpool::default_workers() as f64)),
+        ("git", git),
+        ("cells", arr(cells)),
+    ]);
     let mut runs: Vec<Json> = match std::fs::read_to_string(&out) {
         Ok(prev) => match Json::parse(&prev) {
             Ok(j) => j
@@ -810,6 +862,176 @@ fn cmd_bench_train(args: &Args) -> Result<()> {
     println!("appended run to {out}");
     if let Some(err) = gate_errors.first() {
         return Err(anyhow!("train bench gate failed: {err}"));
+    }
+    Ok(())
+}
+
+/// The sharded-coordination benchmark: the steady-state coordination hot
+/// path — availability advance + eligibility delta (`sync_to`) + selection
+/// + busy churn — run twice at each `--populations` size: K=1 coordinator
+/// shards (the flat path) vs K=cores, both on the full worker pool. The
+/// two runs' picked-id streams must be **byte-identical** (the sharded
+/// coordination contract); the K=cores speedup is the payoff metric.
+/// Appends one run to `--coord-out` (default BENCH_coord.json); `--gate`
+/// fails on a >25% regression of the cores-normalized speedup vs the last
+/// committed point for the same population, and on an absolute floor
+/// (speedup < 1.5 with >= 4 cores).
+fn cmd_bench_coord(args: &Args) -> Result<()> {
+    use relay::config::AvailMode;
+    use relay::population::{Population, Registry};
+    use relay::selection::by_name;
+    use relay::sim::Availability;
+    use relay::trace::{LazyTraceSet, TraceConfig};
+    use relay::util::json::{arr, num, obj, Json};
+    use relay::util::rng::Rng;
+    use std::time::Instant;
+
+    let mut populations = Vec::new();
+    for p in args.list_or("populations", "100000,1000000") {
+        let n: usize = p
+            .parse()
+            .map_err(|_| anyhow!("--populations expects integers, got '{p}'"))?;
+        if n == 0 {
+            return Err(anyhow!("--populations entries must be >= 1"));
+        }
+        populations.push(n);
+    }
+    let iters = args.usize_or("iters", 60).max(1);
+    let target = args.usize_or("participants", 100);
+    let out = args.str_or("coord-out", "BENCH_coord.json");
+    let gate = args.bool("gate");
+    let cores = relay::util::threadpool::default_workers();
+    // one advance step per iteration: big enough that each step drains a
+    // real batch of availability transitions at 1M learners
+    let dt = 1800.0f64;
+
+    // the committed trajectory this run gates against (read before append)
+    let prev = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let prev_runs: Vec<Json> = prev
+        .as_ref()
+        .and_then(|j| j.get("runs"))
+        .and_then(|r| r.as_arr())
+        .map(|r| r.to_vec())
+        .unwrap_or_default();
+    // last committed (speedup, cores) for a population, scanning newest-first
+    let last_point = |population: usize| -> Option<(f64, f64)> {
+        prev_runs.iter().rev().find_map(|run| {
+            let run_cores = run.get("cores").and_then(|c| c.as_f64())?;
+            run.get("cells").and_then(|c| c.as_arr())?.iter().find_map(|cell| {
+                if cell.get("population").and_then(|p| p.as_usize()) != Some(population) {
+                    return None;
+                }
+                cell.get("speedup").and_then(|s| s.as_f64()).map(|s| (s, run_cores))
+            })
+        })
+    };
+
+    let mut cells = Vec::new();
+    let mut gate_errors: Vec<String> = Vec::new();
+    for &n in &populations {
+        println!("== coord shards @ population {n} ==");
+        // one steady-state coordination loop at K shards: advance the
+        // availability kernels by dt, drain the eligibility deltas, sample
+        // the round's participants, and mark them busy (so busy buckets
+        // churn the way a real engine's do)
+        let run_k = |k: usize| -> Result<(Vec<Vec<usize>>, f64)> {
+            let registry = Registry::lazy(n, 7, 4, k);
+            let avail = Availability::Lazy(LazyTraceSet::new(n, 7, TraceConfig::default()));
+            let mut pop = Population::new(registry, avail, AvailMode::DynAvail, 1, 1000, cores);
+            let mut sel = by_name("random").ok_or_else(|| anyhow!("unknown selector"))?;
+            let mut rng = Rng::new(9);
+            // warm-up: the one-time index build + O(n) eligible-set build
+            pop.sync_to(0, 0.0, sel.as_mut());
+            let mut picked_log = Vec::with_capacity(iters);
+            let mut now = 0.0f64;
+            let t0 = Instant::now();
+            for round in 1..=iters {
+                now += dt;
+                pop.sync_to(round, now, sel.as_mut());
+                let picked = pop.eligible_set().sample_k(&mut rng, target);
+                for &id in &picked {
+                    pop.mark_busy(id, now + 2.5 * dt, sel.as_mut());
+                }
+                picked_log.push(picked);
+            }
+            Ok((picked_log, t0.elapsed().as_secs_f64()))
+        };
+        let (picked_flat, secs_flat) = run_k(1)?;
+        let (picked_sharded, secs_sharded) = run_k(cores)?;
+        if picked_flat != picked_sharded {
+            return Err(anyhow!(
+                "sharded coordination broke K-invariance: K={cores} picked different \
+                 learners than K=1 at population {n}"
+            ));
+        }
+        let speedup = secs_flat / secs_sharded.max(1e-9);
+        println!(
+            "  {iters} syncs: K=1 {secs_flat:.3}s, K={cores} {secs_sharded:.3}s \
+             ({speedup:.2}x, {cores} cores, byte-identical)"
+        );
+        if gate {
+            // normalize by the parallelism actually available so a point
+            // recorded on a big machine doesn't fail the gate on a small CI
+            // runner: ideal speedup is min(8, cores) on both sides
+            let norm = speedup / (cores as f64).min(8.0);
+            if let Some((prev_speedup, prev_cores)) = last_point(n) {
+                let prev_norm = prev_speedup / prev_cores.min(8.0);
+                if norm < 0.75 * prev_norm {
+                    gate_errors.push(format!(
+                        "population {n}: normalized speedup {norm:.3} regressed >25% vs \
+                         the last committed point {prev_norm:.3}"
+                    ));
+                }
+            } else {
+                // a freshly seeded trajectory has no committed point yet:
+                // the relative check passes vacuously (this run becomes the
+                // baseline); only the absolute floor below still applies
+                println!(
+                    "  gate: no committed baseline for population {n} yet — \
+                     relative check skipped, this run becomes the baseline"
+                );
+            }
+            if cores >= 4 && speedup < 1.5 {
+                gate_errors.push(format!(
+                    "population {n}: speedup {speedup:.2}x below the 1.5x floor on \
+                     {cores} cores"
+                ));
+            }
+        }
+        cells.push(obj(vec![
+            ("population", num(n as f64)),
+            ("iters", num(iters as f64)),
+            ("target_participants", num(target as f64)),
+            ("dt_secs", num(dt)),
+            ("shards", num(cores as f64)),
+            ("secs_k1", num(secs_flat)),
+            ("secs_sharded", num(secs_sharded)),
+            ("speedup", num(speedup)),
+            ("byte_identical", Json::Bool(true)),
+        ]));
+    }
+
+    let mut runs = prev_runs;
+    // stamp each appended point with the environment that measured it, so
+    // future gates can tell a code regression from a machine change
+    let git = relay::util::bench::git_describe()
+        .map(Json::Str)
+        .unwrap_or(Json::Null);
+    runs.push(obj(vec![
+        ("cores", num(cores as f64)),
+        ("git", git),
+        ("cells", arr(cells)),
+    ]));
+    let report = obj(vec![
+        ("format", Json::Str("relay-bench-coord-v1".into())),
+        ("runs", arr(runs)),
+    ]);
+    std::fs::write(&out, report.to_string())?;
+    println!("appended run to {out}");
+    if let Some(err) = gate_errors.first() {
+        return Err(anyhow!("coord bench gate failed: {err}"));
     }
     Ok(())
 }
@@ -1014,6 +1236,8 @@ USAGE:
                per interval to stderr; the result is byte-identical either way)
               [--train-workers N]   (intra-round training pool width; results
                are byte-identical at any width — 1 = strictly serial)
+              [--coord-shards K]   (coordinator shard count; results are
+               byte-identical for any K — 0 = autodetect, 1 = the flat path)
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
@@ -1029,12 +1253,14 @@ USAGE:
                for machine-readable snapshots, --once for scripted/CI use;
                --out byte-matches `relay replay <log-dir> --out`)
   relay figure <2..21|t1|t2|forecast|all> [--scale 0.3] [--seeds 1] [--workers N] [--backend pjrt|native] [--verbose]
-  relay bench [--suite population|selection|train|all] [--populations 100000,1000000]
-              [--merges 50] [--participants 100] [--selections 200] [--workers N]
+  relay bench [--suite population|selection|train|coord|all] [--populations 100000,1000000]
+              [--merges 50] [--participants 100] [--selections 200] [--iters 60] [--workers N]
               [--out BENCH_population.json] [--selection-out BENCH_selection.json]
-              [--train-out BENCH_train.json] [--buffer-k K] [--gate]
+              [--train-out BENCH_train.json] [--coord-out BENCH_coord.json] [--buffer-k K] [--gate]
               (train suite: pool width 1-vs-8 wall-clock + byte-identity on a
-               mega-async cell; --gate fails on >25% speedup regression)
+               mega-async cell; coord suite: sync_to+select at K=1 vs K=cores
+               shards, byte-identity asserted; --gate fails on >25% speedup
+               regression vs the last committed point)
   relay trace-stats | forecast-eval | validate
 
 Artifacts: run `make artifacts` first (AOT-compiles the JAX/Pallas model to

@@ -14,6 +14,16 @@
 //! advance orders), while the per-advance cost is O(transitions due ·
 //! log n) instead of O(n).
 //!
+//! **Sharded advance**: the event stream is partitioned into one kernel per
+//! contiguous id-range shard (the same ranges as the [`CandidateSet`]'s
+//! shards), because a learner's transitions depend only on its own trace —
+//! so all K shards advance **in parallel** on the worker pool, each owning
+//! its kernel, its cursor slice, and its disjoint membership-shard view.
+//! A shard's flip sequence is exactly the flat (single-kernel) flip
+//! sequence filtered to its ids, so `advance_to_sharded` is deterministic
+//! for any worker count and the concatenated (shard-major) stream drives
+//! results that are byte-identical for any shard count.
+//!
 //! Construction is lazy: a DynAvail index does **no** trace work until its
 //! first `advance_to`, preserving the coordinator's construct-without-
 //! materializing guarantee (`tests/lazy_equivalence.rs`). The first advance
@@ -25,7 +35,7 @@ use crate::sim::{Availability, EventClass, EventKernel};
 use crate::trace::WEEK;
 use crate::util::threadpool;
 
-use super::candidate_set::CandidateSet;
+use super::candidate_set::{CandidateSet, ShardViewMut};
 
 /// Per-learner replay position: the next boundary index within the weekly
 /// schedule, and which week replay we are in.
@@ -38,8 +48,9 @@ struct Cursor {
 struct IndexState {
     /// Learners available at the last advance point, in id order.
     set: CandidateSet,
-    /// One pending transition event per learner (payload = learner id).
-    kernel: EventKernel<u32>,
+    /// One pending transition event per learner (payload = learner id),
+    /// partitioned into one kernel per membership shard.
+    kernels: Vec<EventKernel<u32>>,
     cursors: Vec<Cursor>,
 }
 
@@ -123,6 +134,44 @@ fn sessions_of(avail: &Availability, id: usize) -> &[(f64, f64)] {
     }
 }
 
+/// Drain one shard's due transitions: pop its kernel while events are due,
+/// flip membership through the shard's disjoint view, and re-arm each
+/// learner's next boundary. `lo` is the shard's first global id. Returns the
+/// shard's flips — exactly the flat flip stream filtered to this id range.
+fn advance_shard(
+    avail: &Availability,
+    kernel: &mut EventKernel<u32>,
+    cursors: &mut [Cursor],
+    view: &mut ShardViewMut<'_>,
+    lo: usize,
+    now: f64,
+) -> Vec<(usize, bool)> {
+    let mut flips = Vec::new();
+    while kernel.peek_at().map(|t| t <= now).unwrap_or(false) {
+        let ev = kernel.pop_next().expect("peeked event exists");
+        let id = ev.payload as usize;
+        let s = sessions_of(avail, id);
+        let b = Bounds::new(s);
+        let cur = cursors[id - lo];
+        let (_, on) = b.get(cur.k as usize);
+        let changed = if on { view.insert(id) } else { view.remove(id) };
+        if changed {
+            flips.push((id, on));
+        }
+        // re-arm this learner's next transition
+        let mut k = cur.k as usize + 1;
+        let mut week = cur.week;
+        if k >= b.count() {
+            k = 0;
+            week += 1;
+        }
+        cursors[id - lo] = Cursor { k: k as u32, week };
+        let at = week as f64 * WEEK + b.get(k).0;
+        kernel.schedule(at, EventClass::Availability, id as u32);
+    }
+    flips
+}
+
 impl AvailabilityIndex {
     /// Wrap an availability view for `n` learners. Does no trace work —
     /// DynAvail indexes build at first `advance_to` (see module docs).
@@ -156,9 +205,10 @@ impl AvailabilityIndex {
 
     /// Apply every availability transition due at or before `now`; returns
     /// the learners whose availability actually flipped, as `(id, now_on)`,
-    /// in deterministic event order. Builds the index on first call
-    /// (`workers > 1` parallelizes the one-time trace materialization).
-    pub fn advance_to(&mut self, now: f64, workers: usize) -> Vec<(usize, bool)> {
+    /// grouped per shard (shard-major, each shard's flips in its event
+    /// order). Shards advance in parallel when `workers > 1`; the result is
+    /// identical at any worker count. Builds the index on first call.
+    pub fn advance_to_sharded(&mut self, now: f64, workers: usize) -> Vec<Vec<(usize, bool)>> {
         if matches!(self.avail, Availability::All) {
             return Vec::new();
         }
@@ -166,30 +216,28 @@ impl AvailabilityIndex {
             self.build(now, workers);
         }
         let st = self.state.as_mut().expect("index built above");
-        let mut flips = Vec::new();
-        while st.kernel.peek_at().map(|t| t <= now).unwrap_or(false) {
-            let ev = st.kernel.pop_next().expect("peeked event exists");
-            let id = ev.payload as usize;
-            let s = sessions_of(&self.avail, id);
-            let b = Bounds::new(s);
-            let cur = st.cursors[id];
-            let (_, on) = b.get(cur.k as usize);
-            let changed = if on { st.set.insert(id) } else { st.set.remove(id) };
-            if changed {
-                flips.push((id, on));
-            }
-            // re-arm this learner's next transition
-            let mut k = cur.k as usize + 1;
-            let mut week = cur.week;
-            if k >= b.count() {
-                k = 0;
-                week += 1;
-            }
-            st.cursors[id] = Cursor { k: k as u32, week };
-            let at = week as f64 * WEEK + b.get(k).0;
-            st.kernel.schedule(at, EventClass::Availability, id as u32);
+        let shard_size = st.set.shard_size();
+        let avail = &self.avail;
+        let views = st.set.shard_views_mut();
+        let mut jobs = Vec::with_capacity(views.len());
+        let mut cursors_rest: &mut [Cursor] = &mut st.cursors;
+        for ((si, mut view), kernel) in views.into_iter().enumerate().zip(st.kernels.iter_mut())
+        {
+            let take = cursors_rest.len().min(shard_size);
+            let (chunk, rest) = cursors_rest.split_at_mut(take);
+            cursors_rest = rest;
+            let lo = si * shard_size;
+            jobs.push(move || advance_shard(avail, kernel, chunk, &mut view, lo, now));
         }
+        let flips = threadpool::run_parallel(workers, jobs);
+        st.set.rebuild_len();
         flips
+    }
+
+    /// Flat view of [`AvailabilityIndex::advance_to_sharded`]: the per-shard
+    /// flip groups concatenated in shard-major order.
+    pub fn advance_to(&mut self, now: f64, workers: usize) -> Vec<(usize, bool)> {
+        self.advance_to_sharded(now, workers).into_iter().flatten().collect()
     }
 
     /// Is the learner available as of the last `advance_to` point? Trace
@@ -224,7 +272,7 @@ impl AvailabilityIndex {
     /// One-time build: materialize every learner's sessions (in parallel
     /// when `workers > 1` — pure per-learner work, result-identical at any
     /// worker count), seed the available set from exact trace queries at
-    /// `now`, and arm one transition event per learner.
+    /// `now`, and arm one transition event per learner in its shard kernel.
     fn build(&mut self, now: f64, workers: usize) {
         if let Availability::Lazy(tr) = &self.avail {
             if workers > 1 && self.n > 1 {
@@ -246,7 +294,9 @@ impl AvailabilityIndex {
         let tw = now.rem_euclid(WEEK);
         let week = (now / WEEK).floor().max(0.0) as u32;
         let mut set = CandidateSet::with_shards(self.n, self.num_shards);
-        let mut kernel = EventKernel::default();
+        let shard_size = set.shard_size();
+        let mut kernels: Vec<EventKernel<u32>> =
+            (0..set.num_shards()).map(|_| EventKernel::default()).collect();
         let mut cursors = Vec::with_capacity(self.n);
         for id in 0..self.n {
             if self.avail.available(id, now) {
@@ -262,9 +312,9 @@ impl AvailabilityIndex {
             let k = b.first_after(tw);
             cursors.push(Cursor { k: k as u32, week });
             let at = week as f64 * WEEK + b.get(k).0;
-            kernel.schedule(at, EventClass::Availability, id as u32);
+            kernels[id / shard_size].schedule(at, EventClass::Availability, id as u32);
         }
-        self.state = Some(IndexState { set, kernel, cursors });
+        self.state = Some(IndexState { set, kernels, cursors });
     }
 }
 
@@ -359,6 +409,35 @@ mod tests {
         let fa = a.advance_to(500_000.0, 1);
         let fb = b.advance_to(500_000.0, 6);
         assert_eq!(fa, fb, "flip streams must be worker-count independent");
+    }
+
+    #[test]
+    fn sharded_flips_are_the_flat_stream_filtered_per_shard() {
+        // each shard's flip group must equal the single-shard (flat) flip
+        // stream restricted to that shard's id range, for any shard count
+        let n = 60;
+        let mk = || Availability::Lazy(LazyTraceSet::new(n, 21, TraceConfig::default()));
+        let mut flat = AvailabilityIndex::new(mk(), n, 1);
+        flat.advance_to(1_000.0, 1);
+        let flat_flips = flat.advance_to(300_000.0, 1);
+        for shards in [2usize, 7, 16] {
+            let mut idx = AvailabilityIndex::new(mk(), n, shards);
+            idx.advance_to(1_000.0, 1);
+            let groups = idx.advance_to_sharded(300_000.0, 4);
+            let shard_size = n.div_ceil(shards).max(1);
+            assert_eq!(groups.len(), n.div_ceil(shard_size).max(1), "{shards} shards");
+            for (si, group) in groups.iter().enumerate() {
+                let lo = si * shard_size;
+                let hi = (lo + shard_size).min(n);
+                let want: Vec<(usize, bool)> = flat_flips
+                    .iter()
+                    .copied()
+                    .filter(|&(id, _)| id >= lo && id < hi)
+                    .collect();
+                assert_eq!(group, &want, "{shards} shards, shard {si}");
+            }
+            assert_eq!(collect(&idx), collect(&flat), "{shards} shards: sets diverged");
+        }
     }
 
     #[test]

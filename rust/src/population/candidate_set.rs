@@ -3,13 +3,16 @@
 //! structure selection strategies draw from instead of re-scanning the whole
 //! population.
 //!
-//! Internally each shard covers a contiguous id range and keeps a Fenwick
-//! (binary-indexed) tree over a membership bitmap; rank/select queries walk
-//! the shard prefix counts (shard counts are few) and then descend one
-//! shard's tree. All order-sensitive operations — ascending-id iteration,
-//! `nth` (global rank → id), and `sample_k` — are defined over the *global
-//! id space*, so results are byte-identical for any shard count
-//! (`tests/population_props.rs` locks this in).
+//! Internally each shard covers a contiguous id range and **owns its own
+//! storage** — a membership bitmap plus a Fenwick (binary-indexed) tree over
+//! it — so the sharded coordination layer ([`crate::population::sharded`])
+//! can hand each coordinator shard a disjoint mutable view
+//! ([`CandidateSet::shard_views_mut`]) and mutate all K shards in parallel.
+//! Rank/select queries walk the shard prefix counts (shard counts are few)
+//! and then descend one shard's tree. All order-sensitive operations —
+//! ascending-id iteration, `nth` (global rank → id), and `sample_k` — are
+//! defined over the *global id space*, so results are byte-identical for
+//! any shard count (`tests/population_props.rs` locks this in).
 //!
 //! `sample_k` reproduces [`Rng::choose_k`] exactly: it runs the same partial
 //! Fisher-Yates over the implicit ascending-id candidate array, tracking the
@@ -43,17 +46,6 @@ impl Fenwick {
         }
     }
 
-    /// Total number of members in this shard.
-    fn total(&self) -> usize {
-        let mut i = self.n;
-        let mut s = 0usize;
-        while i > 0 {
-            s += self.tree[i] as usize;
-            i -= i & i.wrapping_neg();
-        }
-        s
-    }
-
     /// Shard-local index of the k-th (0-based) member; requires k < total.
     fn select(&self, k: usize) -> usize {
         let mut pos = 0usize;
@@ -71,11 +63,58 @@ impl Fenwick {
     }
 }
 
+/// One contiguous id range's worth of membership state: the bitmap, the
+/// Fenwick over it, and the member count — everything a coordinator shard
+/// mutates during a parallel advance, with no storage shared across shards.
+struct SetShard {
+    fen: Fenwick,
+    /// Local membership bitmap over `0..size` (word-packed).
+    bits: Vec<u64>,
+    /// Number of ids this shard ranges over.
+    size: usize,
+    /// Members currently present in this shard.
+    len: usize,
+}
+
+impl SetShard {
+    fn new(size: usize) -> SetShard {
+        SetShard {
+            fen: Fenwick::new(size),
+            bits: vec![0u64; size.div_ceil(64).max(1)],
+            size,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn contains(&self, off: usize) -> bool {
+        (self.bits[off / 64] >> (off % 64)) & 1 == 1
+    }
+
+    fn insert(&mut self, off: usize) -> bool {
+        if self.contains(off) {
+            return false;
+        }
+        self.bits[off / 64] |= 1u64 << (off % 64);
+        self.fen.add(off, 1);
+        self.len += 1;
+        true
+    }
+
+    fn remove(&mut self, off: usize) -> bool {
+        if !self.contains(off) {
+            return false;
+        }
+        self.bits[off / 64] &= !(1u64 << (off % 64));
+        self.fen.add(off, -1);
+        self.len -= 1;
+        true
+    }
+}
+
 /// Sharded dynamic set of learner ids (see the module docs).
 pub struct CandidateSet {
-    shards: Vec<Fenwick>,
-    /// Membership bitmap over the whole id space (word-packed).
-    bits: Vec<u64>,
+    shards: Vec<SetShard>,
     shard_size: usize,
     n: usize,
     len: usize,
@@ -97,16 +136,10 @@ impl CandidateSet {
             .map(|i| {
                 let lo = i * shard_size;
                 let hi = ((i + 1) * shard_size).min(n);
-                Fenwick::new(hi.saturating_sub(lo))
+                SetShard::new(hi.saturating_sub(lo))
             })
             .collect();
-        CandidateSet {
-            shards,
-            bits: vec![0u64; n.div_ceil(64).max(1)],
-            shard_size,
-            n,
-            len: 0,
-        }
+        CandidateSet { shards, shard_size, n, len: 0 }
     }
 
     /// Number of ids the set ranges over (the population size).
@@ -126,31 +159,28 @@ impl CandidateSet {
         self.shards.len()
     }
 
+    /// Size of each contiguous shard range (the last shard may be shorter).
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
     pub fn contains(&self, id: usize) -> bool {
         debug_assert!(id < self.n);
-        (self.bits[id / 64] >> (id % 64)) & 1 == 1
+        self.shards[id / self.shard_size].contains(id % self.shard_size)
     }
 
     /// Insert `id`; returns true if it was not already a member.
     pub fn insert(&mut self, id: usize) -> bool {
-        if self.contains(id) {
-            return false;
-        }
-        self.bits[id / 64] |= 1u64 << (id % 64);
-        self.shards[id / self.shard_size].add(id % self.shard_size, 1);
-        self.len += 1;
-        true
+        let changed = self.shards[id / self.shard_size].insert(id % self.shard_size);
+        self.len += changed as usize;
+        changed
     }
 
     /// Remove `id`; returns true if it was a member.
     pub fn remove(&mut self, id: usize) -> bool {
-        if !self.contains(id) {
-            return false;
-        }
-        self.bits[id / 64] &= !(1u64 << (id % 64));
-        self.shards[id / self.shard_size].add(id % self.shard_size, -1);
-        self.len -= 1;
-        true
+        let changed = self.shards[id / self.shard_size].remove(id % self.shard_size);
+        self.len -= changed as usize;
+        changed
     }
 
     /// The `rank`-th smallest member id (0-based); requires `rank < len()`.
@@ -158,11 +188,10 @@ impl CandidateSet {
         assert!(rank < self.len, "rank {rank} out of range (len {})", self.len);
         let mut rem = rank;
         for (si, sh) in self.shards.iter().enumerate() {
-            let t = sh.total();
-            if rem < t {
-                return si * self.shard_size + sh.select(rem);
+            if rem < sh.len {
+                return si * self.shard_size + sh.fen.select(rem);
             }
-            rem -= t;
+            rem -= sh.len;
         }
         unreachable!("rank within len must land in a shard")
     }
@@ -170,9 +199,10 @@ impl CandidateSet {
     /// Members in ascending id order.
     pub fn iter(&self) -> SetIter<'_> {
         SetIter {
-            bits: &self.bits,
+            set: self,
+            shard_idx: 0,
             word_idx: 0,
-            cur: self.bits.first().copied().unwrap_or(0),
+            cur: self.shards.first().and_then(|s| s.bits.first()).copied().unwrap_or(0),
         }
     }
 
@@ -193,11 +223,62 @@ impl CandidateSet {
         }
         out
     }
+
+    /// Disjoint per-shard mutable views, one per shard in ascending id-range
+    /// order — the handles the sharded coordination layer distributes across
+    /// the threadpool so all K shards mutate membership in parallel. The
+    /// global `len` is left stale while views are out; callers must
+    /// [`CandidateSet::rebuild_len`] after the parallel phase.
+    pub(crate) fn shard_views_mut(&mut self) -> Vec<ShardViewMut<'_>> {
+        let shard_size = self.shard_size;
+        self.shards
+            .iter_mut()
+            .enumerate()
+            .map(|(si, shard)| ShardViewMut { lo: si * shard_size, shard })
+            .collect()
+    }
+
+    /// Re-derive the global member count from the per-shard counts (after a
+    /// parallel mutation phase through [`CandidateSet::shard_views_mut`]).
+    pub(crate) fn rebuild_len(&mut self) {
+        self.len = self.shards.iter().map(|s| s.len).sum();
+    }
 }
 
-/// Ascending-id iterator over a [`CandidateSet`]'s membership bitmap.
+/// A mutable handle to exactly one shard's membership state, addressed by
+/// global learner id. Disjoint across shards, so K views mutate in parallel.
+pub(crate) struct ShardViewMut<'a> {
+    shard: &'a mut SetShard,
+    lo: usize,
+}
+
+impl ShardViewMut<'_> {
+    /// Insert global `id` (must belong to this shard's range); returns true
+    /// if it was not already a member.
+    pub(crate) fn insert(&mut self, id: usize) -> bool {
+        debug_assert!(id >= self.lo && id - self.lo < self.shard.size, "id outside shard");
+        self.shard.insert(id - self.lo)
+    }
+
+    /// Remove global `id` (must belong to this shard's range); returns true
+    /// if it was a member.
+    pub(crate) fn remove(&mut self, id: usize) -> bool {
+        debug_assert!(id >= self.lo && id - self.lo < self.shard.size, "id outside shard");
+        self.shard.remove(id - self.lo)
+    }
+
+    /// Is global `id` (must belong to this shard's range) a member?
+    #[cfg(test)]
+    pub(crate) fn contains(&self, id: usize) -> bool {
+        debug_assert!(id >= self.lo && id - self.lo < self.shard.size, "id outside shard");
+        self.shard.contains(id - self.lo)
+    }
+}
+
+/// Ascending-id iterator over a [`CandidateSet`]'s per-shard bitmaps.
 pub struct SetIter<'a> {
-    bits: &'a [u64],
+    set: &'a CandidateSet,
+    shard_idx: usize,
     word_idx: usize,
     cur: u64,
 }
@@ -208,14 +289,21 @@ impl Iterator for SetIter<'_> {
     fn next(&mut self) -> Option<usize> {
         while self.cur == 0 {
             self.word_idx += 1;
-            if self.word_idx >= self.bits.len() {
-                return None;
+            loop {
+                let Some(shard) = self.set.shards.get(self.shard_idx) else {
+                    return None;
+                };
+                if self.word_idx < shard.bits.len() {
+                    self.cur = shard.bits[self.word_idx];
+                    break;
+                }
+                self.shard_idx += 1;
+                self.word_idx = 0;
             }
-            self.cur = self.bits[self.word_idx];
         }
         let b = self.cur.trailing_zeros() as usize;
         self.cur &= self.cur - 1;
-        Some(self.word_idx * 64 + b)
+        Some(self.shard_idx * self.set.shard_size + self.word_idx * 64 + b)
     }
 }
 
@@ -271,6 +359,20 @@ mod tests {
         let want: Vec<usize> = (0..500).filter(|&i| naive[i]).collect();
         assert_eq!(s.iter().collect::<Vec<_>>(), want);
         assert_eq!(s.len(), want.len());
+    }
+
+    #[test]
+    fn iter_is_layout_invariant() {
+        // shard boundaries falling mid-word must not perturb iteration
+        for shards in [1usize, 3, 7, 64] {
+            let mut s = CandidateSet::with_shards(300, shards);
+            for id in (0..300).filter(|i| i % 5 == 0 || i % 17 == 3) {
+                s.insert(id);
+            }
+            let want: Vec<usize> =
+                (0..300).filter(|i| i % 5 == 0 || i % 17 == 3).collect();
+            assert_eq!(s.iter().collect::<Vec<_>>(), want, "{shards} shards");
+        }
     }
 
     #[test]
@@ -330,6 +432,25 @@ mod tests {
         let mut sorted = got.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, vec![3, 8]);
+    }
+
+    #[test]
+    fn shard_views_partition_the_id_space() {
+        let mut s = CandidateSet::with_shards(100, 4);
+        {
+            let mut views = s.shard_views_mut();
+            assert_eq!(views.len(), 4);
+            assert!(views[0].insert(3));
+            assert!(views[1].insert(30));
+            assert!(!views[1].insert(30), "double insert through a view");
+            assert!(views[3].insert(99));
+            assert!(views[3].contains(99));
+            assert!(views[3].remove(99));
+        }
+        s.rebuild_len();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3, 30]);
+        assert_eq!(s.nth(1), 30);
     }
 
     #[test]

@@ -38,16 +38,27 @@
 //! oracle (`tests/kernel_equivalence.rs`). [`Population`] also implements
 //! [`ProbeSource`], serving per-learner probe answers (and their
 //! [`SlotSig`] validity buckets) lazily to indexed selectors.
+//!
+//! **Sharded coordination** ([`sharded`]): the registry's shard count K
+//! partitions every structure above into the same K contiguous id ranges,
+//! and `sync_to` runs as a parallel per-shard delta pass followed by a
+//! serial shard-major hook pass — results byte-identical for any K
+//! (`tests/coord_shard_props.rs`), per-round wall-clock dropping with the
+//! core count at 1M+ learners (`relay bench --suite coord`).
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod avail_index;
 pub mod candidate_set;
 pub mod registry;
+pub mod sharded;
 
 pub use avail_index::AvailabilityIndex;
 pub use candidate_set::CandidateSet;
 pub use registry::{Registry, DEFAULT_SHARDS};
+pub use sharded::ShardPlan;
 
-use std::collections::BTreeMap;
+use sharded::ShardBuckets;
 
 use crate::config::AvailMode;
 use crate::forecast::{slot_bins, ForecasterBank, SeasonalForecaster};
@@ -59,17 +70,17 @@ use crate::sim::Availability;
 /// forecaster is bootstrapped from (paper Appendix A).
 const FORECAST_STEP: f64 = 1800.0;
 
-/// Engine eligibility state: the selectable set plus the expiry schedules
-/// that re-admit learners as rounds/time advance.
+/// Engine eligibility state: the selectable set plus the per-shard expiry
+/// schedules that re-admit learners as rounds/time advance. Each shard owns
+/// the buckets of its contiguous id range (the sync engines have no
+/// per-task release event, so busy expiry is bucket-driven; stale entries
+/// are harmless — the drain re-checks the registry).
 struct EligibleState {
     set: CandidateSet,
-    /// cooldown_until value -> learners parked until that round. Entries can
-    /// go stale when a cooldown is re-set; `refresh` re-checks the registry.
-    buckets: BTreeMap<usize, Vec<usize>>,
-    /// busy_until (as order-preserving f64 bits) -> learners busy until that
-    /// time. The sync engines have no per-task release event, so busy
-    /// expiry is bucket-driven; stale entries are harmless (refresh).
-    busy_buckets: BTreeMap<u64, Vec<usize>>,
+    /// One bucket pair per shard, aligned with `set`'s shard layout.
+    buckets: Vec<ShardBuckets>,
+    /// Ids per shard (the routing key for bucket pushes).
+    shard_size: usize,
 }
 
 /// Insert into the eligible set, forwarding the delta to the selector.
@@ -256,23 +267,31 @@ impl Population {
     /// index + selectable set (the only O(n) pass of an incremental run).
     /// Every resulting set transition is forwarded to `sel`'s
     /// `on_eligible`/`on_ineligible` hooks.
+    ///
+    /// Steady-state syncs run the **two-phase sharded pass** (see
+    /// [`sharded`]): every shard drains its own flips and bucket expiries in
+    /// parallel on the worker pool, then the transitions are forwarded to
+    /// the selector hooks serially in fixed shard-major order — results
+    /// byte-identical for any shard count and any worker count.
     pub fn sync_to(&mut self, round: usize, now: f64, sel: &mut dyn Selector) {
         if self.eligible.is_none() {
             self.index.advance_to(now, self.workers);
             let shards = self.registry.num_shards();
+            let set = CandidateSet::with_shards(self.registry.len(), shards);
             let mut elig = EligibleState {
-                set: CandidateSet::with_shards(self.registry.len(), shards),
-                buckets: BTreeMap::new(),
-                busy_buckets: BTreeMap::new(),
+                buckets: (0..set.num_shards()).map(|_| ShardBuckets::default()).collect(),
+                shard_size: set.shard_size(),
+                set,
             };
             for id in 0..self.registry.len() {
                 let cd = self.registry.cooldown_until(id);
                 let bz = self.registry.busy_until(id);
+                let buckets = &mut elig.buckets[id / elig.shard_size];
                 if cd > round {
-                    elig.buckets.entry(cd).or_default().push(id);
+                    buckets.cooldown.entry(cd).or_default().push(id);
                 }
                 if bz > now {
-                    elig.busy_buckets.entry(bz.to_bits()).or_default().push(id);
+                    buckets.busy.entry(bz.to_bits()).or_default().push(id);
                 }
                 if cd <= round && bz <= now && self.index.is_available(id) {
                     set_insert(&mut elig, sel, id);
@@ -281,33 +300,19 @@ impl Population {
             self.eligible = Some(elig);
             return;
         }
-        let flips = self.index.advance_to(now, self.workers);
+        let flips = self.index.advance_to_sharded(now, self.workers);
         let elig = self.eligible.as_mut().expect("checked above");
-        for (id, _) in flips {
-            refresh(elig, &self.index, &self.registry, id, round, now, sel);
-        }
-        loop {
-            let Some((&k, _)) = elig.buckets.first_key_value() else { break };
-            if k > round {
-                break;
-            }
-            let (_, ids) = elig.buckets.pop_first().expect("non-empty first key");
-            for id in ids {
-                refresh(elig, &self.index, &self.registry, id, round, now, sel);
-            }
-        }
-        // busy_until stored as order-preserving bits of a non-negative f64
-        let now_bits = now.to_bits();
-        loop {
-            let Some((&k, _)) = elig.busy_buckets.first_key_value() else { break };
-            if k > now_bits {
-                break;
-            }
-            let (_, ids) = elig.busy_buckets.pop_first().expect("non-empty first key");
-            for id in ids {
-                refresh(elig, &self.index, &self.registry, id, round, now, sel);
-            }
-        }
+        let transitions = sharded::sync_shards_parallel(
+            &mut elig.set,
+            &mut elig.buckets,
+            &flips,
+            &self.index,
+            &self.registry,
+            round,
+            now,
+            self.workers,
+        );
+        sharded::forward_transitions(&transitions, sel);
     }
 
     /// The selectable set (`sync_to` first). Indexed selectors draw from
@@ -335,7 +340,7 @@ impl Population {
     pub fn mark_busy(&mut self, id: usize, until: f64, sel: &mut dyn Selector) {
         self.registry.set_busy_until(id, until);
         if let Some(elig) = self.eligible.as_mut() {
-            elig.busy_buckets.entry(until.to_bits()).or_default().push(id);
+            elig.buckets[id / elig.shard_size].busy.entry(until.to_bits()).or_default().push(id);
             set_remove(elig, sel, id);
         }
     }
@@ -354,7 +359,7 @@ impl Population {
     pub fn begin_cooldown(&mut self, id: usize, until: usize, sel: &mut dyn Selector) {
         self.registry.set_cooldown_until(id, until);
         if let Some(elig) = self.eligible.as_mut() {
-            elig.buckets.entry(until).or_default().push(id);
+            elig.buckets[id / elig.shard_size].cooldown.entry(until).or_default().push(id);
             set_remove(elig, sel, id);
         }
     }

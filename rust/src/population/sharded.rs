@@ -1,0 +1,237 @@
+//! Sharded coordination: the K-way partition of the coordination hot path.
+//!
+//! The registry, the availability index, and the eligible set all split the
+//! id space into the same K contiguous ranges (one [`ShardPlan`]). Each
+//! coordinator shard owns every per-learner transition inside its range —
+//! availability flips (its own event kernel), cooldown expiries, and busy
+//! expiries — so [`crate::population::Population::sync_to`] becomes a
+//! **two-phase** pass:
+//!
+//! 1. **parallel delta pass** ([`sync_shards_parallel`]): every shard, on
+//!    the worker pool, drains its due transitions and applies its
+//!    eligibility predicate through a disjoint mutable view of the eligible
+//!    [`CandidateSet`], emitting the `(id, now_eligible)` transitions it
+//!    caused;
+//! 2. **serial hook pass** ([`forward_transitions`]): the per-shard
+//!    transition lists are forwarded to the selector's
+//!    `on_eligible`/`on_ineligible` hooks in **fixed shard-major order**.
+//!
+//! The contract that makes this sound is the same shard-invariance
+//! discipline [`CandidateSet`] and [`crate::selection::index::ScoreIndex`]
+//! already obey: selector hook state is a pure function of each id's final
+//! membership (never of cross-id hook order), so reordering transitions
+//! *across* shards cannot change results, while each id's transitions keep
+//! their relative order because an id lives in exactly one shard. K = 1 is
+//! the flat path; `run_experiment` output is byte-identical for any K
+//! (`tests/coord_shard_props.rs`, the fuzzer's coord-shards axis, and the
+//! CI record/replay `cmp` pin this).
+
+use std::collections::BTreeMap;
+
+use crate::selection::Selector;
+use crate::util::threadpool;
+
+use super::avail_index::AvailabilityIndex;
+use super::candidate_set::{CandidateSet, ShardViewMut};
+use super::registry::Registry;
+
+/// The shared contiguous id-range partition: `K` shards of `shard_size`
+/// ids each (the last may be shorter). Mirrors the layout formula of
+/// [`CandidateSet::with_shards`] and [`Registry::eager`], so one plan
+/// addresses every sharded structure consistently.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    n: usize,
+    shard_size: usize,
+    count: usize,
+}
+
+impl ShardPlan {
+    /// Partition ids `0..n` into (at most) `num_shards` contiguous ranges.
+    pub fn new(n: usize, num_shards: usize) -> ShardPlan {
+        let shard_size = n.div_ceil(num_shards.max(1)).max(1);
+        let count = n.div_ceil(shard_size).max(1);
+        ShardPlan { n, shard_size, count }
+    }
+
+    /// Effective number of shards (after clamping to the population size).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Ids per shard (the last shard may cover fewer).
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// The shard owning `id`.
+    pub fn owner(&self, id: usize) -> usize {
+        id / self.shard_size
+    }
+
+    /// The id range shard `s` owns.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        let lo = s * self.shard_size;
+        lo..(lo + self.shard_size).min(self.n)
+    }
+}
+
+/// One shard's expiry schedules: the re-admission buckets this shard owns
+/// for its id range. Entries can go stale when a cooldown/busy deadline is
+/// re-set; the drain re-checks the registry, so stale entries are harmless.
+#[derive(Default)]
+pub(crate) struct ShardBuckets {
+    /// cooldown_until value -> learners parked until that round.
+    pub(crate) cooldown: BTreeMap<usize, Vec<usize>>,
+    /// busy_until (as order-preserving f64 bits) -> learners busy until
+    /// that time.
+    pub(crate) busy: BTreeMap<u64, Vec<usize>>,
+}
+
+/// One shard's sync outcome: the eligible-set transitions it applied, in
+/// the order it applied them.
+pub(crate) type ShardTransitions = Vec<(usize, bool)>;
+
+/// Drain one shard's due work — availability flips, then cooldown expiries
+/// (ascending round key), then busy expiries (ascending time key), the same
+/// intra-shard order the flat path used globally — re-evaluating the
+/// eligibility predicate per touched id against this shard's disjoint
+/// membership view. Pure per-shard: reads only the touched ids' own state.
+fn sync_shard(
+    view: &mut ShardViewMut<'_>,
+    buckets: &mut ShardBuckets,
+    flips: &[(usize, bool)],
+    index: &AvailabilityIndex,
+    registry: &Registry,
+    round: usize,
+    now: f64,
+) -> ShardTransitions {
+    let mut out = Vec::new();
+    let mut refresh = |view: &mut ShardViewMut<'_>, out: &mut ShardTransitions, id: usize| {
+        let ok = index.is_available(id)
+            && registry.busy_until(id) <= now
+            && registry.cooldown_until(id) <= round;
+        let changed = if ok { view.insert(id) } else { view.remove(id) };
+        if changed {
+            out.push((id, ok));
+        }
+    };
+    for &(id, _) in flips {
+        refresh(view, &mut out, id);
+    }
+    loop {
+        let Some((&k, _)) = buckets.cooldown.first_key_value() else { break };
+        if k > round {
+            break;
+        }
+        let (_, ids) = buckets.cooldown.pop_first().expect("non-empty first key");
+        for id in ids {
+            refresh(view, &mut out, id);
+        }
+    }
+    // busy_until stored as order-preserving bits of a non-negative f64
+    let now_bits = now.to_bits();
+    loop {
+        let Some((&k, _)) = buckets.busy.first_key_value() else { break };
+        if k > now_bits {
+            break;
+        }
+        let (_, ids) = buckets.busy.pop_first().expect("non-empty first key");
+        for id in ids {
+            refresh(view, &mut out, id);
+        }
+    }
+    out
+}
+
+/// Phase 1 of the sharded `sync_to`: run every shard's delta pass in
+/// parallel on the worker pool. `flips` is the per-shard flip grouping from
+/// [`AvailabilityIndex::advance_to_sharded`] (empty under AllAvail). Each
+/// shard mutates only its own bucket state and its disjoint view of the
+/// eligible set; the result (per-shard transition lists, shard-major) is
+/// deterministic for any worker count.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sync_shards_parallel(
+    set: &mut CandidateSet,
+    buckets: &mut [ShardBuckets],
+    flips: &[Vec<(usize, bool)>],
+    index: &AvailabilityIndex,
+    registry: &Registry,
+    round: usize,
+    now: f64,
+    workers: usize,
+) -> Vec<ShardTransitions> {
+    let views = set.shard_views_mut();
+    debug_assert_eq!(views.len(), buckets.len(), "bucket/shard layout mismatch");
+    let jobs: Vec<_> = views
+        .into_iter()
+        .zip(buckets.iter_mut())
+        .enumerate()
+        .map(|(si, (mut view, shard_buckets))| {
+            let shard_flips: &[(usize, bool)] =
+                flips.get(si).map(|v| v.as_slice()).unwrap_or(&[]);
+            move || {
+                sync_shard(&mut view, shard_buckets, shard_flips, index, registry, round, now)
+            }
+        })
+        .collect();
+    let transitions = threadpool::run_parallel(workers, jobs);
+    set.rebuild_len();
+    transitions
+}
+
+/// Phase 2 of the sharded `sync_to`: forward every transition to the
+/// selector hooks in fixed shard-major order (shards ascending, each
+/// shard's transitions in the order it applied them).
+pub(crate) fn forward_transitions(transitions: &[ShardTransitions], sel: &mut dyn Selector) {
+    for group in transitions {
+        for &(id, on) in group {
+            if on {
+                sel.on_eligible(id);
+            } else {
+                sel.on_ineligible(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_the_id_space() {
+        let plan = ShardPlan::new(100, 7);
+        assert_eq!(plan.shard_size(), 15);
+        assert_eq!(plan.count(), 7);
+        let mut covered = 0usize;
+        for s in 0..plan.count() {
+            let r = plan.range(s);
+            for id in r.clone() {
+                assert_eq!(plan.owner(id), s, "id {id}");
+            }
+            covered += r.len();
+        }
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn plan_clamps_to_population_size() {
+        let plan = ShardPlan::new(3, 16);
+        assert_eq!(plan.count(), 3);
+        assert_eq!(plan.shard_size(), 1);
+        let one = ShardPlan::new(0, 4);
+        assert_eq!(one.count(), 1);
+        assert!(one.range(0).is_empty());
+    }
+
+    #[test]
+    fn plan_matches_candidate_set_layout() {
+        for (n, k) in [(1000usize, 1usize), (1000, 8), (1000, 13), (17, 4), (64, 64)] {
+            let plan = ShardPlan::new(n, k);
+            let set = CandidateSet::with_shards(n, k);
+            assert_eq!(plan.count(), set.num_shards(), "n={n} k={k}");
+            assert_eq!(plan.shard_size(), set.shard_size(), "n={n} k={k}");
+        }
+    }
+}

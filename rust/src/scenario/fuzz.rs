@@ -307,6 +307,21 @@ fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
             ));
         }
     }
+    // coordinator-shard axis: partitioning the registry + availability
+    // index into K id-range shards (advanced in parallel, merged
+    // shard-major) must never perturb the bytes at any K — the
+    // K-invariance contract behind `--coord-shards`.
+    for k in [2usize, 7] {
+        let mut c = cfg.clone();
+        c.coord_shards = k;
+        let (rk, _) = run_engine(&c, 4, 1)?;
+        if rk.to_json().to_string() != j1 {
+            return Err(format!(
+                "coord-shards {k} output diverged (shard partition/merge broke \
+                 byte-determinism)"
+            ));
+        }
+    }
     // engine-vs-replay differential: a logged run must stay byte-identical
     // to the unlogged run (logging only observes), its log must decode
     // cleanly, and the replay oracle must re-derive the exact same JSON
@@ -386,6 +401,7 @@ pub fn shrink_transforms() -> Vec<Box<dyn Fn(&ExpConfig) -> ExpConfig>> {
         with(|c| c.selector = "random".into()),
         with(|c| c.apt = false),
         with(|c| c.oracle = false),
+        with(|c| c.coord_shards = 0),
         with(|c| {
             c.use_saa = false;
             c.staleness_threshold = None;

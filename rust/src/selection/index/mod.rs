@@ -232,6 +232,66 @@ impl ScoreIndex {
         }
     }
 
+    /// The top `k` entries **of one shard** by score descending, ascending
+    /// id within a score tie — [`ScoreIndex::top_k_desc`] restricted to
+    /// shard `si`'s contiguous id range. This is the per-shard level walk
+    /// the sharded coordination layer fans out: each shard's walk touches
+    /// only its own treap, so all K walks can run independently and feed
+    /// [`ScoreIndex::top_k_desc_merged`].
+    pub fn shard_top_k_desc(&self, si: usize, k: usize, mut f: impl FnMut(usize, f64)) {
+        let sh = &self.shards[si];
+        let mut taken = 0usize;
+        let mut bound: Option<f64> = None;
+        while taken < k {
+            let Some(p) = sh.max_key_lt(bound) else { break };
+            sh.for_eq(p, &mut |id| {
+                f(id, p);
+                taken += 1;
+                taken < k
+            });
+            bound = Some(p);
+        }
+    }
+
+    /// The top `k` entries via the K-way merge of the per-shard walks:
+    /// every shard contributes its own top-k ([`ScoreIndex::shard_top_k_desc`]),
+    /// and the lists are merged on `(score desc, shard asc)` — shard index
+    /// breaks score ties because shards are ascending id ranges, so the
+    /// merged stream is **exactly** the global (score desc, id asc) order
+    /// [`ScoreIndex::top_k_desc`] produces, element for element.
+    pub fn top_k_desc_merged(&self, k: usize, mut f: impl FnMut(usize, f64)) {
+        let mut lists: Vec<Vec<(usize, f64)>> = Vec::with_capacity(self.shards.len());
+        for si in 0..self.shards.len() {
+            let mut v = Vec::new();
+            self.shard_top_k_desc(si, k, |id, s| v.push((id, s)));
+            lists.push(v);
+        }
+        let mut cursors = vec![0usize; lists.len()];
+        for _ in 0..k {
+            let mut best: Option<usize> = None;
+            for (si, list) in lists.iter().enumerate() {
+                let Some(&(_, s)) = list.get(cursors[si]) else { continue };
+                best = Some(match best {
+                    None => si,
+                    Some(b) => {
+                        let bs = lists[b][cursors[b]].1;
+                        // strict Greater keeps the earlier shard on ties —
+                        // earlier shard == smaller ids == the flat order
+                        if s.total_cmp(&bs) == std::cmp::Ordering::Greater {
+                            si
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            let Some(b) = best else { break };
+            let (id, s) = lists[b][cursors[b]];
+            cursors[b] += 1;
+            f(id, s);
+        }
+    }
+
     /// Visit every entry in ascending `(score, id)` order (tests, rebuilds).
     pub fn for_each_asc(&self, mut f: impl FnMut(usize, f64)) {
         let mut bound: Option<f64> = None;
@@ -501,6 +561,45 @@ mod tests {
                 assert_eq!(a.count_lt(p), b.count_lt(p), "{shards} shards");
                 assert_eq!(a.level_len(p), b.level_len(p), "{shards} shards");
             }
+        }
+    }
+
+    #[test]
+    fn merged_top_k_equals_flat_top_k() {
+        // the K-way merge of per-shard walks must reproduce the flat
+        // global walk element-for-element, for any shard layout and k
+        let entries: Vec<(usize, f64)> =
+            (0..180).map(|i| (i, ((i * 17) % 9) as f64 * 0.5)).collect();
+        for shards in [1usize, 2, 5, 11, 64] {
+            let mut idx = ScoreIndex::with_shards(180, shards);
+            for &(id, s) in &entries {
+                idx.insert(id, s);
+            }
+            for k in [0usize, 1, 7, 40, 200] {
+                let mut flat = Vec::new();
+                let mut merged = Vec::new();
+                idx.top_k_desc(k, |id, s| flat.push((id, s)));
+                idx.top_k_desc_merged(k, |id, s| merged.push((id, s)));
+                assert_eq!(flat, merged, "{shards} shards, k={k}");
+            }
+        }
+        // per-shard walks are the flat walk filtered to the shard's range
+        let idx = {
+            let mut idx = ScoreIndex::with_shards(60, 4);
+            for &(id, s) in entries.iter().take(60) {
+                idx.insert(id, s);
+            }
+            idx
+        };
+        let mut all = Vec::new();
+        idx.top_k_desc(60, |id, s| all.push((id, s)));
+        for si in 0..idx.num_shards() {
+            let (lo, hi) = (si * 15, (si + 1) * 15);
+            let want: Vec<(usize, f64)> =
+                all.iter().copied().filter(|&(id, _)| id >= lo && id < hi).collect();
+            let mut got = Vec::new();
+            idx.shard_top_k_desc(si, 60, |id, s| got.push((id, s)));
+            assert_eq!(got, want, "shard {si}");
         }
     }
 

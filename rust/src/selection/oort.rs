@@ -295,7 +295,10 @@ impl Selector for OortSelector {
         picked.extend(ix.unexplored.sample_k(rng, n_explore));
 
         let n_exploit = k - picked.len();
-        ix.tree.top_k_desc(n_exploit, |id, u| {
+        // single-pass per-shard level walks + exact K-way merge: same
+        // (utility desc, id asc) stream as `top_k_desc`, element for
+        // element, without re-scanning every shard per score level
+        ix.tree.top_k_desc_merged(n_exploit, |id, u| {
             self.window_util += u;
             picked.push(id);
         });

@@ -42,6 +42,10 @@ pub struct GridSpec {
     pub modes: Vec<RoundMode>,
     pub avails: Vec<AvailMode>,
     pub partitions: Vec<PartitionScheme>,
+    /// Coordinator shard counts (perf axis: results are byte-identical for
+    /// any K, so multi-K grids measure coordination cost, never accuracy).
+    /// Cells carry a `-k{K}` label suffix only when this axis has > 1 entry.
+    pub coord_shards: Vec<usize>,
     pub seeds: Vec<u64>,
 }
 
@@ -54,13 +58,18 @@ impl GridSpec {
             modes: vec![base.mode],
             avails: vec![base.avail],
             partitions: vec![base.partition],
+            coord_shards: vec![base.coord_shards],
             seeds: vec![base.seed],
             base,
         }
     }
 
     pub fn cells(&self) -> usize {
-        self.selectors.len() * self.modes.len() * self.avails.len() * self.partitions.len()
+        self.selectors.len()
+            * self.modes.len()
+            * self.avails.len()
+            * self.partitions.len()
+            * self.coord_shards.len().max(1)
     }
 
     pub fn total_runs(&self) -> usize {
@@ -68,49 +77,65 @@ impl GridSpec {
     }
 
     /// Expand into per-cell config groups, cell-major / seed-minor, in a
-    /// fixed axis order (selector, mode, avail, partition) so reports are
-    /// reproducible run-to-run.
+    /// fixed axis order (selector, mode, avail, partition, coord-shards) so
+    /// reports are reproducible run-to-run.
     pub fn expand(&self) -> Vec<GridCell> {
+        // a legacy spec constructed with an empty coord axis behaves like
+        // the single-point axis at the base value
+        let shard_axis: Vec<usize> = if self.coord_shards.is_empty() {
+            vec![self.base.coord_shards]
+        } else {
+            self.coord_shards.clone()
+        };
         let mut cells = Vec::with_capacity(self.cells());
         for sel in &self.selectors {
             for mode in &self.modes {
                 for avail in &self.avails {
                     for part in &self.partitions {
-                        let mut label = format!(
-                            "{sel}-{}-{}-{}",
-                            mode_label(mode),
-                            avail_label(*avail),
-                            part.label()
-                        );
-                        // fault-injected grids carry the fault mix in the
-                        // cell key, so faulty and clean sweeps never collide
-                        // in a report
-                        if self.base.faults.is_active() {
-                            label = format!("{label}-{}", self.base.faults.label());
-                        }
-                        let mut runs = Vec::with_capacity(self.seeds.len());
-                        for &seed in &self.seeds {
-                            let mut c = self.base.clone();
-                            if sel == "relay" {
-                                c = c.relay();
-                            } else {
-                                c.selector = sel.clone();
+                        for &shards in &shard_axis {
+                            let mut label = format!(
+                                "{sel}-{}-{}-{}",
+                                mode_label(mode),
+                                avail_label(*avail),
+                                part.label()
+                            );
+                            // a multi-K grid is a coordination-perf sweep:
+                            // keep the K in the cell key (single-K grids
+                            // keep their pre-axis labels)
+                            if shard_axis.len() > 1 {
+                                label = format!("{label}-k{shards}");
                             }
-                            c.mode = *mode;
-                            c.avail = *avail;
-                            c.partition = *part;
-                            c.seed = seed;
-                            c.label = format!("{label}/s{seed}");
-                            runs.push(c);
+                            // fault-injected grids carry the fault mix in the
+                            // cell key, so faulty and clean sweeps never collide
+                            // in a report
+                            if self.base.faults.is_active() {
+                                label = format!("{label}-{}", self.base.faults.label());
+                            }
+                            let mut runs = Vec::with_capacity(self.seeds.len());
+                            for &seed in &self.seeds {
+                                let mut c = self.base.clone();
+                                if sel == "relay" {
+                                    c = c.relay();
+                                } else {
+                                    c.selector = sel.clone();
+                                }
+                                c.mode = *mode;
+                                c.avail = *avail;
+                                c.partition = *part;
+                                c.coord_shards = shards;
+                                c.seed = seed;
+                                c.label = format!("{label}/s{seed}");
+                                runs.push(c);
+                            }
+                            cells.push(GridCell {
+                                label,
+                                selector: sel.clone(),
+                                mode: mode_label(mode),
+                                avail: avail_label(*avail).to_string(),
+                                partition: part.label(),
+                                runs,
+                            });
                         }
-                        cells.push(GridCell {
-                            label,
-                            selector: sel.clone(),
-                            mode: mode_label(mode),
-                            avail: avail_label(*avail).to_string(),
-                            partition: part.label(),
-                            runs,
-                        });
                     }
                 }
             }
@@ -362,6 +387,7 @@ mod tests {
             ],
             avails: vec![AvailMode::AllAvail],
             partitions: vec![PartitionScheme::UniformIid],
+            coord_shards: vec![0],
             seeds: vec![1, 2, 3],
             base: base(),
         };
@@ -411,6 +437,28 @@ mod tests {
         // and a clean grid stays exactly as before
         let clean = GridSpec::new(base()).expand();
         assert_eq!(clean[0].label, "random-oc1.3-dyn-iid");
+    }
+
+    #[test]
+    fn coord_shards_axis_expands_and_labels() {
+        let mut spec = GridSpec::new(base());
+        spec.coord_shards = vec![1, 8];
+        let cells = spec.expand();
+        assert_eq!(spec.cells(), 2);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].label, "random-oc1.3-dyn-iid-k1");
+        assert_eq!(cells[1].label, "random-oc1.3-dyn-iid-k8");
+        assert_eq!(cells[0].runs[0].coord_shards, 1);
+        assert_eq!(cells[1].runs[0].coord_shards, 8);
+        // a single-point axis keeps the pre-axis labels and an empty axis
+        // degrades to the base value
+        let single = GridSpec::new(base()).expand();
+        assert_eq!(single[0].label, "random-oc1.3-dyn-iid");
+        let mut legacy = GridSpec::new(base());
+        legacy.coord_shards = Vec::new();
+        let cells = legacy.expand();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].runs[0].coord_shards, legacy.base.coord_shards);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! PR 9 battery: the coordinator shard count must be invisible in the
+//! results. Every cell — sync OC/DL, buffered-async, fault-injected
+//! presets — must produce byte-identical `ExperimentResult` JSON at any
+//! `coord_shards` K (K=1 is the flat path), with the parallel per-shard
+//! sync pass enabled (workers > 1), match the frozen flat reference
+//! engine where it applies, and keep the run log replay oracle exact.
+
+use std::sync::Arc;
+
+use relay::config::{AvailMode, ExpConfig, RoundMode};
+use relay::coordinator::{run_experiment, run_experiment_logged, run_reference_experiment};
+use relay::runlog::{decode_segments, replay, MemSink};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// Straggler-rich DynAvail base (mirrors the golden-baseline cells): small
+/// enough to run each K in well under a second, rich enough to hit
+/// selection, staleness, cooldown churn, and busy-bucket expiry.
+fn cell_cfg(selector: &str, mode: RoundMode) -> ExpConfig {
+    ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 14,
+        rounds: 5,
+        target_participants: 4,
+        mode,
+        avail: AvailMode::DynAvail,
+        selector: selector.into(),
+        use_saa: true,
+        staleness_threshold: Some(3),
+        mean_samples: 8,
+        test_per_class: 4,
+        eval_every: 2,
+        cooldown_rounds: 1,
+        min_round_duration: 0.0,
+        lr: 0.1,
+        ..Default::default()
+    }
+}
+
+/// Run `cfg` at the given coordinator shard count on a multi-thread worker
+/// pool, so the per-shard sync pass genuinely runs in parallel.
+fn run_at_k(cfg: &ExpConfig, coord_shards: usize, ex: Arc<dyn Executor>) -> String {
+    let mut c = cfg.clone();
+    c.workers = 4;
+    c.train_workers = 1;
+    c.coord_shards = coord_shards;
+    run_experiment(c, ex)
+        .unwrap_or_else(|e| panic!("cell '{}' @ K={coord_shards} failed: {e:#}", cfg.label))
+        .to_json()
+        .to_string()
+}
+
+/// Sync and async cells across every round mode and selector: K in
+/// {1, 2, 7, 16} must agree byte-for-byte, and the sync cells must also
+/// equal the frozen reference engine (which stays flat, the oracle).
+#[test]
+fn cells_are_byte_identical_across_coord_shard_counts() {
+    let modes = [
+        ("oc", RoundMode::OverCommit { factor: 1.3 }),
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ];
+    for selector in ["random", "oort", "safa"] {
+        for (mode_name, mode) in modes.iter() {
+            let mut cfg = cell_cfg(selector, *mode);
+            cfg.label = format!("cs-{selector}-{mode_name}");
+            let flat = run_at_k(&cfg, 1, exec());
+            for k in [2usize, 7, 16] {
+                assert_eq!(
+                    run_at_k(&cfg, k, exec()),
+                    flat,
+                    "cell '{}': coord_shards {k} diverged from the flat path",
+                    cfg.label
+                );
+            }
+            if !matches!(mode, RoundMode::Async { .. }) {
+                let mut rc = cfg.clone();
+                rc.workers = 4;
+                rc.train_workers = 1;
+                rc.coord_shards = 7;
+                let reference = run_reference_experiment(rc, exec())
+                    .unwrap_or_else(|e| panic!("reference '{}' failed: {e:#}", cfg.label));
+                assert_eq!(
+                    reference.to_json().to_string(),
+                    flat,
+                    "cell '{}': frozen flat reference diverged from the sharded engine",
+                    cfg.label
+                );
+            }
+        }
+    }
+}
+
+/// The priority/IPS selector exercises the hook-maintained per-bucket
+/// ScoreIndex hardest (every eligible-set delta re-keys a tree entry):
+/// shard-major hook forwarding must leave its trees byte-identical too.
+#[test]
+fn priority_selector_cells_are_byte_identical_across_k() {
+    for (mode_name, mode) in [
+        ("dl", RoundMode::Deadline { deadline: 2.0 }),
+        ("async", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) }),
+    ] {
+        let mut cfg = cell_cfg("priority", mode);
+        cfg.label = format!("cs-priority-{mode_name}");
+        let flat = run_at_k(&cfg, 1, exec());
+        for k in [2usize, 7, 16] {
+            assert_eq!(
+                run_at_k(&cfg, k, exec()),
+                flat,
+                "cell '{}': coord_shards {k} diverged from the flat path",
+                cfg.label
+            );
+        }
+    }
+}
+
+/// Fault-injected scenario presets (crashes, corruption, transit delays,
+/// duplicates — sync and async) shrunk to test scale: sharding must stay
+/// invisible on the failure paths too (quarantine cooldowns, crash churn).
+#[test]
+fn fault_injected_presets_are_byte_identical_across_k() {
+    for name in ["crash-storm", "stale-storm", "byzantine-lite"] {
+        let preset = relay::scenario::by_name(name)
+            .unwrap_or_else(|| panic!("preset '{name}' not registered"));
+        let mut cfg = preset.cfg;
+        cfg.total_learners = 24;
+        cfg.rounds = 6;
+        cfg.eval_every = 3;
+        let flat = run_at_k(&cfg, 1, exec());
+        for k in [2usize, 7, 16] {
+            assert_eq!(
+                run_at_k(&cfg, k, exec()),
+                flat,
+                "preset '{name}': coord_shards {k} diverged from the flat path"
+            );
+        }
+    }
+}
+
+/// A logged run at K=7 must leave the bytes untouched, decode cleanly, and
+/// replay to the exact flat JSON — i.e. sharding perturbs neither the
+/// result nor the event stream it is derived from.
+#[test]
+fn runlog_replay_is_byte_identical_at_k_seven() {
+    let mut cfg = cell_cfg("priority", RoundMode::Async { buffer_k: 3, max_staleness: Some(4) });
+    cfg.label = "cs-runlog-async".into();
+    let flat = run_at_k(&cfg, 1, exec());
+
+    let mut lc = cfg.clone();
+    lc.workers = 4;
+    lc.train_workers = 1;
+    lc.coord_shards = 7;
+    let sink = MemSink::default();
+    let logged = run_experiment_logged(lc, exec(), Box::new(sink.clone()))
+        .expect("logged K=7 run failed");
+    assert_eq!(
+        logged.to_json().to_string(),
+        flat,
+        "enabling the run log at K=7 perturbed the result bytes"
+    );
+    let (events, stats) = decode_segments(&sink.segments());
+    assert!(stats.clean, "K=7 run log did not decode cleanly: {:?}", stats.note);
+    let replayed = replay(&events).expect("K=7 replay failed");
+    assert_eq!(
+        replayed.to_json().to_string(),
+        flat,
+        "K=7 replay oracle diverged from the flat engine output"
+    );
+}
+
+/// K=0 (autodetect) must behave exactly like some explicit K — i.e. the
+/// autodetect only picks a K, it never changes behavior.
+#[test]
+fn autodetect_is_equivalent_to_explicit_k() {
+    let mut cfg = cell_cfg("oort", RoundMode::OverCommit { factor: 1.3 });
+    cfg.label = "cs-autodetect".into();
+    let flat = run_at_k(&cfg, 1, exec());
+    assert_eq!(
+        run_at_k(&cfg, 0, exec()),
+        flat,
+        "coord_shards autodetect diverged from the flat path"
+    );
+}

@@ -74,6 +74,7 @@ fn sync_grid_results_all_parse() {
         ],
         avails: vec![AvailMode::AllAvail, AvailMode::DynAvail],
         partitions: vec![PartitionScheme::UniformIid],
+        coord_shards: vec![0],
         seeds: vec![1, 1001],
         base,
     };
@@ -102,6 +103,7 @@ fn async_grid_results_all_parse() {
         modes: vec![RoundMode::Async { buffer_k: 2, max_staleness: Some(3) }],
         avails: vec![AvailMode::DynAvail],
         partitions: vec![PartitionScheme::UniformIid],
+        coord_shards: vec![0],
         seeds: vec![7, 1007],
         base,
     };

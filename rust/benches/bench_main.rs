@@ -366,6 +366,7 @@ fn bench_scale_path() {
         avails: vec![AvailMode::AllAvail],
         partitions: vec![PartitionScheme::UniformIid],
         coord_shards: vec![0],
+        jobs: vec![1],
         seeds: vec![1, 1001],
         base: ExpConfig {
             variant: "tiny".into(),

@@ -7,7 +7,7 @@ use crate::aggregation::scaling::ScalingRule;
 use crate::data::partition::PartitionScheme;
 use crate::learners::HardwareScenario;
 use crate::scenario::faults::FaultConfig;
-use crate::util::json::{num, obj, Json};
+use crate::util::json::{arr, num, obj, Json};
 
 /// Round-termination regime (paper §5.1 "Experimental Scenarios", plus the
 /// buffered-asynchronous regime the SAA idea generalizes to).
@@ -114,6 +114,28 @@ pub struct ExpConfig {
     /// Deterministic fault injection (all-off by default); see
     /// [`crate::scenario::faults`].
     pub faults: FaultConfig,
+    /// Number of concurrent jobs sharing one device fleet. 1 = the classic
+    /// single-job engines; N > 1 routes the run through
+    /// [`crate::jobs::run_jobset`], where every job has its own model,
+    /// selector, round mode, and target count, all drawing from one shared
+    /// registry/availability index (a device busy on job A is ineligible
+    /// for job B).
+    pub jobs: usize,
+    /// Cross-job arbitration policy: "fair" (least device-seconds spent
+    /// claims first) | "priority" (strict `job_priorities` order).
+    pub job_policy: String,
+    /// Per-job priorities for the "priority" policy (higher claims first).
+    /// Empty = all equal; otherwise one entry per job.
+    pub job_priorities: Vec<u64>,
+    /// Per-job selector overrides. Empty = every job inherits `selector`.
+    pub job_selectors: Vec<String>,
+    /// Per-job round-mode overrides as compact specs ("oc", "oc1.5",
+    /// "dl60", "async4"; bare kinds inherit the base `mode`'s parameters).
+    /// Empty = every job inherits `mode`.
+    pub job_modes: Vec<String>,
+    /// Per-job target-participant overrides. Empty = every job inherits
+    /// `target_participants`.
+    pub job_targets: Vec<usize>,
 }
 
 impl Default for ExpConfig {
@@ -149,6 +171,12 @@ impl Default for ExpConfig {
             train_workers: 0, // 0 = inherit `workers`
             coord_shards: 0,  // 0 = autodetect
             faults: FaultConfig::default(),
+            jobs: 1,
+            job_policy: "fair".into(),
+            job_priorities: Vec::new(),
+            job_selectors: Vec::new(),
+            job_modes: Vec::new(),
+            job_targets: Vec::new(),
         }
     }
 }
@@ -174,6 +202,13 @@ impl ExpConfig {
         }
         if self.target_participants == 0 {
             return Err(anyhow!("target_participants must be >= 1"));
+        }
+        if self.target_participants > self.total_learners {
+            return Err(anyhow!(
+                "target_participants ({}) exceeds total_learners ({})",
+                self.target_participants,
+                self.total_learners
+            ));
         }
         if !(0.0..=1.0).contains(&self.safa_target_ratio) {
             return Err(anyhow!("safa_target_ratio must be in [0,1]"));
@@ -204,6 +239,68 @@ impl ExpConfig {
         }
         if crate::aggregation::by_name(&self.server_opt).is_none() {
             return Err(anyhow!("unknown server optimizer '{}'", self.server_opt));
+        }
+        // parallelism knobs are machine-sized, not population-sized: any
+        // value relative to the learner count is legal (shard counts larger
+        // than the population are deliberately exercised by
+        // tests/coord_shard_props.rs), but a value beyond any plausible
+        // core count is a typo, not a request
+        const MAX_PARALLELISM: usize = 4096;
+        if self.workers > MAX_PARALLELISM {
+            return Err(anyhow!("workers ({}) > {MAX_PARALLELISM} is absurd", self.workers));
+        }
+        if self.train_workers > MAX_PARALLELISM {
+            return Err(anyhow!(
+                "train_workers ({}) > {MAX_PARALLELISM} is absurd",
+                self.train_workers
+            ));
+        }
+        if self.coord_shards > MAX_PARALLELISM {
+            return Err(anyhow!(
+                "coord_shards ({}) > {MAX_PARALLELISM} is absurd",
+                self.coord_shards
+            ));
+        }
+        if self.jobs == 0 || self.jobs > 64 {
+            return Err(anyhow!("jobs must be in 1..=64, got {}", self.jobs));
+        }
+        if !matches!(self.job_policy.as_str(), "fair" | "priority") {
+            return Err(anyhow!("unknown job_policy '{}' (fair|priority)", self.job_policy));
+        }
+        for (name, len) in [
+            ("job_priorities", self.job_priorities.len()),
+            ("job_selectors", self.job_selectors.len()),
+            ("job_modes", self.job_modes.len()),
+            ("job_targets", self.job_targets.len()),
+        ] {
+            if len != 0 && len != self.jobs {
+                return Err(anyhow!(
+                    "{name} must be empty or hold one entry per job ({len} != {})",
+                    self.jobs
+                ));
+            }
+        }
+        for s in &self.job_selectors {
+            if crate::selection::by_name(s).is_none() {
+                return Err(anyhow!("unknown job selector '{s}'"));
+            }
+        }
+        for m in &self.job_modes {
+            crate::jobs::parse_job_mode(m, &self.mode)?;
+        }
+        for (i, &t) in self.job_targets.iter().enumerate() {
+            if t == 0 || t > self.total_learners {
+                return Err(anyhow!(
+                    "job_targets[{i}] = {t} must be in 1..=total_learners ({})",
+                    self.total_learners
+                ));
+            }
+        }
+        if self.jobs > 1 && self.oracle {
+            return Err(anyhow!("the SAFA+O oracle is single-job only"));
+        }
+        if self.jobs > 1 && self.apt {
+            return Err(anyhow!("APT is single-job only (got jobs = {})", self.jobs));
         }
         Ok(())
     }
@@ -276,6 +373,18 @@ impl ExpConfig {
             ("train_workers", num(self.train_workers as f64)),
             ("coord_shards", num(self.coord_shards as f64)),
             ("faults", self.faults.to_json()),
+            ("jobs", num(self.jobs as f64)),
+            ("job_policy", Json::Str(self.job_policy.clone())),
+            (
+                "job_priorities",
+                arr(self.job_priorities.iter().map(|&p| num(p as f64))),
+            ),
+            (
+                "job_selectors",
+                arr(self.job_selectors.iter().map(|s| Json::Str(s.clone()))),
+            ),
+            ("job_modes", arr(self.job_modes.iter().map(|m| Json::Str(m.clone())))),
+            ("job_targets", arr(self.job_targets.iter().map(|&t| num(t as f64)))),
         ])
     }
 
@@ -287,6 +396,9 @@ impl ExpConfig {
         let gu = |k: &str, dflt: usize| j.get(k).and_then(|v| v.as_usize()).unwrap_or(dflt);
         let gf = |k: &str, dflt: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(dflt);
         let gb = |k: &str, dflt: bool| j.get(k).and_then(|v| v.as_bool()).unwrap_or(dflt);
+        let ga = |k: &str| -> Vec<Json> {
+            j.get(k).and_then(|v| v.as_arr()).map(|a| a.to_vec()).unwrap_or_default()
+        };
 
         let mode = match gs("mode", "oc").as_str() {
             "oc" => RoundMode::OverCommit { factor: gf("mode_param", 1.3) },
@@ -341,6 +453,24 @@ impl ExpConfig {
             train_workers: gu("train_workers", d.train_workers),
             coord_shards: gu("coord_shards", d.coord_shards),
             faults: j.get("faults").map(FaultConfig::from_json).unwrap_or_default(),
+            jobs: gu("jobs", d.jobs),
+            job_policy: gs("job_policy", &d.job_policy),
+            job_priorities: ga("job_priorities")
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .map(|p| p as u64)
+                .collect(),
+            job_selectors: ga("job_selectors")
+                .iter()
+                .filter_map(|v| v.as_str())
+                .map(str::to_string)
+                .collect(),
+            job_modes: ga("job_modes")
+                .iter()
+                .filter_map(|v| v.as_str())
+                .map(str::to_string)
+                .collect(),
+            job_targets: ga("job_targets").iter().filter_map(|v| v.as_usize()).collect(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -514,6 +644,116 @@ mod tests {
         let mut c = ExpConfig::default();
         c.mode = RoundMode::OverCommit { factor: 0.5 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_target_exceeding_population() {
+        let mut c = ExpConfig::default();
+        c.total_learners = 8;
+        c.target_participants = 9;
+        assert!(c.validate().is_err(), "target > population must be rejected");
+        c.target_participants = 8;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_non_finite_fault_delay() {
+        let mut c = ExpConfig::default();
+        c.faults.delay = 0.2;
+        c.faults.delay_secs = f64::NAN;
+        assert!(c.validate().is_err(), "NaN delay_secs must be rejected");
+        c.faults.delay_secs = f64::INFINITY;
+        assert!(c.validate().is_err(), "infinite delay_secs must be rejected");
+        c.faults.delay_secs = -1.0;
+        assert!(c.validate().is_err(), "negative delay_secs must be rejected");
+        c.faults.delay_secs = 120.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_absurd_parallelism_knobs() {
+        let cases: Vec<fn(&mut ExpConfig)> = vec![
+            |c| c.workers = 5000,
+            |c| c.train_workers = 1 << 20,
+            |c| c.coord_shards = 4097,
+        ];
+        for (i, set) in cases.into_iter().enumerate() {
+            let mut c = ExpConfig::default();
+            set(&mut c);
+            assert!(c.validate().is_err(), "absurd knob case {i} must be rejected");
+        }
+        // values above the learner count stay legal: the K-invariance suite
+        // deliberately runs K=16 coordinator shards on 14-learner cells
+        let mut c = ExpConfig::default();
+        c.total_learners = 14;
+        c.target_participants = 4;
+        c.coord_shards = 16;
+        c.workers = 64;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn job_fields_roundtrip_and_validate() {
+        let mut c = ExpConfig::default().with_label("mj");
+        c.jobs = 3;
+        c.job_policy = "priority".into();
+        c.job_priorities = vec![5, 1, 9];
+        c.job_selectors = vec!["random".into(), "oort".into(), "random".into()];
+        c.job_modes = vec!["oc".into(), "dl60".into(), "async4".into()];
+        c.job_targets = vec![4, 2, 6];
+        c.validate().unwrap();
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = ExpConfig::from_json(&j).unwrap();
+        assert_eq!(c2.jobs, 3);
+        assert_eq!(c2.job_policy, "priority");
+        assert_eq!(c2.job_priorities, vec![5, 1, 9]);
+        assert_eq!(c2.job_selectors, c.job_selectors);
+        assert_eq!(c2.job_modes, c.job_modes);
+        assert_eq!(c2.job_targets, vec![4, 2, 6]);
+    }
+
+    #[test]
+    fn configs_without_job_keys_load_single_job() {
+        // pre-multi-job config files (no job keys) load as the classic
+        // single-job shape, bit-for-bit
+        let parsed = Json::parse(r#"{"mode": "oc", "workers": 3}"#).unwrap();
+        let c = ExpConfig::from_json(&parsed).unwrap();
+        assert_eq!(c.jobs, 1);
+        assert_eq!(c.job_policy, "fair");
+        assert!(c.job_priorities.is_empty());
+        assert!(c.job_selectors.is_empty());
+        assert!(c.job_modes.is_empty());
+        assert!(c.job_targets.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_job_configs() {
+        let cases: Vec<fn(&mut ExpConfig)> = vec![
+            |c| c.jobs = 0,
+            |c| c.jobs = 65,
+            |c| c.job_policy = "market".into(),
+            |c| {
+                c.jobs = 2;
+                c.job_priorities = vec![1];
+            },
+            |c| c.job_selectors = vec!["nope".into()],
+            |c| c.job_modes = vec!["warp9".into()],
+            |c| c.job_targets = vec![0],
+            |c| c.job_targets = vec![c.total_learners + 1],
+            |c| {
+                c.jobs = 2;
+                c.oracle = true;
+            },
+            |c| {
+                c.jobs = 2;
+                c.apt = true;
+            },
+        ];
+        for (i, set) in cases.into_iter().enumerate() {
+            let mut c = ExpConfig::default();
+            set(&mut c);
+            assert!(c.validate().is_err(), "bad job config case {i} must be rejected");
+        }
     }
 
     #[test]

@@ -189,6 +189,13 @@ pub(crate) fn resolve_coord_shards(cfg: &ExpConfig) -> usize {
 impl Coordinator {
     pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<Coordinator> {
         cfg.validate()?;
+        if cfg.jobs > 1 {
+            return Err(anyhow!(
+                "config asks for {} concurrent jobs; the single-job coordinator cannot \
+                 run it — route through jobs::run_jobset",
+                cfg.jobs
+            ));
+        }
         let info = exec.variant().clone();
         if info.name != cfg.variant {
             return Err(anyhow!(

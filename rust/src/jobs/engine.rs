@@ -1,0 +1,940 @@
+//! The multi-job engine: one discrete-event kernel driving N jobs over one
+//! shared [`Population`]. Arbitration points (`Arbitrate` events) order the
+//! demanding jobs by policy and let each claim devices from the live
+//! eligible pool in that order — a claim is `Population::mark_busy_for`, so
+//! a device working for job A is invisible to job B until the task's busy
+//! interval expires.
+//!
+//! Determinism: everything time-ordered flows through the kernel (FIFO
+//! tie-breaking per event class), selection always uses the materialized
+//! candidate path with per-job RNG streams, and training runs inline at
+//! spawn — so results are byte-identical at any `--workers`,
+//! `--train-workers`, or `--coord-shards`, the same guarantee the
+//! single-job engines carry.
+//!
+//! Scope notes (documented simplifications vs the single-job engines):
+//! cross-round staleness-aware aggregation is not modeled — a sync job's
+//! stragglers are always wasted ([`FATE_DOOMED`]) — and only the crash and
+//! corrupt fault classes are injected (flap/delay/duplicate are
+//! selection-window and transit effects of the single-job round protocol).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::aggregation::saa::{merge, UpdateEntry};
+use crate::aggregation::ServerOptimizer;
+use crate::config::{AvailMode, ExpConfig, RoundMode};
+use crate::coordinator::engine::{evaluate_params, local_train, resolve_coord_shards};
+use crate::data::partition::{LearnerShard, Partitioner};
+use crate::data::synth::{Dataset, TestSet};
+use crate::learners::ProfilePool;
+use crate::population::{Population, Registry};
+use crate::runlog::{
+    LogSink, RunEvent, RunLogger, FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED,
+};
+use crate::runtime::Executor;
+use crate::selection::{SelectionCtx, Selector};
+use crate::sim::{Availability, EventClass, EventKernel};
+use crate::trace::{LazyTraceSet, TraceConfig};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+use super::{
+    mode_label, policy_by_name, resolve_jobs, ArbitrationPolicy, JobClaim, JobMeta, JobSpec,
+    MultiJobBook, MultiJobResult,
+};
+
+/// What a task carries between spawn and delivery.
+enum TaskBody {
+    /// Fault injection: corrupted at source — rejected on arrival.
+    Corrupt,
+    /// Trained update in flight (training ran inline at spawn against the
+    /// then-current job model; the model only mutates at merges, so this
+    /// equals what training at delivery time would have seen).
+    Fresh { delta: Vec<f32>, mean_loss: f64 },
+    /// Known-dead on schedule (sync straggler): multi-job rounds never
+    /// aggregate cross-round, so the SGD is skipped — the spend is still
+    /// real and is wasted at delivery.
+    Untrained,
+}
+
+struct TaskDelivery {
+    job: u32,
+    learner: usize,
+    /// Round (sync) or model version (async) the task was spawned in.
+    origin: usize,
+    duration: f64,
+    body: TaskBody,
+}
+
+/// Payloads on the multi-job event kernel.
+enum JobEvent {
+    /// A task completing and reporting to its job.
+    Delivery(TaskDelivery),
+    /// A sync job's round window expiring.
+    RoundClose { job: u32, round: usize, duration: f64 },
+    /// A freed slot (dropout) or an idle retry: re-arm arbitration.
+    Nudge { job: u32 },
+    /// Order the demanding jobs and let them claim devices.
+    Arbitrate,
+}
+
+/// No-op selector handed to population mutation calls. Multi-job selection
+/// always goes through the materialized candidate path (each job has its
+/// own selector and RNG stream), so the shared eligible set carries no
+/// per-selector index hooks — one index cannot serve N selectors with
+/// independent state.
+struct NullSelector;
+
+impl Selector for NullSelector {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn select(&mut self, _ctx: &mut SelectionCtx) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+/// One job's live state.
+struct JobState {
+    spec: JobSpec,
+    selector: Box<dyn Selector>,
+    server_opt: Box<dyn ServerOptimizer>,
+    global: Vec<f32>,
+    rng: Rng,
+    /// Next round to close (sync) / current model version (async).
+    round: usize,
+    /// Sync: a round window is open (selected, waiting on `RoundClose`).
+    cohort_open: bool,
+    /// Tasks currently in flight (count; the book tracks seconds).
+    in_flight: usize,
+    /// Updates awaiting the next merge.
+    buffer: Vec<UpdateEntry>,
+    /// Async: when the current merge interval began.
+    round_started_at: f64,
+    /// Async: round 0 has been opened.
+    started: bool,
+    done: bool,
+    /// Async: monotone per-spawn counter keying fault decisions (a
+    /// version-keyed decision could crash the same device forever at a
+    /// stuck version).
+    fault_seq: usize,
+}
+
+/// N concurrent jobs over one shared fleet. Construct with
+/// [`JobSetEngine::new`], then [`JobSetEngine::run`].
+pub struct JobSetEngine {
+    pub cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    dataset: Arc<Dataset>,
+    shards: Arc<Vec<LearnerShard>>,
+    population: Population,
+    kernel: EventKernel<JobEvent>,
+    jobs: Vec<JobState>,
+    book: MultiJobBook,
+    policy: Box<dyn ArbitrationPolicy>,
+    null_sel: Box<dyn Selector>,
+    test: TestSet,
+    model_bytes: usize,
+    runlog: RunLogger,
+    /// An `Arbitrate` event is already scheduled at the current time.
+    armed: bool,
+    /// Monotone arbitration counter (the population's round axis; multi-job
+    /// runs use no cooldowns, so it only orders the incremental syncs).
+    epoch: usize,
+}
+
+impl JobSetEngine {
+    pub fn new(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<JobSetEngine> {
+        cfg.validate()?;
+        let info = exec.variant().clone();
+        if info.name != cfg.variant {
+            return Err(anyhow!(
+                "executor variant '{}' != config variant '{}'",
+                info.name,
+                cfg.variant
+            ));
+        }
+        if cfg.oracle || cfg.apt {
+            bail!("multi-job runs support neither the SAFA+O oracle nor APT");
+        }
+        let dataset = Dataset::new(&info, cfg.seed ^ 0xD5);
+        let partitioner = Partitioner::new(cfg.partition, info.num_classes, cfg.mean_samples);
+        let shards = partitioner.assign(cfg.total_learners, cfg.seed ^ 0x9A);
+        let profiles = ProfilePool::generate(cfg.total_learners, cfg.seed ^ 0x0F, cfg.hardware);
+        let avail = match cfg.avail {
+            AvailMode::AllAvail => Availability::All,
+            AvailMode::DynAvail => Availability::Lazy(LazyTraceSet::new(
+                cfg.total_learners,
+                cfg.seed ^ 0x7A,
+                TraceConfig::default(),
+            )),
+        };
+        let n_samples: Vec<u32> = shards.iter().map(|s| s.len() as u32).collect();
+        let build_workers = if cfg.workers == 0 {
+            threadpool::default_workers().min(8)
+        } else {
+            cfg.workers
+        };
+        let model_bytes = info.num_params * 4;
+        let population = Population::new(
+            Registry::eager(profiles, n_samples, resolve_coord_shards(&cfg)),
+            avail,
+            cfg.avail,
+            cfg.local_epochs,
+            model_bytes,
+            build_workers,
+        );
+        let specs = resolve_jobs(&cfg)?;
+        let mut jobs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let selector = crate::selection::by_name(&spec.selector)
+                .ok_or_else(|| anyhow!("unknown selector '{}'", spec.selector))?;
+            let server_opt = crate::aggregation::by_name(&cfg.server_opt)
+                .ok_or_else(|| anyhow!("unknown server optimizer"))?;
+            // per-job model stream: job j trains its own parameters
+            let global = exec.init_params((cfg.seed as i32).wrapping_add(spec.job as i32))?;
+            let rng = Rng::new(cfg.seed ^ 0x10B5E7).stream(spec.job as u64);
+            jobs.push(JobState {
+                spec,
+                selector,
+                server_opt,
+                global,
+                rng,
+                round: 0,
+                cohort_open: false,
+                in_flight: 0,
+                buffer: Vec::new(),
+                round_started_at: 0.0,
+                started: false,
+                done: false,
+                fault_seq: 0,
+            });
+        }
+        let policy = policy_by_name(&cfg.job_policy)
+            .ok_or_else(|| anyhow!("unknown arbitration policy '{}'", cfg.job_policy))?;
+        let test = dataset.test_set(cfg.test_per_class);
+        let book = MultiJobBook::new(jobs.len());
+        Ok(JobSetEngine {
+            book,
+            policy,
+            jobs,
+            population,
+            kernel: EventKernel::default(),
+            dataset: Arc::new(dataset),
+            shards: Arc::new(shards),
+            test,
+            model_bytes,
+            exec,
+            cfg,
+            runlog: RunLogger::disabled(),
+            null_sel: Box::new(NullSelector),
+            armed: false,
+            epoch: 0,
+        })
+    }
+
+    /// Attach a run logger; call before [`JobSetEngine::run`].
+    pub fn set_runlog(&mut self, logger: RunLogger) {
+        self.runlog = logger;
+    }
+
+    /// Run every job to completion and return the per-job results.
+    pub fn run(&mut self) -> Result<MultiJobResult> {
+        if self.runlog.enabled() {
+            let label = self.cfg.label.clone();
+            let policy = self.cfg.job_policy.clone();
+            let jobs = self.jobs.len() as u64;
+            let rounds = self.cfg.rounds as u64;
+            let eval_every = self.cfg.eval_every as u64;
+            self.runlog.emit(move || RunEvent::JobSetStart {
+                label,
+                jobs,
+                policy,
+                rounds,
+                eval_every,
+            });
+            for j in 0..self.jobs.len() {
+                let spec = &self.jobs[j].spec;
+                let (job, priority) = (j as u64, spec.priority);
+                let (selector, mode) = (spec.selector.clone(), mode_label(&spec.mode));
+                let target = spec.target as u64;
+                self.runlog.emit(move || RunEvent::JobStart {
+                    job,
+                    selector,
+                    mode,
+                    target,
+                    priority,
+                });
+            }
+        }
+        self.kernel.schedule(0.0, EventClass::CheckIn, JobEvent::Arbitrate);
+        self.armed = true;
+        while let Some(ev) = self.kernel.pop_next() {
+            let now = self.kernel.now();
+            match ev.payload {
+                JobEvent::Arbitrate => {
+                    self.armed = false;
+                    self.arbitrate(now)?;
+                }
+                JobEvent::Nudge { .. } => self.arm_if_demand(now),
+                JobEvent::RoundClose { job, round, duration } => {
+                    self.close_round(job as usize, round, duration, now)?;
+                }
+                JobEvent::Delivery(d) => self.on_delivery(d, now)?,
+            }
+        }
+        // Terminal sweep: per-job in-flight seconds (zero here — every
+        // spawn either dropped or delivered — but logged so the replay
+        // reducer closes the identity the same way the engines do).
+        for j in 0..self.jobs.len() {
+            let secs = self.book.sweep(j)?;
+            let job = j as u64;
+            self.runlog.emit(|| RunEvent::JobSweep { job, secs });
+        }
+        self.runlog.emit(|| RunEvent::JobSetEnd);
+        Ok(self.result())
+    }
+
+    /// The current books as a result (final after [`JobSetEngine::run`]).
+    pub fn result(&self) -> MultiJobResult {
+        let meta: Vec<JobMeta> = self
+            .jobs
+            .iter()
+            .map(|job| JobMeta {
+                selector: job.spec.selector.clone(),
+                mode: mode_label(&job.spec.mode),
+                target: job.spec.target,
+                priority: job.spec.priority,
+            })
+            .collect();
+        self.book.finish(&meta, &self.cfg.label, &self.cfg.job_policy)
+    }
+
+    fn demanding(&self, j: usize) -> bool {
+        let job = &self.jobs[j];
+        if job.done {
+            return false;
+        }
+        match job.spec.mode {
+            RoundMode::Async { .. } => job.in_flight < job.spec.target,
+            _ => !job.cohort_open,
+        }
+    }
+
+    /// Schedule an `Arbitrate` at `now` if any job wants devices and none
+    /// is pending (CheckIn class: pops after every same-time delivery and
+    /// round close, so arbitration always sees the settled state).
+    fn arm_if_demand(&mut self, now: f64) {
+        if self.armed {
+            return;
+        }
+        if (0..self.jobs.len()).any(|j| self.demanding(j)) {
+            self.kernel.schedule(now, EventClass::CheckIn, JobEvent::Arbitrate);
+            self.armed = true;
+        }
+    }
+
+    /// One arbitration point: sync the shared population to `now`, order
+    /// the demanding jobs by policy, and let each take its selection turn
+    /// (earlier turns claim devices, shrinking the pool for later ones).
+    fn arbitrate(&mut self, now: f64) -> Result<()> {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.population.sync_to(epoch, now, self.null_sel.as_mut());
+        let mut claims: Vec<JobClaim> = Vec::new();
+        for j in 0..self.jobs.len() {
+            if self.demanding(j) {
+                let spent = self.book.job(j).map(|b| b.spent_secs).unwrap_or(0.0);
+                claims.push(JobClaim {
+                    job: j as u32,
+                    priority: self.jobs[j].spec.priority,
+                    spent,
+                });
+            }
+        }
+        self.policy.order(&mut claims);
+        for c in claims {
+            self.job_turn(c.job as usize, now)?;
+        }
+        Ok(())
+    }
+
+    fn job_turn(&mut self, j: usize, now: f64) -> Result<()> {
+        match self.jobs[j].spec.mode {
+            RoundMode::Async { .. } => self.async_turn(j, now),
+            _ => self.sync_turn(j, now),
+        }
+    }
+
+    /// Dropout point for `id` on a task of length `t` starting at `now`:
+    /// `None` if it stays available throughout, else the (binary-searched)
+    /// end of its current availability session — same 20-iteration search
+    /// as the single-job engines.
+    fn dropout_time(&self, id: usize, now: f64, t: f64) -> Option<f64> {
+        let avail = self.population.availability();
+        if avail.available_through(id, now, t) {
+            return None;
+        }
+        let (mut lo, mut hi) = (0.0f64, t);
+        for _ in 0..20 {
+            let mid = 0.5 * (lo + hi);
+            if avail.available_through(id, now, mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+
+    /// One sync (OC/DL) job's selection turn: open the round, claim a
+    /// cohort, spawn its tasks, and schedule the round-close sweep.
+    fn sync_turn(&mut self, j: usize, now: f64) -> Result<()> {
+        let spec_mode = self.jobs[j].spec.mode;
+        let target = self.jobs[j].spec.target;
+        let round = self.jobs[j].round;
+        let mu = match spec_mode {
+            RoundMode::Deadline { deadline } => deadline,
+            _ => 100.0,
+        };
+        let (job_u, round_u) = (j as u64, round as u64);
+        self.runlog.emit(|| RunEvent::JobRoundStart { job: job_u, round: round_u, now });
+        self.book.round_start(j, round_u, now)?;
+
+        let n_select = match spec_mode {
+            RoundMode::OverCommit { factor } => ((target as f64) * factor).ceil() as usize,
+            _ => target,
+        };
+        let candidates = self.population.pool_candidates(now, mu);
+        let picked = if candidates.is_empty() {
+            Vec::new()
+        } else {
+            let job = &mut self.jobs[j];
+            let mut ctx = SelectionCtx {
+                round,
+                now,
+                target: n_select,
+                candidates: &candidates,
+                rng: &mut job.rng,
+            };
+            job.selector.select(&mut ctx)
+        };
+
+        if picked.is_empty() {
+            // Nothing claimable: burn a round slot (cohort closes empty).
+            let dur = mu.max(1.0);
+            self.jobs[j].cohort_open = true;
+            self.kernel.schedule(
+                now + dur,
+                EventClass::Eval,
+                JobEvent::RoundClose { job: j as u32, round, duration: dur },
+            );
+            return Ok(());
+        }
+
+        // ---- task timing + fault decisions ------------------------------
+        let faults = self.cfg.faults;
+        // decorrelate fault decisions across jobs sharing a round index
+        let fault_round = round * self.jobs.len() + j;
+        let mut tasks: Vec<(usize, f64, Option<f64>, bool)> = Vec::with_capacity(picked.len());
+        for &id in &picked {
+            let t = self.population.profile(id).completion_time(
+                self.shards[id].len(),
+                self.cfg.local_epochs,
+                self.model_bytes,
+            );
+            let mut dropped = self.dropout_time(id, now, t);
+            if dropped.is_none() {
+                if let Some(frac) = faults.crashes(id, fault_round) {
+                    dropped = Some(frac * t);
+                }
+            }
+            let corrupt = dropped.is_none() && faults.corrupts(id, fault_round);
+            tasks.push((id, t, dropped, corrupt));
+        }
+
+        // ---- round window ------------------------------------------------
+        let mut completions: Vec<f64> = tasks
+            .iter()
+            .filter(|(_, _, d, _)| d.is_none())
+            .map(|(_, t, _, _)| *t)
+            .collect();
+        completions.sort_by(|a, b| a.total_cmp(b));
+        let dur = match spec_mode {
+            RoundMode::Deadline { deadline } => deadline,
+            RoundMode::OverCommit { .. } => {
+                if completions.is_empty() {
+                    mu.max(1.0)
+                } else {
+                    completions[target.min(completions.len()) - 1]
+                }
+            }
+            RoundMode::Async { .. } => unreachable!("async jobs use async_turn"),
+        };
+        let floor = match spec_mode {
+            RoundMode::Deadline { deadline } => self.cfg.min_round_duration.min(deadline),
+            _ => self.cfg.min_round_duration,
+        };
+        let dur = dur.max(floor);
+
+        // ---- spawn -------------------------------------------------------
+        for &(id, t, dropped, corrupt) in &tasks {
+            self.book.spawn(j, id as u64, t, dropped)?;
+            let learner = id as u64;
+            self.runlog.emit(|| RunEvent::JobSpawn {
+                job: job_u,
+                learner,
+                now,
+                duration: t,
+                dropped_after: dropped,
+                corrupt,
+            });
+            let cost = dropped.unwrap_or(t);
+            self.population.mark_busy_for(id, now + cost, j as u32, self.null_sel.as_mut());
+            if dropped.is_some() {
+                continue; // partial spend already wasted by the book
+            }
+            self.jobs[j].in_flight += 1;
+            let body = if corrupt {
+                TaskBody::Corrupt
+            } else if t <= dur {
+                let o = local_train(
+                    self.exec.as_ref(),
+                    &self.dataset,
+                    &self.shards[id],
+                    id,
+                    &self.jobs[j].global,
+                    self.cfg.lr,
+                    self.cfg.local_epochs,
+                    self.cfg.seed,
+                )?;
+                TaskBody::Fresh { delta: o.delta, mean_loss: o.mean_loss }
+            } else {
+                TaskBody::Untrained
+            };
+            self.kernel.schedule(
+                now + t,
+                EventClass::Delivery,
+                JobEvent::Delivery(TaskDelivery {
+                    job: j as u32,
+                    learner: id,
+                    origin: round,
+                    duration: t,
+                    body,
+                }),
+            );
+        }
+        self.jobs[j].cohort_open = true;
+        self.kernel.schedule(
+            now + dur,
+            EventClass::Eval,
+            JobEvent::RoundClose { job: j as u32, round, duration: dur },
+        );
+        Ok(())
+    }
+
+    /// One async job's selection turn: top the in-flight set back up to the
+    /// target (FedBuff-style; merges happen on the delivery path).
+    fn async_turn(&mut self, j: usize, now: f64) -> Result<()> {
+        let target = self.jobs[j].spec.target;
+        let job_u = j as u64;
+        if !self.jobs[j].started {
+            self.jobs[j].started = true;
+            self.jobs[j].round_started_at = now;
+            self.runlog.emit(|| RunEvent::JobRoundStart { job: job_u, round: 0, now });
+            self.book.round_start(j, 0, now)?;
+        }
+        let demand = target.saturating_sub(self.jobs[j].in_flight);
+        if demand == 0 {
+            return Ok(());
+        }
+        let candidates = self.population.pool_candidates(now, 100.0);
+        let picked = if candidates.is_empty() {
+            Vec::new()
+        } else {
+            let round = self.jobs[j].round;
+            let job = &mut self.jobs[j];
+            let mut ctx = SelectionCtx {
+                round,
+                now,
+                target: demand,
+                candidates: &candidates,
+                rng: &mut job.rng,
+            };
+            job.selector.select(&mut ctx)
+        };
+        if picked.is_empty() {
+            if self.jobs[j].in_flight == 0 {
+                // Fully idle with nothing eligible: retry later. (Devices
+                // freed by other jobs re-arm arbitration on their own.)
+                self.kernel
+                    .schedule(now + 100.0, EventClass::Departure, JobEvent::Nudge { job: j as u32 });
+            }
+            return Ok(());
+        }
+        let faults = self.cfg.faults;
+        let njobs = self.jobs.len();
+        for &id in &picked {
+            let seq = self.jobs[j].fault_seq;
+            self.jobs[j].fault_seq += 1;
+            let key = seq * njobs + j;
+            let t = self.population.profile(id).completion_time(
+                self.shards[id].len(),
+                self.cfg.local_epochs,
+                self.model_bytes,
+            );
+            let mut dropped = self.dropout_time(id, now, t);
+            if dropped.is_none() {
+                if let Some(frac) = faults.crashes(id, key) {
+                    dropped = Some(frac * t);
+                }
+            }
+            let corrupt = dropped.is_none() && faults.corrupts(id, key);
+            self.book.spawn(j, id as u64, t, dropped)?;
+            let learner = id as u64;
+            self.runlog.emit(|| RunEvent::JobSpawn {
+                job: job_u,
+                learner,
+                now,
+                duration: t,
+                dropped_after: dropped,
+                corrupt,
+            });
+            let cost = dropped.unwrap_or(t);
+            self.population.mark_busy_for(id, now + cost, j as u32, self.null_sel.as_mut());
+            if let Some(dt) = dropped {
+                // the slot frees at the drop point — re-arm demand there
+                self.kernel
+                    .schedule(now + dt, EventClass::Departure, JobEvent::Nudge { job: j as u32 });
+                continue;
+            }
+            self.jobs[j].in_flight += 1;
+            let origin = self.jobs[j].round;
+            let body = if corrupt {
+                TaskBody::Corrupt
+            } else {
+                let o = local_train(
+                    self.exec.as_ref(),
+                    &self.dataset,
+                    &self.shards[id],
+                    id,
+                    &self.jobs[j].global,
+                    self.cfg.lr,
+                    self.cfg.local_epochs,
+                    self.cfg.seed,
+                )?;
+                TaskBody::Fresh { delta: o.delta, mean_loss: o.mean_loss }
+            };
+            self.kernel.schedule(
+                now + t,
+                EventClass::Delivery,
+                JobEvent::Delivery(TaskDelivery {
+                    job: j as u32,
+                    learner: id,
+                    origin,
+                    duration: t,
+                    body,
+                }),
+            );
+        }
+        Ok(())
+    }
+
+    /// A task delivered: decide its fate, settle the books, and (async)
+    /// merge when the buffer fills.
+    fn on_delivery(&mut self, d: TaskDelivery, now: f64) -> Result<()> {
+        let j = d.job as usize;
+        self.jobs[j].in_flight -= 1;
+        let mode = self.jobs[j].spec.mode;
+        let (fate, mean_loss) = match (&d.body, mode) {
+            (TaskBody::Corrupt, _) => (FATE_CORRUPT, 0.0),
+            (TaskBody::Untrained, _) => (FATE_DOOMED, 0.0),
+            (TaskBody::Fresh { mean_loss, .. }, RoundMode::Async { max_staleness, .. }) => {
+                let job = &self.jobs[j];
+                let stale = max_staleness
+                    .map(|s| job.round - d.origin > s)
+                    .unwrap_or(false);
+                if job.done || stale {
+                    (FATE_DOOMED, 0.0)
+                } else {
+                    (FATE_TRAINED, *mean_loss)
+                }
+            }
+            (TaskBody::Fresh { mean_loss, .. }, _) => {
+                let job = &self.jobs[j];
+                if job.cohort_open && job.round == d.origin {
+                    (FATE_TRAINED, *mean_loss)
+                } else {
+                    (FATE_DOOMED, 0.0) // landed after its cohort closed
+                }
+            }
+        };
+        self.book.delivery(j, d.learner as u64, d.duration, mean_loss, fate)?;
+        let (job_u, learner_u, duration) = (d.job as u64, d.learner as u64, d.duration);
+        self.runlog.emit(|| RunEvent::JobDelivery {
+            job: job_u,
+            learner: learner_u,
+            duration,
+            mean_loss,
+            fate,
+        });
+        if fate == FATE_TRAINED {
+            if let TaskBody::Fresh { delta, .. } = d.body {
+                self.jobs[j]
+                    .buffer
+                    .push(UpdateEntry { learner: d.learner, delta, origin_round: d.origin });
+            }
+            if let RoundMode::Async { buffer_k, .. } = mode {
+                if self.jobs[j].buffer.len() >= buffer_k {
+                    self.merge_async(j, now)?;
+                }
+            }
+        }
+        // the reporting device is free again — let demanding jobs claim it
+        self.arm_if_demand(now);
+        Ok(())
+    }
+
+    /// Async merge: fold the buffered updates into the job's model, close
+    /// the merge interval as a round, and open the next one.
+    fn merge_async(&mut self, j: usize, now: f64) -> Result<()> {
+        let entries = std::mem::take(&mut self.jobs[j].buffer);
+        let round = self.jobs[j].round;
+        let outcome = merge(self.exec.as_ref(), &entries, &[], self.cfg.scaling, round)?;
+        {
+            let job = &mut self.jobs[j];
+            job.server_opt.apply(&mut job.global, &outcome.delta)?;
+        }
+        let dur = now - self.jobs[j].round_started_at;
+        self.finish_round(j, round, dur, now)?;
+        if !self.jobs[j].done {
+            let job_u = j as u64;
+            let round_u = self.jobs[j].round as u64;
+            self.runlog.emit(|| RunEvent::JobRoundStart { job: job_u, round: round_u, now });
+            self.book.round_start(j, round_u, now)?;
+            self.jobs[j].round_started_at = now;
+            self.arm_if_demand(now);
+        }
+        Ok(())
+    }
+
+    /// A sync job's round window expired: merge whatever reported in time.
+    fn close_round(&mut self, j: usize, round: usize, duration: f64, now: f64) -> Result<()> {
+        self.jobs[j].cohort_open = false;
+        let entries = std::mem::take(&mut self.jobs[j].buffer);
+        if !entries.is_empty() {
+            let outcome = merge(self.exec.as_ref(), &entries, &[], self.cfg.scaling, round)?;
+            let job = &mut self.jobs[j];
+            job.server_opt.apply(&mut job.global, &outcome.delta)?;
+        }
+        self.finish_round(j, round, duration, now)?;
+        if !self.jobs[j].done {
+            self.arm_if_demand(now);
+        }
+        Ok(())
+    }
+
+    /// Shared round epilogue: eval cadence, books, log, advance.
+    fn finish_round(&mut self, j: usize, round: usize, duration: f64, now: f64) -> Result<()> {
+        let (eval_loss, eval_acc) =
+            if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds {
+                let (l, a) = evaluate_params(self.exec.as_ref(), &self.test, &self.jobs[j].global)?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+        let (fresh, failed, train_loss) =
+            self.book.round_end(j, round as u64, now, duration, eval_loss, eval_acc)?;
+        let (job_u, round_u) = (j as u64, round as u64);
+        self.runlog.emit(|| RunEvent::JobRoundEnd {
+            job: job_u,
+            round: round_u,
+            now,
+            round_duration: duration,
+            fresh,
+            failed,
+            train_loss,
+            eval_loss,
+            eval_acc,
+        });
+        self.jobs[j].round += 1;
+        if self.jobs[j].round >= self.cfg.rounds {
+            self.jobs[j].done = true;
+        }
+        Ok(())
+    }
+}
+
+/// Build a jobset engine and run it to completion.
+pub fn run_jobset(cfg: ExpConfig, exec: Arc<dyn Executor>) -> Result<MultiJobResult> {
+    run_jobset_instrumented(cfg, exec, RunLogger::disabled())
+}
+
+/// [`run_jobset`], with every event appended to `sink` as an event-sourced
+/// run log. The result is byte-identical to the unlogged run (logging
+/// observes, never perturbs), and the log alone is enough for
+/// [`super::replay_multijob`] to re-derive it.
+pub fn run_jobset_logged(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    sink: Box<dyn LogSink>,
+) -> Result<MultiJobResult> {
+    run_jobset_instrumented(cfg, exec, RunLogger::new(sink))
+}
+
+/// The general form: run with an arbitrary pre-built [`RunLogger`].
+pub fn run_jobset_instrumented(
+    cfg: ExpConfig,
+    exec: Arc<dyn Executor>,
+    logger: RunLogger,
+) -> Result<MultiJobResult> {
+    let mut eng = JobSetEngine::new(cfg, exec)?;
+    eng.set_runlog(logger);
+    let result = eng.run()?;
+    eng.runlog.finish()?;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{builtin_variant, NativeExecutor};
+
+    fn exec() -> Arc<dyn Executor> {
+        Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+    }
+
+    fn base_cfg() -> ExpConfig {
+        ExpConfig {
+            variant: "tiny".into(),
+            total_learners: 30,
+            rounds: 3,
+            target_participants: 4,
+            mean_samples: 8,
+            test_per_class: 4,
+            eval_every: 2,
+            lr: 0.1,
+            label: "jobset".into(),
+            ..Default::default()
+        }
+    }
+
+    fn multi_cfg() -> ExpConfig {
+        let mut cfg = base_cfg();
+        cfg.jobs = 3;
+        cfg.job_modes = vec!["oc".into(), "dl40".into(), "async3".into()];
+        cfg.job_selectors = vec!["random".into(), "oort".into(), "random".into()];
+        cfg.job_targets = vec![4, 3, 3];
+        cfg
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn jobset_runs_and_every_job_closes_the_identity() {
+        let r = run_jobset(multi_cfg(), exec()).unwrap();
+        assert_eq!(r.jobs.len(), 3);
+        let mut fleet_spent = 0.0;
+        for j in &r.jobs {
+            assert!(j.spent_secs > 0.0, "job {} never spent", j.job);
+            assert!(!j.rounds.is_empty(), "job {} closed no rounds", j.job);
+            assert_eq!(j.in_flight_secs, 0.0);
+            assert!(
+                close(j.spent_secs, j.aggregated_secs + j.wasted_secs),
+                "job {}: {} != {} + {}",
+                j.job,
+                j.spent_secs,
+                j.aggregated_secs,
+                j.wasted_secs
+            );
+            for rec in &j.rounds {
+                assert!(
+                    close(
+                        rec.cum_spent_secs,
+                        rec.cum_aggregated_secs + rec.cum_wasted_secs + rec.in_flight_secs
+                    ),
+                    "job {} round {} identity open",
+                    j.job,
+                    rec.round
+                );
+            }
+            fleet_spent += j.spent_secs;
+        }
+        assert_eq!(fleet_spent, r.fleet_spent_secs);
+        // sync jobs ran exactly cfg.rounds rounds
+        assert_eq!(r.jobs[0].rounds.len(), 3);
+        assert_eq!(r.jobs[1].rounds.len(), 3);
+    }
+
+    #[test]
+    fn jobset_is_deterministic_and_worker_invariant() {
+        let r1 = run_jobset(multi_cfg(), exec()).unwrap();
+        let mut cfg = multi_cfg();
+        cfg.workers = 8;
+        cfg.train_workers = 8;
+        cfg.coord_shards = 7;
+        let r2 = run_jobset(cfg, exec()).unwrap();
+        assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
+    }
+
+    #[test]
+    fn devices_are_never_shared_while_busy() {
+        // strict check lives in tests/multijob_props.rs over the run log;
+        // here: a tiny pool with greedy targets still never double-claims,
+        // which shows as every job making progress without panics and the
+        // fleet identity closing.
+        let mut cfg = multi_cfg();
+        cfg.total_learners = 8;
+        cfg.job_targets = vec![6, 6, 6];
+        let r = run_jobset(cfg, exec()).unwrap();
+        let agg_plus_waste = r.fleet_aggregated_secs + r.fleet_wasted_secs;
+        assert!(close(r.fleet_spent_secs, agg_plus_waste));
+    }
+
+    #[test]
+    fn strict_priority_gives_the_high_job_first_claim() {
+        let mut cfg = base_cfg();
+        cfg.jobs = 2;
+        cfg.job_policy = "priority".into();
+        cfg.job_priorities = vec![1, 9];
+        cfg.total_learners = 6;
+        cfg.job_targets = vec![5, 5];
+        cfg.rounds = 4;
+        let r = run_jobset(cfg, exec()).unwrap();
+        assert!(
+            r.jobs[1].spent_secs >= r.jobs[0].spent_secs,
+            "high-priority job should out-claim the low one: {} vs {}",
+            r.jobs[1].spent_secs,
+            r.jobs[0].spent_secs
+        );
+    }
+
+    #[test]
+    fn single_job_jobset_matches_itself_and_learns() {
+        // jobs=1 through the jobset path: a sanity anchor for the fuzzer's
+        // 1-vs-N differential axis
+        let mut cfg = base_cfg();
+        cfg.jobs = 1;
+        cfg.rounds = 6;
+        let r = run_jobset(cfg, exec()).unwrap();
+        assert_eq!(r.jobs.len(), 1);
+        let acc = r.jobs[0].rounds.iter().rev().find_map(|x| x.eval_acc);
+        assert!(acc.is_some());
+        assert!(r.jobs[0].rounds.iter().filter(|x| !x.failed).count() > 0);
+    }
+
+    #[test]
+    fn dyn_availability_multi_job_accounts_dropouts() {
+        let mut cfg = multi_cfg();
+        cfg.avail = crate::config::AvailMode::DynAvail;
+        cfg.rounds = 4;
+        let r = run_jobset(cfg, exec()).unwrap();
+        let agg_plus_waste = r.fleet_aggregated_secs + r.fleet_wasted_secs;
+        assert!(close(r.fleet_spent_secs, agg_plus_waste));
+    }
+}

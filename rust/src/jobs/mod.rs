@@ -1,0 +1,889 @@
+//! Multi-job coordination (L4): N concurrent training jobs — each with its
+//! own model, selector, round mode, and target — drawing participants from
+//! ONE shared device fleet (`population::Population`). A device busy on job
+//! A is ineligible for job B: claims go through
+//! `Population::mark_busy_for`, which tags the busy interval with the
+//! owning job id, so job ownership is exactly the busy dimension the
+//! eligible set already maintains.
+//!
+//! Cross-job arbitration is pluggable ([`ArbitrationPolicy`]): whenever the
+//! fleet's eligibility changes, the demanding jobs are ordered — fair-share
+//! (least cumulative spend first) or strict-priority — and claim devices in
+//! that order. Everything is driven through the same discrete-event kernel
+//! as the single-job engines, so multi-job runs are seed-deterministic and
+//! byte-identical at any `--workers`/`--train-workers`/`--coord-shards`.
+//!
+//! Accounting is the tentpole invariant: every device-second lands in
+//! exactly one job's spent bucket, and per job
+//! `spent == aggregated + wasted + in_flight` at every instant (in_flight
+//! drains to zero by the end of the run). Both the engine
+//! ([`engine::JobSetEngine`]) and the replay reducer
+//! ([`replay::MultiJobReducer`]) drive the SAME bookkeeping type
+//! ([`MultiJobBook`]) — identical methods called in identical event order —
+//! so engine-vs-replay byte-identity holds by construction.
+
+// The replay oracle re-derives per-job results from the event stream, so a
+// panic here is a replay divergence waiting to happen: fallible paths must
+// return errors, not unwrap.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+pub mod engine;
+pub mod replay;
+
+pub use engine::{run_jobset, run_jobset_instrumented, run_jobset_logged, JobSetEngine};
+pub use replay::{replay_multijob, MultiJobReducer};
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExpConfig, RoundMode};
+use crate::metrics::{ExperimentResult, RoundRecord};
+use crate::runlog::{FATE_CORRUPT, FATE_DOOMED, FATE_TRAINED};
+use crate::util::json::{arr, num, obj, Json};
+
+/// Parse one per-job round-mode spec: `oc[FACTOR]`, `dl[SECS]`, or
+/// `async[K]`. A bare kind (`"oc"`, `"dl"`, `"async"`) inherits the base
+/// config's parameters when the base mode is the same kind, and falls back
+/// to the stock defaults (OC factor 1.3, DL deadline 100 s, async buffer
+/// 10) otherwise. `async` jobs inherit the base `max_staleness` when the
+/// base mode is async.
+pub fn parse_job_mode(spec: &str, base: &RoundMode) -> Result<RoundMode> {
+    if let Some(rest) = spec.strip_prefix("async") {
+        let (base_k, base_stale) = match *base {
+            RoundMode::Async { buffer_k, max_staleness } => (buffer_k, max_staleness),
+            _ => (10, None),
+        };
+        let buffer_k = if rest.is_empty() {
+            base_k
+        } else {
+            rest.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad job mode '{spec}': '{rest}' is not a buffer size"))?
+        };
+        if buffer_k == 0 {
+            bail!("bad job mode '{spec}': buffer_k must be >= 1");
+        }
+        return Ok(RoundMode::Async { buffer_k, max_staleness: base_stale });
+    }
+    if let Some(rest) = spec.strip_prefix("oc") {
+        let base_factor = match *base {
+            RoundMode::OverCommit { factor } => factor,
+            _ => 1.3,
+        };
+        let factor = if rest.is_empty() {
+            base_factor
+        } else {
+            rest.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad job mode '{spec}': '{rest}' is not a factor"))?
+        };
+        if !factor.is_finite() || factor < 1.0 {
+            bail!("bad job mode '{spec}': overcommit factor must be finite and >= 1");
+        }
+        return Ok(RoundMode::OverCommit { factor });
+    }
+    if let Some(rest) = spec.strip_prefix("dl") {
+        let base_deadline = match *base {
+            RoundMode::Deadline { deadline } => deadline,
+            _ => 100.0,
+        };
+        let deadline = if rest.is_empty() {
+            base_deadline
+        } else {
+            rest.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad job mode '{spec}': '{rest}' is not a deadline"))?
+        };
+        if !deadline.is_finite() || deadline <= 0.0 {
+            bail!("bad job mode '{spec}': deadline must be finite and positive");
+        }
+        return Ok(RoundMode::Deadline { deadline });
+    }
+    bail!("unknown job mode '{spec}' (expected oc[FACTOR], dl[SECS], or async[K])")
+}
+
+/// Compact label for a resolved round mode — the `JobStart` run-log tag and
+/// the sweep axis token (`oc1.3`, `dl60`, `async4`, `async4s8`).
+pub fn mode_label(mode: &RoundMode) -> String {
+    match mode {
+        RoundMode::OverCommit { factor } => format!("oc{factor}"),
+        RoundMode::Deadline { deadline } => format!("dl{deadline}"),
+        RoundMode::Async { buffer_k, max_staleness: Some(s) } => format!("async{buffer_k}s{s}"),
+        RoundMode::Async { buffer_k, max_staleness: None } => format!("async{buffer_k}"),
+    }
+}
+
+/// Fully-resolved per-job configuration: the per-job override vectors from
+/// [`ExpConfig`] with every gap filled from the base config.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub job: u32,
+    pub selector: String,
+    pub mode: RoundMode,
+    pub target: usize,
+    pub priority: u64,
+}
+
+/// Resolve `cfg.jobs` specs from the (validated) config. Per-job override
+/// vectors are either empty (every job inherits the base value) or exactly
+/// `cfg.jobs` long — `ExpConfig::validate` enforces that.
+pub fn resolve_jobs(cfg: &ExpConfig) -> Result<Vec<JobSpec>> {
+    let mut specs = Vec::with_capacity(cfg.jobs);
+    for j in 0..cfg.jobs {
+        let selector = cfg
+            .job_selectors
+            .get(j)
+            .cloned()
+            .unwrap_or_else(|| cfg.selector.clone());
+        let mode = match cfg.job_modes.get(j) {
+            Some(spec) => parse_job_mode(spec, &cfg.mode)?,
+            None => cfg.mode,
+        };
+        let target = cfg
+            .job_targets
+            .get(j)
+            .copied()
+            .unwrap_or(cfg.target_participants);
+        let priority = cfg.job_priorities.get(j).copied().unwrap_or(0);
+        specs.push(JobSpec { job: j as u32, selector, mode, target, priority });
+    }
+    Ok(specs)
+}
+
+/// One demanding job at an arbitration point, with the facts policies rank
+/// on. Claims arrive in job-id order; a policy reorders them and jobs then
+/// pick devices in that order (earlier claims see more of the pool).
+#[derive(Clone, Copy, Debug)]
+pub struct JobClaim {
+    pub job: u32,
+    pub priority: u64,
+    /// The job's cumulative spent device-seconds so far.
+    pub spent: f64,
+}
+
+/// Cross-job arbitration: who gets first claim on each eligibility delta.
+/// Implementations must be deterministic pure functions of the claims (the
+/// trait is deliberately open for richer policies — e.g. a utility market
+/// bidding device-seconds against marginal model improvement).
+pub trait ArbitrationPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Reorder `claims` into pick order (first claim picks first).
+    fn order(&self, claims: &mut [JobClaim]);
+}
+
+/// Fair-share: the job that has spent the least device time picks first
+/// (ties broken by job id, ascending) — long-run device-second allocation
+/// evens out across jobs.
+pub struct FairShare;
+
+impl ArbitrationPolicy for FairShare {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn order(&self, claims: &mut [JobClaim]) {
+        claims.sort_by(|a, b| a.spent.total_cmp(&b.spent).then(a.job.cmp(&b.job)));
+    }
+}
+
+/// Strict-priority: higher `priority` always picks first (ties broken by
+/// job id, ascending) — low-priority jobs can starve, which is exactly what
+/// the `starved-low-priority` preset demonstrates.
+pub struct StrictPriority;
+
+impl ArbitrationPolicy for StrictPriority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn order(&self, claims: &mut [JobClaim]) {
+        claims.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.job.cmp(&b.job)));
+    }
+}
+
+/// Resolve an arbitration policy by config name.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn ArbitrationPolicy>> {
+    match name {
+        "fair" => Some(Box::new(FairShare)),
+        "priority" => Some(Box::new(StrictPriority)),
+        _ => None,
+    }
+}
+
+/// Static per-job metadata carried into [`JobSummary`] (the engine derives
+/// it from [`JobSpec`], the replay reducer from `JobStart` events).
+#[derive(Clone, Debug)]
+pub struct JobMeta {
+    pub selector: String,
+    /// Compact mode label (see [`mode_label`]).
+    pub mode: String,
+    pub target: usize,
+    pub priority: u64,
+}
+
+/// One closed round (sync) or merge interval (async) of one job.
+#[derive(Clone, Debug, Default)]
+pub struct JobRoundRec {
+    pub round: usize,
+    /// Simulated seconds since run start, at round end.
+    pub sim_time: f64,
+    pub round_duration: f64,
+    pub selected: usize,
+    /// Updates aggregated into this job's model this round.
+    pub fresh: usize,
+    pub dropouts: usize,
+    /// Deliveries discarded (corrupt, or arrived after the cohort closed).
+    pub discarded: usize,
+    pub failed: bool,
+    pub train_loss: Option<f64>,
+    pub eval_loss: Option<f64>,
+    pub eval_acc: Option<f64>,
+    // Per-job accounting snapshot at round end; the invariant
+    // `cum_spent == cum_aggregated + cum_wasted + in_flight` holds on
+    // every record.
+    pub cum_spent_secs: f64,
+    pub cum_aggregated_secs: f64,
+    pub cum_wasted_secs: f64,
+    pub in_flight_secs: f64,
+}
+
+/// Per-round scratch between `round_start` and `round_end`.
+#[derive(Default)]
+struct RoundScratch {
+    round: u64,
+    open: bool,
+    selected: usize,
+    dropouts: usize,
+    discarded: usize,
+    losses: Vec<f64>,
+}
+
+/// One job's running books: the four accounting buckets, the unique-device
+/// set, and the closed-round records.
+#[derive(Default)]
+pub struct JobBook {
+    pub spent_secs: f64,
+    pub aggregated_secs: f64,
+    pub wasted_secs: f64,
+    pub in_flight_secs: f64,
+    unique: HashSet<u64>,
+    pub rounds: Vec<JobRoundRec>,
+    scratch: RoundScratch,
+}
+
+impl JobBook {
+    pub fn unique_participants(&self) -> usize {
+        self.unique.len()
+    }
+}
+
+/// The shared multi-job bookkeeping: one [`JobBook`] per job, mutated only
+/// through the transition methods below. The engine calls them adjacent to
+/// its run-log emits and the replay reducer calls them from the decoded
+/// events — same methods, same order, same f64 operation order — which is
+/// what makes engine-vs-replay results byte-identical by construction.
+pub struct MultiJobBook {
+    jobs: Vec<JobBook>,
+}
+
+impl MultiJobBook {
+    pub fn new(jobs: usize) -> MultiJobBook {
+        MultiJobBook { jobs: (0..jobs).map(|_| JobBook::default()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn job(&self, j: usize) -> Option<&JobBook> {
+        self.jobs.get(j)
+    }
+
+    fn job_mut(&mut self, j: usize) -> Result<&mut JobBook> {
+        let n = self.jobs.len();
+        self.jobs
+            .get_mut(j)
+            .ok_or_else(|| anyhow::anyhow!("job {j} out of range (jobset has {n})"))
+    }
+
+    /// Open round `round` for `job` at time `now`.
+    pub fn round_start(&mut self, job: usize, round: u64, now: f64) -> Result<()> {
+        if !now.is_finite() {
+            bail!("job {job}: non-finite round-start time");
+        }
+        let b = self.job_mut(job)?;
+        if b.scratch.open {
+            bail!(
+                "job {job}: round {round} started while round {} is still open",
+                b.scratch.round
+            );
+        }
+        b.scratch = RoundScratch { round, open: true, ..Default::default() };
+        Ok(())
+    }
+
+    /// One device claimed: `duration` device-seconds are committed (spent)
+    /// up front. `dropped_after = Some(t)` means the device leaves (or
+    /// crashes) after `t` seconds — all of it wasted immediately; otherwise
+    /// the full duration goes in flight until its delivery.
+    pub fn spawn(
+        &mut self,
+        job: usize,
+        learner: u64,
+        duration: f64,
+        dropped_after: Option<f64>,
+    ) -> Result<()> {
+        if !duration.is_finite() || duration < 0.0 {
+            bail!("job {job}: bad task duration {duration}");
+        }
+        if let Some(d) = dropped_after {
+            if !d.is_finite() || d < 0.0 {
+                bail!("job {job}: bad dropout time {d}");
+            }
+        }
+        let b = self.job_mut(job)?;
+        if !b.scratch.open {
+            bail!("job {job}: spawn outside an open round");
+        }
+        b.unique.insert(learner);
+        b.scratch.selected += 1;
+        match dropped_after {
+            Some(d) => {
+                // Partial work, all wasted at the moment it is known lost.
+                b.spent_secs += d;
+                b.wasted_secs += d;
+                b.scratch.dropouts += 1;
+            }
+            None => {
+                b.spent_secs += duration;
+                b.in_flight_secs += duration;
+            }
+        }
+        Ok(())
+    }
+
+    /// One task delivered: its in-flight device-seconds move to exactly one
+    /// terminal bucket — aggregated ([`FATE_TRAINED`]) or wasted
+    /// ([`FATE_CORRUPT`] / [`FATE_DOOMED`]).
+    pub fn delivery(
+        &mut self,
+        job: usize,
+        _learner: u64,
+        duration: f64,
+        mean_loss: f64,
+        fate: u8,
+    ) -> Result<()> {
+        let b = self.job_mut(job)?;
+        b.in_flight_secs -= duration;
+        match fate {
+            FATE_TRAINED => {
+                b.aggregated_secs += duration;
+                b.scratch.losses.push(mean_loss);
+            }
+            FATE_CORRUPT | FATE_DOOMED => {
+                b.wasted_secs += duration;
+                b.scratch.discarded += 1;
+            }
+            other => bail!("job {job}: unknown delivery fate {other}"),
+        }
+        Ok(())
+    }
+
+    /// Close the open round: derives `(fresh, failed, train_loss)` from the
+    /// scratch (the caller logs them; the replay reducer re-derives and
+    /// bit-compares them) and snapshots the accounting buckets into a
+    /// [`JobRoundRec`].
+    pub fn round_end(
+        &mut self,
+        job: usize,
+        round: u64,
+        now: f64,
+        round_duration: f64,
+        eval_loss: Option<f64>,
+        eval_acc: Option<f64>,
+    ) -> Result<(u64, bool, Option<f64>)> {
+        let b = self.job_mut(job)?;
+        if !b.scratch.open || b.scratch.round != round {
+            bail!(
+                "job {job}: round {round} ended but round {} (open={}) was current",
+                b.scratch.round,
+                b.scratch.open
+            );
+        }
+        let fresh = b.scratch.losses.len();
+        let failed = fresh == 0;
+        let train_loss = if fresh == 0 {
+            None
+        } else {
+            Some(b.scratch.losses.iter().sum::<f64>() / fresh as f64)
+        };
+        b.rounds.push(JobRoundRec {
+            round: round as usize,
+            sim_time: now,
+            round_duration,
+            selected: b.scratch.selected,
+            fresh,
+            dropouts: b.scratch.dropouts,
+            discarded: b.scratch.discarded,
+            failed,
+            train_loss,
+            eval_loss,
+            eval_acc,
+            cum_spent_secs: b.spent_secs,
+            cum_aggregated_secs: b.aggregated_secs,
+            cum_wasted_secs: b.wasted_secs,
+            in_flight_secs: b.in_flight_secs,
+        });
+        b.scratch.open = false;
+        Ok((fresh as u64, failed, train_loss))
+    }
+
+    /// Terminal sweep: whatever is still in flight for `job` never got
+    /// aggregated — move it to waste and return it (the engine logs the
+    /// value; the replay reducer bit-compares it).
+    pub fn sweep(&mut self, job: usize) -> Result<f64> {
+        let b = self.job_mut(job)?;
+        let secs = b.in_flight_secs;
+        b.wasted_secs += secs;
+        b.in_flight_secs = 0.0;
+        Ok(secs)
+    }
+
+    /// Fleet totals `(spent, aggregated, wasted, in_flight)` — sequential
+    /// sums in job-id order, so engine and replay produce identical bytes.
+    pub fn fleet_totals(&self) -> (f64, f64, f64, f64) {
+        let mut t = (0.0, 0.0, 0.0, 0.0);
+        for b in &self.jobs {
+            t.0 += b.spent_secs;
+            t.1 += b.aggregated_secs;
+            t.2 += b.wasted_secs;
+            t.3 += b.in_flight_secs;
+        }
+        t
+    }
+
+    /// Freeze the books into the final [`MultiJobResult`].
+    pub fn finish(&self, meta: &[JobMeta], label: &str, policy: &str) -> MultiJobResult {
+        let jobs = self
+            .jobs
+            .iter()
+            .zip(meta)
+            .enumerate()
+            .map(|(j, (b, m))| JobSummary {
+                job: j as u32,
+                selector: m.selector.clone(),
+                mode: m.mode.clone(),
+                target: m.target,
+                priority: m.priority,
+                rounds: b.rounds.clone(),
+                spent_secs: b.spent_secs,
+                aggregated_secs: b.aggregated_secs,
+                wasted_secs: b.wasted_secs,
+                in_flight_secs: b.in_flight_secs,
+                unique_participants: b.unique.len(),
+            })
+            .collect();
+        let (spent, aggregated, wasted, in_flight) = self.fleet_totals();
+        MultiJobResult {
+            label: label.to_string(),
+            policy: policy.to_string(),
+            jobs,
+            fleet_spent_secs: spent,
+            fleet_aggregated_secs: aggregated,
+            fleet_wasted_secs: wasted,
+            fleet_in_flight_secs: in_flight,
+        }
+    }
+}
+
+/// One job's final books and round log.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub job: u32,
+    pub selector: String,
+    pub mode: String,
+    pub target: usize,
+    pub priority: u64,
+    pub rounds: Vec<JobRoundRec>,
+    pub spent_secs: f64,
+    pub aggregated_secs: f64,
+    pub wasted_secs: f64,
+    /// Zero after the terminal sweep; kept so mid-run snapshots close the
+    /// identity too.
+    pub in_flight_secs: f64,
+    pub unique_participants: usize,
+}
+
+/// Full result of one multi-job run: per-job summaries plus fleet totals
+/// (sums over jobs in job-id order).
+#[derive(Clone, Debug)]
+pub struct MultiJobResult {
+    pub label: String,
+    pub policy: String,
+    pub jobs: Vec<JobSummary>,
+    pub fleet_spent_secs: f64,
+    pub fleet_aggregated_secs: f64,
+    pub fleet_wasted_secs: f64,
+    pub fleet_in_flight_secs: f64,
+}
+
+impl MultiJobResult {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("fleet_spent_secs", num(self.fleet_spent_secs)),
+            ("fleet_aggregated_secs", num(self.fleet_aggregated_secs)),
+            ("fleet_wasted_secs", num(self.fleet_wasted_secs)),
+            ("fleet_in_flight_secs", num(self.fleet_in_flight_secs)),
+            (
+                "jobs",
+                arr(self.jobs.iter().map(|j| {
+                    obj(vec![
+                        ("job", num(j.job as f64)),
+                        ("selector", Json::Str(j.selector.clone())),
+                        ("mode", Json::Str(j.mode.clone())),
+                        ("target", num(j.target as f64)),
+                        ("priority", num(j.priority as f64)),
+                        ("spent_secs", num(j.spent_secs)),
+                        ("aggregated_secs", num(j.aggregated_secs)),
+                        ("wasted_secs", num(j.wasted_secs)),
+                        ("in_flight_secs", num(j.in_flight_secs)),
+                        ("unique", num(j.unique_participants as f64)),
+                        (
+                            "rounds",
+                            arr(j.rounds.iter().map(|r| {
+                                obj(vec![
+                                    ("round", num(r.round as f64)),
+                                    ("sim_time", num(r.sim_time)),
+                                    ("round_duration", num(r.round_duration)),
+                                    ("selected", num(r.selected as f64)),
+                                    ("fresh", num(r.fresh as f64)),
+                                    ("dropouts", num(r.dropouts as f64)),
+                                    ("discarded", num(r.discarded as f64)),
+                                    ("failed", Json::Bool(r.failed)),
+                                    (
+                                        "train_loss",
+                                        r.train_loss.map(num).unwrap_or(Json::Null),
+                                    ),
+                                    (
+                                        "eval_loss",
+                                        r.eval_loss.map(num).unwrap_or(Json::Null),
+                                    ),
+                                    ("eval_acc", r.eval_acc.map(num).unwrap_or(Json::Null)),
+                                    ("cum_spent_secs", num(r.cum_spent_secs)),
+                                    ("cum_aggregated_secs", num(r.cum_aggregated_secs)),
+                                    ("cum_wasted_secs", num(r.cum_wasted_secs)),
+                                    ("in_flight_secs", num(r.in_flight_secs)),
+                                ])
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Flatten into a single [`ExperimentResult`] (job-major concatenated
+    /// rounds with running fleet cumulative sums) so the sweep's
+    /// `CellSummary` machinery and report tables work on multi-job cells
+    /// unchanged. The final record's cumulative buckets are patched to the
+    /// fleet totals (like the single-job engine's leftover sweep).
+    pub fn summary_result(&self) -> ExperimentResult {
+        let mut out = ExperimentResult {
+            label: self.label.clone(),
+            perplexity_metric: false,
+            ..Default::default()
+        };
+        let (mut base_spent, mut base_agg, mut base_waste) = (0.0f64, 0.0f64, 0.0f64);
+        for js in &self.jobs {
+            for r in &js.rounds {
+                out.rounds.push(RoundRecord {
+                    round: out.rounds.len(),
+                    sim_time: r.sim_time,
+                    round_duration: r.round_duration,
+                    selected: r.selected,
+                    fresh_updates: r.fresh,
+                    dropouts: r.dropouts,
+                    discarded: r.discarded,
+                    cum_resource_secs: base_spent + r.cum_spent_secs,
+                    cum_waste_secs: base_waste + r.cum_wasted_secs,
+                    unique_participants: js.unique_participants,
+                    failed: r.failed,
+                    train_loss: r.train_loss,
+                    test_accuracy: r.eval_acc,
+                    test_loss: r.eval_loss,
+                    cum_aggregated_secs: Some(base_agg + r.cum_aggregated_secs),
+                    in_flight_secs: Some(r.in_flight_secs),
+                    ..Default::default()
+                });
+            }
+            base_spent += js.spent_secs;
+            base_agg += js.aggregated_secs;
+            base_waste += js.wasted_secs;
+        }
+        if let Some(last) = out.rounds.last_mut() {
+            last.cum_resource_secs = self.fleet_spent_secs;
+            last.cum_waste_secs = self.fleet_wasted_secs;
+            last.cum_aggregated_secs = Some(self.fleet_aggregated_secs);
+        }
+        out
+    }
+
+    /// Compact per-job summary lines (CLI output).
+    pub fn summary(&self) -> String {
+        let mut lines = vec![format!(
+            "{:<28} policy={} jobs={} fleet: spent={:>8.2}h aggregated={:>8.2}h wasted={:>8.2}h",
+            self.label,
+            self.policy,
+            self.jobs.len(),
+            self.fleet_spent_secs / 3600.0,
+            self.fleet_aggregated_secs / 3600.0,
+            self.fleet_wasted_secs / 3600.0,
+        )];
+        for j in &self.jobs {
+            let acc = j
+                .rounds
+                .iter()
+                .rev()
+                .find_map(|r| r.eval_acc)
+                .map(|a| format!("{:.1}%", 100.0 * a))
+                .unwrap_or_else(|| "n/a".into());
+            lines.push(format!(
+                "  job {} {:<8} {:<9} target={:<4} prio={:<3} rounds={:<4} spent={:>8.2}h waste={:>5.1}% unique={:<5} acc={}",
+                j.job,
+                j.selector,
+                j.mode,
+                j.target,
+                j.priority,
+                j.rounds.len(),
+                j.spent_secs / 3600.0,
+                if j.spent_secs > 0.0 { 100.0 * j.wasted_secs / j.spent_secs } else { 0.0 },
+                j.unique_participants,
+                acc,
+            ));
+        }
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_modes_parse_inherit_and_reject() {
+        let oc_base = RoundMode::OverCommit { factor: 1.7 };
+        let dl_base = RoundMode::Deadline { deadline: 45.0 };
+        let async_base = RoundMode::Async { buffer_k: 6, max_staleness: Some(3) };
+
+        // bare kinds inherit same-kind base parameters
+        assert_eq!(
+            parse_job_mode("oc", &oc_base).unwrap(),
+            RoundMode::OverCommit { factor: 1.7 }
+        );
+        assert_eq!(
+            parse_job_mode("dl", &dl_base).unwrap(),
+            RoundMode::Deadline { deadline: 45.0 }
+        );
+        assert_eq!(
+            parse_job_mode("async", &async_base).unwrap(),
+            RoundMode::Async { buffer_k: 6, max_staleness: Some(3) }
+        );
+
+        // bare kinds fall back to stock defaults on a kind switch
+        assert_eq!(
+            parse_job_mode("oc", &dl_base).unwrap(),
+            RoundMode::OverCommit { factor: 1.3 }
+        );
+        assert_eq!(
+            parse_job_mode("dl", &oc_base).unwrap(),
+            RoundMode::Deadline { deadline: 100.0 }
+        );
+        assert_eq!(
+            parse_job_mode("async", &oc_base).unwrap(),
+            RoundMode::Async { buffer_k: 10, max_staleness: None }
+        );
+
+        // explicit parameters win; async keeps the base staleness bound
+        assert_eq!(
+            parse_job_mode("oc1.5", &dl_base).unwrap(),
+            RoundMode::OverCommit { factor: 1.5 }
+        );
+        assert_eq!(
+            parse_job_mode("dl60", &oc_base).unwrap(),
+            RoundMode::Deadline { deadline: 60.0 }
+        );
+        assert_eq!(
+            parse_job_mode("async4", &async_base).unwrap(),
+            RoundMode::Async { buffer_k: 4, max_staleness: Some(3) }
+        );
+
+        for bad in ["warp9", "", "oc0.5", "ocx", "dl0", "dl-5", "async0", "asyncx"] {
+            assert!(parse_job_mode(bad, &oc_base).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn mode_labels_are_compact() {
+        assert_eq!(mode_label(&RoundMode::OverCommit { factor: 1.3 }), "oc1.3");
+        assert_eq!(mode_label(&RoundMode::Deadline { deadline: 60.0 }), "dl60");
+        assert_eq!(
+            mode_label(&RoundMode::Async { buffer_k: 4, max_staleness: None }),
+            "async4"
+        );
+        assert_eq!(
+            mode_label(&RoundMode::Async { buffer_k: 4, max_staleness: Some(8) }),
+            "async4s8"
+        );
+    }
+
+    #[test]
+    fn specs_resolve_overrides_and_defaults() {
+        let mut cfg = ExpConfig::default();
+        cfg.jobs = 3;
+        cfg.target_participants = 5;
+        cfg.job_selectors = vec!["oort".into(), "random".into(), "priority".into()];
+        cfg.job_modes = vec!["oc".into(), "dl60".into(), "async4".into()];
+        cfg.job_targets = vec![4, 2, 6];
+        let specs = resolve_jobs(&cfg).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].selector, "oort");
+        assert_eq!(specs[0].mode, RoundMode::OverCommit { factor: 1.3 });
+        assert_eq!(specs[1].mode, RoundMode::Deadline { deadline: 60.0 });
+        assert_eq!(specs[2].mode, RoundMode::Async { buffer_k: 4, max_staleness: None });
+        assert_eq!(specs.iter().map(|s| s.target).collect::<Vec<_>>(), vec![4, 2, 6]);
+        // empty override vectors: everything inherits the base config
+        cfg.job_selectors.clear();
+        cfg.job_modes.clear();
+        cfg.job_targets.clear();
+        let specs = resolve_jobs(&cfg).unwrap();
+        assert!(specs.iter().all(|s| s.selector == cfg.selector));
+        assert!(specs.iter().all(|s| s.target == 5 && s.priority == 0));
+    }
+
+    #[test]
+    fn fair_share_orders_by_spend_then_id() {
+        let mut claims = vec![
+            JobClaim { job: 2, priority: 0, spent: 10.0 },
+            JobClaim { job: 0, priority: 0, spent: 30.0 },
+            JobClaim { job: 1, priority: 0, spent: 10.0 },
+        ];
+        FairShare.order(&mut claims);
+        assert_eq!(claims.iter().map(|c| c.job).collect::<Vec<_>>(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn strict_priority_orders_by_priority_then_id() {
+        let mut claims = vec![
+            JobClaim { job: 0, priority: 1, spent: 0.0 },
+            JobClaim { job: 1, priority: 9, spent: 50.0 },
+            JobClaim { job: 2, priority: 9, spent: 0.0 },
+        ];
+        StrictPriority.order(&mut claims);
+        assert_eq!(claims.iter().map(|c| c.job).collect::<Vec<_>>(), vec![1, 2, 0]);
+        assert!(policy_by_name("fair").is_some());
+        assert!(policy_by_name("priority").is_some());
+        assert!(policy_by_name("market").is_none());
+    }
+
+    fn identity_gap(b: &JobBook) -> f64 {
+        (b.spent_secs - (b.aggregated_secs + b.wasted_secs + b.in_flight_secs)).abs()
+    }
+
+    #[test]
+    fn book_keeps_the_per_job_identity_through_a_round() {
+        let mut book = MultiJobBook::new(2);
+        book.round_start(0, 0, 0.0).unwrap();
+        // one dropout, one fresh, one straggler, one corrupt
+        book.spawn(0, 1, 40.0, Some(12.5)).unwrap();
+        book.spawn(0, 2, 30.0, None).unwrap();
+        book.spawn(0, 3, 90.0, None).unwrap();
+        book.spawn(0, 4, 20.0, None).unwrap();
+        assert_eq!(identity_gap(book.job(0).unwrap()), 0.0);
+        assert_eq!(book.job(0).unwrap().spent_secs, 12.5 + 30.0 + 90.0 + 20.0);
+        assert_eq!(book.job(0).unwrap().in_flight_secs, 140.0);
+
+        book.delivery(0, 2, 30.0, 0.5, FATE_TRAINED).unwrap();
+        book.delivery(0, 4, 20.0, 0.0, FATE_CORRUPT).unwrap();
+        let (fresh, failed, train_loss) =
+            book.round_end(0, 0, 60.0, 60.0, Some(2.0), Some(0.25)).unwrap();
+        assert_eq!((fresh, failed, train_loss), (1, false, Some(0.5)));
+        // straggler lands after the close
+        book.delivery(0, 3, 90.0, 0.0, FATE_DOOMED).unwrap();
+        assert_eq!(identity_gap(book.job(0).unwrap()), 0.0);
+        assert_eq!(book.sweep(0).unwrap(), 0.0);
+        assert_eq!(book.job(0).unwrap().in_flight_secs, 0.0);
+        let b = book.job(0).unwrap();
+        assert_eq!(b.spent_secs, b.aggregated_secs + b.wasted_secs);
+        assert_eq!(b.aggregated_secs, 30.0);
+        assert_eq!(b.wasted_secs, 12.5 + 20.0 + 90.0);
+        assert_eq!(b.unique_participants(), 4);
+        let rec = &b.rounds[0];
+        assert_eq!((rec.selected, rec.fresh, rec.dropouts, rec.discarded), (4, 1, 1, 1));
+        assert_eq!(rec.eval_acc, Some(0.25));
+        // the untouched job stayed empty
+        assert_eq!(book.job(1).unwrap().spent_secs, 0.0);
+        let (spent, agg, wasted, fly) = book.fleet_totals();
+        assert_eq!((spent, agg, wasted, fly), (152.5, 30.0, 122.5, 0.0));
+    }
+
+    #[test]
+    fn book_rejects_inconsistent_streams() {
+        let mut book = MultiJobBook::new(1);
+        // spawn before any round opened
+        assert!(book.spawn(0, 1, 5.0, None).is_err());
+        book.round_start(0, 0, 0.0).unwrap();
+        // double-open
+        assert!(book.round_start(0, 1, 1.0).is_err());
+        // bad fate code
+        book.spawn(0, 1, 5.0, None).unwrap();
+        assert!(book.delivery(0, 1, 5.0, 0.0, 99).is_err());
+        // round-id mismatch at close
+        assert!(book.round_end(0, 3, 1.0, 1.0, None, None).is_err());
+        // out-of-range job
+        assert!(book.round_start(5, 0, 0.0).is_err());
+        // non-finite durations
+        assert!(book.spawn(0, 2, f64::NAN, None).is_err());
+        assert!(book.spawn(0, 2, 5.0, Some(f64::INFINITY)).is_err());
+    }
+
+    #[test]
+    fn result_serializes_and_flattens() {
+        let mut book = MultiJobBook::new(2);
+        for j in 0..2 {
+            book.round_start(j, 0, 0.0).unwrap();
+            book.spawn(j, (10 + j) as u64, 10.0, None).unwrap();
+            book.delivery(j, (10 + j) as u64, 10.0, 0.5, FATE_TRAINED).unwrap();
+            book.round_end(j, 0, 30.0, 30.0, Some(1.5), Some(0.5)).unwrap();
+            book.sweep(j).unwrap();
+        }
+        let meta = vec![
+            JobMeta { selector: "random".into(), mode: "oc1.3".into(), target: 2, priority: 0 },
+            JobMeta { selector: "oort".into(), mode: "dl60".into(), target: 3, priority: 7 },
+        ];
+        let r = book.finish(&meta, "twojobs", "fair");
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("policy").unwrap().as_str(), Some("fair"));
+        let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[1].get("selector").unwrap().as_str(), Some("oort"));
+        assert_eq!(jobs[1].get("priority").unwrap().as_usize(), Some(7));
+        assert_eq!(
+            parsed.get("fleet_spent_secs").unwrap().as_f64(),
+            Some(r.fleet_spent_secs)
+        );
+
+        let flat = r.summary_result();
+        assert_eq!(flat.rounds.len(), 2);
+        // job-major concatenation with running fleet cums: monotone, final
+        // record pinned to the fleet totals
+        assert!(flat.rounds[1].cum_resource_secs >= flat.rounds[0].cum_resource_secs);
+        assert_eq!(flat.rounds[1].cum_resource_secs, r.fleet_spent_secs);
+        assert_eq!(flat.rounds[1].cum_waste_secs, r.fleet_wasted_secs);
+        assert_eq!(flat.final_accuracy(), Some(0.5));
+    }
+}

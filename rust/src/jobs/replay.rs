@@ -1,0 +1,425 @@
+//! Multi-job replay: re-derive a full [`MultiJobResult`] from a run log
+//! alone, one event at a time.
+//!
+//! Unlike the single-job oracle (`runlog::replay`), which is a deliberately
+//! independent re-implementation of the engines' bookkeeping, the multi-job
+//! reducer drives the *same* [`MultiJobBook`] the engine drives, in the
+//! same event order — engine-vs-replay byte-identity holds by construction,
+//! and what the oracle checks instead is the *stream*: every derived
+//! quantity the engine logged (per-round fresh/failed/train-loss, the
+//! terminal sweep seconds) is re-derived from the raw claim/delivery events
+//! and bit-compared. A log whose derived fields disagree with its own raw
+//! events is a real engine/logging divergence, and replay rejects it.
+//!
+//! The reducer is incremental: the telemetry watcher feeds it segment by
+//! segment and pulls [`MultiJobReducer::live`] snapshots mid-run, exactly
+//! like the single-job `RunReducer`.
+
+use anyhow::{bail, Result};
+
+use crate::runlog::replay::LiveStats;
+use crate::runlog::RunEvent;
+
+use super::{JobMeta, MultiJobBook, MultiJobResult};
+
+/// Rebuild the full multi-job result from a decoded event stream. The
+/// stream must open with `JobSetStart` and close with `JobSetEnd`.
+pub fn replay_multijob(events: &[RunEvent]) -> Result<MultiJobResult> {
+    let mut events = events.iter();
+    let first = events
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("multi-job replay: empty run log"))?;
+    let mut reducer = MultiJobReducer::start(first)?;
+    for ev in events {
+        reducer.step(ev)?;
+    }
+    if !reducer.ended() {
+        bail!("multi-job replay: log ends without JobSetEnd");
+    }
+    Ok(reducer.result())
+}
+
+/// Incremental multi-job event reducer. Construct from the `JobSetStart`
+/// header with [`MultiJobReducer::start`], feed the rest of the stream
+/// through [`MultiJobReducer::step`].
+pub struct MultiJobReducer {
+    label: String,
+    policy: String,
+    njobs: usize,
+    /// `jobs * rounds` — every job runs the same round count.
+    rounds_total: u64,
+    /// Static job specs, filled by the `JobStart` events (job-id order).
+    meta: Vec<JobMeta>,
+    book: MultiJobBook,
+    ended: bool,
+    /// Latest simulated clock witnessed (round/spawn events carry it).
+    now: f64,
+    rounds_done: usize,
+}
+
+impl MultiJobReducer {
+    /// Start reducing from the stream's first event, which must be the
+    /// `JobSetStart` header.
+    pub fn start(ev: &RunEvent) -> Result<MultiJobReducer> {
+        let RunEvent::JobSetStart { label, jobs, policy, rounds, eval_every } = ev else {
+            bail!("multi-job replay: log must open with JobSetStart, got {ev:?}");
+        };
+        if *jobs == 0 {
+            bail!("multi-job replay: header promises zero jobs");
+        }
+        if *eval_every == 0 {
+            bail!("multi-job replay: eval_every must be >= 1");
+        }
+        Ok(MultiJobReducer {
+            label: label.clone(),
+            policy: policy.clone(),
+            njobs: *jobs as usize,
+            rounds_total: jobs * rounds,
+            meta: Vec::with_capacity(*jobs as usize),
+            book: MultiJobBook::new(*jobs as usize),
+            ended: false,
+            now: 0.0,
+            rounds_done: 0,
+        })
+    }
+
+    /// Consume one post-header event. Reducer state after an error is
+    /// unspecified; consumers should stop reducing.
+    pub fn step(&mut self, ev: &RunEvent) -> Result<()> {
+        if self.ended {
+            bail!("multi-job replay: event after JobSetEnd: {ev:?}");
+        }
+        match ev {
+            RunEvent::JobStart { job, selector, mode, target, priority } => {
+                if *job != self.meta.len() as u64 || *job >= self.njobs as u64 {
+                    bail!(
+                        "multi-job replay: JobStart for job {job}, expected {} of {}",
+                        self.meta.len(),
+                        self.njobs
+                    );
+                }
+                self.meta.push(JobMeta {
+                    selector: selector.clone(),
+                    mode: mode.clone(),
+                    target: *target as usize,
+                    priority: *priority,
+                });
+            }
+            RunEvent::JobRoundStart { job, round, now } => {
+                self.book.round_start(*job as usize, *round, *now)?;
+                self.now = *now;
+            }
+            RunEvent::JobSpawn { job, learner, now, duration, dropped_after, corrupt: _ } => {
+                self.book.spawn(*job as usize, *learner, *duration, *dropped_after)?;
+                self.now = *now;
+            }
+            RunEvent::JobDelivery { job, learner, duration, mean_loss, fate } => {
+                self.book.delivery(*job as usize, *learner, *duration, *mean_loss, *fate)?;
+            }
+            RunEvent::JobRoundEnd {
+                job,
+                round,
+                now,
+                round_duration,
+                fresh,
+                failed,
+                train_loss,
+                eval_loss,
+                eval_acc,
+            } => {
+                // Re-derive the round aggregates from the raw events and
+                // bit-compare against what the engine logged: any drift is
+                // a real bookkeeping divergence.
+                let (r_fresh, r_failed, r_loss) = self.book.round_end(
+                    *job as usize,
+                    *round,
+                    *now,
+                    *round_duration,
+                    *eval_loss,
+                    *eval_acc,
+                )?;
+                if r_fresh != *fresh || r_failed != *failed {
+                    bail!(
+                        "multi-job replay divergence: job {job} round {round} replayed \
+                         fresh={r_fresh} failed={r_failed}, log says fresh={fresh} \
+                         failed={failed}"
+                    );
+                }
+                if r_loss.map(f64::to_bits) != train_loss.map(f64::to_bits) {
+                    bail!(
+                        "multi-job replay divergence: job {job} round {round} replayed \
+                         train_loss {r_loss:?}, log says {train_loss:?}"
+                    );
+                }
+                self.now = *now;
+                self.rounds_done += 1;
+            }
+            RunEvent::JobSweep { job, secs } => {
+                let r_secs = self.book.sweep(*job as usize)?;
+                if r_secs.to_bits() != secs.to_bits() {
+                    bail!(
+                        "multi-job replay divergence: job {job} sweep replayed \
+                         {r_secs}, log says {secs}"
+                    );
+                }
+            }
+            RunEvent::JobSetEnd => {
+                if self.meta.len() != self.njobs {
+                    bail!(
+                        "multi-job replay: JobSetEnd after {} JobStart headers, \
+                         expected {}",
+                        self.meta.len(),
+                        self.njobs
+                    );
+                }
+                self.ended = true;
+            }
+            RunEvent::JobSetStart { .. } => {
+                bail!("multi-job replay: second JobSetStart header");
+            }
+            other => {
+                bail!("multi-job replay: single-job event {other:?} in a multi-job log")
+            }
+        }
+        Ok(())
+    }
+
+    /// `JobSetEnd` has been consumed cleanly.
+    pub fn ended(&self) -> bool {
+        self.ended
+    }
+
+    /// Run label from the header.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The live per-job books (telemetry reads per-job gauges off these).
+    pub fn book(&self) -> &MultiJobBook {
+        &self.book
+    }
+
+    /// Point-in-time view for dashboards. Fleet-level sums; job-granular
+    /// state is in [`MultiJobReducer::result`]. `unique_participants` sums
+    /// the per-job sets (a device serving two jobs counts once per job).
+    pub fn live(&self) -> LiveStats {
+        let (spent, aggregated, wasted, in_flight) = self.book.fleet_totals();
+        let unique = (0..self.book.len())
+            .filter_map(|j| self.book.job(j))
+            .map(|b| b.unique_participants())
+            .sum();
+        LiveStats {
+            rounds_done: self.rounds_done,
+            rounds_total: self.rounds_total,
+            spent,
+            aggregated,
+            wasted,
+            in_flight_secs: in_flight,
+            outstanding: 0,
+            buffer_fill: 0,
+            unique_participants: unique,
+            sim_time: self.now,
+            current_round: None,
+            complete: self.ended,
+        }
+    }
+
+    /// The books as a result — final after `JobSetEnd`, best-effort partial
+    /// before it (jobs whose `JobStart` has not arrived yet get placeholder
+    /// specs), so the watcher can render a truncated log.
+    pub fn result(&self) -> MultiJobResult {
+        let mut meta = self.meta.clone();
+        while meta.len() < self.book.len() {
+            meta.push(JobMeta {
+                selector: String::new(),
+                mode: String::new(),
+                target: 0,
+                priority: 0,
+            });
+        }
+        self.book.finish(&meta, &self.label, &self.policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runlog::{FATE_CORRUPT, FATE_TRAINED};
+
+    fn header(jobs: u64) -> RunEvent {
+        RunEvent::JobSetStart {
+            label: "mj".into(),
+            jobs,
+            policy: "fair".into(),
+            rounds: 1,
+            eval_every: 1,
+        }
+    }
+
+    fn job_start(job: u64) -> RunEvent {
+        RunEvent::JobStart {
+            job,
+            selector: "random".into(),
+            mode: "oc1.3".into(),
+            target: 2,
+            priority: 0,
+        }
+    }
+
+    fn sample_log() -> Vec<RunEvent> {
+        vec![
+            header(2),
+            job_start(0),
+            job_start(1),
+            RunEvent::JobRoundStart { job: 0, round: 0, now: 0.0 },
+            RunEvent::JobRoundStart { job: 1, round: 0, now: 0.0 },
+            RunEvent::JobSpawn {
+                job: 0,
+                learner: 3,
+                now: 0.0,
+                duration: 10.0,
+                dropped_after: None,
+                corrupt: false,
+            },
+            RunEvent::JobSpawn {
+                job: 0,
+                learner: 4,
+                now: 0.0,
+                duration: 30.0,
+                dropped_after: Some(12.5),
+                corrupt: false,
+            },
+            RunEvent::JobSpawn {
+                job: 1,
+                learner: 5,
+                now: 0.0,
+                duration: 20.0,
+                dropped_after: None,
+                corrupt: true,
+            },
+            RunEvent::JobDelivery {
+                job: 0,
+                learner: 3,
+                duration: 10.0,
+                mean_loss: 0.5,
+                fate: FATE_TRAINED,
+            },
+            RunEvent::JobDelivery {
+                job: 1,
+                learner: 5,
+                duration: 20.0,
+                mean_loss: 0.0,
+                fate: FATE_CORRUPT,
+            },
+            RunEvent::JobRoundEnd {
+                job: 0,
+                round: 0,
+                now: 10.0,
+                round_duration: 10.0,
+                fresh: 1,
+                failed: false,
+                train_loss: Some(0.5),
+                eval_loss: Some(1.0),
+                eval_acc: Some(0.25),
+            },
+            RunEvent::JobRoundEnd {
+                job: 1,
+                round: 0,
+                now: 25.0,
+                round_duration: 25.0,
+                fresh: 0,
+                failed: true,
+                train_loss: None,
+                eval_loss: Some(2.0),
+                eval_acc: Some(0.25),
+            },
+            RunEvent::JobSweep { job: 0, secs: 0.0 },
+            RunEvent::JobSweep { job: 1, secs: 0.0 },
+            RunEvent::JobSetEnd,
+        ]
+    }
+
+    #[test]
+    fn rebuilds_per_job_books_from_the_stream() {
+        let r = replay_multijob(&sample_log()).unwrap();
+        assert_eq!(r.label, "mj");
+        assert_eq!(r.policy, "fair");
+        assert_eq!(r.jobs.len(), 2);
+        let j0 = &r.jobs[0];
+        assert_eq!(j0.selector, "random");
+        assert_eq!(j0.spent_secs, 22.5, "10 delivered + 12.5 partial dropout");
+        assert_eq!(j0.aggregated_secs, 10.0);
+        assert_eq!(j0.wasted_secs, 12.5);
+        assert_eq!(j0.rounds.len(), 1);
+        assert_eq!(j0.rounds[0].dropouts, 1);
+        let j1 = &r.jobs[1];
+        assert_eq!(j1.spent_secs, 20.0);
+        assert_eq!(j1.wasted_secs, 20.0, "corrupt delivery is all waste");
+        assert!(j1.rounds[0].failed);
+        assert_eq!(r.fleet_spent_secs, 42.5);
+        assert_eq!(
+            r.fleet_spent_secs,
+            r.fleet_aggregated_secs + r.fleet_wasted_secs + r.fleet_in_flight_secs
+        );
+    }
+
+    #[test]
+    fn rejects_divergent_round_aggregates() {
+        let mut log = sample_log();
+        // claim job 0 merged two fresh updates when the stream shows one
+        if let RunEvent::JobRoundEnd { fresh, .. } = &mut log[10] {
+            *fresh = 2;
+        } else {
+            panic!("fixture drifted");
+        }
+        let err = replay_multijob(&log).unwrap_err().to_string();
+        assert!(err.contains("divergence"), "{err}");
+    }
+
+    #[test]
+    fn rejects_divergent_sweep_seconds() {
+        let mut log = sample_log();
+        if let RunEvent::JobSweep { secs, .. } = &mut log[13] {
+            *secs = 7.0;
+        } else {
+            panic!("fixture drifted");
+        }
+        let err = replay_multijob(&log).unwrap_err().to_string();
+        assert!(err.contains("sweep"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_headers_and_truncation() {
+        assert!(replay_multijob(&[]).is_err());
+        // single-job header in front
+        let err = replay_multijob(&[RunEvent::RunEnd]).unwrap_err().to_string();
+        assert!(err.contains("JobSetStart"), "{err}");
+        // truncated: no JobSetEnd
+        let mut log = sample_log();
+        log.pop();
+        let err = replay_multijob(&log).unwrap_err().to_string();
+        assert!(err.contains("JobSetEnd"), "{err}");
+        // single-job event in a multi-job stream
+        let log = vec![header(1), job_start(0), RunEvent::RoundStart { round: 0, now: 0.0 }];
+        let err = replay_multijob(&log).unwrap_err().to_string();
+        assert!(err.contains("single-job"), "{err}");
+    }
+
+    #[test]
+    fn live_snapshot_tracks_the_fleet_mid_stream() {
+        let log = sample_log();
+        let mut red = MultiJobReducer::start(&log[0]).unwrap();
+        for ev in &log[1..10] {
+            red.step(ev).unwrap();
+        }
+        let live = red.live();
+        assert!(!live.complete);
+        assert_eq!(live.rounds_total, 2);
+        assert_eq!(live.rounds_done, 0);
+        assert_eq!(live.spent, 42.5);
+        assert_eq!(live.unique_participants, 3);
+        // partial result renders without panicking
+        let partial = red.result();
+        assert_eq!(partial.jobs.len(), 2);
+    }
+}

@@ -38,6 +38,7 @@ pub mod aggregation;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod jobs;
 pub mod runlog;
 pub mod scenario;
 pub mod sweep;

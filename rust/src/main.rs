@@ -127,6 +127,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     // coordinator shard count; results are byte-identical for any K
     // (0 = autodetect from the core count, 1 = the flat path)
     cfg.coord_shards = args.usize_or("coord-shards", cfg.coord_shards);
+    // multi-job: N concurrent jobs over one shared device fleet (1 = the
+    // classic single-job engines)
+    cfg.jobs = args.usize_or("jobs", cfg.jobs);
+    if let Some(p) = args.str_opt("job-policy") {
+        cfg.job_policy = p.into();
+    }
+    if let Some(sels) = args.str_opt("job-selectors") {
+        cfg.job_selectors = sels.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(modes) = args.str_opt("job-modes") {
+        cfg.job_modes = modes.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(t) = args.str_opt("job-targets") {
+        cfg.job_targets = t
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| anyhow!("--job-targets expects comma-separated integers"))?;
+    }
+    if let Some(p) = args.str_opt("job-priorities") {
+        cfg.job_priorities = p
+            .split(',')
+            .map(|x| x.trim().parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| anyhow!("--job-priorities expects comma-separated integers"))?;
+    }
     if let Some(p) = args.str_opt("partition") {
         cfg.partition = PartitionScheme::parse(p).ok_or_else(|| anyhow!("bad --partition"))?;
     }
@@ -193,6 +219,27 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(dir) => Some(Box::new(relay::runlog::DirSink::create(dir)?)),
         None => None,
     };
+    if cfg.jobs > 1 {
+        // N concurrent jobs over one shared fleet, arbitrated per
+        // eligibility delta; seed-deterministic and byte-identical at any
+        // --workers / --train-workers / --coord-shards
+        if args.bool("live") {
+            return Err(anyhow!(
+                "--live is not wired for multi-job runs; pass --runlog DIR and tail it \
+                 with `relay watch DIR`"
+            ));
+        }
+        let result = match sink {
+            Some(sink) => relay::jobs::run_jobset_logged(cfg, exec, sink)?,
+            None => relay::jobs::run_jobset(cfg, exec)?,
+        };
+        println!("{}", result.summary());
+        if let Some(out) = args.str_opt("out") {
+            std::fs::write(out, result.to_json().to_string())?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
     let result = if args.bool("live") {
         // opt-in live telemetry: the run feeds an in-process observer and a
         // side thread prints one status line per interval to stderr. The
@@ -317,6 +364,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         coord_shards
             .push(k.parse::<usize>().map_err(|_| anyhow!("bad --coord-shards entry '{k}'"))?);
     }
+    // multi-job axis: cells with jobs > 1 run through the jobset engine
+    let mut jobs = Vec::new();
+    for j in args.list_or("jobs", &base.jobs.to_string()) {
+        jobs.push(j.parse::<usize>().map_err(|_| anyhow!("bad --jobs entry '{j}'"))?);
+    }
 
     let spec = GridSpec {
         label: args.str_or("label", "sweep"),
@@ -325,6 +377,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         avails,
         partitions,
         coord_shards,
+        jobs,
         seeds,
         base,
     };
@@ -1124,8 +1177,23 @@ fn cmd_replay(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| anyhow!("usage: relay replay <log-dir | config.json> [--out r.json]"))?;
     let path = std::path::Path::new(target);
+    if !path.exists() {
+        // a nonexistent path used to fall into the JSON-config branch and
+        // die on an opaque read error; name the real problem instead
+        return Err(anyhow!(
+            "'{target}' does not exist — pass a --runlog directory or a JSON config \
+             (if the run has not started yet, there is nothing to replay; \
+             `relay watch {target}` waits for the log instead)"
+        ));
+    }
     if path.is_dir() {
         let segments = read_dir_segments(path)?;
+        if segments.is_empty() {
+            return Err(anyhow!(
+                "run log directory '{target}' has no segments yet — the run has not \
+                 written anything to replay (tail it live with `relay watch {target}`)"
+            ));
+        }
         let (events, stats) = decode_segments(&segments);
         println!("decoded {} event(s) from {} segment(s)", stats.frames, stats.segments);
         if !stats.clean {
@@ -1133,6 +1201,17 @@ fn cmd_replay(args: &Args) -> Result<()> {
                 "run log is corrupt, refusing to replay a partial stream: {}",
                 stats.note.unwrap_or_default()
             ));
+        }
+        // a JobSetStart header routes to the multi-job reducer; everything
+        // else is a single-job log
+        if matches!(events.first(), Some(relay::runlog::RunEvent::JobSetStart { .. })) {
+            let result = relay::jobs::replay_multijob(&events)?;
+            println!("{}", result.summary());
+            if let Some(out) = args.str_opt("out") {
+                std::fs::write(out, result.to_json().to_string())?;
+                println!("wrote {out}");
+            }
+            return Ok(());
         }
         let result = replay(&events)?;
         println!("{}", result.summary());
@@ -1204,8 +1283,22 @@ fn cmd_watch(args: &Args) -> Result<()> {
     let mut stdout = std::io::stdout();
     let stream = watch_dir(std::path::Path::new(target), &opts, &mut stdout)?;
     if let Some(out) = args.str_opt("out") {
-        let result = stream.result()?;
-        std::fs::write(out, result.to_json().to_string())?;
+        // multi-job logs export the full per-job result (byte-matching
+        // `relay replay <dir> --out`); single-job logs the ExperimentResult
+        let text = match stream.multi_result() {
+            Some(m) if stream.complete() && stream.error().is_none() => {
+                m.to_json().to_string()
+            }
+            Some(_) => {
+                return Err(anyhow!(
+                    "multi-job run is incomplete or the stream degraded ({}); cannot \
+                     export a final result",
+                    stream.error().unwrap_or("still in flight")
+                ))
+            }
+            None => stream.result()?.to_json().to_string(),
+        };
+        std::fs::write(out, text)?;
         println!("wrote {out}");
     }
     Ok(())
@@ -1238,14 +1331,20 @@ USAGE:
                are byte-identical at any width — 1 = strictly serial)
               [--coord-shards K]   (coordinator shard count; results are
                byte-identical for any K — 0 = autodetect, 1 = the flat path)
+              [--jobs N [--job-policy fair|priority] [--job-selectors a,b,..]
+               [--job-modes oc,dl40,async3,..] [--job-targets 8,4,..]
+               [--job-priorities 9,1,..]]   (N concurrent jobs over one shared
+               device fleet; a device busy on job A is ineligible for job B;
+               per-job overrides are comma lists with one entry per job)
   relay sweep [--variant tiny|speech|...] [--selectors random,oort,priority,safa] [--modes oc,dl,async]
               [--avails dyn|all|dyn,all] [--partitions iid,...] [--seeds 3] [--learners N] [--rounds N]
               [--workers N] [--deadline SECS] [--oc-factor F] [--buffer-k K] [--max-staleness T]
-              [--faults spec] [--report results/sweep.json] [--quiet]
+              [--jobs 1,4] [--faults spec] [--report results/sweep.json] [--quiet]
   relay scenario                (list the registered scenario presets)
   relay fuzz  [--iters 100] [--seed N] [--smoke] [--corpus DIR] [--max-failures 5] [--sabotage] [--verbose]
   relay replay <log-dir | config.json | corpus-entry.json> [--out r.json]
-              (log dir: re-derive the result from events alone; config/corpus
+              (log dir: re-derive the result from events alone — multi-job
+               logs replay through the per-job reducer; config/corpus
                entry: run the engine with logging + byte-compare the replay)
   relay watch <log-dir> [--once | --follow] [--jsonl] [--interval-ms 500]
               [--max-polls N] [--out r.json]

@@ -129,6 +129,10 @@ pub struct Population {
     workers: usize,
     /// Present once an engine runs incrementally (`sync_to`).
     eligible: Option<EligibleState>,
+    /// Per-learner job ownership while busy (`NO_JOB` = unowned) — the
+    /// multi-job eligibility dimension. Sized lazily on the first
+    /// `mark_busy_for` claim; single-job engines never allocate it.
+    owner: Vec<u32>,
 }
 
 impl Population {
@@ -155,8 +159,12 @@ impl Population {
             model_bytes,
             workers,
             eligible: None,
+            owner: Vec::new(),
         }
     }
+
+    /// Sentinel for "owned by no job".
+    pub const NO_JOB: u32 = u32::MAX;
 
     pub fn len(&self) -> usize {
         self.registry.len()
@@ -345,6 +353,29 @@ impl Population {
         }
     }
 
+    /// Multi-job variant of [`Population::mark_busy`]: the claim also
+    /// records which job owns the device for the busy interval, giving the
+    /// job-set engine the "a device busy on job A is ineligible for job B"
+    /// dimension for free — a claimed device leaves the one shared eligible
+    /// set, so no other job can select it until the busy bucket re-admits
+    /// it. Single-job engines keep calling `mark_busy` (no allocation).
+    pub fn mark_busy_for(&mut self, id: usize, until: f64, job: u32, sel: &mut dyn Selector) {
+        if self.owner.is_empty() {
+            self.owner = vec![Self::NO_JOB; self.registry.len()];
+        }
+        self.owner[id] = job;
+        self.mark_busy(id, until, sel);
+    }
+
+    /// The job occupying `id` while its busy interval is still open at
+    /// `now`; `None` = idle (or a single-job run, which never claims).
+    pub fn job_owner(&self, id: usize, now: f64) -> Option<u32> {
+        if self.registry.busy_until(id) <= now {
+            return None;
+        }
+        self.owner.get(id).copied().filter(|&j| j != Self::NO_JOB)
+    }
+
     /// Incremental hook: `id`'s task ended (arrival or dropout) at `now` —
     /// the learner is selectable again if available and not cooling.
     pub fn release(&mut self, id: usize, round: usize, now: f64, sel: &mut dyn Selector) {
@@ -519,6 +550,26 @@ mod tests {
         // busy expired too
         p.sync_to(4, 100.0, &mut sel);
         assert!(p.eligible_set().contains(2));
+    }
+
+    #[test]
+    fn job_ownership_tracks_the_busy_interval() {
+        let n = 6;
+        let mut p = mk_population(n, Availability::All, AvailMode::AllAvail);
+        let mut sel = Recorder::new();
+        p.sync_to(0, 0.0, &mut sel);
+        assert_eq!(p.job_owner(2, 0.0), None, "unclaimed devices have no owner");
+        p.mark_busy_for(2, 50.0, 3, &mut sel);
+        p.mark_busy(4, 50.0, &mut sel); // single-job claim: never owned
+        assert_eq!(p.job_owner(2, 10.0), Some(3));
+        assert_eq!(p.job_owner(4, 10.0), None);
+        assert!(!p.eligible_set().contains(2), "claimed devices leave the shared set");
+        // the owner claim ends exactly with the busy interval
+        assert_eq!(p.job_owner(2, 50.0), None);
+        p.sync_to(1, 50.0, &mut sel);
+        assert!(p.eligible_set().contains(2));
+        p.mark_busy_for(2, 80.0, 1, &mut sel);
+        assert_eq!(p.job_owner(2, 60.0), Some(1), "re-claims overwrite the owner");
     }
 
     #[test]

@@ -119,6 +119,46 @@ pub enum RunEvent {
     SweepLeftover { secs: f64 },
     /// The run finished cleanly.
     RunEnd,
+    /// Multi-job: the job-set header (must be the stream's first event —
+    /// `relay replay`/`watch` route on it). `policy` is the arbitration
+    /// policy name; `rounds`/`eval_every` apply to every job.
+    JobSetStart { label: String, jobs: u64, policy: String, rounds: u64, eval_every: u64 },
+    /// Multi-job: one job's static spec (`mode` is the compact spec label,
+    /// e.g. "oc1.3"; one per job, in job-id order, right after the header).
+    JobStart { job: u64, selector: String, mode: String, target: u64, priority: u64 },
+    /// Multi-job: job `job` opened round `round` at virtual time `now`.
+    JobRoundStart { job: u64, round: u64, now: f64 },
+    /// Multi-job: a device was claimed for `job`; `dropped_after` is the
+    /// crash point when the device will die mid-task instead of delivering.
+    JobSpawn {
+        job: u64,
+        learner: u64,
+        now: f64,
+        duration: f64,
+        dropped_after: Option<f64>,
+        corrupt: bool,
+    },
+    /// Multi-job: a task completion arrived at the server; `fate` is
+    /// `FATE_TRAINED` (aggregated), `FATE_CORRUPT` (discarded), or
+    /// `FATE_DOOMED` (arrived after its cohort closed — wasted).
+    JobDelivery { job: u64, learner: u64, duration: f64, mean_loss: f64, fate: u8 },
+    /// Multi-job: job `job` closed round `round`. Carries the engine's
+    /// computed per-round aggregates so replay reproduces them bit-exactly.
+    JobRoundEnd {
+        job: u64,
+        round: u64,
+        now: f64,
+        round_duration: f64,
+        fresh: u64,
+        failed: bool,
+        train_loss: Option<f64>,
+        eval_loss: Option<f64>,
+        eval_acc: Option<f64>,
+    },
+    /// Multi-job: job `job`'s in-flight seconds swept to waste at run end.
+    JobSweep { job: u64, secs: f64 },
+    /// Multi-job: the job set finished cleanly.
+    JobSetEnd,
 }
 
 // ---------------------------------------------------------------- codec --
@@ -396,6 +436,73 @@ pub fn encode_event(ev: &RunEvent, buf: &mut Vec<u8>) {
             put_f64(buf, *secs);
         }
         RunEvent::RunEnd => buf.push(19),
+        RunEvent::JobSetStart { label, jobs, policy, rounds, eval_every } => {
+            buf.push(20);
+            put_str(buf, label);
+            put_u64v(buf, *jobs);
+            put_str(buf, policy);
+            put_u64v(buf, *rounds);
+            put_u64v(buf, *eval_every);
+        }
+        RunEvent::JobStart { job, selector, mode, target, priority } => {
+            buf.push(21);
+            put_u64v(buf, *job);
+            put_str(buf, selector);
+            put_str(buf, mode);
+            put_u64v(buf, *target);
+            put_u64v(buf, *priority);
+        }
+        RunEvent::JobRoundStart { job, round, now } => {
+            buf.push(22);
+            put_u64v(buf, *job);
+            put_u64v(buf, *round);
+            put_f64(buf, *now);
+        }
+        RunEvent::JobSpawn { job, learner, now, duration, dropped_after, corrupt } => {
+            buf.push(23);
+            put_u64v(buf, *job);
+            put_u64v(buf, *learner);
+            put_f64(buf, *now);
+            put_f64(buf, *duration);
+            put_opt_f64(buf, *dropped_after);
+            put_bool(buf, *corrupt);
+        }
+        RunEvent::JobDelivery { job, learner, duration, mean_loss, fate } => {
+            buf.push(24);
+            put_u64v(buf, *job);
+            put_u64v(buf, *learner);
+            put_f64(buf, *duration);
+            put_f64(buf, *mean_loss);
+            buf.push(*fate);
+        }
+        RunEvent::JobRoundEnd {
+            job,
+            round,
+            now,
+            round_duration,
+            fresh,
+            failed,
+            train_loss,
+            eval_loss,
+            eval_acc,
+        } => {
+            buf.push(25);
+            put_u64v(buf, *job);
+            put_u64v(buf, *round);
+            put_f64(buf, *now);
+            put_f64(buf, *round_duration);
+            put_u64v(buf, *fresh);
+            put_bool(buf, *failed);
+            put_opt_f64(buf, *train_loss);
+            put_opt_f64(buf, *eval_loss);
+            put_opt_f64(buf, *eval_acc);
+        }
+        RunEvent::JobSweep { job, secs } => {
+            buf.push(26);
+            put_u64v(buf, *job);
+            put_f64(buf, *secs);
+        }
+        RunEvent::JobSetEnd => buf.push(27),
     }
 }
 
@@ -472,6 +579,49 @@ pub fn decode_event(payload: &[u8]) -> Result<RunEvent> {
         17 => RunEvent::AsyncBurn { end: r.f64()? },
         18 => RunEvent::SweepLeftover { secs: r.f64()? },
         19 => RunEvent::RunEnd,
+        20 => RunEvent::JobSetStart {
+            label: r.string()?,
+            jobs: r.u64v()?,
+            policy: r.string()?,
+            rounds: r.u64v()?,
+            eval_every: r.u64v()?,
+        },
+        21 => RunEvent::JobStart {
+            job: r.u64v()?,
+            selector: r.string()?,
+            mode: r.string()?,
+            target: r.u64v()?,
+            priority: r.u64v()?,
+        },
+        22 => RunEvent::JobRoundStart { job: r.u64v()?, round: r.u64v()?, now: r.f64()? },
+        23 => RunEvent::JobSpawn {
+            job: r.u64v()?,
+            learner: r.u64v()?,
+            now: r.f64()?,
+            duration: r.f64()?,
+            dropped_after: r.opt_f64()?,
+            corrupt: r.bool()?,
+        },
+        24 => RunEvent::JobDelivery {
+            job: r.u64v()?,
+            learner: r.u64v()?,
+            duration: r.f64()?,
+            mean_loss: r.f64()?,
+            fate: r.u8()?,
+        },
+        25 => RunEvent::JobRoundEnd {
+            job: r.u64v()?,
+            round: r.u64v()?,
+            now: r.f64()?,
+            round_duration: r.f64()?,
+            fresh: r.u64v()?,
+            failed: r.bool()?,
+            train_loss: r.opt_f64()?,
+            eval_loss: r.opt_f64()?,
+            eval_acc: r.opt_f64()?,
+        },
+        26 => RunEvent::JobSweep { job: r.u64v()?, secs: r.f64()? },
+        27 => RunEvent::JobSetEnd,
         t => bail!("unknown event tag {t}"),
     };
     if !r.done() {
@@ -861,6 +1011,60 @@ mod tests {
             RunEvent::AsyncBurn { end: 99.0 },
             RunEvent::SweepLeftover { secs: 17.25 },
             RunEvent::RunEnd,
+            RunEvent::JobSetStart {
+                label: "storm".into(),
+                jobs: 4,
+                policy: "fair".into(),
+                rounds: 6,
+                eval_every: 3,
+            },
+            RunEvent::JobStart {
+                job: 1,
+                selector: "oort".into(),
+                mode: "dl60".into(),
+                target: 8,
+                priority: 2,
+            },
+            RunEvent::JobRoundStart { job: 1, round: 0, now: 5.5 },
+            RunEvent::JobSpawn {
+                job: 1,
+                learner: 7,
+                now: 5.5,
+                duration: 42.0,
+                dropped_after: Some(10.5),
+                corrupt: false,
+            },
+            RunEvent::JobDelivery {
+                job: 1,
+                learner: 7,
+                duration: 42.0,
+                mean_loss: 0.75,
+                fate: FATE_TRAINED,
+            },
+            RunEvent::JobRoundEnd {
+                job: 1,
+                round: 0,
+                now: 65.5,
+                round_duration: 60.0,
+                fresh: 1,
+                failed: false,
+                train_loss: Some(0.75),
+                eval_loss: Some(2.0),
+                eval_acc: Some(0.25),
+            },
+            RunEvent::JobRoundEnd {
+                job: 2,
+                round: 3,
+                now: 400.0,
+                round_duration: 100.0,
+                fresh: 0,
+                failed: true,
+                train_loss: None,
+                eval_loss: None,
+                eval_acc: None,
+            },
+            RunEvent::JobSweep { job: 1, secs: 13.5 },
+            RunEvent::JobSetEnd,
         ]
     }
 

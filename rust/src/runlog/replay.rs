@@ -147,6 +147,12 @@ impl RunReducer {
                     staleness_threshold,
                 } = ev
                 else {
+                    if matches!(ev, RunEvent::JobSetStart { .. }) {
+                        bail!(
+                            "replay: this is a multi-job log (JobSetStart header) — \
+                             use the multi-job reducer (jobs::replay_multijob)"
+                        );
+                    }
                     bail!("replay: log must open with RunStart, got {ev:?}");
                 };
                 if *eval_every == 0 {
@@ -946,6 +952,20 @@ mod tests {
         assert_eq!(r.cum_aggregated_secs, Some(10.0));
         assert_eq!(r.in_flight_secs, Some(0.0));
         assert_eq!(r.test_accuracy, Some(0.25));
+    }
+
+    #[test]
+    fn points_multijob_logs_at_the_multijob_reducer() {
+        let log = vec![RunEvent::JobSetStart {
+            label: "m".into(),
+            jobs: 2,
+            policy: "fair".into(),
+            rounds: 1,
+            eval_every: 1,
+        }];
+        let err = replay(&log).unwrap_err().to_string();
+        assert!(err.contains("multi-job"), "{err}");
+        assert!(err.contains("replay_multijob"), "{err}");
     }
 
     #[test]

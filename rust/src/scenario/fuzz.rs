@@ -42,6 +42,7 @@ use crate::coordinator::{
     run_experiment, run_experiment_logged, run_reference_experiment, Coordinator,
 };
 use crate::data::partition::PartitionScheme;
+use crate::jobs::{replay_multijob, run_jobset, run_jobset_logged, MultiJobResult};
 use crate::metrics::ExperimentResult;
 use crate::runlog::{decode_segments, replay, MemSink};
 use crate::runtime::{builtin_variant, Executor, NativeExecutor};
@@ -133,6 +134,32 @@ pub fn sample_config(rng: &mut Rng, smoke: bool) -> ExpConfig {
         && !matches!(cfg.mode, RoundMode::Async { .. })
         && rng.bool(0.2);
     cfg.seed = rng.next_u64() % 100_000;
+    // multi-job axis: a quarter of the cases run N concurrent jobs over one
+    // shared fleet through the jobset engine (which rejects oracle/apt)
+    if rng.bool(0.25) {
+        let jobs = rng.range(2, 5);
+        cfg.jobs = jobs;
+        cfg.oracle = false;
+        cfg.apt = false;
+        cfg.job_policy = if rng.bool(0.5) { "fair" } else { "priority" }.into();
+        if rng.bool(0.6) {
+            cfg.job_priorities = (0..jobs).map(|_| rng.below(10) as u64).collect();
+        }
+        if rng.bool(0.5) {
+            let sels = ["random", "oort", "priority", "safa"];
+            cfg.job_selectors =
+                (0..jobs).map(|_| sels[rng.below(sels.len())].to_string()).collect();
+        }
+        if rng.bool(0.5) {
+            let specs = ["oc", "oc1.5", "dl40", "async2", "async3"];
+            cfg.job_modes =
+                (0..jobs).map(|_| specs[rng.below(specs.len())].to_string()).collect();
+        }
+        if rng.bool(0.5) {
+            let cap = cfg.total_learners.min(8);
+            cfg.job_targets = (0..jobs).map(|_| rng.range(1, cap + 1)).collect();
+        }
+    }
     if rng.bool(0.65) {
         let mut f = FaultConfig { fault_seed: rng.next_u64() % 100_000, ..Default::default() };
         if rng.bool(0.4) {
@@ -275,8 +302,101 @@ fn check_result(cfg: &ExpConfig, r: &ExperimentResult) -> Result<(), String> {
     Ok(())
 }
 
+/// Run one multi-job config at the given worker counts (and, optionally, a
+/// coordinator shard override).
+fn run_multijob(
+    cfg: &ExpConfig,
+    workers: usize,
+    train_workers: usize,
+    coord_shards: Option<usize>,
+) -> Result<MultiJobResult, String> {
+    let mut c = cfg.clone();
+    c.workers = workers;
+    c.train_workers = train_workers;
+    if let Some(k) = coord_shards {
+        c.coord_shards = k;
+    }
+    run_jobset(c, exec()).map_err(|e| format!("jobset run failed: {e:#}"))
+}
+
+/// The multi-job invariant battery: JSON validity, per-job accounting
+/// identity after the terminal sweep, fleet totals = sum over jobs,
+/// workers / train-workers / coord-shards byte-invariance, and the
+/// logged-run → decode → `replay_multijob` byte-identity loop.
+fn run_multijob_checks(cfg: &ExpConfig) -> Result<(), String> {
+    let r1 = run_multijob(cfg, 1, 1, None)?;
+    let j1 = r1.to_json().to_string();
+    Json::parse(&j1).map_err(|e| format!("multi-job output is not valid JSON: {e}"))?;
+    if j1.contains("NaN") || j1.contains(":inf") || j1.contains(":-inf") {
+        return Err("non-finite value leaked into multi-job JSON".into());
+    }
+    if r1.jobs.len() != cfg.jobs {
+        return Err(format!("{} job summaries != cfg.jobs {}", r1.jobs.len(), cfg.jobs));
+    }
+    let tol = |x: f64| REL_EPS * x.abs().max(1.0);
+    let mut fleet_spent = 0.0f64;
+    for (j, job) in r1.jobs.iter().enumerate() {
+        if job.in_flight_secs.abs() > tol(job.spent_secs) {
+            return Err(format!(
+                "job {j}: {} in-flight seconds survived the terminal sweep",
+                job.in_flight_secs
+            ));
+        }
+        let closed = job.aggregated_secs + job.wasted_secs + job.in_flight_secs;
+        if (job.spent_secs - closed).abs() > tol(job.spent_secs) {
+            return Err(format!(
+                "job {j} identity broken: spent {} != aggregated {} + wasted {} \
+                 + in-flight {}",
+                job.spent_secs, job.aggregated_secs, job.wasted_secs, job.in_flight_secs
+            ));
+        }
+        fleet_spent += job.spent_secs;
+    }
+    if (r1.fleet_spent_secs - fleet_spent).abs() > tol(fleet_spent) {
+        return Err(format!(
+            "fleet spent {} != sum of per-job spent {fleet_spent}",
+            r1.fleet_spent_secs
+        ));
+    }
+    let r8 = run_multijob(cfg, 8, 8, None)?;
+    if r8.to_json().to_string() != j1 {
+        return Err("multi-job workers-1-vs-8 outputs diverged".into());
+    }
+    for k in [2usize, 7] {
+        let rk = run_multijob(cfg, 4, 1, Some(k))?;
+        if rk.to_json().to_string() != j1 {
+            return Err(format!("multi-job coord-shards {k} output diverged"));
+        }
+    }
+    let sink = MemSink::default();
+    let mut lc = cfg.clone();
+    lc.workers = 1;
+    lc.train_workers = 1;
+    let logged = run_jobset_logged(lc, exec(), Box::new(sink.clone()))
+        .map_err(|e| format!("logged jobset run failed: {e:#}"))?;
+    if logged.to_json().to_string() != j1 {
+        return Err("enabling the run log perturbed the multi-job bytes".into());
+    }
+    let (events, stats) = decode_segments(&sink.segments());
+    if !stats.clean {
+        return Err(format!(
+            "multi-job run log did not decode cleanly: {}",
+            stats.note.unwrap_or_default()
+        ));
+    }
+    let replayed =
+        replay_multijob(&events).map_err(|e| format!("multi-job replay failed: {e:#}"))?;
+    if replayed.to_json().to_string() != j1 {
+        return Err("multi-job replay diverged from the engine output".into());
+    }
+    Ok(())
+}
+
 fn run_checks(cfg: &ExpConfig) -> Result<(), String> {
     cfg.validate().map_err(|e| format!("validate: {e:#}"))?;
+    if cfg.jobs > 1 {
+        return run_multijob_checks(cfg);
+    }
     let (r1, totals) = run_engine(cfg, 1, 1)?;
     let j1 = r1.to_json().to_string();
     Json::parse(&j1).map_err(|e| format!("output is not valid JSON: {e}"))?;
@@ -364,6 +484,11 @@ pub fn check_case(cfg: &ExpConfig) -> Option<String> {
 /// The planted fake invariant ("no stale update is ever aggregated") used
 /// to demo and test the find → shrink → corpus pipeline.
 pub fn sabotage_check(cfg: &ExpConfig) -> Option<String> {
+    if cfg.jobs > 1 {
+        // the planted invariant is defined over the single-job engine's
+        // per-round stale counts; multi-job samples just pass
+        return None;
+    }
     let (r, _) = match run_engine(cfg, 1, 1) {
         Ok(v) => v,
         Err(e) => return Some(e),
@@ -402,6 +527,28 @@ pub fn shrink_transforms() -> Vec<Box<dyn Fn(&ExpConfig) -> ExpConfig>> {
         with(|c| c.apt = false),
         with(|c| c.oracle = false),
         with(|c| c.coord_shards = 0),
+        with(|c| {
+            c.jobs = 1;
+            c.job_policy = "fair".into();
+            c.job_priorities.clear();
+            c.job_selectors.clear();
+            c.job_modes.clear();
+            c.job_targets.clear();
+        }),
+        with(|c| {
+            if c.jobs > 2 {
+                c.jobs -= 1;
+                c.job_priorities.truncate(c.jobs);
+                c.job_selectors.truncate(c.jobs);
+                c.job_modes.truncate(c.jobs);
+                c.job_targets.truncate(c.jobs);
+            }
+        }),
+        with(|c| {
+            c.job_selectors.clear();
+            c.job_modes.clear();
+            c.job_targets.clear();
+        }),
         with(|c| {
             c.use_saa = false;
             c.staleness_threshold = None;

@@ -168,6 +168,38 @@ pub fn all() -> Vec<ScenarioPreset> {
         cfg: c.with_label("mega-async"),
     });
 
+    // -- multi-job cells ---------------------------------------------------
+    let mut c = base();
+    c.total_learners = 80;
+    c.rounds = 6;
+    c.jobs = 4;
+    c.job_policy = "fair".into();
+    c.job_selectors =
+        ["random", "oort", "priority", "random"].iter().map(|s| s.to_string()).collect();
+    c.job_modes = ["oc1.3", "dl40", "async3", "oc"].iter().map(|s| s.to_string()).collect();
+    c.job_targets = vec![6, 5, 4, 3];
+    c.faults = FaultConfig { crash: 0.1, corrupt: 0.05, fault_seed: 6, ..Default::default() };
+    out.push(ScenarioPreset {
+        name: "job-storm",
+        summary: "four mixed-mode jobs arbitrating one churning fleet under faults",
+        cfg: c.with_label("job-storm"),
+    });
+
+    let mut c = base();
+    c.total_learners = 12;
+    c.rounds = 5;
+    c.target_participants = 8;
+    c.jobs = 3;
+    c.job_policy = "priority".into();
+    c.job_priorities = vec![9, 5, 1];
+    c.job_targets = vec![8, 8, 8];
+    c.avail = AvailMode::AllAvail;
+    out.push(ScenarioPreset {
+        name: "starved-low-priority",
+        summary: "strict-priority jobs oversubscribing a pool too small for every target",
+        cfg: c.with_label("starved-low-priority"),
+    });
+
     // -- fuzz anchor -------------------------------------------------------
     let mut c = base();
     c.total_learners = 16;
@@ -225,6 +257,21 @@ mod tests {
         assert!(covered(|f| f.delay));
         assert!(covered(|f| f.corrupt));
         assert!(covered(|f| f.duplicate));
+    }
+
+    #[test]
+    fn multijob_presets_are_registered_with_contending_targets() {
+        let storm = by_name("job-storm").unwrap().cfg;
+        assert_eq!(storm.jobs, 4);
+        assert_eq!(storm.job_modes.len(), 4);
+        assert!(storm.faults.is_active());
+        let starved = by_name("starved-low-priority").unwrap().cfg;
+        assert_eq!(starved.job_policy, "priority");
+        let total: usize = starved.job_targets.iter().sum();
+        assert!(
+            total > starved.total_learners,
+            "the starvation preset must oversubscribe the fleet"
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{AvailMode, ExpConfig, RoundMode};
 use crate::coordinator::run_experiment;
+use crate::jobs::run_jobset;
 use crate::data::partition::PartitionScheme;
 use crate::metrics::{CellSummary, ExperimentResult};
 use crate::runtime::Executor;
@@ -46,6 +47,10 @@ pub struct GridSpec {
     /// any K, so multi-K grids measure coordination cost, never accuracy).
     /// Cells carry a `-k{K}` label suffix only when this axis has > 1 entry.
     pub coord_shards: Vec<usize>,
+    /// Concurrent-job counts (multi-job axis: cells with > 1 job run the
+    /// whole set through `jobs::run_jobset` over one shared fleet). Cells
+    /// carry a `-j{J}` label suffix only when this axis has > 1 entry.
+    pub jobs: Vec<usize>,
     pub seeds: Vec<u64>,
 }
 
@@ -59,6 +64,7 @@ impl GridSpec {
             avails: vec![base.avail],
             partitions: vec![base.partition],
             coord_shards: vec![base.coord_shards],
+            jobs: vec![base.jobs],
             seeds: vec![base.seed],
             base,
         }
@@ -70,6 +76,7 @@ impl GridSpec {
             * self.avails.len()
             * self.partitions.len()
             * self.coord_shards.len().max(1)
+            * self.jobs.len().max(1)
     }
 
     pub fn total_runs(&self) -> usize {
@@ -77,64 +84,104 @@ impl GridSpec {
     }
 
     /// Expand into per-cell config groups, cell-major / seed-minor, in a
-    /// fixed axis order (selector, mode, avail, partition, coord-shards) so
-    /// reports are reproducible run-to-run.
+    /// fixed axis order (selector, mode, avail, partition, coord-shards,
+    /// jobs) so reports are reproducible run-to-run.
+    ///
+    /// Labels are injective over the grid: axes that degrade to a single
+    /// point suppress their token (`-k{K}`, `-j{J}`, the fault suffix), so
+    /// two distinct cells *can* render the same base label — e.g. a
+    /// repeated axis value, or two `RoundMode`s that format alike. Any
+    /// repeat gets a `#2`, `#3`, … disambiguator ('#' never occurs in
+    /// axis-derived tokens), so a report never silently merges cells.
     pub fn expand(&self) -> Vec<GridCell> {
-        // a legacy spec constructed with an empty coord axis behaves like
-        // the single-point axis at the base value
+        // a legacy spec constructed with an empty coord/jobs axis behaves
+        // like the single-point axis at the base value
         let shard_axis: Vec<usize> = if self.coord_shards.is_empty() {
             vec![self.base.coord_shards]
         } else {
             self.coord_shards.clone()
         };
+        let jobs_axis: Vec<usize> = if self.jobs.is_empty() {
+            vec![self.base.jobs]
+        } else {
+            self.jobs.clone()
+        };
+        let mut seen: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
         let mut cells = Vec::with_capacity(self.cells());
         for sel in &self.selectors {
             for mode in &self.modes {
                 for avail in &self.avails {
                     for part in &self.partitions {
                         for &shards in &shard_axis {
-                            let mut label = format!(
-                                "{sel}-{}-{}-{}",
-                                mode_label(mode),
-                                avail_label(*avail),
-                                part.label()
-                            );
-                            // a multi-K grid is a coordination-perf sweep:
-                            // keep the K in the cell key (single-K grids
-                            // keep their pre-axis labels)
-                            if shard_axis.len() > 1 {
-                                label = format!("{label}-k{shards}");
-                            }
-                            // fault-injected grids carry the fault mix in the
-                            // cell key, so faulty and clean sweeps never collide
-                            // in a report
-                            if self.base.faults.is_active() {
-                                label = format!("{label}-{}", self.base.faults.label());
-                            }
-                            let mut runs = Vec::with_capacity(self.seeds.len());
-                            for &seed in &self.seeds {
-                                let mut c = self.base.clone();
-                                if sel == "relay" {
-                                    c = c.relay();
-                                } else {
-                                    c.selector = sel.clone();
+                            for &jobs in &jobs_axis {
+                                let mut label = format!(
+                                    "{sel}-{}-{}-{}",
+                                    mode_label(mode),
+                                    avail_label(*avail),
+                                    part.label()
+                                );
+                                // a multi-K grid is a coordination-perf sweep:
+                                // keep the K in the cell key (single-K grids
+                                // keep their pre-axis labels)
+                                if shard_axis.len() > 1 {
+                                    label = format!("{label}-k{shards}");
                                 }
-                                c.mode = *mode;
-                                c.avail = *avail;
-                                c.partition = *part;
-                                c.coord_shards = shards;
-                                c.seed = seed;
-                                c.label = format!("{label}/s{seed}");
-                                runs.push(c);
+                                if jobs_axis.len() > 1 {
+                                    label = format!("{label}-j{jobs}");
+                                }
+                                // fault-injected grids carry the fault mix in
+                                // the cell key, so faulty and clean sweeps
+                                // never collide in a report
+                                if self.base.faults.is_active() {
+                                    label = format!("{label}-{}", self.base.faults.label());
+                                }
+                                let n = seen.entry(label.clone()).or_insert(0);
+                                *n += 1;
+                                if *n > 1 {
+                                    label = format!("{label}#{n}");
+                                }
+                                let mut runs = Vec::with_capacity(self.seeds.len());
+                                for &seed in &self.seeds {
+                                    let mut c = self.base.clone();
+                                    if sel == "relay" {
+                                        c = c.relay();
+                                    } else {
+                                        c.selector = sel.clone();
+                                    }
+                                    c.mode = *mode;
+                                    c.avail = *avail;
+                                    c.partition = *part;
+                                    c.coord_shards = shards;
+                                    c.jobs = jobs;
+                                    // per-job override vectors must be empty
+                                    // or jobs-long; when the axis moves the
+                                    // job count away from the base's, the
+                                    // base overrides no longer apply
+                                    if c.job_priorities.len() != jobs {
+                                        c.job_priorities.clear();
+                                    }
+                                    if c.job_selectors.len() != jobs {
+                                        c.job_selectors.clear();
+                                    }
+                                    if c.job_modes.len() != jobs {
+                                        c.job_modes.clear();
+                                    }
+                                    if c.job_targets.len() != jobs {
+                                        c.job_targets.clear();
+                                    }
+                                    c.seed = seed;
+                                    c.label = format!("{label}/s{seed}");
+                                    runs.push(c);
+                                }
+                                cells.push(GridCell {
+                                    label,
+                                    selector: sel.clone(),
+                                    mode: mode_label(mode),
+                                    avail: avail_label(*avail).to_string(),
+                                    partition: part.label(),
+                                    runs,
+                                });
                             }
-                            cells.push(GridCell {
-                                label,
-                                selector: sel.clone(),
-                                mode: mode_label(mode),
-                                avail: avail_label(*avail).to_string(),
-                                partition: part.label(),
-                                runs,
-                            });
                         }
                     }
                 }
@@ -280,8 +327,14 @@ pub fn run_many(
                 cfg.label.clone()
             };
             move || {
-                let r = run_experiment(cfg, exec)
-                    .with_context(|| format!("sweep run '{label}' failed"));
+                // multi-job cells run the whole job set over one shared
+                // fleet and flatten its books into the common result shape
+                let r = if cfg.jobs > 1 {
+                    run_jobset(cfg, exec).map(|r| r.summary_result())
+                } else {
+                    run_experiment(cfg, exec)
+                }
+                .with_context(|| format!("sweep run '{label}' failed"));
                 let k = done_ref.fetch_add(1, Ordering::SeqCst) + 1;
                 if progress {
                     match &r {
@@ -388,6 +441,7 @@ mod tests {
             avails: vec![AvailMode::AllAvail],
             partitions: vec![PartitionScheme::UniformIid],
             coord_shards: vec![0],
+            jobs: vec![1],
             seeds: vec![1, 2, 3],
             base: base(),
         };
@@ -459,6 +513,79 @@ mod tests {
         let cells = legacy.expand();
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].runs[0].coord_shards, legacy.base.coord_shards);
+    }
+
+    #[test]
+    fn jobs_axis_expands_labels_and_routes_overrides() {
+        let mut b = base();
+        b.jobs = 2;
+        b.job_targets = vec![3, 2];
+        let mut spec = GridSpec::new(b);
+        spec.jobs = vec![1, 2];
+        let cells = spec.expand();
+        assert_eq!(spec.cells(), 2);
+        assert_eq!(cells[0].label, "random-oc1.3-dyn-iid-j1");
+        assert_eq!(cells[1].label, "random-oc1.3-dyn-iid-j2");
+        // jobs=1 cells drop the now-mismatched per-job overrides; jobs=2
+        // cells keep them — both expansions must pass validation
+        assert_eq!(cells[0].runs[0].jobs, 1);
+        assert!(cells[0].runs[0].job_targets.is_empty());
+        assert_eq!(cells[1].runs[0].job_targets, vec![3, 2]);
+        for c in &cells {
+            c.runs[0].validate().unwrap();
+        }
+        // a single-point axis keeps the pre-axis labels
+        let single = GridSpec::new(base()).expand();
+        assert_eq!(single[0].label, "random-oc1.3-dyn-iid");
+    }
+
+    #[test]
+    fn degraded_mixed_grids_keep_labels_injective() {
+        // Every way the label tokens can degrade at once: a repeated mode
+        // that formats identically, a repeated shard value whose -k token
+        // matches, and a repeated jobs value. Distinct cells must never
+        // share a report key.
+        let spec = GridSpec {
+            label: "clash".into(),
+            selectors: vec!["random".into(), "random".into()],
+            modes: vec![
+                RoundMode::OverCommit { factor: 1.3 },
+                RoundMode::OverCommit { factor: 1.3 },
+            ],
+            avails: vec![AvailMode::AllAvail],
+            partitions: vec![PartitionScheme::UniformIid],
+            coord_shards: vec![4, 4],
+            jobs: vec![2, 2],
+            seeds: vec![1],
+            base: base(),
+        };
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 16);
+        let mut labels: Vec<&str> = cells.iter().map(|c| c.label.as_str()).collect();
+        labels.sort_unstable();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(labels.len(), before, "sweep cell labels collided: {labels:?}");
+        // per-run labels inherit the disambiguated cell key
+        assert!(cells[1].runs[0].label.contains('#'), "{}", cells[1].runs[0].label);
+    }
+
+    #[test]
+    fn multijob_cells_run_through_the_jobset_engine() {
+        use crate::runtime::{builtin_variant, NativeExecutor};
+        let mut spec = GridSpec::new(base());
+        spec.jobs = vec![1, 2];
+        spec.avails = vec![AvailMode::AllAvail];
+        let exec: Arc<dyn Executor> =
+            Arc::new(NativeExecutor::new(builtin_variant("tiny")));
+        let r = run_grid(&spec, exec, &SweepOpts { workers: 2, progress: false }).unwrap();
+        assert_eq!(r.runs, 2);
+        assert_eq!(r.cells.len(), 2);
+        for c in &r.cells {
+            assert_eq!(c.seeds, 1);
+            assert!(c.mean_resource_hours > 0.0, "cell {} spent nothing", c.label);
+        }
+        assert!(Json::parse(&r.to_json().to_string()).is_ok());
     }
 
     #[test]

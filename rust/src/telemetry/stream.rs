@@ -24,9 +24,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::jobs::{MultiJobReducer, MultiJobResult};
 use crate::metrics::ExperimentResult;
 use crate::runlog::replay::{LiveStats, RunReducer};
-use crate::runlog::{EventObserver, RunEvent, FATE_DOOMED};
+use crate::runlog::{EventObserver, RunEvent, FATE_DOOMED, FATE_TRAINED};
 use crate::scenario::faults::FaultKind;
 use crate::util::json::{num, obj, s, Json};
 
@@ -67,6 +68,9 @@ fn fault_counter_name(kind: u8) -> &'static str {
 /// [`result`]: TelemetryStream::result
 pub struct TelemetryStream {
     reducer: RunReducer,
+    /// Multi-job logs (`JobSetStart` header) route here instead of the
+    /// single-job reducer; decided by the stream's first event.
+    multi: Option<MultiJobReducer>,
     registry: MetricsRegistry,
     events: u64,
     error: Option<String>,
@@ -86,6 +90,7 @@ impl TelemetryStream {
     pub fn new() -> TelemetryStream {
         TelemetryStream {
             reducer: RunReducer::new(),
+            multi: None,
             registry: MetricsRegistry::new(),
             events: 0,
             error: None,
@@ -101,6 +106,37 @@ impl TelemetryStream {
         self.started_wall.get_or_insert_with(Instant::now);
         self.observe_event(ev);
         if self.error.is_some() {
+            return;
+        }
+        // A `JobSetStart` opening the stream routes everything to the
+        // multi-job reducer; mid-stream it falls through to the single-job
+        // reducer, whose header check rejects it with a pointed message.
+        if self.multi.is_none()
+            && self.reducer.header().is_none()
+            && matches!(ev, RunEvent::JobSetStart { .. })
+        {
+            match MultiJobReducer::start(ev) {
+                Ok(m) => self.multi = Some(m),
+                Err(e) => self.error = Some(format!("{e:#}")),
+            }
+            return;
+        }
+        if let Some(multi) = &mut self.multi {
+            if let Err(e) = multi.step(ev) {
+                self.error = Some(format!("{e:#}"));
+                return;
+            }
+            let book = multi.book();
+            for j in 0..book.len() {
+                if let Some(b) = book.job(j) {
+                    self.registry.set_gauge(&format!("job{j}.spent"), b.spent_secs);
+                    self.registry
+                        .set_gauge(&format!("job{j}.aggregated"), b.aggregated_secs);
+                    self.registry.set_gauge(&format!("job{j}.wasted"), b.wasted_secs);
+                    self.registry
+                        .set_gauge(&format!("job{j}.in_flight"), b.in_flight_secs);
+                }
+            }
             return;
         }
         let wasted_before = self.reducer.wasted();
@@ -188,11 +224,35 @@ impl TelemetryStream {
                 self.registry.inc("burns");
                 self.registry.inc("rounds_closed");
             }
+            RunEvent::JobSpawn { duration, dropped_after, .. } => {
+                self.registry.inc("selected");
+                let secs = dropped_after.unwrap_or(*duration);
+                self.registry.observe("task_secs", TASK_SECS_BUCKETS, secs);
+                if dropped_after.is_some() {
+                    self.registry.inc("dropouts");
+                }
+            }
+            RunEvent::JobDelivery { fate, .. } => {
+                if *fate == FATE_TRAINED {
+                    self.registry.inc("trained");
+                }
+            }
+            RunEvent::JobRoundEnd { eval_loss, .. } => {
+                self.registry.inc("rounds_closed");
+                if eval_loss.is_some() {
+                    self.registry.inc("evals");
+                }
+            }
             RunEvent::RunStart { .. }
             | RunEvent::RoundStart { .. }
             | RunEvent::KernelPop { .. }
             | RunEvent::SweepLeftover { .. }
-            | RunEvent::RunEnd => {}
+            | RunEvent::RunEnd
+            | RunEvent::JobSetStart { .. }
+            | RunEvent::JobStart { .. }
+            | RunEvent::JobRoundStart { .. }
+            | RunEvent::JobSweep { .. }
+            | RunEvent::JobSetEnd => {}
         }
     }
 
@@ -234,9 +294,20 @@ impl TelemetryStream {
         self.events
     }
 
-    /// The stream saw a clean `RunEnd`.
+    /// Run label from whichever header the stream saw (empty before any).
+    pub fn label(&self) -> &str {
+        match &self.multi {
+            Some(m) => m.label(),
+            None => self.reducer.label(),
+        }
+    }
+
+    /// The stream saw a clean `RunEnd` (or `JobSetEnd` on multi-job logs).
     pub fn complete(&self) -> bool {
-        self.reducer.ended()
+        match &self.multi {
+            Some(m) => m.ended(),
+            None => self.reducer.ended(),
+        }
     }
 
     /// The first reduction error, if the stream turned out malformed.
@@ -245,7 +316,10 @@ impl TelemetryStream {
     }
 
     pub fn live(&self) -> LiveStats {
-        self.reducer.live()
+        match &self.multi {
+            Some(m) => m.live(),
+            None => self.reducer.live(),
+        }
     }
 
     pub fn registry(&self) -> &MetricsRegistry {
@@ -258,6 +332,9 @@ impl TelemetryStream {
 
     /// Human-readable mode name from the header, once seen.
     pub fn mode_name(&self) -> Option<&'static str> {
+        if self.multi.is_some() {
+            return Some("multi-job");
+        }
         self.reducer.header().map(|h| match h.mode {
             0 => "over-commit",
             1 => "deadline",
@@ -272,7 +349,19 @@ impl TelemetryStream {
         if let Some(e) = &self.error {
             bail!("telemetry stream is degraded: {e}");
         }
+        if let Some(m) = &self.multi {
+            if !m.ended() {
+                bail!("telemetry stream: multi-job run still in flight");
+            }
+            return Ok(m.result().summary_result());
+        }
         self.reducer.result()
+    }
+
+    /// The full per-job result, when the stream is a multi-job log. Partial
+    /// (best-effort) before `JobSetEnd`, exactly like the reducer's.
+    pub fn multi_result(&self) -> Option<MultiJobResult> {
+        self.multi.as_ref().map(|m| m.result())
     }
 
     /// One machine-readable snapshot of everything the stream knows.
@@ -286,7 +375,7 @@ impl TelemetryStream {
             .unwrap_or(0.0);
         obj(vec![
             ("format", s("relay-telemetry-v1")),
-            ("label", s(self.reducer.label())),
+            ("label", s(self.label())),
             (
                 "mode",
                 self.mode_name().map(s).unwrap_or(Json::Null),
@@ -488,6 +577,157 @@ mod tests {
         let hist = stream.registry().histogram("staleness").expect("staleness hist");
         assert_eq!(hist.count(), 1);
         assert_eq!(hist.sum(), 1.0, "delivered one round late");
+    }
+
+    fn multijob_log() -> Vec<RunEvent> {
+        use crate::runlog::FATE_CORRUPT;
+        vec![
+            RunEvent::JobSetStart {
+                label: "mj".into(),
+                jobs: 2,
+                policy: "fair".into(),
+                rounds: 1,
+                eval_every: 1,
+            },
+            RunEvent::JobStart {
+                job: 0,
+                selector: "random".into(),
+                mode: "oc1.3".into(),
+                target: 2,
+                priority: 0,
+            },
+            RunEvent::JobStart {
+                job: 1,
+                selector: "oort".into(),
+                mode: "dl40".into(),
+                target: 1,
+                priority: 0,
+            },
+            RunEvent::JobRoundStart { job: 0, round: 0, now: 0.0 },
+            RunEvent::JobRoundStart { job: 1, round: 0, now: 0.0 },
+            RunEvent::JobSpawn {
+                job: 0,
+                learner: 3,
+                now: 0.0,
+                duration: 10.0,
+                dropped_after: None,
+                corrupt: false,
+            },
+            RunEvent::JobSpawn {
+                job: 0,
+                learner: 4,
+                now: 0.0,
+                duration: 30.0,
+                dropped_after: Some(12.5),
+                corrupt: false,
+            },
+            RunEvent::JobSpawn {
+                job: 1,
+                learner: 5,
+                now: 0.0,
+                duration: 20.0,
+                dropped_after: None,
+                corrupt: true,
+            },
+            RunEvent::JobDelivery {
+                job: 0,
+                learner: 3,
+                duration: 10.0,
+                mean_loss: 0.5,
+                fate: FATE_TRAINED,
+            },
+            RunEvent::JobDelivery {
+                job: 1,
+                learner: 5,
+                duration: 20.0,
+                mean_loss: 0.0,
+                fate: FATE_CORRUPT,
+            },
+            RunEvent::JobRoundEnd {
+                job: 0,
+                round: 0,
+                now: 10.0,
+                round_duration: 10.0,
+                fresh: 1,
+                failed: false,
+                train_loss: Some(0.5),
+                eval_loss: Some(1.0),
+                eval_acc: Some(0.25),
+            },
+            RunEvent::JobRoundEnd {
+                job: 1,
+                round: 0,
+                now: 25.0,
+                round_duration: 25.0,
+                fresh: 0,
+                failed: true,
+                train_loss: None,
+                eval_loss: Some(2.0),
+                eval_acc: Some(0.25),
+            },
+            RunEvent::JobSweep { job: 0, secs: 0.0 },
+            RunEvent::JobSweep { job: 1, secs: 0.0 },
+            RunEvent::JobSetEnd,
+        ]
+    }
+
+    #[test]
+    fn multijob_stream_routes_to_the_multijob_reducer() {
+        use crate::jobs::replay_multijob;
+        let log = multijob_log();
+        let mut stream = TelemetryStream::new();
+        for ev in &log {
+            stream.step(ev);
+        }
+        assert!(stream.complete());
+        assert!(stream.error().is_none(), "{:?}", stream.error());
+        assert_eq!(stream.mode_name(), Some("multi-job"));
+        // summary result == what the standalone multi-job replay derives
+        let streamed = stream.result().expect("stream result");
+        let replayed = replay_multijob(&log).expect("multijob replay");
+        assert_eq!(
+            streamed.to_json().to_string(),
+            replayed.summary_result().to_json().to_string()
+        );
+        let full = stream.multi_result().expect("multi result");
+        assert_eq!(full.jobs.len(), 2);
+        assert_eq!(full.fleet_spent_secs, 42.5);
+        // fleet-level live view and the per-job gauges agree with the books
+        let live = stream.live();
+        assert!(live.complete);
+        assert_eq!(live.spent, 42.5);
+        assert_eq!(stream.registry().gauge("job0.spent"), 22.5);
+        assert_eq!(stream.registry().gauge("job1.wasted"), 20.0);
+        // event-kind counters: 3 claims, 1 trained delivery, 1 dropout
+        assert_eq!(stream.registry().counter("selected"), 3);
+        assert_eq!(stream.registry().counter("trained"), 1);
+        assert_eq!(stream.registry().counter("dropouts"), 1);
+        assert_eq!(stream.registry().counter("rounds_closed"), 2);
+        assert_eq!(stream.registry().counter("evals"), 2);
+        // snapshot renders valid JSON with the multi-job label and mode
+        let snap = stream.snapshot().to_string();
+        let parsed = Json::parse(&snap).unwrap();
+        assert_eq!(parsed.get("label").and_then(|l| l.as_str()), Some("mj"));
+        assert_eq!(parsed.get("mode").and_then(|m| m.as_str()), Some("multi-job"));
+    }
+
+    #[test]
+    fn multijob_stream_degrades_on_divergent_logs() {
+        let mut log = multijob_log();
+        // claim job 0 merged two fresh updates when the stream shows one
+        if let RunEvent::JobRoundEnd { fresh, .. } = &mut log[10] {
+            *fresh = 2;
+        } else {
+            panic!("fixture drifted");
+        }
+        let mut stream = TelemetryStream::new();
+        for ev in &log {
+            stream.step(ev);
+        }
+        assert!(stream.error().is_some());
+        assert!(!stream.complete());
+        assert!(stream.result().is_err());
+        assert!(Json::parse(&stream.snapshot().to_string()).is_ok());
     }
 
     #[test]

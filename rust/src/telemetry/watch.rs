@@ -152,10 +152,10 @@ fn render(
     writeln!(
         out,
         "watch: {} [{}] — {status}",
-        if stream.reducer().label().is_empty() {
+        if stream.label().is_empty() {
             "(no header yet)"
         } else {
-            stream.reducer().label()
+            stream.label()
         },
         stream.mode_name().unwrap_or("?"),
     )?;
@@ -314,6 +314,115 @@ mod tests {
         }
         let last = parse_snapshot(lines.last().expect("last line")).expect("last snapshot");
         assert_eq!(last.get("complete").and_then(|c| c.as_bool()), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_reports_waiting_instead_of_erroring() {
+        // `relay watch DIR` before the run has created DIR: no decode
+        // garbage, no nonzero exit — a dashboard saying it is waiting.
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-nodir-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut out = Vec::new();
+        let opts = WatchOpts { once: true, ..WatchOpts::default() };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("watch missing dir");
+        assert_eq!(stream.events(), 0);
+        assert!(!stream.complete());
+        assert!(stream.error().is_none());
+        let text = String::from_utf8(out).expect("utf8 dashboard");
+        assert!(text.contains("waiting for events"), "{text}");
+    }
+
+    #[test]
+    fn first_segment_after_watcher_start_is_picked_up() {
+        // the watcher starts against a directory that does not exist yet;
+        // the run creates it and writes its first segment afterwards — the
+        // follow loop must pick the log up and run to completion
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-late-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let writer_dir = dir.clone();
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            write_log(&writer_dir, &tiny_log());
+        });
+        let mut out = Vec::new();
+        let opts = WatchOpts {
+            interval_ms: 5,
+            max_polls: Some(2000),
+            ..WatchOpts::default()
+        };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("watch late log");
+        writer.join().expect("writer thread");
+        assert!(stream.complete(), "watcher must catch a log born after it");
+        assert!(stream.error().is_none());
+        assert!(stream.result().is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn multijob_log_watches_to_completion() {
+        let dir = std::env::temp_dir()
+            .join(format!("relay-watch-mj-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let events = vec![
+            RunEvent::JobSetStart {
+                label: "mj-watch".into(),
+                jobs: 1,
+                policy: "fair".into(),
+                rounds: 1,
+                eval_every: 1,
+            },
+            RunEvent::JobStart {
+                job: 0,
+                selector: "random".into(),
+                mode: "oc1.3".into(),
+                target: 1,
+                priority: 0,
+            },
+            RunEvent::JobRoundStart { job: 0, round: 0, now: 0.0 },
+            RunEvent::JobSpawn {
+                job: 0,
+                learner: 2,
+                now: 0.0,
+                duration: 5.0,
+                dropped_after: None,
+                corrupt: false,
+            },
+            RunEvent::JobDelivery {
+                job: 0,
+                learner: 2,
+                duration: 5.0,
+                mean_loss: 0.4,
+                fate: crate::runlog::FATE_TRAINED,
+            },
+            RunEvent::JobRoundEnd {
+                job: 0,
+                round: 0,
+                now: 5.0,
+                round_duration: 5.0,
+                fresh: 1,
+                failed: false,
+                train_loss: Some(0.4),
+                eval_loss: Some(1.0),
+                eval_acc: Some(0.5),
+            },
+            RunEvent::JobSweep { job: 0, secs: 0.0 },
+            RunEvent::JobSetEnd,
+        ];
+        write_log(&dir, &events);
+        let mut out = Vec::new();
+        let opts = WatchOpts { once: true, ..WatchOpts::default() };
+        let stream = watch_dir(&dir, &opts, &mut out).expect("watch multi-job");
+        assert!(stream.complete());
+        assert!(stream.error().is_none(), "{:?}", stream.error());
+        let full = stream.multi_result().expect("multi result");
+        assert_eq!(full.label, "mj-watch");
+        assert_eq!(full.jobs.len(), 1);
+        let text = String::from_utf8(out).expect("utf8 dashboard");
+        assert!(text.contains("multi-job"), "{text}");
+        assert!(text.contains("mj-watch"), "{text}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

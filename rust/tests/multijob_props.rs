@@ -1,0 +1,253 @@
+//! PR 10 battery: the multi-job coordinator over one shared fleet. Per-job
+//! accounting must close (`spent == aggregated + wasted + in_flight`, with
+//! nothing left in flight after the terminal sweep), fleet totals must be
+//! the sum over jobs, no device may be busy for two jobs at once, the
+//! output must be byte-identical at any `workers` × `coord_shards`, and a
+//! logged run must replay byte-exactly through `replay_multijob`.
+
+use std::sync::Arc;
+
+use relay::config::ExpConfig;
+use relay::jobs::{replay_multijob, run_jobset, run_jobset_logged, MultiJobResult};
+use relay::runlog::{decode_segments, MemSink, RunEvent};
+use relay::runtime::{builtin_variant, Executor, NativeExecutor};
+
+const REL_EPS: f64 = 1e-6;
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new(builtin_variant("tiny")))
+}
+
+/// A registered multi-job preset shrunk to test scale.
+fn preset(name: &str) -> ExpConfig {
+    let mut cfg = relay::scenario::by_name(name)
+        .unwrap_or_else(|| panic!("preset '{name}' not registered"))
+        .cfg;
+    cfg.total_learners = cfg.total_learners.min(32);
+    cfg.rounds = cfg.rounds.min(4);
+    cfg.mean_samples = cfg.mean_samples.min(8);
+    cfg.test_per_class = 2;
+    cfg.eval_every = 2;
+    cfg.validate().unwrap_or_else(|e| panic!("shrunk '{name}' invalid: {e:#}"));
+    cfg
+}
+
+fn run(cfg: &ExpConfig, workers: usize, coord_shards: usize) -> MultiJobResult {
+    let mut c = cfg.clone();
+    c.workers = workers;
+    c.train_workers = workers;
+    c.coord_shards = coord_shards;
+    run_jobset(c, exec())
+        .unwrap_or_else(|e| panic!("jobset '{}' failed: {e:#}", cfg.label))
+}
+
+fn assert_books_close(cfg: &ExpConfig, r: &MultiJobResult) {
+    let tol = |x: f64| REL_EPS * x.abs().max(1.0);
+    assert_eq!(r.jobs.len(), cfg.jobs, "'{}': one summary per job", cfg.label);
+    let (mut spent, mut agg, mut wasted, mut in_flight) = (0.0, 0.0, 0.0, 0.0);
+    for job in &r.jobs {
+        assert!(
+            job.in_flight_secs.abs() <= tol(job.spent_secs),
+            "'{}' job {}: {} in-flight seconds survived the terminal sweep",
+            cfg.label,
+            job.job,
+            job.in_flight_secs
+        );
+        let closed = job.aggregated_secs + job.wasted_secs + job.in_flight_secs;
+        assert!(
+            (job.spent_secs - closed).abs() <= tol(job.spent_secs),
+            "'{}' job {} identity broken: spent {} != aggregated {} + wasted {} + in-flight {}",
+            cfg.label,
+            job.job,
+            job.spent_secs,
+            job.aggregated_secs,
+            job.wasted_secs,
+            job.in_flight_secs
+        );
+        spent += job.spent_secs;
+        agg += job.aggregated_secs;
+        wasted += job.wasted_secs;
+        in_flight += job.in_flight_secs;
+    }
+    for (name, fleet, sum) in [
+        ("spent", r.fleet_spent_secs, spent),
+        ("aggregated", r.fleet_aggregated_secs, agg),
+        ("wasted", r.fleet_wasted_secs, wasted),
+        ("in_flight", r.fleet_in_flight_secs, in_flight),
+    ] {
+        assert!(
+            (fleet - sum).abs() <= tol(sum),
+            "'{}': fleet {name} {fleet} != per-job sum {sum}",
+            cfg.label
+        );
+    }
+}
+
+/// Both registered multi-job presets: per-job accounting identity closes,
+/// fleet totals are the per-job sums, every job ran every round, and a
+/// logged run decodes cleanly and replays byte-exactly.
+#[test]
+fn preset_accounting_closes_and_replay_is_exact() {
+    for name in ["job-storm", "starved-low-priority"] {
+        let cfg = preset(name);
+        let r = run(&cfg, 1, 1);
+        assert_books_close(&cfg, &r);
+        for job in &r.jobs {
+            assert_eq!(job.rounds.len(), cfg.rounds, "'{name}' job {}: round count", job.job);
+        }
+        let baseline = r.to_json().to_string();
+
+        let sink = MemSink::default();
+        let mut lc = cfg.clone();
+        lc.workers = 1;
+        lc.train_workers = 1;
+        let logged = run_jobset_logged(lc, exec(), Box::new(sink.clone()))
+            .unwrap_or_else(|e| panic!("logged '{name}' run failed: {e:#}"));
+        assert_eq!(
+            logged.to_json().to_string(),
+            baseline,
+            "'{name}': enabling the run log perturbed the result bytes"
+        );
+        let (events, stats) = decode_segments(&sink.segments());
+        assert!(stats.clean, "'{name}' log did not decode cleanly: {:?}", stats.note);
+        let replayed = replay_multijob(&events)
+            .unwrap_or_else(|e| panic!("'{name}' replay failed: {e:#}"));
+        assert_eq!(
+            replayed.to_json().to_string(),
+            baseline,
+            "'{name}': replay diverged from the engine output"
+        );
+    }
+}
+
+/// Shared-fleet exclusivity: reconstruct every device's busy intervals from
+/// the `JobSpawn` stream (a claim is `mark_busy_for(id, now + cost)`, where
+/// cost is `dropped_after.unwrap_or(duration)`) and assert no two intervals
+/// owned by *different* jobs overlap for the same learner.
+#[test]
+fn no_device_is_busy_for_two_jobs_at_once() {
+    let cfg = preset("job-storm");
+    let sink = MemSink::default();
+    let mut lc = cfg.clone();
+    lc.workers = 1;
+    lc.train_workers = 1;
+    run_jobset_logged(lc, exec(), Box::new(sink.clone())).expect("job-storm run failed");
+    let (events, stats) = decode_segments(&sink.segments());
+    assert!(stats.clean, "log did not decode cleanly: {:?}", stats.note);
+
+    // learner -> [(job, start, end)]
+    let mut busy: std::collections::HashMap<u64, Vec<(u64, f64, f64)>> =
+        std::collections::HashMap::new();
+    let mut spawns = 0usize;
+    for ev in &events {
+        if let RunEvent::JobSpawn { job, learner, now, duration, dropped_after, .. } = ev {
+            let end = now + dropped_after.unwrap_or(*duration);
+            busy.entry(*learner).or_default().push((*job, *now, end));
+            spawns += 1;
+        }
+    }
+    assert!(spawns > 0, "the storm preset must actually spawn tasks");
+
+    for (learner, mut ivals) in busy {
+        ivals.sort_by(|a, b| a.1.total_cmp(&b.1));
+        for w in ivals.windows(2) {
+            let (ja, _, end_a) = w[0];
+            let (jb, start_b, _) = w[1];
+            if ja != jb {
+                assert!(
+                    start_b >= end_a - 1e-9,
+                    "learner {learner} busy for job {jb} at t={start_b} while still \
+                     owned by job {ja} until t={end_a}"
+                );
+            }
+        }
+    }
+}
+
+/// The PR's acceptance bar: a four-job run is byte-identical at every
+/// `workers` × `coord_shards` combination, and repeat runs of the same
+/// config reproduce the same bytes.
+#[test]
+fn four_job_run_is_byte_identical_across_workers_and_shards() {
+    let cfg = preset("job-storm");
+    assert_eq!(cfg.jobs, 4);
+    let baseline = run(&cfg, 1, 1).to_json().to_string();
+    assert_eq!(
+        run(&cfg, 1, 1).to_json().to_string(),
+        baseline,
+        "repeat run of the same config diverged"
+    );
+    for workers in [1usize, 8] {
+        for shards in [1usize, 8] {
+            assert_eq!(
+                run(&cfg, workers, shards).to_json().to_string(),
+                baseline,
+                "workers={workers} coord_shards={shards} diverged from the 1/1 run"
+            );
+        }
+    }
+}
+
+/// The acceptance cell at fleet scale: four jobs over one shared
+/// 100k-learner lazy DynAvail fleet, byte-identical across
+/// `workers {1,8}` × `coord-shards {1,8}`, books closed. Costs stay
+/// test-sized because the population is lazy and per-event: only the
+/// ~hundred selected devices ever train.
+#[test]
+fn four_jobs_over_a_100k_fleet_are_byte_identical() {
+    let mut cfg = ExpConfig {
+        variant: "tiny".into(),
+        total_learners: 100_000,
+        rounds: 2,
+        target_participants: 20,
+        mean_samples: 4,
+        test_per_class: 2,
+        eval_every: 1_000_000,
+        lr: 0.1,
+        min_round_duration: 0.0,
+        ..Default::default()
+    };
+    cfg.jobs = 4;
+    cfg.job_policy = "fair".into();
+    cfg.job_modes = ["oc1.3", "dl40", "async3", "oc"].iter().map(|s| s.to_string()).collect();
+    cfg.job_targets = vec![50, 30, 20, 10];
+    cfg.label = "mj-100k".into();
+    cfg.validate().expect("100k cell invalid");
+
+    let r = run(&cfg, 1, 1);
+    assert_books_close(&cfg, &r);
+    let baseline = r.to_json().to_string();
+    for (workers, shards) in [(1usize, 8usize), (8, 1), (8, 8)] {
+        assert_eq!(
+            run(&cfg, workers, shards).to_json().to_string(),
+            baseline,
+            "100k fleet: workers={workers} coord_shards={shards} diverged"
+        );
+    }
+}
+
+/// Strict-priority arbitration on an oversubscribed pool: the top-priority
+/// job claims first at every arbitration point, so it must spend at least
+/// as much fleet time as the bottom-priority job — which exists to starve.
+#[test]
+fn strict_priority_starves_the_low_priority_job() {
+    let cfg = preset("starved-low-priority");
+    assert_eq!(cfg.job_policy, "priority");
+    let r = run(&cfg, 1, 1);
+    assert_books_close(&cfg, &r);
+    let top = &r.jobs[0];
+    let bottom = &r.jobs[2];
+    assert!(top.priority > bottom.priority, "preset must order priorities 0 > 2");
+    assert!(
+        top.spent_secs >= bottom.spent_secs,
+        "priority arbitration inverted: top job spent {} < bottom job {}",
+        top.spent_secs,
+        bottom.spent_secs
+    );
+    assert!(
+        top.unique_participants >= bottom.unique_participants,
+        "top job reached {} devices, bottom reached {}",
+        top.unique_participants,
+        bottom.unique_participants
+    );
+}

@@ -45,6 +45,7 @@ fn paper_grid() -> GridSpec {
         avails: vec![AvailMode::AllAvail],
         partitions: vec![PartitionScheme::UniformIid],
         coord_shards: vec![0],
+        jobs: vec![1],
         seeds: vec![1, 1001, 2001],
         base: tiny_base(),
     }

@@ -75,6 +75,7 @@ fn sync_grid_results_all_parse() {
         avails: vec![AvailMode::AllAvail, AvailMode::DynAvail],
         partitions: vec![PartitionScheme::UniformIid],
         coord_shards: vec![0],
+        jobs: vec![1],
         seeds: vec![1, 1001],
         base,
     };
@@ -104,6 +105,7 @@ fn async_grid_results_all_parse() {
         avails: vec![AvailMode::DynAvail],
         partitions: vec![PartitionScheme::UniformIid],
         coord_shards: vec![0],
+        jobs: vec![1],
         seeds: vec![7, 1007],
         base,
     };
